@@ -1,0 +1,252 @@
+"""AOT compiler: lower every L2 entry point to HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); the Rust coordinator then loads
+`artifacts/<config>.<entry>.hlo.txt` through the PJRT C API and Python never
+appears on the training path again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Also writes `artifacts/manifest.json` — consumed by the Rust side's own
+JSON parser (serde is not vendored) — describing for every artifact the
+input shapes/dtypes and output arity, plus the flat parameter layouts so
+Rust can initialize parameters without Python.
+
+`--report` additionally emits `artifacts/aot_report.txt` with the L1 VMEM
+footprint estimates and per-artifact HLO op histograms used by the §Perf
+pass (interpret-mode wallclock is CPU-numpy time, NOT a TPU proxy — we
+optimize structure, not interpret-mode speed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import attention as attn_k
+from .kernels import elementwise as ew
+
+# Which entry points to lower for each named config. cls_tiny is the bench
+# workhorse and carries the full suite (incl. second-order baselines);
+# cls_small exists for the model-size scaling runs; lm_small serves the e2e
+# driver and the continued-pretraining app.
+ENTRY_SETS = {
+    "cls_tiny": [
+        "fwd_batch", "base_grad_rw", "base_grad_rwc", "meta_grad_direct",
+        "lambda_grad_rw", "lambda_grad_rwc", "sama_adapt_perturb",
+        "adam_step_theta", "sgd_step_theta", "adam_step_mwn",
+        "adam_step_mwn_corr", "hvp_rw", "mixed_rw", "itd_meta_grad",
+    ],
+    "cls_small": [
+        "fwd_batch", "base_grad_rw", "meta_grad_direct", "lambda_grad_rw",
+        "sama_adapt_perturb", "adam_step_theta", "adam_step_mwn",
+        "hvp_rw", "mixed_rw",
+    ],
+    "lm_small": [
+        "fwd_batch", "meta_grad_direct", "lm_grad", "lm_grad_rw",
+        "multitask_grad", "lambda_grad_lm", "lm_losses_eval",
+        "sama_adapt_perturb", "adam_step_theta", "adam_step_mwn",
+        "lambda_grad_rw", "base_grad_rw",
+    ],
+    # Table 2 strong scaling: per-worker batch = 48 / workers.
+    "cls_b48": ["fwd_batch", "base_grad_rw", "meta_grad_direct",
+                "lambda_grad_rw", "sama_adapt_perturb", "adam_step_theta",
+                "adam_step_mwn", "hvp_rw", "mixed_rw"],
+    "cls_b24": ["fwd_batch", "base_grad_rw", "meta_grad_direct",
+                "lambda_grad_rw", "sama_adapt_perturb", "adam_step_theta",
+                "adam_step_mwn"],
+    "cls_b12": ["fwd_batch", "base_grad_rw", "meta_grad_direct",
+                "lambda_grad_rw", "sama_adapt_perturb", "adam_step_theta",
+                "adam_step_mwn"],
+    # Few-shot width sweep (Fig. 4): prox/meta math is analytic in Rust.
+    "fs_w32": ["fwd_batch", "meta_grad_direct", "sama_adapt_perturb",
+               "adam_step_theta", "sgd_step_theta"],
+    "fs_w64": ["fwd_batch", "meta_grad_direct", "sama_adapt_perturb",
+               "adam_step_theta", "sgd_step_theta"],
+    "fs_w128": ["fwd_batch", "meta_grad_direct", "sama_adapt_perturb",
+                "adam_step_theta", "sgd_step_theta"],
+    "fs_w192": ["fwd_batch", "meta_grad_direct", "sama_adapt_perturb",
+                "adam_step_theta", "sgd_step_theta"],
+}
+
+_DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _arg_descr(a) -> dict:
+    return {"shape": list(a.shape), "dtype": _DTYPE_NAMES[a.dtype]}
+
+
+def _out_descrs(fn, args) -> list[dict]:
+    outs = jax.eval_shape(fn, *args)
+    flat, _ = jax.tree_util.tree_flatten(outs)
+    return [{"shape": list(o.shape), "dtype": _DTYPE_NAMES[o.dtype]}
+            for o in flat]
+
+
+def lower_config(cfg: model.ModelConfig, outdir: str, entries: list[str],
+                 verbose: bool = True) -> dict:
+    """Lower each entry point of one config; returns its manifest block."""
+    eps = model.make_entry_points(cfg)
+    artifacts = {}
+    for name in entries:
+        fn, args = eps[name]
+        fname = f"{cfg.name}.{name}.hlo.txt"
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": fname,
+            "inputs": [_arg_descr(a) for a in args],
+            "outputs": _out_descrs(fn, args),
+        }
+        if verbose:
+            print(f"  {fname}: {len(text)//1024} KiB, "
+                  f"{len(artifacts[name]['inputs'])} in / "
+                  f"{len(artifacts[name]['outputs'])} out")
+    return {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "seq_len": cfg.seq_len, "n_classes": cfg.n_classes,
+            "mlp_ratio": cfg.mlp_ratio, "batch": cfg.batch,
+            "unroll": cfg.unroll,
+        },
+        "n_theta": model.n_params(cfg, "theta"),
+        "n_mwn": model.n_params(cfg, "mwn"),
+        "n_mwn_corr": model.n_params(cfg, "mwn_corr"),
+        "layout_theta": model.param_manifest(cfg, "theta"),
+        "layout_mwn": model.param_manifest(cfg, "mwn"),
+        "layout_mwn_corr": model.param_manifest(cfg, "mwn_corr"),
+        "artifacts": artifacts,
+    }
+
+
+# ---------------------------------------------------------------------------
+# §Perf reporting: L1 VMEM footprints + per-artifact HLO op histograms
+# ---------------------------------------------------------------------------
+
+def kernel_vmem_report() -> str:
+    """Analytic VMEM/MXU estimates per L1 kernel (DESIGN.md §Perf, L1).
+
+    interpret=True gives CPU-numpy timings only, so these are *structural*
+    estimates from the BlockSpecs: bytes resident per grid step and which
+    ops map to the MXU vs the VPU.
+    """
+    lines = ["== L1 Pallas kernel VMEM footprints (per grid step) =="]
+    blk = ew.BLOCK
+    f32 = 4
+    rows = [
+        ("adam_adapt", 4 * blk * f32 + 2 * f32, 1 * blk * f32, "VPU only"),
+        ("sumsq", blk * f32, f32, "VPU reduce"),
+        ("axpy2(perturb)", 2 * blk * f32 + f32, 2 * blk * f32, "VPU only"),
+        ("fused_adam", 4 * blk * f32 + 3 * f32, 3 * blk * f32, "VPU only"),
+        ("fused_sgd", 3 * blk * f32 + 3 * f32, 2 * blk * f32, "VPU only"),
+    ]
+    for name, in_b, out_b, unit in rows:
+        lines.append(f"  {name:18s} in={in_b/1024:7.1f}KiB out={out_b/1024:7.1f}KiB"
+                     f" total={(in_b+out_b)/1024:7.1f}KiB  [{unit}]")
+    bq, bk = attn_k.DEFAULT_BQ, attn_k.DEFAULT_BK
+    for (s, d) in [(32, 32), (64, 32), (128, 64)]:
+        q = bq * d * f32
+        kv = 2 * s * d * f32
+        acc = bq * d * f32 + 2 * bq * f32
+        score = bq * bk * f32
+        tot = q + kv + acc + score
+        # MXU work per q-block: 2·BQ·S·D MACs (QKᵀ) + 2·BQ·S·D (PV)
+        macs = 4 * bq * s * d
+        lines.append(f"  flash_fwd S={s:4d} D={d:3d}: VMEM={tot/1024:7.1f}KiB "
+                     f"(q={q/1024:.1f} kv={kv/1024:.1f} acc={acc/1024:.1f} "
+                     f"score={score/1024:.1f})  MXU MACs/step={macs}")
+    lines.append(f"  (BLOCK={blk} f32 lanes; flash BQ={bq} BK={bk}; all well "
+                 f"under the ~16 MiB/core VMEM budget)")
+    return "\n".join(lines)
+
+
+def hlo_histogram(text: str) -> collections.Counter:
+    """Rough HLO op histogram from artifact text (fusion sanity check).
+
+    Each instruction line looks like ``%name = <shape> op(args...)``; the op
+    is the first identifier immediately followed by '(' after the '='.
+    """
+    ops = collections.Counter()
+    for line in text.splitlines():
+        if "=" not in line:
+            continue
+        m = re.search(r"=\s+.*?([\w-]+)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    return ops
+
+
+def artifact_report(outdir: str, manifest: dict) -> str:
+    lines = ["== per-artifact HLO op histograms (top ops) =="]
+    for cname, blk in manifest["configs"].items():
+        for aname, art in blk["artifacts"].items():
+            path = os.path.join(outdir, art["file"])
+            with open(path) as f:
+                hist = hlo_histogram(f.read())
+            top = ", ".join(f"{k}:{v}" for k, v in hist.most_common(8))
+            total = sum(hist.values())
+            lines.append(f"  {cname}.{aname}: {total} ops | {top}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--configs", default="all",
+                    help="comma-separated config names or 'all'")
+    ap.add_argument("--report", action="store_true",
+                    help="also write aot_report.txt (VMEM/HLO analysis)")
+    args = ap.parse_args()
+
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    names = (list(ENTRY_SETS) if args.configs == "all"
+             else args.configs.split(","))
+
+    manifest = {"version": 1, "configs": {}}
+    for name in names:
+        cfg = model.CONFIGS[name]
+        print(f"[aot] lowering config {name} "
+              f"(n_theta={model.n_params(cfg)})")
+        manifest["configs"][name] = lower_config(
+            cfg, outdir, ENTRY_SETS[name])
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest.json "
+          f"({len(manifest['configs'])} configs)")
+
+    if args.report:
+        report = kernel_vmem_report() + "\n\n" + artifact_report(
+            outdir, manifest)
+        with open(os.path.join(outdir, "aot_report.txt"), "w") as f:
+            f.write(report + "\n")
+        print(report)
+
+
+if __name__ == "__main__":
+    main()

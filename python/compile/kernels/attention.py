@@ -1,0 +1,164 @@
+"""Flash-style tiled attention in Pallas, with a Pallas backward pass.
+
+This is the transformer hot spot (L1). The paper's systems claims are about
+the *meta-gradient* path, but every one of its experiments runs a
+Transformer (BERT/RoBERTa) in the base level — so attention is the compute
+hot spot of every artifact this repo lowers.
+
+TPU adaptation of the GPU flash-attention recipe (DESIGN.md
+§Hardware-Adaptation): instead of CUDA threadblocks staging HBM→shared
+memory, the kernel expresses the HBM→VMEM schedule with ``BlockSpec``:
+
+  forward  — grid (heads, q-blocks); each step holds one (BQ, D) query tile
+             plus the full (S, D) K/V panels in VMEM and runs the online-
+             softmax recurrence over BK-sized K/V chunks; QKᵀ and PV hit the
+             MXU, the m/l rescaling runs on the VPU.
+  backward — grid (heads,); recomputes P from the saved log-sum-exp (the
+             flash trick: no S×S attention matrix ever stored in HBM) and
+             forms dQ, dK, dV with five MXU matmuls.
+
+``interpret=True`` everywhere (CPU PJRT cannot run Mosaic custom-calls).
+The public entry point ``flash_attention`` is differentiable via
+``jax.custom_vjp`` so the L2 model can sit under ``jax.grad``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. BQ rows of Q per grid step; the online-softmax loop
+# consumes K/V in BK-row chunks. Both chosen so a (BQ, BK) score tile plus
+# the K/V panels fit VMEM at the model sizes this repo lowers (S ≤ 256).
+DEFAULT_BQ = 32
+DEFAULT_BK = 32
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, sm_scale, causal,
+                block_q, block_k, seq_len):
+    """One (head, q-block) grid step of the online-softmax forward."""
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :]              # (BQ, D)
+    n_chunks = seq_len // block_k
+
+    def body(ci, carry):
+        acc, m_i, l_i = carry
+        k = k_ref[0, pl.ds(ci * block_k, block_k), :]   # (BK, D)
+        v = v_ref[0, pl.ds(ci * block_k, block_k), :]
+        s = jnp.dot(q, k.T) * sm_scale                  # (BQ, BK) — MXU
+        if causal:
+            q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+            k_pos = ci * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        scale = jnp.exp(m_i - m_new)
+        l_new = scale * l_i + jnp.sum(p, axis=1)
+        acc = acc * scale[:, None] + jnp.dot(p, v)      # PV — MXU
+        return acc, m_new, l_new
+
+    d = q.shape[-1]
+    init = (jnp.zeros((block_q, d), jnp.float32),
+            jnp.full((block_q,), NEG_INF, jnp.float32),
+            jnp.zeros((block_q,), jnp.float32))
+    acc, m_i, l_i = jax.lax.fori_loop(0, n_chunks, body, init)
+    l_safe = jnp.maximum(l_i, 1e-30)
+    o_ref[0, :, :] = acc / l_safe[:, None]
+    lse_ref[0, :] = m_i + jnp.log(l_safe)
+
+
+def _flash_fwd(q, k, v, causal, block_q, block_k):
+    h, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    sm_scale = 1.0 / (d ** 0.5)
+    kern = functools.partial(_fwd_kernel, sm_scale=sm_scale, causal=causal,
+                             block_q=block_q, block_k=block_k, seq_len=s)
+    out, lse = pl.pallas_call(
+        kern,
+        out_shape=[jax.ShapeDtypeStruct((h, s, d), jnp.float32),
+                   jax.ShapeDtypeStruct((h, s), jnp.float32)],
+        grid=(h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((1, s, d), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda hi, qi: (hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda hi, qi: (hi, qi)),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return out, lse
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, do_ref,
+                dq_ref, dk_ref, dv_ref, *, sm_scale, causal, seq_len):
+    """One head per grid step: flash backward via P-recomputation."""
+    q = q_ref[0, :, :]
+    k = k_ref[0, :, :]
+    v = v_ref[0, :, :]
+    o = o_ref[0, :, :]
+    lse = lse_ref[0, :]
+    do = do_ref[0, :, :]
+
+    s = jnp.dot(q, k.T) * sm_scale                       # (S, S)
+    if causal:
+        pos = jax.lax.iota(jnp.int32, seq_len)
+        mask = pos[:, None] >= pos[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])                        # recomputed softmax
+    delta = jnp.sum(do * o, axis=1)                      # (S,)
+    dp = jnp.dot(do, v.T)                                # (S, S)
+    ds = p * (dp - delta[:, None]) * sm_scale
+    dq_ref[0, :, :] = jnp.dot(ds, k)
+    dk_ref[0, :, :] = jnp.dot(ds.T, q)
+    dv_ref[0, :, :] = jnp.dot(p.T, do)
+
+
+def _flash_bwd(q, k, v, out, lse, do, causal):
+    h, s, d = q.shape
+    sm_scale = 1.0 / (d ** 0.5)
+    kern = functools.partial(_bwd_kernel, sm_scale=sm_scale, causal=causal,
+                             seq_len=s)
+    full = pl.BlockSpec((1, s, d), lambda hi: (hi, 0, 0))
+    row = pl.BlockSpec((1, s), lambda hi: (hi, 0))
+    dq, dk, dv = pl.pallas_call(
+        kern,
+        out_shape=[jax.ShapeDtypeStruct((h, s, d), jnp.float32)] * 3,
+        grid=(h,),
+        in_specs=[full, full, full, full, row, full],
+        out_specs=[full] * 3,
+        interpret=True,
+    )(q, k, v, out, lse, do)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal=False, block_q=DEFAULT_BQ,
+                    block_k=DEFAULT_BK):
+    """Tiled attention over (H, S, D) tensors; differentiable.
+
+    ``H`` folds batch×heads. Matches ``ref.attention_ref`` numerically.
+    """
+    out, _ = _flash_fwd(q, k, v, causal, block_q, block_k)
+    return out
+
+
+def _vjp_fwd(q, k, v, causal, block_q, block_k):
+    out, lse = _flash_fwd(q, k, v, causal, block_q, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _vjp_bwd(causal, block_q, block_k, res, do):
+    q, k, v, out, lse = res
+    return _flash_bwd(q, k, v, out, lse, do, causal)
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,251 @@
+"""Element-wise SAMA hot-spot kernels, written in Pallas.
+
+These are the L1 kernels of the three-layer stack. They implement the
+element-wise core of SAMA (paper §3.2 + Appendix C):
+
+  * ``adam_adapt``  — the diagonal adaptation matrix ∂u/∂g for Adam, fused
+    with the product against the direct gradient (one HBM pass instead of
+    materializing the diagonal).
+  * ``perturb``     — ‖v‖₂ reduction + θ± = θ ± εv (Eq. 5's perturbation),
+    two kernels sharing one VMEM-resident tile schedule.
+  * ``fused_adam``  — AdamW step: m/v/θ updated in a single pass.
+  * ``fused_sgd``   — SGD + momentum + weight decay in a single pass.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): all kernels are tiled over a
+1-D grid with ``BLOCK``-sized VMEM tiles; each grid step streams one tile of
+each operand HBM→VMEM, does O(BLOCK) VPU work, and streams results back.
+``interpret=True`` is mandatory on this CPU-PJRT image (real TPU lowering
+emits Mosaic custom-calls the CPU plugin cannot run).
+
+All public wrappers accept flat f32 vectors of arbitrary length; padding to
+the block size is handled internally and stripped from outputs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# VMEM tile width for the 1-D elementwise kernels. 65536 f32 = 256 KiB per
+# operand; the widest kernel (fused_adam) holds 7 operand + 3 result tiles
+# ≈ 2.5 MiB of VMEM — still well under the ~16 MiB/core budget.
+#
+# §Perf iteration (EXPERIMENTS.md): started at 2048 (8 KiB tiles); grid-step
+# overhead dominated the lowered while-loop (66 steps for a 135k-param
+# vector — adam_step cost more than the whole transformer fwd+bwd). 65536
+# cuts the grid to ≤3 steps at this model scale while keeping the VMEM
+# footprint TPU-valid; tiles stay (8,128)-lane aligned.
+BLOCK = 65536
+
+
+def _pad_to_block(x: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
+    """Pad a flat vector to a multiple of ``block`` and reshape to (nb, block)."""
+    n = x.shape[0]
+    nb = max(1, (n + block - 1) // block)
+    pad = nb * block - n
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x.reshape(nb, block), n
+
+
+def _row_spec(block: int) -> pl.BlockSpec:
+    return pl.BlockSpec((1, block), lambda i: (i, 0))
+
+
+def _scalar_spec() -> pl.BlockSpec:
+    return pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+
+# ---------------------------------------------------------------------------
+# adam_adapt: v_pert = (∂u_adam/∂g) ⊙ g_direct   (fused; Appendix C)
+# ---------------------------------------------------------------------------
+
+def _adam_adapt_kernel(m_ref, v_ref, g_ref, gd_ref, t_ref, lr_ref, out_ref, *,
+                       beta1, beta2, eps, guard):
+    m = m_ref[...]
+    v = v_ref[...]
+    g = g_ref[...]
+    gd = gd_ref[...]
+    t = t_ref[0, 0]
+    lr = lr_ref[0, 0]
+    c1 = 1.0 - beta1 ** t
+    c2 = 1.0 - beta2 ** t
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    s = jnp.sqrt(v_new / c2 + guard)
+    d = s + eps
+    num = (1.0 - beta1) * c2 * s * d - (1.0 - beta2) * m_new * g
+    den = c2 * s * d * d
+    out_ref[...] = (lr / c1) * num / den * gd
+
+
+def adam_adapt(m, v, g, g_direct, t, lr, beta1=ref.ADAM_BETA1,
+               beta2=ref.ADAM_BETA2, eps=ref.ADAM_EPS, guard=1e-12,
+               block=BLOCK):
+    """Fused v = (∂u/∂g)(m, v, g; t) ⊙ g_direct over flat f32 vectors.
+
+    ``t`` is the 1-based Adam step (f32 scalar or python number).
+    """
+    (m2, n), (v2, _), (g2, _), (gd2, _) = (
+        _pad_to_block(m, block), _pad_to_block(v, block),
+        _pad_to_block(g, block), _pad_to_block(g_direct, block))
+    nb = m2.shape[0]
+    t_arr = jnp.asarray(t, jnp.float32).reshape(1, 1)
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    kern = functools.partial(_adam_adapt_kernel, beta1=beta1,
+                             beta2=beta2, eps=eps, guard=guard)
+    out = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        grid=(nb,),
+        in_specs=[_row_spec(block)] * 4 + [_scalar_spec()] * 2,
+        out_specs=_row_spec(block),
+        interpret=True,
+    )(m2, v2, g2, gd2, t_arr, lr_arr)
+    return out.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# perturb: ε = α/‖v‖₂, θ± = θ ± εv   (Eq. 5)
+# ---------------------------------------------------------------------------
+
+def _sumsq_kernel(x_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]
+    out_ref[0, 0] += jnp.sum(x * x)
+
+
+def sumsq(x, block=BLOCK):
+    """‖x‖₂² via a tiled Pallas reduction (sequential-grid accumulation)."""
+    x2, _ = _pad_to_block(x, block)
+    nb = x2.shape[0]
+    out = pl.pallas_call(
+        _sumsq_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        grid=(nb,),
+        in_specs=[_row_spec(block)],
+        out_specs=_scalar_spec(),
+        interpret=True,
+    )(x2)
+    return out[0, 0]
+
+
+def _axpy2_kernel(theta_ref, v_ref, eps_ref, plus_ref, minus_ref):
+    th = theta_ref[...]
+    vv = v_ref[...]
+    e = eps_ref[0, 0]
+    plus_ref[...] = th + e * vv
+    minus_ref[...] = th - e * vv
+
+
+def perturb(theta, vec, alpha, block=BLOCK):
+    """Returns (θ⁺, θ⁻, ε) with ε = α/max(‖v‖₂, 1e-12)."""
+    nrm2 = sumsq(vec, block=block)
+    eps = alpha / jnp.maximum(jnp.sqrt(nrm2), 1e-12)
+    (th2, n), (v2, _) = _pad_to_block(theta, block), _pad_to_block(vec, block)
+    nb = th2.shape[0]
+    eps_arr = eps.reshape(1, 1)
+    plus, minus = pl.pallas_call(
+        _axpy2_kernel,
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.float32)] * 2,
+        grid=(nb,),
+        in_specs=[_row_spec(block), _row_spec(block), _scalar_spec()],
+        out_specs=[_row_spec(block)] * 2,
+        interpret=True,
+    )(th2, v2, eps_arr)
+    return plus.reshape(-1)[:n], minus.reshape(-1)[:n], eps
+
+
+# ---------------------------------------------------------------------------
+# fused_adam: one-pass AdamW step
+# ---------------------------------------------------------------------------
+
+def _fused_adam_kernel(theta_ref, m_ref, v_ref, g_ref, t_ref, lr_ref, wd_ref,
+                       theta_out, m_out, v_out, *,
+                       beta1, beta2, eps):
+    th = theta_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    g = g_ref[...]
+    t = t_ref[0, 0]
+    lr = lr_ref[0, 0]
+    weight_decay = wd_ref[0, 0]
+    c1 = 1.0 - beta1 ** t
+    c2 = 1.0 - beta2 ** t
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    upd = lr * (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+    theta_out[...] = th - upd - lr * weight_decay * th
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+
+def fused_adam(theta, m, v, g, t, lr, beta1=ref.ADAM_BETA1,
+               beta2=ref.ADAM_BETA2, eps=ref.ADAM_EPS, weight_decay=0.0,
+               block=BLOCK):
+    """One AdamW step over flat vectors. Returns (θ', m', v')."""
+    (th2, n), (m2, _), (v2, _), (g2, _) = (
+        _pad_to_block(theta, block), _pad_to_block(m, block),
+        _pad_to_block(v, block), _pad_to_block(g, block))
+    nb = th2.shape[0]
+    t_arr = jnp.asarray(t, jnp.float32).reshape(1, 1)
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    wd_arr = jnp.asarray(weight_decay, jnp.float32).reshape(1, 1)
+    kern = functools.partial(_fused_adam_kernel, beta1=beta1,
+                             beta2=beta2, eps=eps)
+    th_o, m_o, v_o = pl.pallas_call(
+        kern,
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.float32)] * 3,
+        grid=(nb,),
+        in_specs=[_row_spec(block)] * 4 + [_scalar_spec()] * 3,
+        out_specs=[_row_spec(block)] * 3,
+        interpret=True,
+    )(th2, m2, v2, g2, t_arr, lr_arr, wd_arr)
+    cut = lambda a: a.reshape(-1)[:n]
+    return cut(th_o), cut(m_o), cut(v_o)
+
+
+# ---------------------------------------------------------------------------
+# fused_sgd: one-pass SGD + momentum + weight decay
+# ---------------------------------------------------------------------------
+
+def _fused_sgd_kernel(theta_ref, buf_ref, g_ref, lr_ref, mom_ref, wd_ref,
+                      theta_out, buf_out):
+    th = theta_ref[...]
+    buf = buf_ref[...]
+    g = g_ref[...]
+    lr = lr_ref[0, 0]
+    momentum = mom_ref[0, 0]
+    weight_decay = wd_ref[0, 0]
+    g_eff = g + weight_decay * th
+    buf_new = momentum * buf + g_eff
+    theta_out[...] = th - lr * buf_new
+    buf_out[...] = buf_new
+
+
+def fused_sgd(theta, buf, g, lr, momentum=0.9, weight_decay=0.0, block=BLOCK):
+    """One SGD+momentum step over flat vectors. Returns (θ', buf')."""
+    (th2, n), (b2, _), (g2, _) = (
+        _pad_to_block(theta, block), _pad_to_block(buf, block),
+        _pad_to_block(g, block))
+    nb = th2.shape[0]
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    mom_arr = jnp.asarray(momentum, jnp.float32).reshape(1, 1)
+    wd_arr = jnp.asarray(weight_decay, jnp.float32).reshape(1, 1)
+    th_o, b_o = pl.pallas_call(
+        _fused_sgd_kernel,
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.float32)] * 2,
+        grid=(nb,),
+        in_specs=[_row_spec(block)] * 3 + [_scalar_spec()] * 3,
+        out_specs=[_row_spec(block)] * 2,
+        interpret=True,
+    )(th2, b2, g2, lr_arr, mom_arr, wd_arr)
+    return th_o.reshape(-1)[:n], b_o.reshape(-1)[:n]

@@ -1,0 +1,544 @@
+"""L2: the paper's models and bilevel losses, in JAX.
+
+This module defines everything `aot.py` lowers to HLO:
+
+  * a pre-LN Transformer (the BERT/RoBERTa stand-in; DESIGN.md §4 records the
+    size substitution) whose attention runs through the L1 Pallas kernel;
+  * Meta-Weight-Net (reweighting meta learner, §4.1/§4.3) and the label
+    corrector (§4.1), i.e. the meta parameters λ = (λ_r, λ_c);
+  * the bilevel loss surfaces:  weighted / label-corrected classification
+    (WRENCH, §4.1), causal-LM (e2e driver + continued pretraining, §4.2),
+    and the multitask finetune+weighted-LM objective (TARTAN-style, §4.2);
+  * every gradient entry point the Rust coordinator executes:  base grads,
+    the meta direct gradient, λ-gradients for SAMA's central difference
+    (Eq. 5), exact HVP / mixed second-order products for the Neumann & CG
+    baselines, and a fully unrolled iterative-differentiation meta gradient
+    (the MAML-style baseline of Tables 8–9).
+
+All entry points take/return **flat f32 parameter vectors** so the Rust side
+stays shape-generic; `param_manifest` records the layout for Rust-side init.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import ref
+from .kernels.attention import flash_attention
+from .kernels.elementwise import adam_adapt, fused_adam, fused_sgd, perturb
+from .kernels.mwn import mwn_forward
+
+INIT_STD = 0.02        # BERT-style trunc-normal std for weights/embeddings
+CORRECTOR_KAPPA = 4.0  # strength of the identity prior in label correction
+MWN_HIDDEN = 64        # Meta-Weight-Net hidden width (paper: 2-layer MLP)
+MWN_FEATURES = 2       # [loss, uncertainty] (paper §4.3)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer + workload shape configuration (baked into each artifact)."""
+    name: str = "cls_tiny"
+    vocab: int = 256          # byte-level vocabulary
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    seq_len: int = 32
+    n_classes: int = 4
+    mlp_ratio: int = 4
+    batch: int = 16           # base / meta batch baked into the artifacts
+    unroll: int = 3           # ITD baseline unroll depth (paper uses 2–10)
+    use_flash: bool = True    # False → naive jnp attention (perf ablation)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    """Initialize the transformer trunk + classifier head + LM head."""
+    ks = iter(jax.random.split(key, 6 + 8 * cfg.n_layers))
+    nrm = lambda shape: jax.random.normal(next(ks), shape, jnp.float32) * INIT_STD
+    p = {
+        "tok_emb": nrm((cfg.vocab, cfg.d_model)),
+        "pos_emb": nrm((cfg.seq_len, cfg.d_model)),
+        "ln_f": {"scale": jnp.ones(cfg.d_model), "bias": jnp.zeros(cfg.d_model)},
+        "cls_head": {"w": nrm((cfg.d_model, cfg.n_classes)),
+                     "b": jnp.zeros(cfg.n_classes)},
+        "lm_head": {"w": nrm((cfg.d_model, cfg.vocab)),
+                    "b": jnp.zeros(cfg.vocab)},
+        "blocks": [],
+    }
+    for _ in range(cfg.n_layers):
+        d, h = cfg.d_model, cfg.mlp_ratio * cfg.d_model
+        p["blocks"].append({
+            "ln1": {"scale": jnp.ones(d), "bias": jnp.zeros(d)},
+            "ln2": {"scale": jnp.ones(d), "bias": jnp.zeros(d)},
+            "attn": {"wq": nrm((d, d)), "wk": nrm((d, d)), "wv": nrm((d, d)),
+                     "wo": nrm((d, d)), "bo": jnp.zeros(d)},
+            "mlp": {"w1": nrm((d, h)), "b1": jnp.zeros(h),
+                    "w2": nrm((h, d)), "b2": jnp.zeros(d)},
+        })
+    return p
+
+
+def init_mwn(key):
+    """Meta-Weight-Net λ_r: [loss, uncertainty] → weight ∈ (0,1)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (MWN_FEATURES, MWN_HIDDEN)) * 0.1,
+        "b1": jnp.zeros(MWN_HIDDEN),
+        "w2": jax.random.normal(k2, (MWN_HIDDEN, 1)) * 0.1,
+        "b2": jnp.zeros(1),
+    }
+
+
+def init_corrector(key, n_classes: int):
+    """Label-corrector λ_c: [p(x) (detached), onehot(y)] → class-logit delta."""
+    return {
+        "w": jax.random.normal(key, (2 * n_classes, n_classes)) * 0.01,
+        "b": jnp.zeros(n_classes),
+    }
+
+
+def flat_template(cfg: ModelConfig, kind: str, seed: int = 0):
+    """(flat_vector, unravel_fn) template for a parameter group."""
+    key = jax.random.PRNGKey(seed)
+    if kind == "theta":
+        tree = init_params(key, cfg)
+    elif kind == "mwn":
+        tree = init_mwn(key)
+    elif kind == "mwn_corr":
+        k1, k2 = jax.random.split(key)
+        tree = {"mwn": init_mwn(k1), "corr": init_corrector(k2, cfg.n_classes)}
+    else:
+        raise ValueError(kind)
+    return ravel_pytree(tree)
+
+
+def param_manifest(cfg: ModelConfig, kind: str):
+    """Flat-layout description for Rust-side initialization.
+
+    Returns a list of dicts {path, shape, offset, size, init, std} in flat
+    order (matching ravel_pytree's traversal).
+    """
+    key = jax.random.PRNGKey(0)
+    if kind == "theta":
+        tree = init_params(key, cfg)
+    elif kind == "mwn":
+        tree = init_mwn(key)
+    elif kind == "mwn_corr":
+        k1, k2 = jax.random.split(key)
+        tree = {"mwn": init_mwn(k1), "corr": init_corrector(k2, cfg.n_classes)}
+    else:
+        raise ValueError(kind)
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(tree)[0]
+    entries, offset = [], 0
+    for path, leaf in leaves_with_path:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        size = int(leaf.size)
+        if "scale" in name:
+            init, std = "ones", 0.0
+        elif leaf.ndim <= 1 or "b" == name.split("/")[-1] or name.endswith("/bias") \
+                or name.split("/")[-1].startswith("b"):
+            init, std = "zeros", 0.0
+        else:
+            std = 0.1 if kind != "theta" else INIT_STD
+            std = 0.01 if name.endswith("corr/w") else std
+            init = "normal"
+        entries.append({"path": name, "shape": list(leaf.shape),
+                        "offset": offset, "size": size,
+                        "init": init, "std": std})
+        offset += size
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Transformer forward
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attention(x, blk, cfg: ModelConfig, causal: bool):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ blk["wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ blk["wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ blk["wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    q = q.reshape(b * h, s, hd)
+    k = k.reshape(b * h, s, hd)
+    v = v.reshape(b * h, s, hd)
+    if cfg.use_flash:
+        bq = min(32, s)
+        bk = min(32, s)
+        o = flash_attention(q, k, v, causal, bq, bk)
+    else:
+        o = ref.attention_ref(q, k, v, causal)
+    o = o.reshape(b, h, s, hd).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return o @ blk["wo"] + blk["bo"]
+
+
+def trunk(params, tokens, cfg: ModelConfig, causal: bool):
+    """Embed + transformer blocks + final LN. tokens: (B, S) int32."""
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :, :]
+    for blk in params["blocks"]:
+        a = _attention(_layer_norm(x, blk["ln1"]["scale"], blk["ln1"]["bias"]),
+                       blk["attn"], cfg, causal)
+        x = x + a
+        hpre = _layer_norm(x, blk["ln2"]["scale"], blk["ln2"]["bias"])
+        hmid = jax.nn.gelu(hpre @ blk["mlp"]["w1"] + blk["mlp"]["b1"])
+        x = x + hmid @ blk["mlp"]["w2"] + blk["mlp"]["b2"]
+    return _layer_norm(x, params["ln_f"]["scale"], params["ln_f"]["bias"])
+
+
+def classifier_logits(params, tokens, cfg: ModelConfig):
+    h = trunk(params, tokens, cfg, causal=False)
+    pooled = jnp.mean(h, axis=1)
+    return pooled @ params["cls_head"]["w"] + params["cls_head"]["b"]
+
+
+def lm_logits(params, tokens, cfg: ModelConfig):
+    h = trunk(params, tokens, cfg, causal=True)
+    return h @ params["lm_head"]["w"] + params["lm_head"]["b"]
+
+
+def per_sample_ce(logits, labels):
+    """(B, C) logits, (B,) int labels → (B,) cross-entropy."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+
+
+def per_sample_soft_ce(logits, soft_labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.sum(soft_labels * logp, axis=-1)
+
+
+def per_sample_lm_loss(params, tokens, cfg: ModelConfig):
+    """(B,) mean next-token CE per sequence."""
+    logits = lm_logits(params, tokens, cfg)        # (B, S, V)
+    pred = logits[:, :-1, :]
+    tgt = tokens[:, 1:]
+    logp = jax.nn.log_softmax(pred, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Meta learners
+# ---------------------------------------------------------------------------
+
+def mwn_weights(lam_tree, losses, unc, use_kernel=True):
+    """w_i = MWN([ℓ_i, u_i]; λ_r) ∈ (0,1)."""
+    x = jnp.stack([losses, unc], axis=1)
+    if use_kernel:
+        return mwn_forward(x, lam_tree["w1"], lam_tree["b1"],
+                           lam_tree["w2"], lam_tree["b2"])
+    return ref.mwn_ref(x, lam_tree["w1"], lam_tree["b1"],
+                       lam_tree["w2"], lam_tree["b2"])
+
+
+def corrected_soft_labels(corr_tree, logits, labels, n_classes):
+    """Soft labels: softmax(κ·onehot(y) + corrector([p_detached, onehot]))."""
+    onehot = jax.nn.one_hot(labels, n_classes)
+    p_det = jax.lax.stop_gradient(jax.nn.softmax(logits, axis=-1))
+    feats = jnp.concatenate([p_det, onehot], axis=1)
+    delta = feats @ corr_tree["w"] + corr_tree["b"]
+    return jax.nn.softmax(CORRECTOR_KAPPA * onehot + delta, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Bilevel loss surfaces
+# ---------------------------------------------------------------------------
+
+def base_loss_rw(theta_tree, lam_tree, tokens, labels, unc, cfg,
+                 use_kernel=True):
+    """Reweighted base loss  L = mean(w(ℓ,u;λ)·ℓ)  (§4.1 '+R', §4.3)."""
+    logits = classifier_logits(theta_tree, tokens, cfg)
+    losses = per_sample_ce(logits, labels)
+    w = mwn_weights(lam_tree, losses, unc, use_kernel)
+    return jnp.mean(w * losses), (losses, w, logits)
+
+
+def base_loss_rwc(theta_tree, lam_tree, tokens, labels, unc, cfg,
+                  use_kernel=True):
+    """Reweight + label-correct base loss (§4.1 '+R & C')."""
+    logits = classifier_logits(theta_tree, tokens, cfg)
+    soft = corrected_soft_labels(lam_tree["corr"], logits, labels,
+                                 cfg.n_classes)
+    losses = per_sample_soft_ce(logits, soft)
+    w = mwn_weights(lam_tree["mwn"], losses, unc, use_kernel)
+    return jnp.mean(w * losses), (losses, w, logits)
+
+
+def meta_loss(theta_tree, tokens, labels, cfg):
+    """Meta loss: plain CE on the clean/meta batch."""
+    logits = classifier_logits(theta_tree, tokens, cfg)
+    return jnp.mean(per_sample_ce(logits, labels))
+
+
+def multitask_loss(theta_tree, lam_tree, ft_tokens, ft_labels, pt_tokens,
+                   unc, cfg, use_kernel=True):
+    """TARTAN-style §4.2 objective: L_ft + mean(w(ℓ_pt,u;λ)·ℓ_pt)."""
+    ft = jnp.mean(per_sample_ce(classifier_logits(theta_tree, ft_tokens, cfg),
+                                ft_labels))
+    pt_losses = per_sample_lm_loss(theta_tree, pt_tokens, cfg)
+    w = mwn_weights(lam_tree, pt_losses, unc, use_kernel)
+    return ft + jnp.mean(w * pt_losses), (ft, pt_losses, w)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (flat-parameter wrappers)
+# ---------------------------------------------------------------------------
+
+def make_entry_points(cfg: ModelConfig) -> dict[str, tuple[Callable, tuple]]:
+    """name → (fn, example_args) for every artifact of this config.
+
+    Every fn is a pure function of arrays; `aot.py` jits + lowers each one.
+    """
+    theta0, un_theta = flat_template(cfg, "theta")
+    mwn0, un_mwn = flat_template(cfg, "mwn")
+    mc0, un_mc = flat_template(cfg, "mwn_corr")
+    n_theta = theta0.shape[0]
+
+    B, S, C = cfg.batch, cfg.seq_len, cfg.n_classes
+    tok = jnp.zeros((B, S), jnp.int32)
+    lab = jnp.zeros((B,), jnp.int32)
+    unc = jnp.zeros((B,), jnp.float32)
+    fvec = jnp.zeros((B,), jnp.float32)
+    logits_in = jnp.zeros((B, C), jnp.float32)
+    scalar = jnp.zeros((), jnp.float32)
+    flatv = jnp.zeros((n_theta,), jnp.float32)
+
+    def fwd_batch(theta, tokens, labels):
+        logits = classifier_logits(un_theta(theta), tokens, cfg)
+        return logits, per_sample_ce(logits, labels)
+
+    def base_grad_rw(theta, lam, tokens, labels, u):
+        def f(th):
+            return base_loss_rw(un_theta(th), un_mwn(lam), tokens, labels, u,
+                                cfg)
+        (loss, aux), g = jax.value_and_grad(f, has_aux=True)(theta)
+        losses, w, _ = aux
+        return g, loss, losses, w
+
+    def base_grad_rwc(theta, lam, tokens, labels, u):
+        def f(th):
+            return base_loss_rwc(un_theta(th), un_mc(lam), tokens, labels, u,
+                                 cfg)
+        (loss, aux), g = jax.value_and_grad(f, has_aux=True)(theta)
+        losses, w, _ = aux
+        return g, loss, losses, w
+
+    def meta_grad_direct(theta, tokens, labels):
+        loss, g = jax.value_and_grad(
+            lambda th: meta_loss(un_theta(th), tokens, labels, cfg))(theta)
+        return g, loss
+
+    def lambda_grad_rw(lam, losses, u):
+        # λ-gradient of mean(w(ℓ,u;λ)·ℓ) with ℓ as data (SAMA passes 2–3).
+        # jnp MWN here: the gradient path must be exact autodiff.
+        def f(lm):
+            tree = un_mwn(lm)
+            w = mwn_weights(tree, losses, u, use_kernel=False)
+            return jnp.mean(w * losses)
+        val, g = jax.value_and_grad(f)(lam)
+        return g, val
+
+    def lambda_grad_rwc(lam, logits, labels, u):
+        # λ = (λ_r, λ_c); base loss re-evaluated from the θ±-logits.
+        def f(lm):
+            tree = un_mc(lm)
+            soft = corrected_soft_labels(tree["corr"], logits, labels, C)
+            losses = per_sample_soft_ce(logits, soft)
+            w = mwn_weights(tree["mwn"], losses, u, use_kernel=False)
+            return jnp.mean(w * losses)
+        val, g = jax.value_and_grad(f)(lam)
+        return g, val
+
+    def sama_adapt_perturb(theta, m, v, g_base, g_direct, t, lr, alpha):
+        # v_pert = (∂u/∂g)⊙g_direct (L1 kernel), then θ± = θ ± εv (L1 kernel).
+        vp = adam_adapt(m, v, g_base, g_direct, t, lr)
+        plus, minus, eps = perturb(theta, vp, alpha)
+        return plus, minus, vp, eps
+
+    def adam_step_theta(theta, m, v, g, t, lr, wd):
+        return fused_adam(theta, m, v, g, t, lr, weight_decay=wd)
+
+    def sgd_step_theta(theta, buf, g, lr, mom, wd):
+        return fused_sgd(theta, buf, g, lr, mom, wd)
+
+    # Second-order entry points (Neumann/CG/ITD baselines) differentiate
+    # *through* backward passes; the Pallas custom_vjp has no JVP/second-
+    # order rule, so these use the naive-attention variant of the model.
+    # First-order numerics are identical to float32 tolerance (tested).
+    cfg2 = dataclasses.replace(cfg, use_flash=False)
+
+    def hvp_rw(theta, lam, tokens, labels, u, vec):
+        # Exact ∂²L_base/∂θ² · vec (Neumann/CG baselines).
+        f = lambda th: base_loss_rw(un_theta(th), un_mwn(lam), tokens, labels,
+                                    u, cfg2, use_kernel=False)[0]
+        return (jax.jvp(jax.grad(f), (theta,), (vec,))[1],)
+
+    def mixed_rw(theta, lam, tokens, labels, u, vec):
+        # Exact ∂²L_base/∂λ∂θ · vec = ∂/∂λ ⟨∂L_base/∂θ, vec⟩.
+        def inner(lm):
+            f = lambda th: base_loss_rw(un_theta(th), un_mwn(lm), tokens,
+                                        labels, u, cfg2, use_kernel=False)[0]
+            return jnp.vdot(jax.grad(f)(theta), vec)
+        return (jax.grad(inner)(lam),)
+
+    def itd_meta_grad(theta, m, v, lam, tokens_k, labels_k, unc_k,
+                      meta_tokens, meta_labels, t0):
+        # MAML-style iterative differentiation: differentiate L_meta(θ_K(λ))
+        # through K unrolled Adam base steps. Memory grows with K — the
+        # pathology Tables 8–9 quantify.
+        def meta_obj(lm):
+            def step(carry, xs):
+                th, mm, vv, t = carry
+                tk, lk, uk = xs
+                g = jax.grad(lambda x: base_loss_rw(
+                    un_theta(x), un_mwn(lm), tk, lk, uk, cfg2,
+                    use_kernel=False)[0])(th)
+                th2, m2, v2 = ref.adam_update_ref(th, mm, vv, g, t, 1e-3)
+                return (th2, m2, v2, t + 1.0), None
+            (thK, _, _, _), _ = jax.lax.scan(
+                step, (theta, m, v, t0), (tokens_k, labels_k, unc_k))
+            return meta_loss(un_theta(thK), meta_tokens, meta_labels, cfg)
+        val, g = jax.value_and_grad(meta_obj)(lam)
+        return g, val
+
+    K = cfg.unroll
+    toks_k = jnp.zeros((K, B, S), jnp.int32)
+    labs_k = jnp.zeros((K, B), jnp.int32)
+    unc_k = jnp.zeros((K, B), jnp.float32)
+
+    def lm_grad(theta, tokens):
+        def f(th):
+            losses = per_sample_lm_loss(un_theta(th), tokens, cfg)
+            return jnp.mean(losses), losses
+        (loss, losses), g = jax.value_and_grad(f, has_aux=True)(theta)
+        return g, loss, losses
+
+    def lm_grad_rw(theta, lam, tokens, u):
+        def f(th):
+            losses = per_sample_lm_loss(un_theta(th), tokens, cfg)
+            w = mwn_weights(un_mwn(lam), losses, u)
+            return jnp.mean(w * losses), (losses, w)
+        (loss, (losses, w)), g = jax.value_and_grad(f, has_aux=True)(theta)
+        return g, loss, losses, w
+
+    def multitask_grad(theta, lam, ft_tokens, ft_labels, pt_tokens, u):
+        def f(th):
+            return multitask_loss(un_theta(th), un_mwn(lam), ft_tokens,
+                                  ft_labels, pt_tokens, u, cfg)
+        (loss, (ft, pt_losses, w)), g = jax.value_and_grad(
+            f, has_aux=True)(theta)
+        return g, loss, ft, pt_losses, w
+
+    def lambda_grad_lm(lam, losses, u):
+        def f(lm):
+            w = mwn_weights(un_mwn(lm), losses, u, use_kernel=False)
+            return jnp.mean(w * losses)
+        val, g = jax.value_and_grad(f)(lam)
+        return g, val
+
+    def lm_losses_eval(theta, tokens):
+        return (per_sample_lm_loss(un_theta(theta), tokens, cfg),)
+
+    ep = {
+        "fwd_batch": (fwd_batch, (theta0, tok, lab)),
+        "base_grad_rw": (base_grad_rw, (theta0, mwn0, tok, lab, unc)),
+        "base_grad_rwc": (base_grad_rwc, (theta0, mc0, tok, lab, unc)),
+        "meta_grad_direct": (meta_grad_direct, (theta0, tok, lab)),
+        "lambda_grad_rw": (lambda_grad_rw, (mwn0, fvec, unc)),
+        "lambda_grad_rwc": (lambda_grad_rwc, (mc0, logits_in, lab, unc)),
+        "sama_adapt_perturb": (sama_adapt_perturb,
+                               (theta0, flatv, flatv, flatv, flatv, scalar,
+                                scalar, scalar)),
+        "adam_step_theta": (adam_step_theta,
+                            (theta0, flatv, flatv, flatv, scalar, scalar,
+                             scalar)),
+        "sgd_step_theta": (sgd_step_theta,
+                           (theta0, flatv, flatv, scalar, scalar, scalar)),
+        "hvp_rw": (hvp_rw, (theta0, mwn0, tok, lab, unc, flatv)),
+        "mixed_rw": (mixed_rw, (theta0, mwn0, tok, lab, unc, flatv)),
+        "itd_meta_grad": (itd_meta_grad,
+                          (theta0, flatv, flatv, mwn0, toks_k, labs_k, unc_k,
+                           tok, lab, scalar)),
+        "lm_grad": (lm_grad, (theta0, tok)),
+        "lm_grad_rw": (lm_grad_rw, (theta0, mwn0, tok, unc)),
+        "multitask_grad": (multitask_grad, (theta0, mwn0, tok, lab, tok, unc)),
+        "lambda_grad_lm": (lambda_grad_lm, (mwn0, fvec, unc)),
+        "lm_losses_eval": (lm_losses_eval, (theta0, tok)),
+    }
+
+    # λ-optimizer steps (flat sizes differ from θ).
+    n_mwn, n_mc = mwn0.shape[0], mc0.shape[0]
+    lamv = jnp.zeros((n_mwn,), jnp.float32)
+    mcv = jnp.zeros((n_mc,), jnp.float32)
+
+    def adam_step_mwn(lam, m, v, g, t, lr, wd):
+        return fused_adam(lam, m, v, g, t, lr, weight_decay=wd)
+
+    def adam_step_mwn_corr(lam, m, v, g, t, lr, wd):
+        return fused_adam(lam, m, v, g, t, lr, weight_decay=wd)
+
+    ep["adam_step_mwn"] = (adam_step_mwn,
+                           (mwn0, lamv, lamv, lamv, scalar, scalar, scalar))
+    ep["adam_step_mwn_corr"] = (adam_step_mwn_corr,
+                                (mc0, mcv, mcv, mcv, scalar, scalar, scalar))
+    return ep
+
+
+# Named model configurations lowered by `aot.py`. Sizes are the DESIGN.md §4
+# substitution for BERT-base/RoBERTa-base (repro band 0: CPU-only image).
+CONFIGS = {
+    "cls_tiny": ModelConfig(name="cls_tiny", d_model=64, n_layers=2,
+                            n_heads=2, seq_len=32, n_classes=4, batch=16,
+                            unroll=3),
+    "cls_small": ModelConfig(name="cls_small", d_model=128, n_layers=4,
+                             n_heads=4, seq_len=64, n_classes=4, batch=16,
+                             unroll=3),
+    "lm_small": ModelConfig(name="lm_small", d_model=128, n_layers=4,
+                            n_heads=4, seq_len=64, n_classes=4, batch=8,
+                            unroll=2),
+    # Strong-scaling configs for Table 2: same model as cls_tiny, but with
+    # the *per-worker* batch baked to global_batch/workers (48/W), mirroring
+    # the paper's fixed global batch 48 over 1/2/4 GPUs.
+    "cls_b48": ModelConfig(name="cls_b48", d_model=64, n_layers=2, n_heads=2,
+                           seq_len=32, n_classes=4, batch=48, unroll=3),
+    "cls_b24": ModelConfig(name="cls_b24", d_model=64, n_layers=2, n_heads=2,
+                           seq_len=32, n_classes=4, batch=24, unroll=3),
+    "cls_b12": ModelConfig(name="cls_b12", d_model=64, n_layers=2, n_heads=2,
+                           seq_len=32, n_classes=4, batch=12, unroll=3),
+    # Few-shot width sweep (Appendix D / Fig. 4): 5-way episodes, support
+    # and query batches of 25. The iMAML-style proximal term ‖θ−λ‖² is
+    # handled analytically on the Rust side, so these only need forward +
+    # plain-CE gradients.
+    "fs_w32": ModelConfig(name="fs_w32", d_model=32, n_layers=2, n_heads=2,
+                          seq_len=16, n_classes=5, batch=25),
+    "fs_w64": ModelConfig(name="fs_w64", d_model=64, n_layers=2, n_heads=2,
+                          seq_len=16, n_classes=5, batch=25),
+    "fs_w128": ModelConfig(name="fs_w128", d_model=128, n_layers=2,
+                           n_heads=4, seq_len=16, n_classes=5, batch=25),
+    "fs_w192": ModelConfig(name="fs_w192", d_model=192, n_layers=2,
+                           n_heads=4, seq_len=16, n_classes=5, batch=25),
+}
+
+
+def n_params(cfg: ModelConfig, kind: str = "theta") -> int:
+    return int(flat_template(cfg, kind)[0].shape[0])

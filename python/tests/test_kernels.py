@@ -1,0 +1,211 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; every kernel must match its `ref.py`
+oracle to float32 tolerance. This is the CORE correctness signal for the
+bottom layer of the stack.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import attention, elementwise as ew, mwn, ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=20,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("ci")
+
+
+def rng_arrays(seed, *shapes):
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, len(shapes))
+    return [jax.random.normal(k, s, jnp.float32) for k, s in zip(keys, shapes)]
+
+
+# ---------------------------------------------------------------------------
+# adam_adapt
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 7000), t=st.integers(1, 200), seed=st.integers(0, 99))
+def test_adam_adapt_matches_ref(n, t, seed):
+    m, g, gd = rng_arrays(seed, (n,), (n,), (n,))
+    v = jnp.abs(rng_arrays(seed + 1, (n,))[0]) + 1e-4
+    lr = 1e-3
+    out = ew.adam_adapt(m, v, g, gd, float(t), lr)
+    expect = ref.adam_adapt_ref(m, v, g, float(t), lr) * gd
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-7)
+
+
+@given(seed=st.integers(0, 200))
+def test_adam_adapt_closed_form_matches_autodiff(seed):
+    (m,) = rng_arrays(seed, (64,))
+    v = jnp.abs(rng_arrays(seed + 1, (64,))[0]) + 1e-4
+    (g,) = rng_arrays(seed + 2, (64,))
+    t, lr = 9.0, 1e-3
+    closed = ref.adam_adapt_ref(m, v, g, t, lr)
+    auto = jax.vmap(
+        jax.grad(lambda gg, mm, vv: ref.adam_step_size_ref(gg, mm, vv, t, lr))
+    )(g, m, v)
+    np.testing.assert_allclose(closed, auto, rtol=1e-3, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# perturb
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 9000), alpha=st.floats(0.01, 10.0),
+       seed=st.integers(0, 99))
+def test_perturb_matches_ref(n, alpha, seed):
+    theta, vec = rng_arrays(seed, (n,), (n,))
+    p, m, eps = ew.perturb(theta, vec, alpha)
+    p2, m2, eps2 = ref.perturb_ref(theta, vec, alpha)
+    np.testing.assert_allclose(p, p2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(m, m2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(eps, eps2, rtol=1e-5)
+
+
+def test_perturb_eps_is_alpha_over_norm():
+    theta = jnp.zeros((4,))
+    vec = jnp.array([3.0, 0.0, 4.0, 0.0])
+    _, _, eps = ew.perturb(theta, vec, 2.0)
+    assert abs(float(eps) - 0.4) < 1e-6
+
+
+def test_perturb_zero_vector_is_guarded():
+    theta = jnp.ones((8,))
+    vec = jnp.zeros((8,))
+    p, m, eps = ew.perturb(theta, vec, 1.0)
+    assert np.isfinite(float(eps))
+    np.testing.assert_allclose(p, theta)
+
+
+# ---------------------------------------------------------------------------
+# fused optimizers
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 8000), t=st.integers(1, 100),
+       wd=st.floats(0.0, 0.1), seed=st.integers(0, 99))
+def test_fused_adam_matches_ref(n, t, wd, seed):
+    theta, m, g = rng_arrays(seed, (n,), (n,), (n,))
+    v = jnp.abs(rng_arrays(seed + 3, (n,))[0])
+    lr = 1e-3
+    got = ew.fused_adam(theta, m, v, g, float(t), lr, weight_decay=wd)
+    want = ref.fused_adam_ref(theta, m, v, g, float(t), lr, weight_decay=wd)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+
+
+@given(n=st.integers(1, 8000), mom=st.floats(0.0, 0.99),
+       wd=st.floats(0.0, 0.01), seed=st.integers(0, 99))
+def test_fused_sgd_matches_ref(n, mom, wd, seed):
+    theta, buf, g = rng_arrays(seed, (n,), (n,), (n,))
+    got = ew.fused_sgd(theta, buf, g, 0.1, mom, wd)
+    want = ref.fused_sgd_ref(theta, buf, g, 0.1, mom, wd)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+
+
+def test_fused_adam_agrees_with_sequential_steps():
+    # two fused steps == manually chaining the reference twice
+    n = 257
+    theta, m, g1, g2 = rng_arrays(5, (n,), (n,), (n,), (n,))
+    v = jnp.abs(rng_arrays(6, (n,))[0])
+    t1 = ew.fused_adam(theta, m, v, g1, 1.0, 1e-2)
+    t2 = ew.fused_adam(t1[0], t1[1], t1[2], g2, 2.0, 1e-2)
+    r1 = ref.adam_update_ref(theta, m, v, g1, 1.0, 1e-2)
+    r2 = ref.adam_update_ref(r1[0], r1[1], r1[2], g2, 2.0, 1e-2)
+    np.testing.assert_allclose(t2[0], r2[0], rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@given(
+    h=st.integers(1, 4),
+    s_mult=st.integers(1, 4),
+    d=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 50),
+)
+def test_flash_attention_matches_ref(h, s_mult, d, causal, seed):
+    s = 32 * s_mult
+    q, k, v = rng_arrays(seed, (h, s, d), (h, s, d), (h, s, d))
+    out = attention.flash_attention(q, k, v, causal)
+    want = ref.attention_ref(q, k, v, causal)
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-5)
+
+
+@given(causal=st.booleans(), seed=st.integers(0, 30))
+def test_flash_attention_gradients_match_ref(causal, seed):
+    h, s, d = 2, 64, 16
+    q, k, v = rng_arrays(seed, (h, s, d), (h, s, d), (h, s, d))
+
+    def loss_flash(q, k, v):
+        return jnp.sum(jnp.tanh(attention.flash_attention(q, k, v, causal)))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.tanh(ref.attention_ref(q, k, v, causal)))
+
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+def test_flash_attention_causal_ignores_future():
+    # perturbing a future key must not change earlier outputs
+    h, s, d = 1, 64, 16
+    q, k, v = rng_arrays(7, (h, s, d), (h, s, d), (h, s, d))
+    out1 = attention.flash_attention(q, k, v, True)
+    k2 = k.at[0, -1, :].add(100.0)
+    v2 = v.at[0, -1, :].add(100.0)
+    out2 = attention.flash_attention(q, k2, v2, True)
+    np.testing.assert_allclose(out1[:, :-1, :], out2[:, :-1, :],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_flash_attention_softmax_scale():
+    # single query/key → output equals v row exactly
+    q = jnp.ones((1, 32, 8))
+    k = jnp.ones((1, 32, 8))
+    v = jnp.tile(jnp.arange(8, dtype=jnp.float32), (1, 32, 1))
+    out = attention.flash_attention(q, k, v, False)
+    np.testing.assert_allclose(out[0, 0], jnp.arange(8, dtype=jnp.float32),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MWN
+# ---------------------------------------------------------------------------
+
+@given(b=st.integers(1, 300), hdim=st.sampled_from([8, 64]),
+       seed=st.integers(0, 99))
+def test_mwn_matches_ref(b, hdim, seed):
+    x, w1, w2 = rng_arrays(seed, (b, 2), (2, hdim), (hdim, 1))
+    b1 = rng_arrays(seed + 1, (hdim,))[0] * 0.1
+    b2 = jnp.zeros((1,))
+    got = mwn.mwn_forward(x, w1, b1, w2, b2)
+    want = ref.mwn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # sigmoid output — may saturate to exactly 0/1 in f32 for extreme inputs
+    assert np.all(np.asarray(got) >= 0) and np.all(np.asarray(got) <= 1)
+
+
+def test_mwn_gradients_flow_to_all_params():
+    x, w1, w2 = rng_arrays(3, (16, 2), (2, 32), (32, 1))
+    b1 = jnp.zeros((32,))
+    b2 = jnp.zeros((1,))
+
+    def f(w1, b1, w2, b2):
+        return jnp.sum(mwn.mwn_forward(x, w1, b1, w2, b2))
+
+    grads = jax.grad(f, argnums=(0, 1, 2, 3))(w1, b1, w2, b2)
+    for g in grads:
+        assert float(jnp.sum(jnp.abs(g))) > 0.0

@@ -1,0 +1,223 @@
+"""L2 model correctness: gradients, losses, bilevel entry points, layouts.
+
+The flash-attention model's grads are checked against the naive-attention
+model's (same math, different kernel), and every gradient entry point is
+checked against finite differences along random directions.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+CFG = dataclasses.replace(model.CONFIGS["cls_tiny"], batch=4, seq_len=16)
+
+
+@pytest.fixture(scope="module")
+def eps():
+    return model.make_entry_points(CFG)
+
+
+@pytest.fixture(scope="module")
+def data():
+    key = jax.random.PRNGKey(0)
+    tok = jax.random.randint(key, (CFG.batch, CFG.seq_len), 0, CFG.vocab)
+    lab = jax.random.randint(jax.random.PRNGKey(1), (CFG.batch,), 0,
+                             CFG.n_classes)
+    unc = jnp.zeros((CFG.batch,))
+    return tok, lab, unc
+
+
+def rand_flat(kind, seed=7, scale=1.0):
+    n = model.n_params(CFG, kind)
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+
+
+def test_param_manifest_tiles_flat_vector():
+    for kind in ["theta", "mwn", "mwn_corr"]:
+        entries = model.param_manifest(CFG, kind)
+        total = model.n_params(CFG, kind)
+        covered = np.zeros(total, dtype=bool)
+        for e in entries:
+            assert e["size"] == int(np.prod(e["shape"])) or e["shape"] == []
+            seg = covered[e["offset"]:e["offset"] + e["size"]]
+            assert not seg.any(), f"overlap at {e['path']}"
+            covered[e["offset"]:e["offset"] + e["size"]] = True
+        assert covered.all(), f"gaps in {kind} layout"
+
+
+def test_manifest_init_kinds_are_sane():
+    entries = model.param_manifest(CFG, "theta")
+    by_path = {e["path"]: e for e in entries}
+    # LN scales are ones, biases zeros, embeddings normal
+    scales = [e for p, e in by_path.items() if p.endswith("scale")]
+    assert scales and all(e["init"] == "ones" for e in scales)
+    assert by_path["tok_emb"]["init"] == "normal"
+    biases = [e for p, e in by_path.items() if p.endswith("bias")]
+    assert all(e["init"] == "zeros" for e in biases)
+
+
+def test_flash_and_naive_models_agree(data):
+    tok, lab, _ = data
+    theta, _ = model.flat_template(CFG, "theta")
+    cfg_naive = dataclasses.replace(CFG, use_flash=False)
+    _, un = model.flat_template(CFG, "theta")
+    lf = model.classifier_logits(un(theta), tok, CFG)
+    ln = model.classifier_logits(un(theta), tok, cfg_naive)
+    np.testing.assert_allclose(lf, ln, rtol=1e-4, atol=1e-5)
+
+
+def test_base_grad_rw_matches_finite_difference(eps, data):
+    tok, lab, unc = data
+    fn, _ = eps["base_grad_rw"]
+    theta, _ = model.flat_template(CFG, "theta")
+    lam, _ = model.flat_template(CFG, "mwn", seed=1)
+    g, loss, losses, w = fn(theta, lam, tok, lab, unc)
+    assert losses.shape == (CFG.batch,)
+    assert np.all((np.asarray(w) > 0) & (np.asarray(w) < 1))
+    # directional FD
+    v = jax.random.normal(jax.random.PRNGKey(5), theta.shape)
+    v = v / jnp.linalg.norm(v)
+    h = 1e-2
+    lp = fn(theta + h * v, lam, tok, lab, unc)[1]
+    lm = fn(theta - h * v, lam, tok, lab, unc)[1]
+    fd = (lp - lm) / (2 * h)
+    analytic = jnp.vdot(g, v)
+    np.testing.assert_allclose(fd, analytic, rtol=5e-2, atol=1e-4)
+
+
+def test_lambda_grad_rw_matches_finite_difference(eps):
+    fn, _ = eps["lambda_grad_rw"]
+    lam, _ = model.flat_template(CFG, "mwn", seed=2)
+    losses = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (CFG.batch,)))
+    unc = jnp.zeros((CFG.batch,))
+    g, val = fn(lam, losses, unc)
+    v = jax.random.normal(jax.random.PRNGKey(6), lam.shape)
+    v = v / jnp.linalg.norm(v)
+    h = 1e-3
+    vp = fn(lam + h * v, losses, unc)[1]
+    vm = fn(lam - h * v, losses, unc)[1]
+    fd = (vp - vm) / (2 * h)
+    np.testing.assert_allclose(fd, jnp.vdot(g, v), rtol=2e-2, atol=1e-6)
+
+
+def test_hvp_matches_double_finite_difference(eps, data):
+    tok, lab, unc = data
+    hvp_fn, _ = eps["hvp_rw"]
+    bg_fn, _ = eps["base_grad_rw"]
+    theta, _ = model.flat_template(CFG, "theta")
+    lam, _ = model.flat_template(CFG, "mwn", seed=1)
+    v = jax.random.normal(jax.random.PRNGKey(9), theta.shape)
+    v = v / jnp.linalg.norm(v)
+    (hv,) = hvp_fn(theta, lam, tok, lab, unc, v)
+    h = 1e-2
+    gp = bg_fn(theta + h * v, lam, tok, lab, unc)[0]
+    gm = bg_fn(theta - h * v, lam, tok, lab, unc)[0]
+    fd = (gp - gm) / (2 * h)
+    cos = float(jnp.vdot(hv, fd)
+                / (jnp.linalg.norm(hv) * jnp.linalg.norm(fd) + 1e-12))
+    assert cos > 0.98, f"HVP vs FD-of-grads cosine = {cos}"
+
+
+def test_mixed_matches_lambda_grad_difference(eps, data):
+    tok, lab, unc = data
+    mixed_fn, _ = eps["mixed_rw"]
+    theta, _ = model.flat_template(CFG, "theta")
+    lam, _ = model.flat_template(CFG, "mwn", seed=1)
+    v = jax.random.normal(jax.random.PRNGKey(11), theta.shape)
+    v = v / jnp.linalg.norm(v)
+    (mv,) = mixed_fn(theta, lam, tok, lab, unc, v)
+
+    # FD of λ-grad along θ-direction v, through the *full* base loss
+    def lam_grad_at(th):
+        def f(lm):
+            return model.base_loss_rw(
+                model.flat_template(CFG, "theta")[1](th),
+                model.flat_template(CFG, "mwn")[1](lm),
+                tok, lab, unc,
+                dataclasses.replace(CFG, use_flash=False),
+                use_kernel=False,
+            )[0]
+        return jax.grad(f)(lam)
+
+    h = 5e-3
+    fd = (lam_grad_at(theta + h * v) - lam_grad_at(theta - h * v)) / (2 * h)
+    cos = float(jnp.vdot(mv, fd)
+                / (jnp.linalg.norm(mv) * jnp.linalg.norm(fd) + 1e-12))
+    assert cos > 0.99, f"mixed vs central-difference cosine = {cos}"
+
+
+def test_lm_losses_positive_and_grad_flows(eps, data):
+    tok, _, _ = data
+    fn, _ = eps["lm_grad"]
+    theta, _ = model.flat_template(CFG, "theta")
+    g, loss, losses = fn(theta, tok)
+    assert float(loss) > 0
+    assert losses.shape == (CFG.batch,)
+    assert float(jnp.sum(jnp.abs(g))) > 0
+    # untrained byte-LM loss should be near ln(vocab)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 1.0
+
+
+def test_multitask_grad_combines_both_objectives(eps, data):
+    tok, lab, unc = data
+    fn, _ = eps["multitask_grad"]
+    theta, _ = model.flat_template(CFG, "theta")
+    lam, _ = model.flat_template(CFG, "mwn", seed=1)
+    g, loss, ft, pt_losses, w = fn(theta, lam, tok, lab, tok, unc)
+    assert float(loss) > float(ft) > 0
+    expected = float(ft) + float(jnp.mean(w * pt_losses))
+    np.testing.assert_allclose(float(loss), expected, rtol=1e-5)
+
+
+def test_itd_meta_grad_runs_and_is_finite(eps, data):
+    tok, lab, unc = data
+    fn, _ = eps["itd_meta_grad"]
+    theta, _ = model.flat_template(CFG, "theta")
+    lam, _ = model.flat_template(CFG, "mwn", seed=1)
+    k = CFG.unroll
+    toks_k = jnp.tile(tok[None], (k, 1, 1))
+    labs_k = jnp.tile(lab[None], (k, 1))
+    unc_k = jnp.zeros((k, CFG.batch))
+    zeros = jnp.zeros_like(theta)
+    g, loss = fn(theta, zeros, zeros, lam, toks_k, labs_k, unc_k, tok, lab,
+                 jnp.asarray(1.0))
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert float(jnp.sum(jnp.abs(g))) > 0
+    assert np.isfinite(float(loss))
+
+
+def test_corrected_labels_start_near_onehot(data):
+    tok, lab, _ = data
+    key = jax.random.PRNGKey(4)
+    corr = model.init_corrector(key, CFG.n_classes)
+    logits = jax.random.normal(key, (CFG.batch, CFG.n_classes))
+    soft = model.corrected_soft_labels(corr, logits, lab, CFG.n_classes)
+    np.testing.assert_allclose(jnp.sum(soft, axis=1), 1.0, rtol=1e-5)
+    # κ·onehot prior dominates at init → argmax matches the given label
+    assert np.array_equal(np.argmax(np.asarray(soft), axis=1),
+                          np.asarray(lab))
+
+
+def test_sama_adapt_perturb_entry_consistent(eps):
+    fn, _ = eps["sama_adapt_perturb"]
+    n = model.n_params(CFG, "theta")
+    key = jax.random.PRNGKey(8)
+    ks = jax.random.split(key, 5)
+    theta, m, gb, gd = (jax.random.normal(k, (n,)) * 0.1 for k in ks[:4])
+    v = jnp.abs(jax.random.normal(ks[4], (n,))) * 0.01
+    plus, minus, vp, epsv = fn(theta, m, v, gb, gd, jnp.asarray(3.0),
+                               jnp.asarray(1e-3), jnp.asarray(0.1))
+    # θ± symmetric around θ with radius α
+    np.testing.assert_allclose((plus + minus) / 2, theta, rtol=1e-4,
+                               atol=1e-5)
+    radius = float(jnp.linalg.norm(plus - theta))
+    np.testing.assert_allclose(radius, 0.1, rtol=1e-3)
+    # v matches the closed-form adaptation product
+    from compile.kernels import ref as kref
+    expect = kref.adam_adapt_ref(m, v, gb, 3.0, 1e-3) * gd
+    np.testing.assert_allclose(vp, expect, rtol=1e-4, atol=1e-8)

@@ -1,0 +1,85 @@
+//! Tables 8–9 — full ablation on the WRENCH workload: every meta-gradient
+//! algorithm's accuracy, throughput and memory, isolating the three SAMA
+//! components (base-Jacobian identity, algorithmic adaptation, distributed
+//! training).
+//!
+//! Reproduction targets (shape, per Tables 8/9):
+//!   * throughput: ITD ≪ CG ≈ Neumann < DARTS < SAMA-NA ≈ SAMA < SAMA×2/4;
+//!   * memory: ITD worst, CG/Neumann high, SAMA near SAMA-NA (adaptation is
+//!     cheap), per-worker memory shrinks with workers;
+//!   * accuracy: SAMA ≥ SAMA-NA ≥ DARTS/finetune.
+
+mod common;
+
+use sama::apps::wrench;
+use sama::config::Algo;
+use sama::metrics::memory::{gib, peak_bytes, ArchSpec};
+use sama::metrics::report::{f1, f2, pct, Table};
+
+fn main() {
+    common::require_artifacts();
+    let dataset = "agnews";
+    let arch = ArchSpec::bert_base();
+
+    struct Row {
+        label: &'static str,
+        algo: Algo,
+        workers: usize,
+        unroll: usize,
+        acc_steps: usize,
+    }
+    let acc = common::acc_steps();
+    // ITD and CG/Neumann are 10–40× slower per meta step on this host, so
+    // their accuracy runs use proportionally fewer steps in fast mode.
+    let slow_acc = if common::full() { acc } else { 100 };
+    let rows = vec![
+        Row { label: "Finetune", algo: Algo::None, workers: 1, unroll: 5, acc_steps: acc },
+        Row { label: "Iterative Diff (MAML)", algo: Algo::Itd, workers: 1, unroll: 3, acc_steps: slow_acc },
+        Row { label: "Conjugate gradient (iMAML)", algo: Algo::Cg, workers: 1, unroll: 5, acc_steps: slow_acc },
+        Row { label: "Neumann series", algo: Algo::Neumann, workers: 1, unroll: 5, acc_steps: slow_acc },
+        Row { label: "DARTS (T1–T2)", algo: Algo::T1T2, workers: 1, unroll: 1, acc_steps: acc },
+        Row { label: "SAMA-NA", algo: Algo::SamaNa, workers: 1, unroll: 5, acc_steps: acc },
+        Row { label: "SAMA", algo: Algo::Sama, workers: 1, unroll: 5, acc_steps: acc },
+        Row { label: "SAMA (2 workers)", algo: Algo::Sama, workers: 2, unroll: 5, acc_steps: acc },
+        Row { label: "SAMA (4 workers)", algo: Algo::Sama, workers: 4, unroll: 5, acc_steps: acc },
+    ];
+
+    let mut t = Table::new(
+        "Tables 8–9: component ablation (AGNews sim)",
+        &[
+            "method",
+            "accuracy (%)",
+            "throughput (samples/s, projected)",
+            "memory (GiB @BERT-base)",
+        ],
+    );
+    for row in rows {
+        let mut cfg = common::wrench_cfg();
+        cfg.algo = row.algo;
+        cfg.workers = row.workers;
+        cfg.unroll = row.unroll;
+        cfg.steps = row.acc_steps;
+        let out = wrench::run(&cfg, dataset).expect("run");
+        let mem = gib(peak_bytes(
+            row.algo,
+            &arch,
+            48,
+            row.workers as u64,
+            10,
+        ));
+        t.row(vec![
+            row.label.into(),
+            pct(out.test_accuracy as f64),
+            f1(out.report.projected_parallel_throughput()),
+            f2(mem),
+        ]);
+        eprintln!("[tables89] {} done", row.label);
+    }
+    t.print();
+    println!(
+        "paper Table 8 reference (acc/thr/mem): Finetune 85.79/169/7.8, \
+         ITD 85.78/28/22.9, CG 86.78/65/22.0, Neumann 86.65/67/19.7, \
+         DARTS 86.36/44/10.8, SAMA-NA 86.55/138/10.3, SAMA 89.05/135/11.1, \
+         SAMA×2 88.85/226/8.0, SAMA×4 89.02/298/6.5."
+    );
+}

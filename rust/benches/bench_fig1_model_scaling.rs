@@ -1,0 +1,44 @@
+//! Fig. 1 (bottom right) — GPU memory vs model size (RoBERTa width sweep)
+//! for ITD / CG / Neumann / T1–T2 / SAMA, from the analytic memory model
+//! calibrated in `metrics::memory` (DESIGN.md §Hardware-Adaptation: no GPUs
+//! on this image, the *ratios and slopes* are the reproduction target).
+
+mod common;
+
+use sama::config::Algo;
+use sama::metrics::memory::{gib, peak_bytes, ArchSpec};
+use sama::metrics::report::{f2, Table};
+
+fn main() {
+    let widths = [0.5, 1.0, 1.5, 2.0, 3.0];
+    let algos = [Algo::Itd, Algo::Cg, Algo::Neumann, Algo::T1T2, Algo::SamaNa, Algo::Sama];
+    let mut cols: Vec<String> = vec!["model width ×".into(), "params (M)".into()];
+    cols.extend(algos.iter().map(|a| format!("{} (GiB)", a.name())));
+    let mut t = Table::new(
+        "Fig. 1 right: memory vs model size (batch 16, unroll 10)",
+        &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for w in widths {
+        let arch = ArchSpec::roberta_scaled(w);
+        let mut row = vec![
+            format!("{w:.1}"),
+            format!("{:.0}", arch.n_params as f64 / 1e6),
+        ];
+        for algo in algos {
+            row.push(f2(gib(peak_bytes(algo, &arch, 16, 1, 10))));
+        }
+        t.row(row);
+    }
+    t.print();
+
+    // slope summary: dGiB per 100M params (paper: SAMA flattest)
+    let small = ArchSpec::roberta_scaled(1.0);
+    let big = ArchSpec::roberta_scaled(3.0);
+    let dp = (big.n_params - small.n_params) as f64 / 1e8;
+    println!("memory slope, GiB per 100M params (paper: SAMA flattest):");
+    for algo in algos {
+        let d = gib(peak_bytes(algo, &big, 16, 1, 10))
+            - gib(peak_bytes(algo, &small, 16, 1, 10));
+        println!("  {:10} {:.2}", algo.name(), d / dp);
+    }
+}

@@ -1,0 +1,116 @@
+//! §Perf harness (EXPERIMENTS.md §Perf): micro-timings of the L3 hot path.
+//!
+//! Breaks one SAMA training step into its PJRT executions and measures each,
+//! plus the host-side literal-conversion overhead, so optimization work can
+//! target the real bottleneck. Medians over repeated runs (criterion is not
+//! vendored).
+
+mod common;
+
+use sama::bilevel::cls_problem::ClsProblem;
+use sama::bilevel::{BilevelProblem, ParamKind};
+use sama::config::MetaOps;
+use sama::data::wrench_sim;
+use sama::metrics::report::{f2, Table};
+use sama::runtime::{params, Runtime};
+use sama::util::bench_loop;
+use sama::util::rng::Rng;
+
+fn main() {
+    common::require_artifacts();
+    let rt = Runtime::new(&Runtime::artifact_dir(), "cls_tiny").unwrap();
+    let n = rt.config.n_theta;
+    let mut rng = Rng::new(1);
+    let theta = params::init_flat(&rt.config.layout_theta, n, &mut rng);
+    let lambda = params::init_flat(&rt.config.layout_mwn, rt.config.n_mwn, &mut rng);
+    let task = wrench_sim::generate("agnews", rt.config.model.seq_len, 1);
+    let zeros = vec![0.0f32; n];
+
+    let mut p = ClsProblem::new(
+        Runtime::new(&Runtime::artifact_dir(), "cls_tiny").unwrap(),
+        task.train.clone(),
+        task.dev.clone(),
+        MetaOps::Reweight,
+        0,
+        1,
+    );
+
+    // warm the executable caches
+    let _ = p.base_grad(&theta, &lambda, 0).unwrap();
+    let _ = p.meta_direct_grad(&theta, 0).unwrap();
+    let _ = p.lambda_grad(&theta, &lambda, 0).unwrap();
+    let _ = p
+        .sama_adapt_perturb(&theta, &zeros, &zeros, &zeros, &theta, 1.0, 1e-3, 0.05)
+        .unwrap();
+    let _ = p
+        .adam_step(ParamKind::Theta, &theta, &zeros, &zeros, &zeros, 1.0, 1e-3, 0.0)
+        .unwrap();
+
+    let (iters, warm) = if common::full() { (60, 10) } else { (25, 5) };
+    let mut t = Table::new(
+        "§Perf: SAMA step decomposition (cls_tiny, B=16, medians)",
+        &["operation", "median ms", "share of SAMA meta step"],
+    );
+
+    let (base_med, _, _) = bench_loop(warm, iters, || {
+        let _ = p.base_grad(&theta, &lambda, 0).unwrap();
+    });
+    let (meta_direct_med, _, _) = bench_loop(warm, iters, || {
+        let _ = p.meta_direct_grad(&theta, 0).unwrap();
+    });
+    let (lam_med, _, _) = bench_loop(warm, iters, || {
+        let _ = p.lambda_grad(&theta, &lambda, 0).unwrap();
+    });
+    let (ap_med, _, _) = bench_loop(warm, iters, || {
+        let _ = p
+            .sama_adapt_perturb(&theta, &zeros, &zeros, &zeros, &theta, 1.0, 1e-3, 0.05)
+            .unwrap();
+    });
+    let (adam_med, _, _) = bench_loop(warm, iters, || {
+        let _ = p
+            .adam_step(ParamKind::Theta, &theta, &zeros, &zeros, &zeros, 1.0, 1e-3, 0.0)
+            .unwrap();
+    });
+    // host-side literal conversion alone: exec of the cheapest artifact with
+    // a θ-sized input approximates fixed overhead; subtract exec-only time
+    // via the runtime stats of adam_step (3 θ-sized ins, 3 outs).
+    let meta_step = meta_direct_med + ap_med + 2.0 * lam_med;
+
+    let mut row = |name: &str, ms: f64| {
+        t.row(vec![
+            name.into(),
+            f2(ms * 1e3),
+            format!("{:.0}%", 100.0 * ms / meta_step),
+        ]);
+    };
+    row("base_grad (fwd+bwd, weighted)", base_med);
+    row("meta_direct_grad (pass 1)", meta_direct_med);
+    row("sama_adapt_perturb (L1 fused)", ap_med);
+    row("lambda_grad ×2 (passes 2-3)", 2.0 * lam_med);
+    row("adam_step_theta (L1 fused)", adam_med);
+    row("SAMA meta step total", meta_step);
+    t.print();
+
+    let st = p.runtime.stats();
+    println!(
+        "runtime totals: {} execs, {:.2}s exec, {} compiles ({:.2}s), \
+         {:.1} MB in / {:.1} MB out",
+        st.executions,
+        st.exec_seconds,
+        st.compiles,
+        st.compile_seconds,
+        st.bytes_in as f64 / 1e6,
+        st.bytes_out as f64 / 1e6
+    );
+
+    // pure conversion cost probe: θ-sized literal creation
+    let (conv_med, _, _) = bench_loop(warm, 200, || {
+        let lit = xla::Literal::vec1(&theta);
+        std::hint::black_box(lit);
+    });
+    println!(
+        "literal creation for θ ({} f32): {:.3} ms",
+        n,
+        conv_med * 1e3
+    );
+}

@@ -1,0 +1,70 @@
+//! Table 3 — continued pretraining as multitask learning: Baseline vs DAPT
+//! vs TARTAN-MT vs SAMA over several task seeds (the paper's 4 datasets →
+//! 4 synthetic two-domain tasks).
+//!
+//! Reproduction target (shape): DAPT ≥ Baseline, TARTAN-MT > DAPT,
+//! SAMA ≥ TARTAN-MT on average; SAMA's learned auxiliary weights are higher
+//! on relevant than irrelevant pool data (the mechanism).
+
+mod common;
+
+use sama::apps::pretraining::{self, Method};
+use sama::config::Algo;
+use sama::metrics::report::{f3, pct, Table};
+
+fn main() {
+    common::require_artifacts();
+    let task_seeds: Vec<u64> = if common::full() {
+        vec![100, 200, 300, 400]
+    } else {
+        vec![100]
+    };
+    let steps = if common::full() { 600 } else { 150 };
+
+    let mut cols = vec!["method".to_string()];
+    cols.extend(task_seeds.iter().map(|s| format!("task{s}")));
+    cols.push("average".into());
+    let mut t = Table::new(
+        "Table 3: continued pretraining, downstream test accuracy (%)",
+        &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    let mut sama_relevance: Vec<(f32, f32)> = Vec::new();
+    for method in [Method::Baseline, Method::Dapt, Method::TartanMt, Method::Sama] {
+        let mut cells = vec![method.name().to_string()];
+        let mut accs = Vec::new();
+        for &seed in &task_seeds {
+            let mut cfg = common::wrench_cfg();
+            cfg.model = "lm_small".into();
+            cfg.algo = Algo::Sama;
+            cfg.steps = steps;
+            cfg.unroll = 5;
+            let out = pretraining::run(&cfg, method, seed).expect("run");
+            accs.push(out.test_accuracy);
+            cells.push(pct(out.test_accuracy as f64));
+            if let Some(rel) = out.relevance {
+                sama_relevance.push(rel);
+            }
+        }
+        let mean = accs.iter().sum::<f32>() / accs.len() as f32;
+        cells.push(pct(mean as f64));
+        t.row(cells);
+    }
+    t.print();
+    if !sama_relevance.is_empty() {
+        let rel: f32 = sama_relevance.iter().map(|r| r.0).sum::<f32>()
+            / sama_relevance.len() as f32;
+        let irr: f32 = sama_relevance.iter().map(|r| r.1).sum::<f32>()
+            / sama_relevance.len() as f32;
+        println!(
+            "SAMA mechanism: mean aux weight relevant={} vs irrelevant={} \
+             (paper: SAMA up-weights relevant auxiliary data)",
+            f3(rel as f64),
+            f3(irr as f64)
+        );
+    }
+    println!(
+        "paper Table 3 averages: Baseline 79.93, DAPT 80.92, TARTAN-MT \
+         83.02, SAMA 83.29 — compare ordering."
+    );
+}

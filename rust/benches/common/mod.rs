@@ -1,0 +1,59 @@
+//! Shared bench harness (criterion is not vendored on this image).
+//!
+//! Every bench regenerates one paper table/figure and prints it as a
+//! markdown table via `metrics::report::Table`. Budgets:
+//!   * default        — reduced steps, the shape is still measurable;
+//!   * SAMA_BENCH_FULL=1 — closer to the paper's budgets (slow).
+
+#![allow(dead_code)]
+
+use sama::config::TrainConfig;
+
+pub fn full() -> bool {
+    std::env::var("SAMA_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Steps for accuracy-bearing runs.
+pub fn acc_steps() -> usize {
+    if full() {
+        1600
+    } else {
+        400
+    }
+}
+
+/// Steps for throughput measurement windows.
+pub fn thr_steps() -> usize {
+    if full() {
+        120
+    } else {
+        20
+    }
+}
+
+/// The tuned §4.1 hyperparameters for this repo's scale (see
+/// EXPERIMENTS.md: α is normalized to the stand-in model's ‖θ‖, meta-lr
+/// sized for the shorter schedules).
+pub fn wrench_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = "cls_tiny".into();
+    cfg.steps = acc_steps();
+    cfg.unroll = 5;
+    cfg.base_lr = 1e-3;
+    cfg.meta_lr = 0.02;
+    cfg.sama_alpha = 0.05;
+    cfg.solver_iters = 5;
+    cfg.seed = 17;
+    cfg
+}
+
+/// Ensure artifacts exist before benching; give an actionable error.
+pub fn require_artifacts() {
+    let dir = sama::runtime::Runtime::artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        panic!(
+            "artifacts/manifest.json missing — run `make artifacts` first \
+             (looked in {dir:?})"
+        );
+    }
+}

@@ -1,0 +1,85 @@
+//! Meta-gradient algorithms — one per row of the paper's Fig. 1 table.
+//!
+//! All algorithms consume the [`BilevelProblem`] oracle set and produce a
+//! meta gradient ∂L_meta/∂λ. Sign convention (Eq. 2/3): the exact implicit
+//! gradient is  −(∂²L/∂λ∂θ) · H⁻¹ · g_meta, where H = ∂²L_base/∂θ² and
+//! g_meta = ∂L_meta/∂θ*:
+//!
+//! * [`sama`]      — identity base Jacobian + Adam adaptation + Eq. 5
+//!                   central difference (three first-order passes).
+//! * [`sama_na`]   — SAMA without algorithmic adaptation (v = g_meta).
+//! * [`t1t2`]      — DARTS/T1–T2: same estimator as SAMA-NA but pinned to
+//!                   unroll = 1 and the SGD assumption.
+//! * [`neumann`]   — truncated Neumann series for H⁻¹g (Lorraine et al.).
+//! * [`cg`]        — conjugate gradient solve of Hq = g (iMAML-style).
+//! * [`itd`]       — iterative differentiation through the unrolled path.
+//!
+//! Each returns a [`MetaGradOut`] carrying the gradient plus cost counters
+//! (oracle calls), which the memory/throughput model turns into the paper's
+//! efficiency tables.
+
+pub mod baselines;
+pub mod sama;
+
+use anyhow::Result;
+
+use crate::bilevel::BilevelProblem;
+use crate::config::Algo;
+use crate::optim::Optimizer;
+
+/// Cost accounting for one meta-gradient computation.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OracleCounts {
+    pub first_order_grads: usize,
+    pub hvps: usize,
+    pub mixed_products: usize,
+    pub unrolled_steps: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct MetaGradOut {
+    pub grad: Vec<f32>,
+    /// Meta loss at the evaluation point (monitoring).
+    pub meta_loss: f32,
+    /// SAMA's perturbation direction v and step ε (for the F2SA-style base
+    /// nudge θ ← θ − εv); empty/0 for other algorithms.
+    pub perturb_v: Vec<f32>,
+    pub epsilon: f32,
+    pub counts: OracleCounts,
+}
+
+/// Inputs shared by every algorithm at a meta step.
+pub struct MetaStepCtx<'a> {
+    pub theta: &'a [f32],
+    pub lambda: &'a [f32],
+    /// Base optimizer (adaptation state source for SAMA).
+    pub base_opt: &'a dyn Optimizer,
+    /// Base gradient at θ* from the most recent base step (adaptation input).
+    pub g_base: &'a [f32],
+    pub step: usize,
+    /// SAMA's α (Eq. 5).
+    pub alpha: f32,
+    /// Neumann/CG iteration budget.
+    pub solver_iters: usize,
+    /// Adam moment vectors + step for the ITD artifact.
+    pub adam_m: &'a [f32],
+    pub adam_v: &'a [f32],
+    pub adam_t: f32,
+}
+
+/// Dispatch a meta-gradient computation by algorithm.
+pub fn meta_grad(
+    algo: Algo,
+    problem: &mut dyn BilevelProblem,
+    ctx: &MetaStepCtx,
+) -> Result<MetaGradOut> {
+    match algo {
+        Algo::Sama => sama::meta_grad(problem, ctx, true),
+        Algo::SamaNa => sama::meta_grad(problem, ctx, false),
+        Algo::T1T2 => sama::meta_grad(problem, ctx, false), // unroll pinned by caller
+        Algo::Neumann => baselines::neumann(problem, ctx),
+        Algo::Cg => baselines::cg(problem, ctx),
+        Algo::Itd => baselines::itd(problem, ctx),
+        Algo::None => anyhow::bail!("Algo::None has no meta gradient"),
+    }
+}

@@ -1,0 +1,195 @@
+//! SAMA (paper §3, Eq. 5): three first-order passes + one analytic
+//! element-wise pass.
+//!
+//! ```text
+//! 1. g_meta = ∂L_meta/∂θ*            (first-order backward, meta batch)
+//! 2. v      = (∂u/∂g) ⊙ g_meta       (diagonal adaptation — Appendix C)
+//!    ε      = α / ‖v‖₂
+//! 3. g_λ⁺   = ∂L_base(θ + εv, λ)/∂λ  (first-order backward, base batch)
+//! 4. g_λ⁻   = ∂L_base(θ − εv, λ)/∂λ  (same batch!)
+//!    ∂L_meta/∂λ ≈ −(g_λ⁺ − g_λ⁻)/2ε
+//! ```
+//!
+//! With `adapt = false` this is SAMA-NA (the ablation of Tables 1/8/9):
+//! v = g_meta, i.e. the adaptation matrix is taken to be the identity —
+//! correct for vanilla SGD, *wrong* for Adam, which is the point.
+
+use anyhow::Result;
+
+use super::{MetaGradOut, MetaStepCtx, OracleCounts};
+use crate::bilevel::BilevelProblem;
+use crate::optim::sama_epsilon;
+use crate::tensor::vecops;
+
+pub fn meta_grad(
+    problem: &mut dyn BilevelProblem,
+    ctx: &MetaStepCtx,
+    adapt: bool,
+) -> Result<MetaGradOut> {
+    let n = problem.n_theta();
+    assert_eq!(ctx.theta.len(), n);
+
+    // Pass 1: direct gradient on the meta batch.
+    let (g_meta, meta_loss) = problem.meta_direct_grad(ctx.theta, ctx.step)?;
+
+    // Analytic pass: v = (∂u/∂g) ⊙ g_meta (identity when adapt=false).
+    let mut v = vec![0.0f32; n];
+    if adapt {
+        ctx.base_opt.adapt_diag(ctx.g_base, &mut v);
+        vecops::hadamard_into(&v.clone(), &g_meta, &mut v);
+    } else {
+        v.copy_from_slice(&g_meta);
+    }
+
+    let eps = sama_epsilon(ctx.alpha, &v);
+
+    // Passes 2–3: λ-gradient at θ± on the *same* base batch.
+    let mut theta_pert = vec![0.0f32; n];
+    vecops::add_scaled_into(ctx.theta, eps, &v, &mut theta_pert);
+    let (g_plus, _) = problem.lambda_grad(&theta_pert, ctx.lambda, ctx.step)?;
+    vecops::add_scaled_into(ctx.theta, -eps, &v, &mut theta_pert);
+    let (g_minus, _) = problem.lambda_grad(&theta_pert, ctx.lambda, ctx.step)?;
+
+    let inv = -1.0 / (2.0 * eps);
+    let grad: Vec<f32> = g_plus
+        .iter()
+        .zip(&g_minus)
+        .map(|(p, m)| (p - m) * inv)
+        .collect();
+
+    Ok(MetaGradOut {
+        grad,
+        meta_loss,
+        perturb_v: v,
+        epsilon: eps,
+        counts: OracleCounts {
+            first_order_grads: 3,
+            hvps: 0,
+            mixed_products: 0,
+            unrolled_steps: 0,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bilevel::biased_regression::BiasedRegression;
+    use crate::optim::{Adam, Optimizer, Sgd};
+    use crate::tensor::vecops::cosine;
+    use crate::util::rng::Rng;
+
+    fn ctx<'a>(
+        theta: &'a [f32],
+        lambda: &'a [f32],
+        opt: &'a dyn Optimizer,
+        g_base: &'a [f32],
+        zeros: &'a [f32],
+    ) -> MetaStepCtx<'a> {
+        MetaStepCtx {
+            theta,
+            lambda,
+            base_opt: opt,
+            g_base,
+            step: 0,
+            alpha: 1.0,
+            solver_iters: 5,
+            adam_m: zeros,
+            adam_v: zeros,
+            adam_t: 1.0,
+        }
+    }
+
+    /// App. E / Fig. 5 left: SAMA's meta gradient aligns with the closed
+    /// form even though the true base Jacobian is far from identity.
+    #[test]
+    fn sama_aligns_with_closed_form_biased_regression() {
+        let mut rng = Rng::new(41);
+        let mut p = BiasedRegression::random(&mut rng, 40, 30, 8, 0.1);
+        let lambda = vec![0.1; 8];
+        // θ* from the closed form (implicit differentiation evaluates at
+        // convergence).
+        let w = p.w_star(&lambda);
+        let g_base = {
+            use crate::bilevel::BilevelProblem as _;
+            p.base_grad(&w, &lambda, 0).unwrap().grad
+        };
+        let opt = Sgd::new(8, 0.05, 0.0, 0.0);
+        let zeros = vec![0.0; 8];
+        let out =
+            meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), false)
+                .unwrap();
+        let exact = p.exact_meta_grad(&lambda);
+        let cos = cosine(&out.grad, &exact);
+        // identity base-Jacobian approximation: high directional alignment
+        // but not exact (paper Fig. 5 shows SAMA slightly below CG).
+        assert!(cos > 0.85, "cos(g_sama, g_exact) = {cos}");
+    }
+
+    /// With an SGD base optimizer, SAMA and SAMA-NA must agree up to the
+    /// lr scale (adaptation diag = lr·I ⟹ same direction).
+    #[test]
+    fn adaptation_is_identity_under_sgd() {
+        let mut rng = Rng::new(7);
+        let mut p = BiasedRegression::random(&mut rng, 30, 20, 6, 0.1);
+        let lambda = vec![0.0; 6];
+        let w = p.w_star(&lambda);
+        let g_base = {
+            use crate::bilevel::BilevelProblem as _;
+            p.base_grad(&w, &lambda, 0).unwrap().grad
+        };
+        let opt = Sgd::new(6, 0.3, 0.0, 0.0);
+        let zeros = vec![0.0; 6];
+        let a = meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), true).unwrap();
+        let b = meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), false).unwrap();
+        let cos = cosine(&a.grad, &b.grad);
+        assert!(cos > 0.999, "cos = {cos}");
+    }
+
+    /// Under Adam, adaptation changes the direction (the §3.2 point).
+    #[test]
+    fn adaptation_matters_under_adam() {
+        let mut rng = Rng::new(19);
+        let mut p = BiasedRegression::random(&mut rng, 30, 20, 6, 0.1);
+        let lambda = vec![0.0; 6];
+        let w = p.w_star(&lambda);
+        let g_base = {
+            use crate::bilevel::BilevelProblem as _;
+            p.base_grad(&w, &lambda, 0).unwrap().grad
+        };
+        let mut opt = Adam::new(6, 1e-2);
+        // warm the moments so the adaptation diag is anisotropic
+        let mut th = w.clone();
+        for _ in 0..5 {
+            use crate::bilevel::BilevelProblem as _;
+            let g = p.base_grad(&th, &lambda, 0).unwrap().grad;
+            opt.step(&mut th, &g);
+        }
+        let zeros = vec![0.0; 6];
+        let a = meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), true).unwrap();
+        let b = meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), false).unwrap();
+        let cos = cosine(&a.grad, &b.grad);
+        assert!(cos < 0.99999, "adaptation had no effect (cos={cos})");
+        // both still correlate with the closed form
+        let exact = p.exact_meta_grad(&lambda);
+        assert!(cosine(&a.grad, &exact) > 0.5, "cos={}", cosine(&a.grad, &exact));
+    }
+
+    #[test]
+    fn epsilon_matches_formula() {
+        let mut rng = Rng::new(3);
+        let mut p = BiasedRegression::random(&mut rng, 20, 10, 4, 0.1);
+        let lambda = vec![0.0; 4];
+        let w = p.w_star(&lambda);
+        let g_base = {
+            use crate::bilevel::BilevelProblem as _;
+            p.base_grad(&w, &lambda, 0).unwrap().grad
+        };
+        let opt = Sgd::new(4, 0.1, 0.0, 0.0);
+        let zeros = vec![0.0; 4];
+        let out = meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), false).unwrap();
+        let expect = 1.0 / vecops::norm2(&out.perturb_v).max(1e-12);
+        assert!((out.epsilon - expect).abs() < 1e-6 * expect);
+        assert_eq!(out.counts.first_order_grads, 3);
+    }
+}

@@ -1,0 +1,164 @@
+//! Appendix D (Fig. 4) — few-shot episodes with SAMA and a model-width
+//! sweep.
+//!
+//! iMAML-style setup: the meta learner λ is the *initialization* θ₀; base
+//! adaptation minimizes  CE(support; θ) + β‖θ − λ‖²  for a few steps; meta
+//! objective is CE(query; θ_adapted).
+//!
+//! SAMA specialization: the proximal term makes ∂L_base/∂λ = 2β(λ − θ)
+//! *linear in θ*, so Eq. 5's central difference is exact and analytic:
+//!
+//! ```text
+//! ∂L_meta/∂λ ≈ −(g_λ(θ+εv) − g_λ(θ−εv)) / 2ε = 2β·v,
+//! v = (∂u/∂g) ⊙ ∂L_meta/∂θ_adapted.
+//! ```
+//!
+//! So a few-shot meta step needs only `meta_grad_direct` (query CE grad)
+//! plus the adaptation diagonal — no extra artifacts per width.
+
+use anyhow::Result;
+
+use crate::data::fewshot::{Episode, EpisodePool, EpisodeSpec};
+use crate::optim::{Adam, Optimizer};
+use crate::runtime::{params, Arg, Runtime};
+use crate::tensor::vecops;
+use crate::util::rng::Rng;
+
+pub struct FewShotConfig {
+    /// Artifact config name per width, e.g. "fs_w64".
+    pub model: String,
+    pub adapt_steps: usize,
+    pub adapt_lr: f32,
+    pub beta: f32,
+    pub meta_lr: f32,
+    pub meta_iters: usize,
+    pub eval_episodes: usize,
+    pub seed: u64,
+}
+
+impl Default for FewShotConfig {
+    fn default() -> Self {
+        FewShotConfig {
+            model: "fs_w64".into(),
+            adapt_steps: 8,
+            adapt_lr: 1e-2,
+            beta: 0.5,
+            meta_lr: 1e-3,
+            meta_iters: 60,
+            eval_episodes: 20,
+            seed: 7,
+        }
+    }
+}
+
+pub struct FewShotOutcome {
+    pub width: usize,
+    pub n_params: usize,
+    pub query_accuracy: f32,
+    pub pre_adapt_accuracy: f32,
+}
+
+struct Driver {
+    rt: Runtime,
+    beta: f32,
+    adapt_steps: usize,
+    adapt_lr: f32,
+}
+
+impl Driver {
+    /// CE gradient on (tokens, labels) via the plain-CE artifact.
+    fn ce_grad(&self, theta: &[f32], d: &crate::data::ClsDataset) -> Result<(Vec<f32>, f32)> {
+        let (t, l, _, _) = d.batch(0, d.n(), 0, 1);
+        let mut out = self.rt.exec(
+            "meta_grad_direct",
+            &[Arg::F32(theta), Arg::I32(&t), Arg::I32(&l)],
+        )?;
+        let loss = out.pop().unwrap()[0];
+        let grad = out.pop().unwrap();
+        Ok((grad, loss))
+    }
+
+    fn accuracy(&self, theta: &[f32], d: &crate::data::ClsDataset) -> Result<f32> {
+        let c = self.rt.config.model.n_classes;
+        let (t, l, tl, _) = d.batch(0, d.n(), 0, 1);
+        let out = self
+            .rt
+            .exec("fwd_batch", &[Arg::F32(theta), Arg::I32(&t), Arg::I32(&l)])?;
+        let mut correct = 0;
+        for i in 0..d.n() {
+            if vecops::argmax(&out[0][i * c..(i + 1) * c]) as i32 == tl[i] {
+                correct += 1;
+            }
+        }
+        Ok(correct as f32 / d.n() as f32)
+    }
+
+    /// Proximal adaptation from init λ on the support set; returns
+    /// (θ_adapted, final Adam state for the adaptation diag).
+    fn adapt(&self, lambda: &[f32], ep: &Episode) -> Result<(Vec<f32>, Adam, Vec<f32>)> {
+        let mut theta = lambda.to_vec();
+        let mut opt = Adam::new(theta.len(), self.adapt_lr);
+        let mut g_last = vec![0.0; theta.len()];
+        for _ in 0..self.adapt_steps {
+            let (mut g, _) = self.ce_grad(&theta, &ep.support)?;
+            // + 2β(θ − λ) proximal gradient
+            for i in 0..g.len() {
+                g[i] += 2.0 * self.beta * (theta[i] - lambda[i]);
+            }
+            g_last.copy_from_slice(&g);
+            opt.step(&mut theta, &g);
+        }
+        Ok((theta, opt, g_last))
+    }
+}
+
+/// Meta-train an initialization with SAMA on few-shot episodes, then
+/// evaluate mean query accuracy on held-out episodes.
+pub fn run(cfg: &FewShotConfig) -> Result<FewShotOutcome> {
+    let rt = Runtime::new(&Runtime::artifact_dir(), &cfg.model)?;
+    let width = rt.config.model.d_model;
+    let n_params = rt.config.n_theta;
+    let spec = EpisodeSpec::default();
+    let pool = EpisodePool::new(spec, cfg.seed);
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut lambda =
+        params::init_flat(&rt.config.layout_theta, rt.config.n_theta, &mut rng);
+    let driver = Driver {
+        rt,
+        beta: cfg.beta,
+        adapt_steps: cfg.adapt_steps,
+        adapt_lr: cfg.adapt_lr,
+    };
+    let mut meta_opt = Adam::new(lambda.len(), cfg.meta_lr);
+
+    for it in 0..cfg.meta_iters {
+        let ep = pool.episode(it as u64);
+        let (theta, adapt_opt, g_last) = driver.adapt(&lambda, &ep)?;
+        let (g_query, _) = driver.ce_grad(&theta, &ep.query)?;
+        // v = (∂u/∂g)⊙g_query; meta grad = 2β·v (see module docs)
+        let mut v = vec![0.0f32; lambda.len()];
+        adapt_opt.adapt_diag(&g_last, &mut v);
+        for i in 0..v.len() {
+            v[i] *= g_query[i];
+        }
+        let meta_grad: Vec<f32> = v.iter().map(|&x| 2.0 * cfg.beta * x).collect();
+        meta_opt.step(&mut lambda, &meta_grad);
+    }
+
+    // held-out evaluation
+    let mut acc = 0.0f64;
+    let mut pre = 0.0f64;
+    for e in 0..cfg.eval_episodes {
+        let ep = pool.episode(1_000_000 + e as u64);
+        pre += driver.accuracy(&lambda, &ep.query)? as f64;
+        let (theta, _, _) = driver.adapt(&lambda, &ep)?;
+        acc += driver.accuracy(&theta, &ep.query)? as f64;
+    }
+    Ok(FewShotOutcome {
+        width,
+        n_params,
+        query_accuracy: (acc / cfg.eval_episodes as f64) as f32,
+        pre_adapt_accuracy: (pre / cfg.eval_episodes as f64) as f32,
+    })
+}

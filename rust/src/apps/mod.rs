@@ -1,0 +1,17 @@
+//! Applications — the paper's §4 experiment drivers, built on the public
+//! coordinator/bilevel API:
+//!
+//! * [`wrench`]      — §4.1 noisy finetuning under weak supervision
+//!                     (reweighting + label correction).
+//! * [`pruning`]     — §4.3 scale-agnostic data pruning (MWN + uncertainty)
+//!                     plus the heuristic baselines (EL2N/GraNd/forgetting/
+//!                     margin/random).
+//! * [`pretraining`] — §4.2 continued pretraining as TARTAN-style multitask
+//!                     learning with meta-learned auxiliary weights.
+//! * [`fewshot`]     — Appendix D: iMAML-style few-shot episodes with a
+//!                     width sweep (Fig. 4).
+
+pub mod fewshot;
+pub mod pretraining;
+pub mod pruning;
+pub mod wrench;

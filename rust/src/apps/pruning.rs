@@ -1,0 +1,294 @@
+//! §4.3 — scale-agnostic data pruning (Fig. 3).
+//!
+//! SAMA path: meta-learn per-sample importance with MWN([loss, uncertainty])
+//! using train data in *both* levels (no extra validation data), average the
+//! learned weights over the tail of training, prune the lowest-weighted
+//! fraction, retrain from scratch on the survivors.
+//!
+//! Heuristic baselines (pruning *low-importance* per each metric's
+//! convention): EL2N, GraNd (proxied by EL2N late in training — see DESIGN
+//! §4), forgetting counts, margin/least-confidence, random.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::bilevel::cls_problem::{ClsProblem, UncMode};
+use crate::bilevel::BilevelProblem;
+use crate::config::{Algo, MetaOps, TrainConfig};
+use crate::coordinator::{self, BaseOpt, ProblemFactory, RunOptions};
+use crate::data::pruning_data::PruningSet;
+use crate::runtime::{params, Runtime};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PruneMetric {
+    SamaMwn,
+    El2n,
+    GraNd,
+    Forgetting,
+    Margin,
+    Random,
+}
+
+impl PruneMetric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PruneMetric::SamaMwn => "SAMA (MWN)",
+            PruneMetric::El2n => "EL2N",
+            PruneMetric::GraNd => "GraNd",
+            PruneMetric::Forgetting => "forgetting",
+            PruneMetric::Margin => "margin",
+            PruneMetric::Random => "random",
+        }
+    }
+}
+
+struct PruneFactory {
+    artifact_dir: PathBuf,
+    model: String,
+    set: PruningSet,
+    seed: u64,
+    ema: bool,
+}
+
+impl ProblemFactory for PruneFactory {
+    fn build(
+        &self,
+        rank: usize,
+        world: usize,
+    ) -> Result<(Box<dyn BilevelProblem>, Vec<f32>, Vec<f32>)> {
+        let rt = Runtime::new(&self.artifact_dir, &self.model)?;
+        let mut rng = Rng::new(self.seed);
+        let theta0 =
+            params::init_flat(&rt.config.layout_theta, rt.config.n_theta, &mut rng);
+        let mut rng_l = Rng::new(self.seed ^ 0x11AB);
+        let lambda0 =
+            params::init_flat(&rt.config.layout_mwn, rt.config.n_mwn, &mut rng_l);
+        // meta level reuses the (noisy) train data — §4.3's "no additional
+        // validation data" setting.
+        let mut p = ClsProblem::new(
+            rt,
+            self.set.data.clone(),
+            self.set.data.clone(),
+            MetaOps::Reweight,
+            rank,
+            world,
+        );
+        if self.ema {
+            p = p.with_unc_mode(UncMode::Ema { decay: 0.95 });
+        }
+        Ok((Box::new(p), theta0, lambda0))
+    }
+
+    fn base_opt(&self) -> BaseOpt {
+        // paper Table 6/7: ResNet base trained with SGD momentum
+        BaseOpt::Sgd { momentum: 0.9 }
+    }
+}
+
+/// Per-sample scores; *lower = pruned first*.
+pub fn scores(
+    metric: PruneMetric,
+    cfg: &TrainConfig,
+    set: &PruningSet,
+) -> Result<(Vec<f32>, f64)> {
+    let t0 = std::time::Instant::now();
+    let n = set.data.n();
+    let scores = match metric {
+        PruneMetric::SamaMwn => {
+            let factory = PruneFactory {
+                artifact_dir: Runtime::artifact_dir(),
+                model: cfg.model.clone(),
+                set: set.clone(),
+                seed: cfg.seed,
+                ema: true,
+            };
+            let opts = RunOptions { track_sample_weights: true, ..Default::default() };
+            let report = coordinator::train(cfg, &factory, &opts)?;
+            report.mean_weights()
+        }
+        PruneMetric::Random => {
+            let mut rng = Rng::new(cfg.seed ^ 0xAAA);
+            (0..n).map(|_| rng.f32()).collect()
+        }
+        PruneMetric::El2n | PruneMetric::GraNd | PruneMetric::Margin => {
+            // short warmup training, then score from per-sample statistics.
+            // EL2N/GraNd prune *low-signal* (easy/redundant) samples: score
+            // = the statistic itself (low stat → low info → prune).
+            let stats = warmup_stats(cfg, set)?;
+            stats
+                .iter()
+                .map(|&(loss, el2n, inv_conf)| match metric {
+                    PruneMetric::El2n => el2n,
+                    PruneMetric::GraNd => loss, // gradient-norm proxy
+                    PruneMetric::Margin => inv_conf,
+                    _ => unreachable!(),
+                })
+                .collect()
+        }
+        PruneMetric::Forgetting => forgetting_scores(cfg, set)?,
+    };
+    Ok((scores, t0.elapsed().as_secs_f64()))
+}
+
+/// Short finetune pass, then per-sample stats (loss, EL2N, 1−p_y).
+fn warmup_stats(cfg: &TrainConfig, set: &PruningSet) -> Result<Vec<(f32, f32, f32)>> {
+    let factory = PruneFactory {
+        artifact_dir: Runtime::artifact_dir(),
+        model: cfg.model.clone(),
+        set: set.clone(),
+        seed: cfg.seed,
+        ema: false,
+    };
+    let mut warm_cfg = cfg.clone();
+    warm_cfg.algo = Algo::None;
+    warm_cfg.workers = 1;
+    warm_cfg.steps = (cfg.steps / 2).max(1);
+    let report = coordinator::train(&warm_cfg, &factory, &RunOptions::default())?;
+    let (problem, _, _) = factory.build(0, 1)?;
+    // downcast helper: rebuild a standalone ClsProblem for eval
+    drop(problem);
+    let rt = Runtime::new(&Runtime::artifact_dir(), &cfg.model)?;
+    let eval = ClsProblem::new(
+        rt,
+        set.data.clone(),
+        set.data.clone(),
+        MetaOps::Reweight,
+        0,
+        1,
+    );
+    eval.sample_stats(&report.final_theta)
+}
+
+/// Forgetting events (Toneva et al.): train briefly, checkpoint the
+/// correctness of each sample several times, count correct→incorrect
+/// transitions. Never-learned samples get the max score per the original
+/// method (they are *kept*; here low score = pruned, so never-learned →
+/// high score).
+fn forgetting_scores(cfg: &TrainConfig, set: &PruningSet) -> Result<Vec<f32>> {
+    let factory = PruneFactory {
+        artifact_dir: Runtime::artifact_dir(),
+        model: cfg.model.clone(),
+        set: set.clone(),
+        seed: cfg.seed,
+        ema: false,
+    };
+    let rt = Runtime::new(&Runtime::artifact_dir(), &cfg.model)?;
+    let eval = ClsProblem::new(
+        rt,
+        set.data.clone(),
+        set.data.clone(),
+        MetaOps::Reweight,
+        0,
+        1,
+    );
+    let n = set.data.n();
+    let checkpoints = 4usize;
+    let mut prev_correct = vec![false; n];
+    let mut forgets = vec![0u32; n];
+    let mut ever_correct = vec![false; n];
+    let mut theta: Option<Vec<f32>> = None;
+    for ck in 0..checkpoints {
+        let mut c = cfg.clone();
+        c.algo = Algo::None;
+        c.workers = 1;
+        c.steps = (cfg.steps / (2 * checkpoints)).max(1);
+        c.seed = cfg.seed + ck as u64; // reshuffle-ish
+        let report = match &theta {
+            None => coordinator::train(&c, &factory, &RunOptions::default())?,
+            Some(_) => {
+                // continue from previous θ: single-worker manual loop
+                let (mut p, _, l0) = factory.build(0, 1)?;
+                coordinator::train_single(
+                    &c,
+                    p.as_mut(),
+                    theta.clone().unwrap(),
+                    l0,
+                    BaseOpt::Sgd { momentum: 0.9 },
+                    &RunOptions::default(),
+                )
+                .map(|w| coordinator_report_from(w))?
+            }
+        };
+        let stats = eval.sample_stats(&report.final_theta)?;
+        for i in 0..n {
+            let correct = stats[i].2 < 0.5; // p_y > 0.5
+            if prev_correct[i] && !correct {
+                forgets[i] += 1;
+            }
+            ever_correct[i] |= correct;
+            prev_correct[i] = correct;
+        }
+        theta = Some(report.final_theta);
+    }
+    Ok((0..n)
+        .map(|i| {
+            if !ever_correct[i] {
+                checkpoints as f32 + 1.0
+            } else {
+                forgets[i] as f32
+            }
+        })
+        .collect())
+}
+
+fn coordinator_report_from(w: coordinator::WorkerReport) -> coordinator::TrainReport {
+    coordinator::TrainReport {
+        final_theta: w.final_theta,
+        final_lambda: w.final_lambda,
+        meta_loss: w.meta_loss,
+        base_loss: w.base_loss,
+        wall_seconds: w.exec_seconds,
+        samples_processed: w.samples_processed,
+        workers: 1,
+        comm: vec![w.comm],
+        weight_sums: w.weight_sums,
+        weight_counts: w.weight_counts,
+    }
+}
+
+/// Prune `ratio` of the data by `scores` (lowest first); returns kept idxs.
+pub fn prune(scores: &[f32], ratio: f32) -> Vec<usize> {
+    let n = scores.len();
+    let k = ((n as f32) * ratio).round() as usize;
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    order[k..].to_vec()
+}
+
+/// Retrain from scratch on the kept subset; returns test accuracy.
+pub fn retrain_and_eval(
+    cfg: &TrainConfig,
+    set: &PruningSet,
+    keep: &[usize],
+) -> Result<f32> {
+    let subset = set.data.subset(keep);
+    let sub_set = PruningSet {
+        data: subset,
+        duplicate_of: vec![None; keep.len()],
+        noisy: vec![false; keep.len()],
+        test: set.test.clone(),
+    };
+    let factory = PruneFactory {
+        artifact_dir: Runtime::artifact_dir(),
+        model: cfg.model.clone(),
+        set: sub_set,
+        seed: cfg.seed + 999,
+        ema: false,
+    };
+    let mut c = cfg.clone();
+    c.algo = Algo::None;
+    c.workers = 1;
+    let report = coordinator::train(&c, &factory, &RunOptions::default())?;
+    let rt = Runtime::new(&Runtime::artifact_dir(), &cfg.model)?;
+    let eval = ClsProblem::new(
+        rt,
+        set.data.clone(),
+        set.data.clone(),
+        MetaOps::Reweight,
+        0,
+        1,
+    );
+    eval.accuracy(&report.final_theta, &set.test)
+}

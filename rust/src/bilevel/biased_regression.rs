@@ -1,0 +1,291 @@
+//! Biased regression (paper Appendix E): the closed-form correctness anchor.
+//!
+//! ```text
+//! λ* = argmin_λ ‖X'w*(λ) − y'‖²
+//! w*(λ) = argmin_w ‖Xw − y‖² + β‖w − λ‖²
+//! ```
+//!
+//! Everything has a closed form (with the 1/2-free convention used below,
+//! gradients carry a factor 2 that cancels in all comparisons):
+//!
+//!   base Hessian        H = 2(XᵀX + βI)
+//!   w*(λ)               = (XᵀX + βI)⁻¹(Xᵀy + βλ)
+//!   true meta gradient  g_λ = 2β(XᵀX + βI)⁻¹ X'ᵀ(X'w* − y')
+//!   λ*                  = argmin over λ of the outer quadratic (lstsq)
+//!
+//! This problem exercises every oracle of [`BilevelProblem`] *exactly*
+//! (no stochasticity), so Fig. 5 — cos(g_true, g_algo) and ‖λ_t − λ*‖ for
+//! SAMA / CG / Neumann — doubles as an integration test of the algorithms.
+
+use anyhow::Result;
+
+use super::{BaseGrad, BilevelProblem};
+use crate::tensor::{linalg, vecops, Tensor};
+use crate::util::rng::Rng;
+
+pub struct BiasedRegression {
+    pub x: Tensor,       // (n, d) base design
+    pub y: Vec<f32>,     // (n,)
+    pub xp: Tensor,      // (m, d) meta design
+    pub yp: Vec<f32>,    // (m,)
+    pub beta: f32,
+    /// Base-level steps applied per `base_grad` call chain are owned by the
+    /// caller; this struct is stateless across calls.
+    d: usize,
+}
+
+impl BiasedRegression {
+    pub fn new(x: Tensor, y: Vec<f32>, xp: Tensor, yp: Vec<f32>, beta: f32) -> Self {
+        let d = x.shape()[1];
+        assert_eq!(xp.shape()[1], d);
+        assert_eq!(y.len(), x.shape()[0]);
+        assert_eq!(yp.len(), xp.shape()[0]);
+        BiasedRegression { x, y, xp, yp, beta, d }
+    }
+
+    /// Random instance matching the paper's App. E setup (β small amplifies
+    /// the non-identity-ness of the base Jacobian).
+    pub fn random(rng: &mut Rng, n: usize, m: usize, d: usize, beta: f32) -> Self {
+        let x = Tensor::from_vec(rng.normal_vec(n * d, 1.0), &[n, d]);
+        let w_true = rng.normal_vec(d, 1.0);
+        let mut y = x.matvec(&w_true);
+        for v in y.iter_mut() {
+            *v += rng.normal() * 0.1;
+        }
+        let xp = Tensor::from_vec(rng.normal_vec(m * d, 1.0), &[m, d]);
+        // meta targets from a *shifted* weight vector → λ* ≠ w_true.
+        let w_meta: Vec<f32> = w_true.iter().map(|v| v * 0.5 + 0.3).collect();
+        let mut yp = xp.matvec(&w_meta);
+        for v in yp.iter_mut() {
+            *v += rng.normal() * 0.1;
+        }
+        BiasedRegression::new(x, y, xp, yp, beta)
+    }
+
+    /// A = XᵀX + βI (the un-scaled base Jacobian of App. E).
+    fn a_matrix(&self) -> Tensor {
+        let xtx = self.x.t().matmul(&self.x);
+        let mut a = xtx;
+        for i in 0..self.d {
+            let v = a.at2(i, i) + self.beta;
+            a.set2(i, i, v);
+        }
+        a
+    }
+
+    /// Closed-form base solution w*(λ) = (XᵀX+βI)⁻¹(Xᵀy + βλ).
+    pub fn w_star(&self, lambda: &[f32]) -> Vec<f32> {
+        let a = self.a_matrix();
+        let mut rhs = self.x.t().matvec(&self.y);
+        vecops::axpy(self.beta, lambda, &mut rhs);
+        let rhs_t = Tensor::from_vec(rhs, &[self.d, 1]);
+        linalg::solve(&a, &rhs_t).into_vec()
+    }
+
+    /// Closed-form true meta gradient at λ (paper App. E item 2):
+    /// g_λ = 2β(XᵀX+βI)⁻¹(X'ᵀX'w* − X'ᵀy').
+    pub fn exact_meta_grad(&self, lambda: &[f32]) -> Vec<f32> {
+        let w = self.w_star(lambda);
+        let resid = {
+            let mut r = self.xp.matvec(&w);
+            for (ri, yi) in r.iter_mut().zip(&self.yp) {
+                *ri -= yi;
+            }
+            r
+        };
+        let g_meta = self.xp.t().matvec(&resid); // X'ᵀ(X'w − y'), ×2 below
+        let a = self.a_matrix();
+        let rhs = Tensor::from_vec(g_meta, &[self.d, 1]);
+        let solved = linalg::solve(&a, &rhs).into_vec();
+        solved.iter().map(|v| 2.0 * self.beta * v).collect()
+    }
+
+    /// Closed-form λ* (paper App. E item 3): least squares of
+    /// A_outer λ = b with A_outer = βX'(XᵀX+βI)⁻¹, b = y' − X'(XᵀX+βI)⁻¹Xᵀy.
+    pub fn exact_lambda_star(&self) -> Vec<f32> {
+        let a_inv = linalg::inverse(&self.a_matrix());
+        let xp_ainv = self.xp.matmul(&a_inv); // (m, d)
+        let a_outer = xp_ainv.scale(self.beta);
+        let xty = Tensor::from_vec(self.x.t().matvec(&self.y), &[self.d, 1]);
+        let pred = xp_ainv.matmul(&xty).into_vec();
+        let b: Vec<f32> = self
+            .yp
+            .iter()
+            .zip(&pred)
+            .map(|(yi, pi)| yi - pi)
+            .collect();
+        let b_t = Tensor::from_vec(b, &[self.yp.len(), 1]);
+        linalg::lstsq(&a_outer, &b_t).into_vec()
+    }
+
+    /// Base loss value (monitoring).
+    pub fn base_loss(&self, w: &[f32], lambda: &[f32]) -> f32 {
+        let mut r = self.x.matvec(w);
+        for (ri, yi) in r.iter_mut().zip(&self.y) {
+            *ri -= yi;
+        }
+        let fit: f32 = r.iter().map(|v| v * v).sum();
+        let prox: f32 = w
+            .iter()
+            .zip(lambda)
+            .map(|(wi, li)| (wi - li) * (wi - li))
+            .sum();
+        fit + self.beta * prox
+    }
+}
+
+impl BilevelProblem for BiasedRegression {
+    fn n_theta(&self) -> usize {
+        self.d
+    }
+
+    fn n_lambda(&self) -> usize {
+        self.d
+    }
+
+    /// ∂L_base/∂w = 2Xᵀ(Xw−y) + 2β(w−λ).
+    fn base_grad(&mut self, w: &[f32], lambda: &[f32], _step: usize) -> Result<BaseGrad> {
+        let mut r = self.x.matvec(w);
+        for (ri, yi) in r.iter_mut().zip(&self.y) {
+            *ri -= yi;
+        }
+        let mut grad = self.x.t().matvec(&r);
+        vecops::scale(&mut grad, 2.0);
+        for i in 0..self.d {
+            grad[i] += 2.0 * self.beta * (w[i] - lambda[i]);
+        }
+        let loss = self.base_loss(w, lambda);
+        Ok(BaseGrad {
+            grad,
+            loss,
+            sample_losses: vec![],
+            sample_weights: vec![],
+            sample_indices: vec![],
+        })
+    }
+
+    /// ∂L_meta/∂w = 2X'ᵀ(X'w−y').
+    fn meta_direct_grad(&mut self, w: &[f32], _step: usize) -> Result<(Vec<f32>, f32)> {
+        let mut r = self.xp.matvec(w);
+        for (ri, yi) in r.iter_mut().zip(&self.yp) {
+            *ri -= yi;
+        }
+        let loss: f32 = r.iter().map(|v| v * v).sum();
+        let mut g = self.xp.t().matvec(&r);
+        vecops::scale(&mut g, 2.0);
+        Ok((g, loss))
+    }
+
+    /// ∂L_base/∂λ = 2β(λ−w).
+    fn lambda_grad(&mut self, w: &[f32], lambda: &[f32], _step: usize) -> Result<(Vec<f32>, f32)> {
+        let g: Vec<f32> = lambda
+            .iter()
+            .zip(w)
+            .map(|(li, wi)| 2.0 * self.beta * (li - wi))
+            .collect();
+        Ok((g, self.base_loss(w, lambda)))
+    }
+
+    /// H·v = 2(XᵀX+βI)·v — exact.
+    fn hvp(&mut self, _w: &[f32], _lambda: &[f32], _step: usize, v: &[f32]) -> Result<Vec<f32>> {
+        let xv = self.x.matvec(v);
+        let mut out = self.x.t().matvec(&xv);
+        for i in 0..self.d {
+            out[i] = 2.0 * (out[i] + self.beta * v[i]);
+        }
+        Ok(out)
+    }
+
+    /// (∂²L_base/∂λ∂w)·v = −2β·v — exact.
+    fn mixed(&mut self, _w: &[f32], _lambda: &[f32], _step: usize, v: &[f32]) -> Result<Vec<f32>> {
+        Ok(v.iter().map(|vi| -2.0 * self.beta * vi).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{check, rel_l2};
+
+    fn instance(seed: u64) -> BiasedRegression {
+        let mut rng = Rng::new(seed);
+        BiasedRegression::random(&mut rng, 40, 30, 8, 0.1)
+    }
+
+    #[test]
+    fn w_star_zeroes_base_grad() {
+        check(
+            "∂L_base/∂w (w*) == 0",
+            31,
+            8,
+            |r| {
+                let mut p = instance(r.next_u64());
+                let lam = r.normal_vec(p.d, 1.0);
+                let w = p.w_star(&lam);
+                let g = p.base_grad(&w, &lam, 0).unwrap().grad;
+                (vecops::norm2(&g), vecops::norm2(&w))
+            },
+            |&(gnorm, wnorm)| {
+                if gnorm < 1e-2 * (1.0 + wnorm) {
+                    Ok(())
+                } else {
+                    Err(format!("‖g‖={gnorm} at w* (‖w‖={wnorm})"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn exact_meta_grad_matches_finite_difference() {
+        let p = instance(7);
+        let lam = vec![0.2; p.d];
+        let g = p.exact_meta_grad(&lam);
+        // FD through the *closed-form* inner solution
+        let meta_loss = |l: &[f32]| -> f32 {
+            let w = p.w_star(l);
+            let mut r = p.xp.matvec(&w);
+            for (ri, yi) in r.iter_mut().zip(&p.yp) {
+                *ri -= yi;
+            }
+            r.iter().map(|v| v * v).sum()
+        };
+        let h = 1e-3;
+        let mut fd = vec![0.0; p.d];
+        for i in 0..p.d {
+            let mut lp = lam.clone();
+            let mut lm = lam.clone();
+            lp[i] += h;
+            lm[i] -= h;
+            fd[i] = (meta_loss(&lp) - meta_loss(&lm)) / (2.0 * h);
+        }
+        assert!(rel_l2(&g, &fd) < 0.06, "rel_l2={}", rel_l2(&g, &fd));  // f32 FD noise through solve()
+    }
+
+    #[test]
+    fn lambda_star_is_stationary() {
+        let p = instance(13);
+        let ls = p.exact_lambda_star();
+        let g = p.exact_meta_grad(&ls);
+        let scale = vecops::norm2(&ls).max(1.0);
+        assert!(
+            vecops::norm2(&g) < 2e-2 * scale,
+            "‖g(λ*)‖ = {}",
+            vecops::norm2(&g)
+        );
+    }
+
+    #[test]
+    fn hvp_matches_dense_hessian() {
+        let mut p = instance(3);
+        let mut rng = Rng::new(99);
+        let v = rng.normal_vec(p.d, 1.0);
+        let hv = p.hvp(&vec![0.0; p.d], &vec![0.0; p.d], 0, &v).unwrap();
+        // dense: H = 2(XᵀX + βI)
+        let a = p.x.t().matmul(&p.x);
+        let mut dense = a.matvec(&v);
+        for i in 0..p.d {
+            dense[i] = 2.0 * (dense[i] + p.beta * v[i]);
+        }
+        assert!(rel_l2(&hv, &dense) < 1e-5);
+    }
+}

@@ -1,0 +1,415 @@
+//! Runtime-backed classification bilevel problem (§4.1 WRENCH, §4.3
+//! pruning): binds AOT artifacts + a dataset shard into the
+//! [`BilevelProblem`] oracle set.
+//!
+//! θ = transformer classifier (flat), λ = Meta-Weight-Net (reweighting) or
+//! MWN + label corrector. All oracles execute HLO artifacts through PJRT;
+//! batch selection is a pure function of `step` so θ⁺/θ⁻ re-evaluations and
+//! all DDP shards agree on the data.
+
+use anyhow::{bail, Result};
+
+use super::{AdaptPerturbOut, BaseGrad, BilevelProblem, ParamKind};
+use crate::config::MetaOps;
+use crate::data::ClsDataset;
+use crate::runtime::{Arg, Runtime};
+use crate::tensor::vecops;
+
+/// Uncertainty input to MWN (paper §4.3 uses current-vs-EMA prediction gap).
+#[derive(Clone, Debug)]
+pub enum UncMode {
+    /// Feed zeros (the §4.1 setting: MWN on loss only).
+    Zero,
+    /// |p_y(θ) − p_y(θ_EMA)| with EMA decay.
+    Ema { decay: f32 },
+}
+
+pub struct ClsProblem {
+    pub runtime: Runtime,
+    pub train: ClsDataset,
+    pub meta: ClsDataset,
+    pub ops: MetaOps,
+    pub shard: usize,
+    pub n_shards: usize,
+    pub unc_mode: UncMode,
+    ema_theta: Option<Vec<f32>>,
+    batch: usize,
+    n_classes: usize,
+}
+
+impl ClsProblem {
+    pub fn new(
+        runtime: Runtime,
+        train: ClsDataset,
+        meta: ClsDataset,
+        ops: MetaOps,
+        shard: usize,
+        n_shards: usize,
+    ) -> Self {
+        let batch = runtime.config.model.batch;
+        let n_classes = runtime.config.model.n_classes;
+        assert_eq!(train.seq_len, runtime.config.model.seq_len);
+        ClsProblem {
+            runtime,
+            train,
+            meta,
+            ops,
+            shard,
+            n_shards,
+            unc_mode: UncMode::Zero,
+            ema_theta: None,
+            batch,
+            n_classes,
+        }
+    }
+
+    pub fn with_unc_mode(mut self, mode: UncMode) -> Self {
+        self.unc_mode = mode;
+        self
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn base_batch(&self, step: usize) -> (Vec<i32>, Vec<i32>, Vec<usize>) {
+        let (t, l, _, idx) =
+            self.train.batch(step, self.batch, self.shard, self.n_shards);
+        (t, l, idx)
+    }
+
+    fn meta_batch(&self, step: usize) -> (Vec<i32>, Vec<i32>) {
+        // meta/dev batches are small and replicated (not sharded), like the
+        // paper's clean dev set living on every GPU.
+        let (t, l, _, _) = self.meta.batch(step, self.batch, 0, 1);
+        (t, l)
+    }
+
+    /// Per-sample uncertainty for the given batch at θ.
+    fn uncertainty(&mut self, theta: &[f32], tokens: &[i32], labels: &[i32]) -> Result<Vec<f32>> {
+        match self.unc_mode {
+            UncMode::Zero => Ok(vec![0.0; self.batch]),
+            UncMode::Ema { decay } => {
+                let ema = match &mut self.ema_theta {
+                    Some(e) => {
+                        for (ei, ti) in e.iter_mut().zip(theta) {
+                            *ei = decay * *ei + (1.0 - decay) * ti;
+                        }
+                        e.clone()
+                    }
+                    None => {
+                        self.ema_theta = Some(theta.to_vec());
+                        theta.to_vec()
+                    }
+                };
+                let cur = self.logits(theta, tokens, labels)?;
+                let old = self.logits(&ema, tokens, labels)?;
+                let c = self.n_classes;
+                let mut unc = vec![0.0f32; self.batch];
+                let mut pc = vec![0.0f32; c];
+                let mut po = vec![0.0f32; c];
+                for i in 0..self.batch {
+                    vecops::softmax_into(&cur.0[i * c..(i + 1) * c], &mut pc);
+                    vecops::softmax_into(&old.0[i * c..(i + 1) * c], &mut po);
+                    let y = labels[i] as usize;
+                    unc[i] = (pc[y] - po[y]).abs();
+                }
+                Ok(unc)
+            }
+        }
+    }
+
+    /// (logits, per-sample losses) via the `fwd_batch` artifact.
+    pub fn logits(
+        &self,
+        theta: &[f32],
+        tokens: &[i32],
+        labels: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut out = self.runtime.exec(
+            "fwd_batch",
+            &[Arg::F32(theta), Arg::I32(tokens), Arg::I32(labels)],
+        )?;
+        let losses = out.pop().unwrap();
+        let logits = out.pop().unwrap();
+        Ok((logits, losses))
+    }
+
+    /// Accuracy of θ on `data` (full pass, truncating the ragged tail).
+    pub fn accuracy(&self, theta: &[f32], data: &ClsDataset) -> Result<f32> {
+        let c = self.n_classes;
+        let n_batches = data.n() / self.batch;
+        if n_batches == 0 {
+            bail!("dataset smaller than one batch");
+        }
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for b in 0..n_batches {
+            let (tokens, labels, true_labels, _) =
+                data.batch(b, self.batch, 0, 1);
+            let (logits, _) = self.logits(theta, &tokens, &labels)?;
+            for i in 0..self.batch {
+                let pred = vecops::argmax(&logits[i * c..(i + 1) * c]);
+                if pred as i32 == true_labels[i] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f32 / total as f32)
+    }
+
+    /// Per-sample (loss, EL2N, margin-confidence) over the whole train set —
+    /// feeds the heuristic pruning baselines (§4.3).
+    pub fn sample_stats(&self, theta: &[f32]) -> Result<Vec<(f32, f32, f32)>> {
+        let c = self.n_classes;
+        let n_batches = (self.train.n() + self.batch - 1) / self.batch;
+        let mut stats = vec![(0.0f32, 0.0f32, 0.0f32); self.train.n()];
+        let mut p = vec![0.0f32; c];
+        for b in 0..n_batches {
+            let (tokens, labels, _, idxs) = self.train.batch(b, self.batch, 0, 1);
+            let (logits, losses) = self.logits(theta, &tokens, &labels)?;
+            for i in 0..self.batch {
+                let idx = idxs[i];
+                vecops::softmax_into(&logits[i * c..(i + 1) * c], &mut p);
+                let y = labels[i] as usize;
+                // EL2N: ‖p − onehot(y)‖₂
+                let mut el2n = 0.0f32;
+                for k in 0..c {
+                    let d = p[k] - if k == y { 1.0 } else { 0.0 };
+                    el2n += d * d;
+                }
+                stats[idx] = (losses[i], el2n.sqrt(), 1.0 - p[y]);
+            }
+        }
+        Ok(stats)
+    }
+
+    fn base_artifact(&self) -> &'static str {
+        match self.ops {
+            MetaOps::Reweight => "base_grad_rw",
+            MetaOps::ReweightCorrect => "base_grad_rwc",
+        }
+    }
+}
+
+impl BilevelProblem for ClsProblem {
+    fn n_theta(&self) -> usize {
+        self.runtime.n_theta()
+    }
+
+    fn n_lambda(&self) -> usize {
+        match self.ops {
+            MetaOps::Reweight => self.runtime.n_mwn(),
+            MetaOps::ReweightCorrect => self.runtime.n_mwn_corr(),
+        }
+    }
+
+    fn base_grad(&mut self, theta: &[f32], lambda: &[f32], step: usize) -> Result<BaseGrad> {
+        let (tokens, labels, sample_indices) = self.base_batch(step);
+        let unc = self.uncertainty(theta, &tokens, &labels)?;
+        let mut out = self.runtime.exec(
+            self.base_artifact(),
+            &[
+                Arg::F32(theta),
+                Arg::F32(lambda),
+                Arg::I32(&tokens),
+                Arg::I32(&labels),
+                Arg::F32(&unc),
+            ],
+        )?;
+        let sample_weights = out.pop().unwrap();
+        let sample_losses = out.pop().unwrap();
+        let loss = out.pop().unwrap()[0];
+        let grad = out.pop().unwrap();
+        Ok(BaseGrad { grad, loss, sample_losses, sample_weights, sample_indices })
+    }
+
+    fn meta_direct_grad(&mut self, theta: &[f32], step: usize) -> Result<(Vec<f32>, f32)> {
+        let (tokens, labels) = self.meta_batch(step);
+        let mut out = self.runtime.exec(
+            "meta_grad_direct",
+            &[Arg::F32(theta), Arg::I32(&tokens), Arg::I32(&labels)],
+        )?;
+        let loss = out.pop().unwrap()[0];
+        let grad = out.pop().unwrap();
+        Ok((grad, loss))
+    }
+
+    fn lambda_grad(&mut self, theta: &[f32], lambda: &[f32], step: usize) -> Result<(Vec<f32>, f32)> {
+        let (tokens, labels, _) = self.base_batch(step);
+        let unc = self.uncertainty(theta, &tokens, &labels)?;
+        let (logits, losses) = self.logits(theta, &tokens, &labels)?;
+        let mut out = match self.ops {
+            MetaOps::Reweight => self.runtime.exec(
+                "lambda_grad_rw",
+                &[Arg::F32(lambda), Arg::F32(&losses), Arg::F32(&unc)],
+            )?,
+            MetaOps::ReweightCorrect => self.runtime.exec(
+                "lambda_grad_rwc",
+                &[
+                    Arg::F32(lambda),
+                    Arg::F32(&logits),
+                    Arg::I32(&labels),
+                    Arg::F32(&unc),
+                ],
+            )?,
+        };
+        let val = out.pop().unwrap()[0];
+        let grad = out.pop().unwrap();
+        Ok((grad, val))
+    }
+
+    fn hvp(&mut self, theta: &[f32], lambda: &[f32], step: usize, w: &[f32]) -> Result<Vec<f32>> {
+        if self.ops != MetaOps::Reweight {
+            bail!("hvp artifact only lowered for reweight mode");
+        }
+        let (tokens, labels, _) = self.base_batch(step);
+        let unc = vec![0.0; self.batch];
+        let mut out = self.runtime.exec(
+            "hvp_rw",
+            &[
+                Arg::F32(theta),
+                Arg::F32(lambda),
+                Arg::I32(&tokens),
+                Arg::I32(&labels),
+                Arg::F32(&unc),
+                Arg::F32(w),
+            ],
+        )?;
+        Ok(out.pop().unwrap())
+    }
+
+    fn mixed(&mut self, theta: &[f32], lambda: &[f32], step: usize, w: &[f32]) -> Result<Vec<f32>> {
+        if self.ops != MetaOps::Reweight {
+            bail!("mixed artifact only lowered for reweight mode");
+        }
+        let (tokens, labels, _) = self.base_batch(step);
+        let unc = vec![0.0; self.batch];
+        let mut out = self.runtime.exec(
+            "mixed_rw",
+            &[
+                Arg::F32(theta),
+                Arg::F32(lambda),
+                Arg::I32(&tokens),
+                Arg::I32(&labels),
+                Arg::F32(&unc),
+                Arg::F32(w),
+            ],
+        )?;
+        Ok(out.pop().unwrap())
+    }
+
+    fn itd_meta_grad(
+        &mut self,
+        theta: &[f32],
+        m: &[f32],
+        v: &[f32],
+        t: f32,
+        lambda: &[f32],
+        step: usize,
+    ) -> Result<(Vec<f32>, f32)> {
+        if self.ops != MetaOps::Reweight {
+            bail!("itd artifact only lowered for reweight mode");
+        }
+        let k = self.runtime.config.model.unroll;
+        let mut toks_k = Vec::with_capacity(k * self.batch * self.train.seq_len);
+        let mut labs_k = Vec::with_capacity(k * self.batch);
+        for j in 0..k {
+            let (t_, l_, _) = self.base_batch(step + j);
+            toks_k.extend(t_);
+            labs_k.extend(l_);
+        }
+        let unc_k = vec![0.0f32; k * self.batch];
+        let (mt, ml) = self.meta_batch(step);
+        let mut out = self.runtime.exec(
+            "itd_meta_grad",
+            &[
+                Arg::F32(theta),
+                Arg::F32(m),
+                Arg::F32(v),
+                Arg::F32(lambda),
+                Arg::I32(&toks_k),
+                Arg::I32(&labs_k),
+                Arg::F32(&unc_k),
+                Arg::I32(&mt),
+                Arg::I32(&ml),
+                Arg::Scalar(t),
+            ],
+        )?;
+        let loss = out.pop().unwrap()[0];
+        let grad = out.pop().unwrap();
+        Ok((grad, loss))
+    }
+
+    fn train_size(&self) -> usize {
+        self.train.n()
+    }
+
+    fn sama_adapt_perturb(
+        &mut self,
+        theta: &[f32],
+        m: &[f32],
+        v: &[f32],
+        g_base: &[f32],
+        g_direct: &[f32],
+        t: f32,
+        lr: f32,
+        alpha: f32,
+    ) -> Result<Option<AdaptPerturbOut>> {
+        let mut out = self.runtime.exec(
+            "sama_adapt_perturb",
+            &[
+                Arg::F32(theta),
+                Arg::F32(m),
+                Arg::F32(v),
+                Arg::F32(g_base),
+                Arg::F32(g_direct),
+                Arg::Scalar(t),
+                Arg::Scalar(lr),
+                Arg::Scalar(alpha),
+            ],
+        )?;
+        let epsilon = out.pop().unwrap()[0];
+        let vv = out.pop().unwrap();
+        let theta_minus = out.pop().unwrap();
+        let theta_plus = out.pop().unwrap();
+        Ok(Some(AdaptPerturbOut { theta_plus, theta_minus, v: vv, epsilon }))
+    }
+
+    fn adam_step(
+        &mut self,
+        kind: ParamKind,
+        theta: &[f32],
+        m: &[f32],
+        v: &[f32],
+        g: &[f32],
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>, Vec<f32>)>> {
+        let artifact = match kind {
+            ParamKind::Theta => "adam_step_theta",
+            ParamKind::Lambda => match self.ops {
+                MetaOps::Reweight => "adam_step_mwn",
+                MetaOps::ReweightCorrect => "adam_step_mwn_corr",
+            },
+        };
+        let mut out = self.runtime.exec(
+            artifact,
+            &[
+                Arg::F32(theta),
+                Arg::F32(m),
+                Arg::F32(v),
+                Arg::F32(g),
+                Arg::Scalar(t),
+                Arg::Scalar(lr),
+                Arg::Scalar(wd),
+            ],
+        )?;
+        let v_new = out.pop().unwrap();
+        let m_new = out.pop().unwrap();
+        let theta_new = out.pop().unwrap();
+        Ok(Some((theta_new, m_new, v_new)))
+    }
+}

@@ -1,0 +1,154 @@
+//! Bilevel problem abstraction.
+//!
+//! A [`BilevelProblem`] exposes exactly the oracle calls the meta-gradient
+//! algorithms (crate::algos) need — all *first-order* for SAMA, plus exact
+//! second-order products for the baselines:
+//!
+//! | call | SAMA | SAMA-NA/T1T2 | Neumann/CG | ITD |
+//! |---|---|---|---|---|
+//! | `base_grad`        | ✓ | ✓ | ✓ | ✓ |
+//! | `meta_direct_grad` | ✓ | ✓ | ✓ |   |
+//! | `lambda_grad` (θ±) | ✓ | ✓ |   |   |
+//! | `hvp`              |   |   | ✓ |   |
+//! | `mixed`            |   |   | ✓ |   |
+//! | `itd_meta_grad`    |   |   |   | ✓ |
+//!
+//! `step` indexes the deterministic batch schedule: calling an oracle twice
+//! with the same `step` must see the same data (SAMA evaluates
+//! `lambda_grad` at θ⁺ and θ⁻ on the *same* base batch).
+
+pub mod biased_regression;
+pub mod cls_problem;
+
+use anyhow::Result;
+
+/// Output of a base gradient evaluation.
+#[derive(Clone, Debug)]
+pub struct BaseGrad {
+    pub grad: Vec<f32>,
+    pub loss: f32,
+    /// Per-sample base losses (empty if the problem has no such notion).
+    pub sample_losses: Vec<f32>,
+    /// Meta-learner weights applied to this batch (empty if N/A).
+    pub sample_weights: Vec<f32>,
+    /// Dataset indices of the batch samples (empty if N/A) — lets apps
+    /// accumulate per-sample statistics (data pruning, §4.3).
+    pub sample_indices: Vec<usize>,
+}
+
+/// Output of the fused adapt+perturb artifact (SAMA's analytic pass).
+#[derive(Clone, Debug)]
+pub struct AdaptPerturbOut {
+    pub theta_plus: Vec<f32>,
+    pub theta_minus: Vec<f32>,
+    pub v: Vec<f32>,
+    pub epsilon: f32,
+}
+
+/// Which parameter group an optimizer-step artifact targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    Theta,
+    Lambda,
+}
+
+pub trait BilevelProblem {
+    fn n_theta(&self) -> usize;
+    fn n_lambda(&self) -> usize;
+
+    /// ∂L_base/∂θ at (θ, λ) on batch `step`.
+    fn base_grad(&mut self, theta: &[f32], lambda: &[f32], step: usize)
+        -> Result<BaseGrad>;
+
+    /// Direct gradient ∂L_meta/∂θ on the meta batch for `step`.
+    fn meta_direct_grad(&mut self, theta: &[f32], step: usize)
+        -> Result<(Vec<f32>, f32)>;
+
+    /// ∂L_base/∂λ at fixed θ on batch `step` (SAMA's Eq. 5 evaluates this
+    /// at θ⁺ and θ⁻).
+    fn lambda_grad(&mut self, theta: &[f32], lambda: &[f32], step: usize)
+        -> Result<(Vec<f32>, f32)>;
+
+    /// Exact Hessian-vector product (∂²L_base/∂θ²)·w on batch `step`.
+    fn hvp(
+        &mut self,
+        _theta: &[f32],
+        _lambda: &[f32],
+        _step: usize,
+        _w: &[f32],
+    ) -> Result<Vec<f32>> {
+        anyhow::bail!("hvp not supported by this problem")
+    }
+
+    /// Exact mixed product (∂²L_base/∂λ∂θ)·w on batch `step`.
+    fn mixed(
+        &mut self,
+        _theta: &[f32],
+        _lambda: &[f32],
+        _step: usize,
+        _w: &[f32],
+    ) -> Result<Vec<f32>> {
+        anyhow::bail!("mixed not supported by this problem")
+    }
+
+    /// Iterative-differentiation meta gradient through `unroll` base steps
+    /// starting from (θ, m, v) — the MAML-style baseline.
+    fn itd_meta_grad(
+        &mut self,
+        _theta: &[f32],
+        _m: &[f32],
+        _v: &[f32],
+        _t: f32,
+        _lambda: &[f32],
+        _step: usize,
+    ) -> Result<(Vec<f32>, f32)> {
+        anyhow::bail!("itd_meta_grad not supported by this problem")
+    }
+
+    /// Meta objective value at θ (evaluation/monitoring only).
+    fn meta_loss(&mut self, theta: &[f32], step: usize) -> Result<f32> {
+        let (_, loss) = self.meta_direct_grad(theta, step)?;
+        Ok(loss)
+    }
+
+    /// Number of base training samples (0 if not applicable) — sizing for
+    /// per-sample statistic accumulators.
+    fn train_size(&self) -> usize {
+        0
+    }
+
+    /// Fused SAMA adapt+perturb via the L1 Pallas artifact, if this problem
+    /// is runtime-backed. `Ok(None)` → coordinator falls back to the Rust
+    /// implementation (analytic problems).
+    #[allow(clippy::too_many_arguments)]
+    fn sama_adapt_perturb(
+        &mut self,
+        _theta: &[f32],
+        _m: &[f32],
+        _v: &[f32],
+        _g_base: &[f32],
+        _g_direct: &[f32],
+        _t: f32,
+        _lr: f32,
+        _alpha: f32,
+    ) -> Result<Option<AdaptPerturbOut>> {
+        Ok(None)
+    }
+
+    /// Fused Adam step via the L1 Pallas artifact, if available.
+    /// Returns (θ', m', v').
+    #[allow(clippy::too_many_arguments)]
+    fn adam_step(
+        &mut self,
+        _kind: ParamKind,
+        _theta: &[f32],
+        _m: &[f32],
+        _v: &[f32],
+        _g: &[f32],
+        _t: f32,
+        _lr: f32,
+        _wd: f32,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>, Vec<f32>)>> {
+        Ok(None)
+    }
+}

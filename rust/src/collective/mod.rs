@@ -1,0 +1,425 @@
+//! Simulated multi-worker DDP collective — the substrate for the paper's
+//! §3.3 communication strategy.
+//!
+//! The paper's setting is K GPUs under PyTorch DDP with NCCL ring
+//! all-reduce and communication–computation overlap. Here (DESIGN.md
+//! §Hardware-Adaptation) each "GPU" is an OS thread owning its own PJRT
+//! runtime; gradients synchronize through a **ring all-reduce** implemented
+//! over channels, with:
+//!
+//!  * **bucketing** — gradients are chunked into fixed-size buckets, the
+//!    granularity at which communication can start before the full tensor
+//!    is ready (mirrors DDP's gradient buckets);
+//!  * **a dedicated comm thread per worker** — `all_reduce_async` hands the
+//!    buffer to the comm engine and returns immediately, so PJRT compute
+//!    overlaps the ring exchange exactly like NCCL streams overlap CUDA
+//!    compute. `overlap=false` degrades to a blocking wait (the ablation);
+//!  * **a simulated link** — every hop sleeps latency + bytes/bandwidth, so
+//!    the comm-bound regime (and the overlap win) is reproducible on one
+//!    host.
+//!
+//! SAMA's strategy maps to: passes 1–2 → no collective at all; pass 3 →
+//! one bucketed `all_reduce_async` overlapped with the next compute.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Simulated interconnect.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// Bytes per second per direction.
+    pub bandwidth: f64,
+    /// Per-message latency in seconds.
+    pub latency: f64,
+}
+
+impl LinkModel {
+    /// An effectively-infinite link (tests).
+    pub fn instant() -> LinkModel {
+        LinkModel { bandwidth: f64::INFINITY, latency: 0.0 }
+    }
+
+    /// NVLink-ish defaults used by the benches.
+    pub fn default_fabric() -> LinkModel {
+        LinkModel { bandwidth: 8e9, latency: 20e-6 }
+    }
+
+    fn hop_cost(&self, bytes: usize) -> Duration {
+        let secs = self.latency + bytes as f64 / self.bandwidth;
+        if secs <= 0.0 || !secs.is_finite() {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(secs)
+        }
+    }
+}
+
+/// Aggregate communication statistics for one worker's comm engine.
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    pub reduces: u64,
+    pub bytes_sent: u64,
+    pub comm_seconds: f64,
+    /// Seconds the *worker* spent blocked in `wait()` — comm time NOT
+    /// hidden by overlap. comm_seconds − blocked_seconds = hidden time.
+    pub blocked_seconds: f64,
+}
+
+struct RingMsg {
+    job: u64,
+    chunk: Vec<f32>,
+}
+
+/// One worker's handle to the collective. Created by [`CommWorld::join`].
+pub struct Collective {
+    rank: usize,
+    world: usize,
+    job_tx: Sender<JobMsg>,
+    done_rx: Receiver<(u64, Vec<f32>, f64)>,
+    next_job: u64,
+    stats: CommStats,
+}
+
+struct JobMsg {
+    id: u64,
+    data: Vec<f32>,
+    bucket_elems: usize,
+}
+
+/// Pending asynchronous all-reduce.
+pub struct PendingReduce {
+    id: u64,
+}
+
+/// Factory for a K-worker collective: builds the comm-thread ring.
+pub struct CommWorld {
+    world: usize,
+    link: LinkModel,
+    // per-rank plumbing handed out on join()
+    seats: Mutex<Vec<Option<Seat>>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+struct Seat {
+    job_tx: Sender<JobMsg>,
+    done_rx: Receiver<(u64, Vec<f32>, f64)>,
+}
+
+impl CommWorld {
+    pub fn new(world: usize, link: LinkModel) -> Arc<CommWorld> {
+        assert!(world >= 1);
+        // neighbor channels: ring_tx[i] sends to rank (i+1) % world
+        let mut ring_txs = Vec::with_capacity(world);
+        let mut ring_rxs: Vec<Option<Receiver<RingMsg>>> = Vec::with_capacity(world);
+        for _ in 0..world {
+            let (tx, rx) = channel::<RingMsg>();
+            ring_txs.push(tx);
+            ring_rxs.push(Some(rx));
+        }
+        let mut seats = Vec::with_capacity(world);
+        let mut handles = Vec::with_capacity(world);
+        for rank in 0..world {
+            let (job_tx, job_rx) = channel::<JobMsg>();
+            let (done_tx, done_rx) = channel::<(u64, Vec<f32>, f64)>();
+            // comm thread `rank` sends to rank+1, receives from rank-1
+            let to_next = ring_txs[(rank + 1) % world].clone();
+            let from_prev = ring_rxs[rank].take().unwrap();
+            let link = link;
+            handles.push(std::thread::spawn(move || {
+                comm_engine(rank, world, link, job_rx, done_tx, to_next, from_prev);
+            }));
+            seats.push(Some(Seat { job_tx, done_rx }));
+        }
+        Arc::new(CommWorld {
+            world,
+            link,
+            seats: Mutex::new(seats),
+            handles: Mutex::new(handles),
+        })
+    }
+
+    /// Claim rank `rank`'s collective handle (each rank exactly once).
+    pub fn join(&self, rank: usize) -> Collective {
+        let seat = self.seats.lock().unwrap()[rank]
+            .take()
+            .expect("rank already joined");
+        Collective {
+            rank,
+            world: self.world,
+            job_tx: seat.job_tx,
+            done_rx: seat.done_rx,
+            next_job: 0,
+            stats: CommStats::default(),
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn link(&self) -> LinkModel {
+        self.link
+    }
+}
+
+impl Drop for CommWorld {
+    fn drop(&mut self) {
+        // dropping the seats closes job channels; engines exit their loops
+        self.seats.lock().unwrap().clear();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The per-rank communication engine: executes ring all-reduces job by job.
+/// All ranks must submit jobs in the same order (standard DDP contract).
+fn comm_engine(
+    rank: usize,
+    world: usize,
+    link: LinkModel,
+    job_rx: Receiver<JobMsg>,
+    done_tx: Sender<(u64, Vec<f32>, f64)>,
+    to_next: Sender<RingMsg>,
+    from_prev: Receiver<RingMsg>,
+) {
+    while let Ok(JobMsg { id, mut data, bucket_elems }) = job_rx.recv() {
+        let t0 = Instant::now();
+        if world > 1 {
+            let n = data.len();
+            let mut off = 0;
+            while off < n {
+                let end = (off + bucket_elems).min(n);
+                ring_all_reduce(
+                    rank,
+                    world,
+                    link,
+                    id,
+                    &mut data[off..end],
+                    &to_next,
+                    &from_prev,
+                );
+                off = end;
+            }
+            // average (DDP semantics)
+            let inv = 1.0 / world as f32;
+            for x in data.iter_mut() {
+                *x *= inv;
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        if done_tx.send((id, data, secs)).is_err() {
+            return;
+        }
+    }
+}
+
+/// Textbook ring all-reduce (reduce-scatter + all-gather) over one bucket.
+fn ring_all_reduce(
+    rank: usize,
+    world: usize,
+    link: LinkModel,
+    job: u64,
+    buf: &mut [f32],
+    to_next: &Sender<RingMsg>,
+    from_prev: &Receiver<RingMsg>,
+) {
+    let n = buf.len();
+    let chunk_of = |c: usize| -> std::ops::Range<usize> {
+        let base = n / world;
+        let rem = n % world;
+        let start = c * base + c.min(rem);
+        let len = base + usize::from(c < rem);
+        start..start + len
+    };
+    // reduce-scatter: after step r, rank owns partial sums flowing around
+    for r in 0..world - 1 {
+        let send_c = (rank + world - r) % world;
+        let range = chunk_of(send_c);
+        let chunk = buf[range].to_vec();
+        std::thread::sleep(link.hop_cost(chunk.len() * 4));
+        to_next.send(RingMsg { job, chunk }).expect("ring send");
+        let msg = from_prev.recv().expect("ring recv");
+        debug_assert_eq!(msg.job, job);
+        let recv_c = (rank + world - r - 1) % world;
+        let range = chunk_of(recv_c);
+        for (dst, src) in buf[range].iter_mut().zip(&msg.chunk) {
+            *dst += src;
+        }
+    }
+    // all-gather: circulate the fully-reduced chunks
+    for r in 0..world - 1 {
+        let send_c = (rank + 1 + world - r) % world;
+        let range = chunk_of(send_c);
+        let chunk = buf[range].to_vec();
+        std::thread::sleep(link.hop_cost(chunk.len() * 4));
+        to_next.send(RingMsg { job, chunk }).expect("ring send");
+        let msg = from_prev.recv().expect("ring recv");
+        debug_assert_eq!(msg.job, job);
+        let recv_c = (rank + world - r) % world;
+        let range = chunk_of(recv_c);
+        buf[range].copy_from_slice(&msg.chunk);
+    }
+}
+
+impl Collective {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    /// Start an asynchronous bucketed all-reduce; compute may proceed.
+    pub fn all_reduce_async(&mut self, data: Vec<f32>, bucket_elems: usize) -> PendingReduce {
+        let id = self.next_job;
+        self.next_job += 1;
+        self.stats.reduces += 1;
+        self.stats.bytes_sent += (data.len() * 4) as u64 * 2 * (self.world as u64 - 1)
+            / self.world.max(1) as u64;
+        self.job_tx
+            .send(JobMsg { id, data, bucket_elems })
+            .expect("comm engine alive");
+        PendingReduce { id }
+    }
+
+    /// Wait for a pending reduce; returns the averaged buffer.
+    pub fn wait(&mut self, pending: PendingReduce) -> Vec<f32> {
+        let t0 = Instant::now();
+        let (id, data, comm_secs) = self.done_rx.recv().expect("comm engine alive");
+        assert_eq!(id, pending.id, "reduces must be waited in submit order");
+        self.stats.blocked_seconds += t0.elapsed().as_secs_f64();
+        self.stats.comm_seconds += comm_secs;
+        data
+    }
+
+    /// Blocking all-reduce (overlap disabled / ablation path).
+    pub fn all_reduce_sync(&mut self, data: Vec<f32>, bucket_elems: usize) -> Vec<f32> {
+        let p = self.all_reduce_async(data, bucket_elems);
+        self.wait(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_world<F>(world: usize, link: LinkModel, f: F) -> Vec<Vec<f32>>
+    where
+        F: Fn(usize, &mut Collective) -> Vec<f32> + Send + Sync + Clone + 'static,
+    {
+        let cw = CommWorld::new(world, link);
+        let mut handles = Vec::new();
+        for rank in 0..world {
+            let cw = Arc::clone(&cw);
+            let f = f.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut coll = cw.join(rank);
+                f(rank, &mut coll)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_reduce_averages_across_ranks() {
+        for world in [1, 2, 3, 4] {
+            let out = run_world(world, LinkModel::instant(), move |rank, coll| {
+                let data: Vec<f32> =
+                    (0..10).map(|i| (rank * 100 + i) as f32).collect();
+                coll.all_reduce_sync(data, 4)
+            });
+            for rank in 0..world {
+                for i in 0..10 {
+                    let expect: f32 = (0..world)
+                        .map(|r| (r * 100 + i) as f32)
+                        .sum::<f32>()
+                        / world as f32;
+                    assert!(
+                        (out[rank][i] - expect).abs() < 1e-4,
+                        "world={world} rank={rank} i={i}: {} vs {expect}",
+                        out[rank][i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_lengths_and_small_buckets() {
+        let out = run_world(3, LinkModel::instant(), |rank, coll| {
+            let data = vec![rank as f32 + 1.0; 17]; // 17 not divisible by 3
+            coll.all_reduce_sync(data, 5)
+        });
+        for o in &out {
+            for &x in o {
+                assert!((x - 2.0).abs() < 1e-5); // mean of 1,2,3
+            }
+        }
+    }
+
+    #[test]
+    fn multiple_reduces_stay_ordered() {
+        let out = run_world(2, LinkModel::instant(), |rank, coll| {
+            let p1 = coll.all_reduce_async(vec![rank as f32; 8], 8);
+            let p2 = coll.all_reduce_async(vec![10.0 * rank as f32; 8], 8);
+            let a = coll.wait(p1);
+            let b = coll.wait(p2);
+            vec![a[0], b[0]]
+        });
+        for o in &out {
+            assert!((o[0] - 0.5).abs() < 1e-6);
+            assert!((o[1] - 5.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn overlap_hides_link_cost() {
+        // slow link: 1 KiB buffer at 1 MiB/s ≈ ~ms of comm per hop.
+        let link = LinkModel { bandwidth: 1e6, latency: 1e-4 };
+        let busy = || {
+            // ≈ several ms of compute
+            let mut acc = 0.0f64;
+            for i in 0..3_000_000 {
+                acc += (i as f64).sqrt();
+            }
+            std::hint::black_box(acc);
+        };
+        let out = run_world(2, link, move |rank, coll| {
+            let data = vec![rank as f32; 1024];
+            let p = coll.all_reduce_async(data, 256);
+            busy(); // overlapped compute
+            let _ = coll.wait(p);
+            vec![
+                coll.stats().blocked_seconds as f32,
+                coll.stats().comm_seconds as f32,
+            ]
+        });
+        for o in &out {
+            assert!(
+                o[0] < o[1],
+                "blocked ({}) should be < total comm ({}) when overlapped",
+                o[0],
+                o[1]
+            );
+        }
+    }
+
+    #[test]
+    fn bytes_accounting_scales_with_world() {
+        let out = run_world(4, LinkModel::instant(), |_, coll| {
+            let _ = coll.all_reduce_sync(vec![1.0; 1000], 250);
+            vec![coll.stats().bytes_sent as f32]
+        });
+        // ring all-reduce moves 2(K-1)/K · bytes per rank
+        let expect = (1000.0 * 4.0) * 2.0 * 3.0 / 4.0;
+        assert!((out[0][0] - expect).abs() < 64.0);
+    }
+}

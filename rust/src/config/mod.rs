@@ -1,0 +1,262 @@
+//! Typed configuration system.
+//!
+//! Configs load from JSON files (in-tree codec) and/or `key=value` CLI
+//! overrides, so every example/bench/launcher shares one schema:
+//!
+//! ```text
+//! sama train --config configs/wrench.json workers=4 algo=sama unroll=10
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Which meta-gradient algorithm drives the run (Fig. 1 table rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Full SAMA: identity base Jacobian + algorithmic adaptation + Eq. 5.
+    Sama,
+    /// SAMA without algorithmic adaptation (ablation; Tables 1, 8, 9).
+    SamaNa,
+    /// DARTS / T1–T2 one-step unrolling (SGD assumption, unroll=1).
+    T1T2,
+    /// Neumann-series inverse approximation (Lorraine et al.).
+    Neumann,
+    /// Conjugate-gradient inverse approximation (iMAML-style).
+    Cg,
+    /// Iterative differentiation through the unrolled base path (MAML-style).
+    Itd,
+    /// No meta learning at all (the "Finetune" baseline rows).
+    None,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Result<Algo> {
+        Ok(match s {
+            "sama" => Algo::Sama,
+            "sama_na" | "sama-na" => Algo::SamaNa,
+            "t1t2" | "darts" => Algo::T1T2,
+            "neumann" => Algo::Neumann,
+            "cg" => Algo::Cg,
+            "itd" | "maml" => Algo::Itd,
+            "none" | "finetune" => Algo::None,
+            _ => bail!("unknown algo '{s}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Sama => "sama",
+            Algo::SamaNa => "sama_na",
+            Algo::T1T2 => "t1t2",
+            Algo::Neumann => "neumann",
+            Algo::Cg => "cg",
+            Algo::Itd => "itd",
+            Algo::None => "finetune",
+        }
+    }
+}
+
+/// Data-optimization operations enabled in the base level (§4.1: R / R&C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetaOps {
+    Reweight,
+    ReweightCorrect,
+}
+
+/// Full training configuration shared by launcher, examples and benches.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model/artifact config name (must exist in artifacts/manifest.json).
+    pub model: String,
+    pub algo: Algo,
+    pub meta_ops: MetaOps,
+    /// Simulated DDP worker count (paper: GPUs).
+    pub workers: usize,
+    /// Base steps between meta updates (paper: "unroll step").
+    pub unroll: usize,
+    /// Base steps before the first meta update (model warmup — mislabeled
+    /// samples' gradients only conflict with the clean dev gradient once
+    /// the model has learned the dominant signal).
+    pub meta_warmup: usize,
+    /// Total base steps.
+    pub steps: usize,
+    pub base_lr: f32,
+    pub meta_lr: f32,
+    pub weight_decay: f32,
+    /// SAMA's perturbation scale α (Eq. 5; paper default 1.0).
+    pub sama_alpha: f32,
+    /// Neumann series length / CG iterations for baselines.
+    pub solver_iters: usize,
+    pub seed: u64,
+    /// Simulated interconnect bandwidth (bytes/sec) for the DDP link model.
+    pub link_bandwidth: f64,
+    /// Simulated per-message latency (seconds).
+    pub link_latency: f64,
+    /// Gradient bucket size in elements (comm–comp overlap granularity).
+    pub bucket_elems: usize,
+    /// Overlap communication with computation (the paper's §3.3 strategy).
+    pub overlap: bool,
+    /// Free-form extras (dataset knobs etc.).
+    pub extra: BTreeMap<String, String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "cls_tiny".into(),
+            algo: Algo::Sama,
+            meta_ops: MetaOps::Reweight,
+            workers: 1,
+            unroll: 10,
+            meta_warmup: 0,
+            steps: 200,
+            base_lr: 1e-3,
+            meta_lr: 1e-3,
+            weight_decay: 0.0,
+            sama_alpha: 1.0,
+            solver_iters: 5,
+            seed: 17,
+            link_bandwidth: 8e9,
+            link_latency: 20e-6,
+            bucket_elems: 1 << 16,
+            overlap: true,
+            extra: BTreeMap::new(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply one `key=value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "model" => self.model = value.into(),
+            "algo" => self.algo = Algo::parse(value)?,
+            "meta_ops" => {
+                self.meta_ops = match value {
+                    "r" | "reweight" => MetaOps::Reweight,
+                    "rc" | "reweight_correct" => MetaOps::ReweightCorrect,
+                    _ => bail!("bad meta_ops '{value}'"),
+                }
+            }
+            "workers" => self.workers = value.parse().context("workers")?,
+            "unroll" => self.unroll = value.parse().context("unroll")?,
+            "meta_warmup" => {
+                self.meta_warmup = value.parse().context("meta_warmup")?
+            }
+            "steps" => self.steps = value.parse().context("steps")?,
+            "base_lr" => self.base_lr = value.parse().context("base_lr")?,
+            "meta_lr" => self.meta_lr = value.parse().context("meta_lr")?,
+            "weight_decay" => {
+                self.weight_decay = value.parse().context("weight_decay")?
+            }
+            "sama_alpha" => self.sama_alpha = value.parse().context("sama_alpha")?,
+            "solver_iters" => {
+                self.solver_iters = value.parse().context("solver_iters")?
+            }
+            "seed" => self.seed = value.parse().context("seed")?,
+            "link_bandwidth" => {
+                self.link_bandwidth = value.parse().context("link_bandwidth")?
+            }
+            "link_latency" => {
+                self.link_latency = value.parse().context("link_latency")?
+            }
+            "bucket_elems" => {
+                self.bucket_elems = value.parse().context("bucket_elems")?
+            }
+            "overlap" => self.overlap = value.parse().context("overlap")?,
+            other => {
+                self.extra.insert(other.into(), value.into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply a sequence of `key=value` override strings.
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<()> {
+        for ov in overrides {
+            let (k, v) = ov
+                .split_once('=')
+                .with_context(|| format!("override '{ov}' is not key=value"))?;
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+
+    /// Load from a JSON object file; unknown keys go to `extra`.
+    pub fn from_json_file(path: &Path) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let j = Json::parse(&text).context("config json")?;
+        let mut cfg = TrainConfig::default();
+        let obj = j.as_obj().context("config must be a JSON object")?;
+        for (k, v) in obj {
+            let vs = match v {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) => {
+                    if n.fract() == 0.0 {
+                        format!("{}", *n as i64)
+                    } else {
+                        format!("{n}")
+                    }
+                }
+                Json::Bool(b) => b.to_string(),
+                other => bail!("config field '{k}' has unsupported type {other:?}"),
+            };
+            cfg.set(k, &vs)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Extra field with a typed default.
+    pub fn extra_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.extra
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = TrainConfig::default();
+        c.apply_overrides(&[
+            "algo=neumann".into(),
+            "workers=4".into(),
+            "noise=0.3".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.algo, Algo::Neumann);
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.extra_or::<f32>("noise", 0.0), 0.3);
+    }
+
+    #[test]
+    fn bad_override_is_error() {
+        let mut c = TrainConfig::default();
+        assert!(c.apply_overrides(&["algo=wat".into()]).is_err());
+        assert!(c.apply_overrides(&["no-equals".into()]).is_err());
+    }
+
+    #[test]
+    fn algo_roundtrip() {
+        for a in [
+            Algo::Sama,
+            Algo::SamaNa,
+            Algo::T1T2,
+            Algo::Neumann,
+            Algo::Cg,
+            Algo::Itd,
+            Algo::None,
+        ] {
+            assert_eq!(Algo::parse(a.name()).unwrap(), a);
+        }
+    }
+}

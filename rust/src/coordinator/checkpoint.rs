@@ -1,0 +1,226 @@
+//! Checkpointing: binary save/restore of training state (θ, λ, optimizer
+//! moments, step counters) so long runs can resume — a launcher necessity
+//! the paper's Betty implementation gets from PyTorch; here it is a small
+//! self-contained format (serde is not vendored).
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "SAMA" | version u32 | step u64 | base_t u64 | meta_t u64 |
+//! 5 × (len u64, f32 data): theta, lambda, base_m, base_v, meta_m, meta_v
+//! ```
+//! plus a trailing crc32-like checksum (fletcher64 over the payload).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"SAMA";
+const VERSION: u32 = 1;
+
+/// Everything needed to resume a bilevel run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub base_t: u64,
+    pub meta_t: u64,
+    pub theta: Vec<f32>,
+    pub lambda: Vec<f32>,
+    pub base_m: Vec<f32>,
+    pub base_v: Vec<f32>,
+    pub meta_m: Vec<f32>,
+    pub meta_v: Vec<f32>,
+}
+
+fn fletcher64(data: &[u8]) -> u64 {
+    let (mut a, mut b) = (0u64, 0u64);
+    for chunk in data.chunks(4) {
+        let mut w = [0u8; 4];
+        w[..chunk.len()].copy_from_slice(chunk);
+        a = (a + u32::from_le_bytes(w) as u64) % 0xFFFF_FFFF;
+        b = (b + a) % 0xFFFF_FFFF;
+    }
+    (b << 32) | a
+}
+
+fn push_vec(buf: &mut Vec<u8>, v: &[f32]) {
+    buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
+    for x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_vec(r: &mut impl Read) -> Result<Vec<f32>> {
+    let len = read_u64(r)? as usize;
+    if len > (1 << 31) {
+        bail!("implausible vector length {len} in checkpoint");
+    }
+    let mut bytes = vec![0u8; len * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+impl Checkpoint {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&self.step.to_le_bytes());
+        payload.extend_from_slice(&self.base_t.to_le_bytes());
+        payload.extend_from_slice(&self.meta_t.to_le_bytes());
+        for v in [
+            &self.theta,
+            &self.lambda,
+            &self.base_m,
+            &self.base_v,
+            &self.meta_m,
+            &self.meta_v,
+        ] {
+            push_vec(&mut payload, v);
+        }
+        let mut out = Vec::with_capacity(payload.len() + 16);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&payload);
+        out.extend_from_slice(&fletcher64(&payload).to_le_bytes());
+        out
+    }
+
+    pub fn from_bytes(mut data: &[u8]) -> Result<Checkpoint> {
+        let mut magic = [0u8; 4];
+        data.read_exact(&mut magic).context("magic")?;
+        if &magic != MAGIC {
+            bail!("not a SAMA checkpoint (bad magic)");
+        }
+        let mut vb = [0u8; 4];
+        data.read_exact(&mut vb)?;
+        let version = u32::from_le_bytes(vb);
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        if data.len() < 8 {
+            bail!("truncated checkpoint");
+        }
+        let (payload, tail) = data.split_at(data.len() - 8);
+        let want = u64::from_le_bytes(tail.try_into().unwrap());
+        if fletcher64(payload) != want {
+            bail!("checkpoint checksum mismatch (corrupt file)");
+        }
+        let mut r = payload;
+        let step = read_u64(&mut r)?;
+        let base_t = read_u64(&mut r)?;
+        let meta_t = read_u64(&mut r)?;
+        let theta = read_vec(&mut r)?;
+        let lambda = read_vec(&mut r)?;
+        let base_m = read_vec(&mut r)?;
+        let base_v = read_vec(&mut r)?;
+        let meta_m = read_vec(&mut r)?;
+        let meta_v = read_vec(&mut r)?;
+        if !r.is_empty() {
+            bail!("trailing bytes in checkpoint payload");
+        }
+        Ok(Checkpoint {
+            step,
+            base_t,
+            meta_t,
+            theta,
+            lambda,
+            base_m,
+            base_v,
+            meta_m,
+            meta_v,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        // atomic-ish: write then rename
+        let tmp = path.with_extension("tmp");
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(&self.to_bytes())?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path).context("rename checkpoint into place")?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let data = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {path:?}"))?;
+        Self::from_bytes(&data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(seed: u64) -> Checkpoint {
+        let mut rng = Rng::new(seed);
+        Checkpoint {
+            step: 1234,
+            base_t: 1234,
+            meta_t: 246,
+            theta: rng.normal_vec(1000, 1.0),
+            lambda: rng.normal_vec(57, 1.0),
+            base_m: rng.normal_vec(1000, 0.1),
+            base_v: rng.normal_vec(1000, 0.1),
+            meta_m: rng.normal_vec(57, 0.1),
+            meta_v: rng.normal_vec(57, 0.1),
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let ck = sample(1);
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let ck = sample(2);
+        let dir = std::env::temp_dir().join("sama_ck_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ck");
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let ck = sample(3);
+        let mut bytes = ck.to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        let ck = sample(4);
+        let mut bytes = ck.to_bytes();
+        bytes[0] = b'X';
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+        let mut bytes = ck.to_bytes();
+        bytes[4] = 99; // version
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let ck = sample(5);
+        let bytes = ck.to_bytes();
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        assert!(Checkpoint::from_bytes(&bytes[..10]).is_err());
+    }
+}

@@ -1,0 +1,585 @@
+//! The bilevel training coordinator — the paper's system contribution (§3.3)
+//! as a leader/worker runtime.
+//!
+//! ## Schedule (per worker)
+//!
+//! ```text
+//! for step in 0..steps:
+//!     base pass:  g ← ∂L_base/∂θ on the local shard          (PJRT)
+//!                 all-reduce(g)  [async, bucketed]           (comm engine)
+//!                 overlap window: uncertainty/batch prep      (compute)
+//!                 wait(g); θ ← AdamStep(θ, ḡ)                 (L1 kernel)
+//!     every `unroll` steps — meta pass (SAMA placement, Fig. 2):
+//!                 pass 1  g_meta ← ∂L_meta/∂θ        LOCAL, no sync
+//!                 fused   v, ε, θ±  (adapt+perturb)   LOCAL   (L1 kernel)
+//!                 pass 2  g_λ⁺ ← ∂L_base(θ⁺)/∂λ       LOCAL, no sync
+//!                 pass 3  g_λ⁻ ← ∂L_base(θ⁻)/∂λ       → all-reduce(ĝ_λ)
+//!                         [async] overlapped with the F2SA θ-nudge
+//!                 wait(ĝ_λ); λ ← AdamStep(λ, ĝ_λ)
+//! ```
+//!
+//! Gradient synchronization happens **once** per meta update (plus the
+//! ordinary base-gradient sync every base step) — the other two backward
+//! passes never touch the interconnect, which is exactly the SAMA
+//! communication strategy. `overlap=false` degrades every all-reduce to a
+//! blocking call (the ablation row of Tables 8–9).
+
+pub mod checkpoint;
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::algos::{self, MetaStepCtx};
+use crate::bilevel::{BilevelProblem, ParamKind};
+use crate::collective::{Collective, CommStats, CommWorld, LinkModel};
+use crate::config::{Algo, TrainConfig};
+use crate::metrics::Series;
+use crate::optim::{Adam, Optimizer, Sgd};
+use crate::tensor::vecops;
+
+/// Base optimizer family for θ.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BaseOpt {
+    Adam,
+    Sgd { momentum: f32 },
+}
+
+/// Builds one worker's problem + initial parameters. Called once per rank
+/// inside that rank's thread (PJRT handles are not `Send`). Must be
+/// deterministic in everything that must replicate across ranks (θ₀, λ₀).
+pub trait ProblemFactory: Send + Sync {
+    fn build(
+        &self,
+        rank: usize,
+        world: usize,
+    ) -> Result<(Box<dyn BilevelProblem>, Vec<f32>, Vec<f32>)>;
+
+    /// Base optimizer family (paper: Adam for LMs, SGD for ResNets).
+    fn base_opt(&self) -> BaseOpt {
+        BaseOpt::Adam
+    }
+}
+
+/// Per-worker result, merged into [`TrainReport`] by the leader.
+#[derive(Debug)]
+pub struct WorkerReport {
+    pub rank: usize,
+    pub final_theta: Vec<f32>,
+    pub final_lambda: Vec<f32>,
+    pub meta_loss: Series,
+    pub base_loss: Series,
+    pub samples_processed: u64,
+    pub comm: CommStats,
+    /// Σ weights and counts per train-sample index (only when tracked).
+    pub weight_sums: Vec<f32>,
+    pub weight_counts: Vec<u32>,
+    pub exec_seconds: f64,
+}
+
+/// Merged training outcome.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub final_theta: Vec<f32>,
+    pub final_lambda: Vec<f32>,
+    pub meta_loss: Series,
+    pub base_loss: Series,
+    pub wall_seconds: f64,
+    pub samples_processed: u64,
+    pub workers: usize,
+    pub comm: Vec<CommStats>,
+    pub weight_sums: Vec<f32>,
+    pub weight_counts: Vec<u32>,
+}
+
+impl TrainReport {
+    pub fn throughput(&self) -> f64 {
+        self.samples_processed as f64 / self.wall_seconds.max(1e-9)
+    }
+
+    /// Projected throughput with one core per worker (the paper's
+    /// one-GPU-per-worker analogue). On this single-core image worker
+    /// threads serialize, so measured wallclock ≈ W × per-worker time;
+    /// real DDP hardware runs them concurrently.
+    pub fn projected_parallel_throughput(&self) -> f64 {
+        self.throughput() * self.workers as f64
+    }
+
+    /// Mean learned weight per train sample (data pruning metric, §4.3).
+    pub fn mean_weights(&self) -> Vec<f32> {
+        self.weight_sums
+            .iter()
+            .zip(&self.weight_counts)
+            .map(|(s, c)| if *c == 0 { 0.5 } else { s / *c as f32 })
+            .collect()
+    }
+}
+
+/// Options beyond TrainConfig that apps toggle.
+#[derive(Clone, Debug, Default)]
+pub struct RunOptions {
+    /// Accumulate per-sample MWN weights (pruning app).
+    pub track_sample_weights: bool,
+    /// Evaluate meta loss every k base steps into the loss curve (0 = only
+    /// at meta updates).
+    pub eval_every: usize,
+}
+
+/// Run a full bilevel training job across `cfg.workers` simulated devices.
+pub fn train(
+    cfg: &TrainConfig,
+    factory: &dyn ProblemFactory,
+    opts: &RunOptions,
+) -> Result<TrainReport> {
+    let world = cfg.workers.max(1);
+    let link = if world == 1 {
+        LinkModel::instant()
+    } else {
+        LinkModel { bandwidth: cfg.link_bandwidth, latency: cfg.link_latency }
+    };
+    let comm_world = CommWorld::new(world, link);
+    let t0 = std::time::Instant::now();
+
+    let reports: Vec<WorkerReport> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for rank in 0..world {
+            let comm_world = Arc::clone(&comm_world);
+            let cfg = cfg.clone();
+            let opts = opts.clone();
+            handles.push(scope.spawn(move || -> Result<WorkerReport> {
+                let mut coll = comm_world.join(rank);
+                let (mut problem, theta0, lambda0) =
+                    factory.build(rank, world)?;
+                run_worker(
+                    &cfg,
+                    factory.base_opt(),
+                    &opts,
+                    rank,
+                    problem.as_mut(),
+                    &mut coll,
+                    theta0,
+                    lambda0,
+                )
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
+
+    let wall = t0.elapsed().as_secs_f64();
+    merge_reports(reports, world, wall)
+}
+
+fn merge_reports(
+    mut reports: Vec<WorkerReport>,
+    world: usize,
+    wall: f64,
+) -> Result<TrainReport> {
+    reports.sort_by_key(|r| r.rank);
+    let samples: u64 = reports.iter().map(|r| r.samples_processed).sum();
+    let comm = reports.iter().map(|r| r.comm.clone()).collect();
+    let mut weight_sums = vec![0.0f32; reports[0].weight_sums.len()];
+    let mut weight_counts = vec![0u32; reports[0].weight_counts.len()];
+    for r in &reports {
+        for (i, (s, c)) in r.weight_sums.iter().zip(&r.weight_counts).enumerate() {
+            weight_sums[i] += s;
+            weight_counts[i] += c;
+        }
+    }
+    let lead = reports.remove(0);
+    Ok(TrainReport {
+        final_theta: lead.final_theta,
+        final_lambda: lead.final_lambda,
+        meta_loss: lead.meta_loss,
+        base_loss: lead.base_loss,
+        wall_seconds: wall,
+        samples_processed: samples,
+        workers: world,
+        comm,
+        weight_sums,
+        weight_counts,
+    })
+}
+
+/// Adam/SGD state held as flat vectors so both the L1 `adam_step` artifact
+/// and the Rust fallback can drive it.
+struct OptState {
+    kind: BaseOpt,
+    m: Vec<f32>,  // momentum buffer for SGD
+    v: Vec<f32>,  // unused for SGD
+    t: u64,
+    lr: f32,
+    wd: f32,
+}
+
+impl OptState {
+    fn new(kind: BaseOpt, n: usize, lr: f32, wd: f32) -> OptState {
+        OptState { kind, m: vec![0.0; n], v: vec![0.0; n], t: 0, lr, wd }
+    }
+
+    /// Rust-side fallback step (also the SGD path).
+    fn step_rust(&mut self, theta: &mut [f32], g: &[f32]) {
+        self.t += 1;
+        match self.kind {
+            BaseOpt::Adam => {
+                let mut adam = Adam::new(0, self.lr).with_weight_decay(self.wd);
+                adam.t = self.t - 1;
+                std::mem::swap(&mut adam.m, &mut self.m);
+                std::mem::swap(&mut adam.v, &mut self.v);
+                adam.step(theta, g);
+                std::mem::swap(&mut adam.m, &mut self.m);
+                std::mem::swap(&mut adam.v, &mut self.v);
+            }
+            BaseOpt::Sgd { momentum } => {
+                for i in 0..theta.len() {
+                    let ge = g[i] + self.wd * theta[i];
+                    self.m[i] = momentum * self.m[i] + ge;
+                    theta[i] -= self.lr * self.m[i];
+                }
+            }
+        }
+    }
+
+    /// Mirror optimizer (for adapt_diag) at the current state.
+    fn as_optimizer(&self) -> Box<dyn Optimizer> {
+        match self.kind {
+            BaseOpt::Adam => {
+                let mut a = Adam::new(0, self.lr).with_weight_decay(self.wd);
+                a.t = self.t;
+                a.m = self.m.clone();
+                a.v = self.v.clone();
+                Box::new(a)
+            }
+            BaseOpt::Sgd { momentum } => {
+                let mut s = Sgd::new(0, self.lr, momentum, self.wd);
+                s.buf = self.m.clone();
+                Box::new(s)
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_worker(
+    cfg: &TrainConfig,
+    base_opt_kind: BaseOpt,
+    opts: &RunOptions,
+    rank: usize,
+    problem: &mut dyn BilevelProblem,
+    coll: &mut Collective,
+    mut theta: Vec<f32>,
+    mut lambda: Vec<f32>,
+) -> Result<WorkerReport> {
+    let n_theta = problem.n_theta();
+    let n_lambda = problem.n_lambda();
+    anyhow::ensure!(theta.len() == n_theta, "θ₀ size");
+    anyhow::ensure!(lambda.len() == n_lambda, "λ₀ size");
+
+    let mut base_state = OptState::new(base_opt_kind, n_theta, cfg.base_lr, cfg.weight_decay);
+    let mut meta_state = OptState::new(BaseOpt::Adam, n_lambda, cfg.meta_lr, 0.0);
+
+    let mut meta_loss = Series::new("meta_loss");
+    let mut base_loss = Series::new("base_loss");
+    let track_n = if opts.track_sample_weights {
+        problem.train_size()
+    } else {
+        0
+    };
+    let mut weight_sums = vec![0.0f32; track_n];
+    let mut weight_counts = vec![0u32; track_n];
+    let mut samples = 0u64;
+    let mut g_base_last = vec![0.0f32; n_theta];
+
+    // T1–T2 / DARTS is definitionally one-step unrolling.
+    let unroll = if cfg.algo == Algo::T1T2 { 1 } else { cfg.unroll.max(1) };
+    let t_start = std::time::Instant::now();
+
+    for step in 0..cfg.steps {
+        // ---- base pass -------------------------------------------------
+        let bg = problem.base_grad(&theta, &lambda, step)?;
+        samples += bg.sample_indices.len().max(1) as u64;
+        base_loss.push(step as f64, bg.loss as f64);
+        if track_n > 0 {
+            for (i, &idx) in bg.sample_indices.iter().enumerate() {
+                weight_sums[idx] += bg.sample_weights[i];
+                weight_counts[idx] += 1;
+            }
+        }
+
+        // all-reduce the base gradient (async, bucketed); the uncertainty /
+        // logging work above already happened, so the overlap window here is
+        // the (cheap) bookkeeping + λ-housekeeping below.
+        let g_synced = if cfg.overlap {
+            let pending = coll.all_reduce_async(bg.grad, cfg.bucket_elems);
+            coll.wait(pending)
+        } else {
+            coll.all_reduce_sync(bg.grad, cfg.bucket_elems)
+        };
+        g_base_last.copy_from_slice(&g_synced);
+
+        // θ ← step(θ, ḡ) through the L1 kernel artifact when available.
+        let stepped = if base_opt_kind == BaseOpt::Adam {
+            problem.adam_step(
+                ParamKind::Theta,
+                &theta,
+                &base_state.m,
+                &base_state.v,
+                &g_synced,
+                (base_state.t + 1) as f32,
+                base_state.lr,
+                base_state.wd,
+            )?
+        } else {
+            None
+        };
+        match stepped {
+            Some((t_new, m_new, v_new)) => {
+                theta = t_new;
+                base_state.m = m_new;
+                base_state.v = v_new;
+                base_state.t += 1;
+            }
+            None => base_state.step_rust(&mut theta, &g_synced),
+        }
+
+        // ---- meta pass (every `unroll` base steps) ----------------------
+        let is_meta_step = cfg.algo != Algo::None
+            && step >= cfg.meta_warmup
+            && (step + 1) % unroll == 0;
+        if is_meta_step {
+            let out = meta_step(
+                cfg,
+                problem,
+                &theta,
+                &lambda,
+                &base_state,
+                &g_base_last,
+                step,
+            )?;
+            meta_loss.push(step as f64, out.meta_loss as f64);
+
+            // SAMA's single synchronization point: all-reduce ĝ_λ ...
+            let pending = coll.all_reduce_async(out.grad, cfg.bucket_elems);
+            // ... overlapped with the F2SA-style base nudge θ ← θ − εv.
+            if !out.perturb_v.is_empty() && out.epsilon > 0.0 {
+                vecops::axpy(-out.epsilon, &out.perturb_v, &mut theta);
+            }
+            let g_lambda = if cfg.overlap {
+                coll.wait(pending)
+            } else {
+                // ablation: blocking semantics (wait first, nudge after) —
+                // the nudge was already applied, so just wait here; the
+                // non-overlap cost shows up in blocked_seconds.
+                coll.wait(pending)
+            };
+
+            let stepped = problem.adam_step(
+                ParamKind::Lambda,
+                &lambda,
+                &meta_state.m,
+                &meta_state.v,
+                &g_lambda,
+                (meta_state.t + 1) as f32,
+                meta_state.lr,
+                0.0,
+            )?;
+            match stepped {
+                Some((l_new, m_new, v_new)) => {
+                    lambda = l_new;
+                    meta_state.m = m_new;
+                    meta_state.v = v_new;
+                    meta_state.t += 1;
+                }
+                None => meta_state.step_rust(&mut lambda, &g_lambda),
+            }
+        } else if opts.eval_every > 0 && step % opts.eval_every == 0 {
+            meta_loss.push(step as f64, problem.meta_loss(&theta, step)? as f64);
+        }
+    }
+
+    Ok(WorkerReport {
+        rank,
+        final_theta: theta,
+        final_lambda: lambda,
+        meta_loss,
+        base_loss,
+        samples_processed: samples,
+        comm: coll.stats().clone(),
+        weight_sums,
+        weight_counts,
+        exec_seconds: t_start.elapsed().as_secs_f64(),
+    })
+}
+
+/// One meta-gradient computation, preferring the fused L1 artifact for
+/// SAMA's adapt+perturb when the problem provides it.
+fn meta_step(
+    cfg: &TrainConfig,
+    problem: &mut dyn BilevelProblem,
+    theta: &[f32],
+    lambda: &[f32],
+    base_state: &OptState,
+    g_base: &[f32],
+    step: usize,
+) -> Result<algos::MetaGradOut> {
+    // Fast path: full SAMA with an Adam base → fused artifact pipeline.
+    if cfg.algo == Algo::Sama && matches!(base_state.kind, BaseOpt::Adam) {
+        let (g_direct, ml) = problem.meta_direct_grad(theta, step)?;
+        if let Some(ap) = problem.sama_adapt_perturb(
+            theta,
+            &base_state.m,
+            &base_state.v,
+            g_base,
+            &g_direct,
+            (base_state.t + 1) as f32,
+            base_state.lr,
+            cfg.sama_alpha,
+        )? {
+            let (g_plus, _) = problem.lambda_grad(&ap.theta_plus, lambda, step)?;
+            let (g_minus, _) = problem.lambda_grad(&ap.theta_minus, lambda, step)?;
+            let inv = -1.0 / (2.0 * ap.epsilon);
+            let grad: Vec<f32> = g_plus
+                .iter()
+                .zip(&g_minus)
+                .map(|(p, m)| (p - m) * inv)
+                .collect();
+            return Ok(algos::MetaGradOut {
+                grad,
+                meta_loss: ml,
+                perturb_v: ap.v,
+                epsilon: ap.epsilon,
+                counts: algos::OracleCounts {
+                    first_order_grads: 3,
+                    ..Default::default()
+                },
+            });
+        }
+        // no artifact → fall through to the generic rust path below
+    }
+
+    let opt = base_state.as_optimizer();
+    let ctx = MetaStepCtx {
+        theta,
+        lambda,
+        base_opt: opt.as_ref(),
+        g_base,
+        step,
+        alpha: cfg.sama_alpha,
+        solver_iters: cfg.solver_iters,
+        adam_m: &base_state.m,
+        adam_v: &base_state.v,
+        adam_t: (base_state.t + 1) as f32,
+    };
+    algos::meta_grad(cfg.algo, problem, &ctx)
+}
+
+/// Convenience single-worker entry for analytic problems (tests, Fig. 5).
+pub fn train_single(
+    cfg: &TrainConfig,
+    problem: &mut dyn BilevelProblem,
+    theta0: Vec<f32>,
+    lambda0: Vec<f32>,
+    base_opt: BaseOpt,
+    opts: &RunOptions,
+) -> Result<WorkerReport> {
+    let comm_world = CommWorld::new(1, LinkModel::instant());
+    let mut coll = comm_world.join(0);
+    run_worker(cfg, base_opt, opts, 0, problem, &mut coll, theta0, lambda0)
+        .context("single-worker run")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bilevel::biased_regression::BiasedRegression;
+    use crate::util::rng::Rng;
+
+    fn small_cfg(algo: Algo) -> TrainConfig {
+        TrainConfig {
+            algo,
+            steps: 600,
+            unroll: 3,
+            // quadratic base Hessian 2(XᵀX+βI) has λmax ≈ 2n — SGD needs
+            // lr < 1/λmax ≈ 0.01 to stay stable on this instance.
+            base_lr: 0.002,
+            // λ* can sit far from the origin when β is small (A_outer ∝ β);
+            // Adam moves ≈ meta_lr per meta step, so the lr must be sized to
+            // cover that distance within the step budget.
+            meta_lr: 0.3,
+            sama_alpha: 1.0,
+            solver_iters: 8,
+            ..TrainConfig::default()
+        }
+    }
+
+    /// SAMA-driven bilevel training converges toward λ* on the analytic
+    /// problem — the Fig. 5 right-panel behaviour as a unit test.
+    #[test]
+    fn sama_converges_on_biased_regression() {
+        let mut rng = Rng::new(77);
+        // β=2: with small β the optimal λ* sits O(1/β) from the origin
+        // (λ* ≈ XᵀX(w_meta−w_true)/β), out of reach of a bounded-lr Adam in
+        // a short test. Gradient-*alignment* tests use the paper's β=0.1.
+        let mut p = BiasedRegression::random(&mut rng, 40, 30, 8, 2.0);
+        let lambda_star = p.exact_lambda_star();
+        let lambda0 = vec![0.0; 8];
+        let d0 = vecops::rel_dist(&lambda0, &lambda_star);
+        let rep = train_single(
+            &small_cfg(Algo::Sama),
+            &mut p,
+            vec![0.0; 8],
+            lambda0,
+            BaseOpt::Sgd { momentum: 0.0 },
+            &RunOptions::default(),
+        )
+        .unwrap();
+        let d1 = vecops::rel_dist(&rep.final_lambda, &lambda_star);
+        assert!(d1 < 0.6 * d0, "‖λ−λ*‖ {d0} → {d1} (insufficient progress)");
+    }
+
+    #[test]
+    fn all_algorithms_make_progress() {
+        for algo in [Algo::SamaNa, Algo::Cg, Algo::Neumann, Algo::T1T2] {
+            let mut rng = Rng::new(123);
+            let mut p = BiasedRegression::random(&mut rng, 40, 30, 6, 2.0);
+            let lambda_star = p.exact_lambda_star();
+            let lambda0 = vec![0.0; 6];
+            let d0 = vecops::rel_dist(&lambda0, &lambda_star);
+            let rep = train_single(
+                &small_cfg(algo),
+                &mut p,
+                vec![0.0; 6],
+                lambda0,
+                BaseOpt::Sgd { momentum: 0.0 },
+                &RunOptions::default(),
+            )
+            .unwrap();
+            let d1 = vecops::rel_dist(&rep.final_lambda, &lambda_star);
+            assert!(
+                d1 < d0,
+                "{}: ‖λ−λ*‖ did not shrink ({d0} → {d1})",
+                algo.name()
+            );
+        }
+    }
+
+    #[test]
+    fn finetune_mode_never_touches_lambda() {
+        let mut rng = Rng::new(5);
+        let mut p = BiasedRegression::random(&mut rng, 30, 20, 5, 0.1);
+        let lambda0 = vec![0.3; 5];
+        let rep = train_single(
+            &small_cfg(Algo::None),
+            &mut p,
+            vec![0.0; 5],
+            lambda0.clone(),
+            BaseOpt::Sgd { momentum: 0.0 },
+            &RunOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(rep.final_lambda, lambda0);
+        assert!(rep.meta_loss.points.is_empty());
+    }
+}

@@ -1,0 +1,148 @@
+//! Two-domain synthetic corpus (stands in for the DAPT/TAPT task corpora of
+//! §4.2 and feeds the e2e LM driver).
+//!
+//! Text is generated from a probabilistic phrase grammar over ASCII bytes:
+//! each domain owns a vocabulary of words plus shared function words, so a
+//! byte-level LM has real structure to learn (loss drops well below the
+//! uniform-entropy floor) and the two domains are statistically separable —
+//! which is exactly what negative transfer in continued pretraining needs.
+
+use crate::data::{ClsDataset, LmDataset};
+use crate::util::rng::Rng;
+
+const DOMAIN_A_WORDS: &[&str] = &[
+    "protein", "kinase", "enzyme", "receptor", "binding", "pathway",
+    "cell", "gene", "molecule", "assay", "inhibitor", "substrate",
+];
+const DOMAIN_B_WORDS: &[&str] = &[
+    "market", "shares", "profit", "trading", "stock", "revenue",
+    "invest", "growth", "quarter", "earnings", "capital", "asset",
+];
+const FUNCTION_WORDS: &[&str] =
+    &["the", "of", "and", "with", "from", "into", "over", "under"];
+
+fn sample_sentence(rng: &mut Rng, domain: usize, words: usize) -> String {
+    let pool = if domain == 0 { DOMAIN_A_WORDS } else { DOMAIN_B_WORDS };
+    let mut s = String::new();
+    for i in 0..words {
+        if i > 0 {
+            s.push(' ');
+        }
+        // alternate content/function words like natural text
+        if i % 3 == 2 {
+            s.push_str(FUNCTION_WORDS[rng.below(FUNCTION_WORDS.len())]);
+        } else {
+            s.push_str(pool[rng.below(pool.len())]);
+        }
+    }
+    s.push('.');
+    s
+}
+
+/// Pack a string into a fixed-length byte-token sequence (pad with spaces).
+fn to_tokens(s: &str, seq_len: usize) -> Vec<i32> {
+    let mut t: Vec<i32> = s.bytes().take(seq_len).map(|b| b as i32).collect();
+    t.resize(seq_len, b' ' as i32);
+    t
+}
+
+/// LM pretraining pool: `frac_relevant` of sequences come from the target
+/// domain (0), the rest from the other domain (negative-transfer fodder).
+pub fn lm_pool(
+    n: usize,
+    seq_len: usize,
+    frac_relevant: f32,
+    seed: u64,
+) -> LmDataset {
+    let mut rng = Rng::new(seed ^ 0xC0A9);
+    let mut tokens = Vec::with_capacity(n * seq_len);
+    let mut relevant = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rel = rng.f32() < frac_relevant;
+        let dom = if rel { 0 } else { 1 };
+        let words = 4 + rng.below(6);
+        let s = sample_sentence(&mut rng, dom, words);
+        tokens.extend(to_tokens(&s, seq_len));
+        relevant.push(rel);
+    }
+    LmDataset { seq_len, tokens, relevant }
+}
+
+/// Downstream classification on the target domain: label = which quadrant
+/// of the domain vocabulary dominates the document (4-way, matching the
+/// artifact's n_classes).
+pub fn domain_cls(n: usize, seq_len: usize, n_classes: usize, seed: u64) -> ClsDataset {
+    let mut rng = Rng::new(seed ^ 0xD0C5);
+    let per = DOMAIN_A_WORDS.len() / n_classes;
+    let mut tokens = Vec::with_capacity(n * seq_len);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let y = rng.below(n_classes);
+        let mut s = String::new();
+        for i in 0..6 {
+            if i > 0 {
+                s.push(' ');
+            }
+            if i % 2 == 0 {
+                // class-indicative word from quadrant y
+                s.push_str(DOMAIN_A_WORDS[y * per + rng.below(per)]);
+            } else {
+                s.push_str(FUNCTION_WORDS[rng.below(FUNCTION_WORDS.len())]);
+            }
+        }
+        tokens.extend(to_tokens(&s, seq_len));
+        labels.push(y as i32);
+    }
+    ClsDataset { seq_len, tokens, labels: labels.clone(), true_labels: labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lm_pool_respects_relevance_fraction() {
+        let d = lm_pool(1000, 64, 0.3, 1);
+        let frac = d.relevant.iter().filter(|&&r| r).count() as f32 / 1000.0;
+        assert!((frac - 0.3).abs() < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn tokens_are_printable_ascii() {
+        let d = lm_pool(50, 64, 0.5, 2);
+        assert!(d.tokens.iter().all(|&t| (32..127).contains(&t)));
+    }
+
+    #[test]
+    fn domains_are_separable_by_token_stats() {
+        // mean byte value of domain words differs enough that a trivial
+        // statistic separates domains — sanity that the LM has signal.
+        let d = lm_pool(400, 64, 0.5, 3);
+        let mut rel_mean = 0.0f64;
+        let mut irr_mean = 0.0f64;
+        let (mut nr, mut ni) = (0, 0);
+        for i in 0..d.n() {
+            let seq = &d.tokens[i * 64..(i + 1) * 64];
+            let m: f64 =
+                seq.iter().map(|&t| t as f64).sum::<f64>() / 64.0;
+            if d.relevant[i] {
+                rel_mean += m;
+                nr += 1;
+            } else {
+                irr_mean += m;
+                ni += 1;
+            }
+        }
+        rel_mean /= nr as f64;
+        irr_mean /= ni as f64;
+        assert!((rel_mean - irr_mean).abs() > 0.5,
+            "domains look identical: {rel_mean} vs {irr_mean}");
+    }
+
+    #[test]
+    fn domain_cls_labels_in_range() {
+        let d = domain_cls(200, 32, 4, 4);
+        assert!(d.labels.iter().all(|&l| (0..4).contains(&l)));
+        assert_eq!(d.label_noise_rate(), 0.0);
+    }
+}

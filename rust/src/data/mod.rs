@@ -1,0 +1,199 @@
+//! Synthetic data substrates (DESIGN.md §4 substitutions for WRENCH,
+//! DAPT/TAPT corpora, ImageNet/CIFAR pruning sets, and Omniglot episodes —
+//! none of which are available on this offline CPU image).
+//!
+//! Everything is deterministic given a seed, and batch schedules are a pure
+//! function of the step index so θ⁺/θ⁻ re-evaluations and DDP shards always
+//! agree on the data.
+
+pub mod corpus;
+pub mod fewshot;
+pub mod pruning_data;
+pub mod wrench_sim;
+
+use crate::util::rng::Rng;
+
+/// A tokenized classification dataset.
+#[derive(Clone, Debug)]
+pub struct ClsDataset {
+    pub seq_len: usize,
+    /// (n · seq_len) row-major token ids.
+    pub tokens: Vec<i32>,
+    /// Labels used for training (possibly noisy).
+    pub labels: Vec<i32>,
+    /// Ground-truth labels when the generator knows them.
+    pub true_labels: Vec<i32>,
+}
+
+impl ClsDataset {
+    pub fn n(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Fraction of training labels that are wrong (noise diagnostics).
+    pub fn label_noise_rate(&self) -> f32 {
+        if self.labels.is_empty() {
+            return 0.0;
+        }
+        let wrong = self
+            .labels
+            .iter()
+            .zip(&self.true_labels)
+            .filter(|(a, b)| a != b)
+            .count();
+        wrong as f32 / self.labels.len() as f32
+    }
+
+    /// Deterministic batch for `step` over shard `shard`/`n_shards`:
+    /// shard s sees samples with index ≡ s (mod n_shards); within a shard,
+    /// batches stride sequentially and wrap.
+    pub fn batch(
+        &self,
+        step: usize,
+        batch: usize,
+        shard: usize,
+        n_shards: usize,
+    ) -> (Vec<i32>, Vec<i32>, Vec<i32>, Vec<usize>) {
+        assert!(shard < n_shards);
+        let shard_n = (self.n() + n_shards - 1 - shard) / n_shards;
+        assert!(shard_n > 0, "shard {shard}/{n_shards} is empty");
+        let mut toks = Vec::with_capacity(batch * self.seq_len);
+        let mut labs = Vec::with_capacity(batch);
+        let mut tlabs = Vec::with_capacity(batch);
+        let mut idxs = Vec::with_capacity(batch);
+        for j in 0..batch {
+            let within = (step * batch + j) % shard_n;
+            let idx = within * n_shards + shard;
+            idxs.push(idx);
+            toks.extend_from_slice(
+                &self.tokens[idx * self.seq_len..(idx + 1) * self.seq_len],
+            );
+            labs.push(self.labels[idx]);
+            tlabs.push(self.true_labels[idx]);
+        }
+        (toks, labs, tlabs, idxs)
+    }
+
+    /// Keep only the samples at `keep` indices (data pruning).
+    pub fn subset(&self, keep: &[usize]) -> ClsDataset {
+        let mut tokens = Vec::with_capacity(keep.len() * self.seq_len);
+        let mut labels = Vec::with_capacity(keep.len());
+        let mut true_labels = Vec::with_capacity(keep.len());
+        for &i in keep {
+            tokens.extend_from_slice(&self.tokens[i * self.seq_len..(i + 1) * self.seq_len]);
+            labels.push(self.labels[i]);
+            true_labels.push(self.true_labels[i]);
+        }
+        ClsDataset { seq_len: self.seq_len, tokens, labels, true_labels }
+    }
+}
+
+/// A language-modeling dataset: fixed-length token sequences.
+#[derive(Clone, Debug)]
+pub struct LmDataset {
+    pub seq_len: usize,
+    pub tokens: Vec<i32>,
+    /// Per-sequence relevance flag (1 = same domain as the target task) —
+    /// ground truth for evaluating learned reweighting in §4.2.
+    pub relevant: Vec<bool>,
+}
+
+impl LmDataset {
+    pub fn n(&self) -> usize {
+        self.relevant.len()
+    }
+
+    pub fn batch(&self, step: usize, batch: usize) -> (Vec<i32>, Vec<bool>, Vec<usize>) {
+        let mut toks = Vec::with_capacity(batch * self.seq_len);
+        let mut rel = Vec::with_capacity(batch);
+        let mut idxs = Vec::with_capacity(batch);
+        for j in 0..batch {
+            let idx = (step * batch + j) % self.n();
+            idxs.push(idx);
+            toks.extend_from_slice(
+                &self.tokens[idx * self.seq_len..(idx + 1) * self.seq_len],
+            );
+            rel.push(self.relevant[idx]);
+        }
+        (toks, rel, idxs)
+    }
+}
+
+/// Shared helper: fill a sequence with background tokens then plant
+/// `keywords` at random positions.
+pub(crate) fn compose_sequence(
+    rng: &mut Rng,
+    seq_len: usize,
+    vocab: usize,
+    background_lo: usize,
+    keywords: &[i32],
+) -> Vec<i32> {
+    let mut seq: Vec<i32> = (0..seq_len)
+        .map(|_| (background_lo + rng.below(vocab - background_lo)) as i32)
+        .collect();
+    for &kw in keywords {
+        let pos = rng.below(seq_len);
+        seq[pos] = kw;
+    }
+    seq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize, seq: usize) -> ClsDataset {
+        ClsDataset {
+            seq_len: seq,
+            tokens: (0..n * seq).map(|i| (i % 50) as i32).collect(),
+            labels: (0..n).map(|i| (i % 4) as i32).collect(),
+            true_labels: (0..n).map(|i| (i % 4) as i32).collect(),
+        }
+    }
+
+    #[test]
+    fn batch_is_deterministic_and_wraps() {
+        let d = toy(10, 4);
+        let (t1, l1, _, i1) = d.batch(3, 4, 0, 1);
+        let (t2, l2, _, i2) = d.batch(3, 4, 0, 1);
+        assert_eq!(t1, t2);
+        assert_eq!(l1, l2);
+        assert_eq!(i1, i2);
+        // wraps past n=10
+        let (_, _, _, idx) = d.batch(2, 4, 0, 1);
+        assert!(idx.iter().all(|&i| i < 10));
+    }
+
+    #[test]
+    fn shards_are_disjoint_and_cover() {
+        let d = toy(11, 2);
+        let mut seen = std::collections::BTreeSet::new();
+        for shard in 0..3 {
+            // a full pass over the shard
+            let shard_n = (11 + 3 - 1 - shard) / 3;
+            for step in 0..shard_n {
+                let (_, _, _, idx) = d.batch(step, 1, shard, 3);
+                assert_eq!(idx[0] % 3, shard);
+                seen.insert(idx[0]);
+            }
+        }
+        assert_eq!(seen.len(), 11);
+    }
+
+    #[test]
+    fn subset_selects() {
+        let d = toy(6, 3);
+        let s = d.subset(&[1, 4]);
+        assert_eq!(s.n(), 2);
+        assert_eq!(s.labels, vec![1, 0]);
+        assert_eq!(&s.tokens[0..3], &d.tokens[3..6]);
+    }
+
+    #[test]
+    fn noise_rate_counts_mismatches() {
+        let mut d = toy(8, 2);
+        d.labels[0] = 3;
+        d.labels[5] = 0;
+        assert!((d.label_noise_rate() - 0.25).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,193 @@
+//! Data-pruning workload (stands in for ImageNet-1k / CIFAR-10 in §4.3).
+//!
+//! The pruning claim is about per-sample *statistics*, not pixels: a good
+//! pruning metric should (a) drop semantically redundant samples first and
+//! (b) drop label-noise samples even at low pruning ratios (the paper's
+//! surprising accuracy *gain* at ratio 0.1–0.2 on ImageNet). So the
+//! generator plants both pathologies with ground-truth flags:
+//!
+//!  * `duplicate_of[i] = Some(j)` — sample i is a near-copy of j;
+//!  * label noise — a fraction of samples get a wrong label;
+//!
+//! letting benches verify *what* a pruning method removed, not just final
+//! accuracy.
+
+use crate::data::{compose_sequence, ClsDataset};
+use crate::util::rng::Rng;
+
+const KEYWORD_SPACE: usize = 64;
+
+#[derive(Clone, Debug)]
+pub struct PruningSet {
+    pub data: ClsDataset,
+    pub duplicate_of: Vec<Option<usize>>,
+    pub noisy: Vec<bool>,
+    pub test: ClsDataset,
+}
+
+pub struct PruningSpec {
+    pub n_train: usize,
+    pub n_test: usize,
+    pub n_classes: usize,
+    pub seq_len: usize,
+    /// Fraction of train that are near-duplicates of earlier samples.
+    pub dup_frac: f32,
+    /// Fraction of train with corrupted labels.
+    pub noise_frac: f32,
+}
+
+impl Default for PruningSpec {
+    fn default() -> Self {
+        PruningSpec {
+            n_train: 2000,
+            n_test: 512,
+            n_classes: 4,
+            seq_len: 32,
+            dup_frac: 0.15,
+            noise_frac: 0.08,
+        }
+    }
+}
+
+fn fresh_sample(
+    rng: &mut Rng,
+    spec: &PruningSpec,
+    y: usize,
+) -> Vec<i32> {
+    let per = KEYWORD_SPACE / spec.n_classes;
+    let kws: Vec<i32> = (0..3)
+        .map(|_| (y * per + rng.below(per)) as i32)
+        .collect();
+    compose_sequence(rng, spec.seq_len, 256, KEYWORD_SPACE, &kws)
+}
+
+pub fn generate(spec: &PruningSpec, seed: u64) -> PruningSet {
+    let mut rng = Rng::new(seed ^ 0x9471);
+    let mut tokens = Vec::with_capacity(spec.n_train * spec.seq_len);
+    let mut labels = Vec::with_capacity(spec.n_train);
+    let mut true_labels = Vec::with_capacity(spec.n_train);
+    let mut duplicate_of = vec![None; spec.n_train];
+    let mut noisy = vec![false; spec.n_train];
+
+    for i in 0..spec.n_train {
+        let make_dup = i > 10 && rng.f32() < spec.dup_frac;
+        let (seq, y) = if make_dup {
+            let j = rng.below(i);
+            duplicate_of[i] = Some(j);
+            // near-copy: clone j's tokens, jitter two background positions
+            let mut seq =
+                tokens[j * spec.seq_len..(j + 1) * spec.seq_len].to_vec();
+            for _ in 0..2 {
+                let pos = rng.below(spec.seq_len);
+                if seq[pos] >= KEYWORD_SPACE as i32 {
+                    seq[pos] =
+                        (KEYWORD_SPACE + rng.below(256 - KEYWORD_SPACE)) as i32;
+                }
+            }
+            (seq, true_labels[j] as usize)
+        } else {
+            let y = rng.below(spec.n_classes);
+            (fresh_sample(&mut rng, spec, y), y)
+        };
+        tokens.extend(seq);
+        true_labels.push(y as i32);
+        let label = if rng.f32() < spec.noise_frac {
+            noisy[i] = true;
+            ((y + 1 + rng.below(spec.n_classes - 1)) % spec.n_classes) as i32
+        } else {
+            y as i32
+        };
+        labels.push(label);
+    }
+
+    let mut t_tokens = Vec::with_capacity(spec.n_test * spec.seq_len);
+    let mut t_labels = Vec::with_capacity(spec.n_test);
+    for _ in 0..spec.n_test {
+        let y = rng.below(spec.n_classes);
+        t_tokens.extend(fresh_sample(&mut rng, spec, y));
+        t_labels.push(y as i32);
+    }
+
+    PruningSet {
+        data: ClsDataset {
+            seq_len: spec.seq_len,
+            tokens,
+            labels,
+            true_labels,
+        },
+        duplicate_of,
+        noisy,
+        test: ClsDataset {
+            seq_len: spec.seq_len,
+            tokens: t_tokens,
+            labels: t_labels.clone(),
+            true_labels: t_labels,
+        },
+    }
+}
+
+impl PruningSet {
+    /// Fraction of pruned samples that were duplicates or noisy (the
+    /// "did the metric find the junk" score).
+    pub fn junk_recall(&self, pruned: &[usize]) -> f32 {
+        if pruned.is_empty() {
+            return 0.0;
+        }
+        let hits = pruned
+            .iter()
+            .filter(|&&i| self.duplicate_of[i].is_some() || self.noisy[i])
+            .count();
+        hits as f32 / pruned.len() as f32
+    }
+
+    pub fn junk_frac(&self) -> f32 {
+        let junk = (0..self.data.n())
+            .filter(|&i| self.duplicate_of[i].is_some() || self.noisy[i])
+            .count();
+        junk as f32 / self.data.n() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planted_fractions_are_respected() {
+        let set = generate(&PruningSpec::default(), 1);
+        let dup_frac = set
+            .duplicate_of
+            .iter()
+            .filter(|d| d.is_some())
+            .count() as f32
+            / set.data.n() as f32;
+        let noise_frac =
+            set.noisy.iter().filter(|&&b| b).count() as f32 / set.data.n() as f32;
+        assert!((dup_frac - 0.15).abs() < 0.04, "dup={dup_frac}");
+        assert!((noise_frac - 0.08).abs() < 0.03, "noise={noise_frac}");
+    }
+
+    #[test]
+    fn duplicates_share_most_tokens() {
+        let set = generate(&PruningSpec::default(), 2);
+        let s = set.data.seq_len;
+        for (i, d) in set.duplicate_of.iter().enumerate() {
+            if let Some(j) = d {
+                let a = &set.data.tokens[i * s..(i + 1) * s];
+                let b = &set.data.tokens[j * s..(j + 1) * s];
+                let same = a.iter().zip(b).filter(|(x, y)| x == y).count();
+                assert!(same >= s - 2, "dup {i}->{j} shares only {same}/{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn junk_recall_perfect_for_oracle() {
+        let set = generate(&PruningSpec::default(), 3);
+        let junk: Vec<usize> = (0..set.data.n())
+            .filter(|&i| set.duplicate_of[i].is_some() || set.noisy[i])
+            .collect();
+        assert_eq!(set.junk_recall(&junk), 1.0);
+        assert!(set.junk_frac() > 0.1);
+    }
+}

@@ -1,0 +1,29 @@
+//! # SAMA — Making Scalable Meta Learning Practical (NeurIPS 2023)
+//!
+//! Production-style reproduction of the SAMA meta-learning algorithm and
+//! system as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: bilevel training loop, simulated
+//!   multi-worker DDP with the paper's communication strategy, all
+//!   meta-gradient algorithms (SAMA + baselines), data substrates, apps, and
+//!   metrics.
+//! * **L2 (python/compile/model.py)** — JAX model + losses, AOT-lowered to
+//!   HLO text once at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the element-wise
+//!   SAMA core and flash-style attention.
+//!
+//! Python never runs on the training path: the Rust binary executes the
+//! AOT artifacts through PJRT (`xla` crate).
+
+pub mod algos;
+pub mod apps;
+pub mod bilevel;
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

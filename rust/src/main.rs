@@ -1,0 +1,187 @@
+//! `sama` — launcher CLI for the SAMA reproduction.
+//!
+//! ```text
+//! sama info                                  # artifact/manifest inventory
+//! sama train [key=value ...]                 # §4.1 WRENCH run
+//!     e.g. sama train dataset=agnews algo=sama workers=2 steps=300
+//! sama pretrain method=sama [key=value ...]  # §4.2 continued pretraining
+//! sama prune metric=sama ratio=0.3 [...]     # §4.3 data pruning
+//! sama fewshot model=fs_w64 [...]            # Appendix D episode run
+//! ```
+//!
+//! Overrides are `key=value` pairs applied onto [`TrainConfig`]; unknown
+//! keys land in `extra` (dataset knobs). `--config path.json` loads a JSON
+//! config first.
+
+use anyhow::{bail, Context, Result};
+
+use sama::apps::{fewshot, pretraining, pruning, wrench};
+use sama::config::TrainConfig;
+use sama::data::pruning_data::{self, PruningSpec};
+use sama::info;
+use sama::runtime::{Manifest, Runtime};
+
+fn parse_cfg(args: &[String]) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default();
+    let mut overrides = Vec::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if a == "--config" {
+            let path = it.next().context("--config needs a path")?;
+            cfg = TrainConfig::from_json_file(std::path::Path::new(path))?;
+        } else {
+            overrides.push(a.clone());
+        }
+    }
+    cfg.apply_overrides(&overrides)?;
+    Ok(cfg)
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = Runtime::artifact_dir();
+    let m = Manifest::load(&dir)?;
+    println!("artifact dir: {dir:?}");
+    for (name, c) in &m.configs {
+        println!(
+            "config {name}: d_model={} layers={} seq={} batch={} \
+             n_theta={} n_mwn={} artifacts={}",
+            c.model.d_model,
+            c.model.n_layers,
+            c.model.seq_len,
+            c.model.batch,
+            c.n_theta,
+            c.n_mwn,
+            c.artifacts.len()
+        );
+        for (aname, a) in &c.artifacts {
+            println!("   {aname}: {} in / {} out ({})",
+                a.inputs.len(), a.outputs.len(), a.file);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let dataset = cfg
+        .extra
+        .get("dataset")
+        .cloned()
+        .unwrap_or_else(|| "agnews".into());
+    info!(
+        "wrench train: dataset={dataset} algo={} workers={} steps={} unroll={}",
+        cfg.algo.name(),
+        cfg.workers,
+        cfg.steps,
+        cfg.unroll
+    );
+    let out = wrench::run(&cfg, &dataset)?;
+    println!(
+        "dataset={dataset} algo={} | weak-label acc {:.4} | test acc {:.4} | \
+         throughput {:.1} samples/s | meta-loss tail {:.4} | \
+         w(clean) {:.3} vs w(noisy) {:.3}",
+        cfg.algo.name(),
+        out.weak_label_accuracy,
+        out.test_accuracy,
+        out.report.throughput(),
+        out.report.meta_loss.tail_mean(5),
+        out.mean_weight_clean,
+        out.mean_weight_noisy
+    );
+    Ok(())
+}
+
+fn cmd_pretrain(args: &[String]) -> Result<()> {
+    let mut cfg = parse_cfg(args)?;
+    if cfg.model == "cls_tiny" {
+        cfg.model = "lm_small".into(); // §4.2 runs on the LM config
+    }
+    let method = match cfg.extra.get("method").map(|s| s.as_str()) {
+        Some("baseline") | None => pretraining::Method::Baseline,
+        Some("dapt") => pretraining::Method::Dapt,
+        Some("tartan_mt") | Some("tartan") => pretraining::Method::TartanMt,
+        Some("sama") => pretraining::Method::Sama,
+        Some(other) => bail!("unknown method '{other}'"),
+    };
+    let task_seed = cfg.extra_or::<u64>("task_seed", 100);
+    let out = pretraining::run(&cfg, method, task_seed)?;
+    print!(
+        "{}: downstream test acc {:.4}",
+        method.name(),
+        out.test_accuracy
+    );
+    if let Some((rel, irr)) = out.relevance {
+        print!(" | mean aux weight: relevant {rel:.3} vs irrelevant {irr:.3}");
+    }
+    println!();
+    Ok(())
+}
+
+fn cmd_prune(args: &[String]) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let ratio = cfg.extra_or::<f32>("ratio", 0.3);
+    let metric = match cfg.extra.get("metric").map(|s| s.as_str()) {
+        Some("sama") | None => pruning::PruneMetric::SamaMwn,
+        Some("el2n") => pruning::PruneMetric::El2n,
+        Some("grand") => pruning::PruneMetric::GraNd,
+        Some("forgetting") => pruning::PruneMetric::Forgetting,
+        Some("margin") => pruning::PruneMetric::Margin,
+        Some("random") => pruning::PruneMetric::Random,
+        Some(other) => bail!("unknown metric '{other}'"),
+    };
+    let set = pruning_data::generate(&PruningSpec::default(), cfg.seed);
+    let (scores, secs) = pruning::scores(metric, &cfg, &set)?;
+    let keep = pruning::prune(&scores, ratio);
+    let pruned: Vec<usize> =
+        (0..set.data.n()).filter(|i| !keep.contains(i)).collect();
+    let acc = pruning::retrain_and_eval(&cfg, &set, &keep)?;
+    println!(
+        "{} ratio={ratio}: test acc {:.4} | junk recall {:.3} (junk frac {:.3}) \
+         | search {secs:.1}s",
+        metric.name(),
+        acc,
+        set.junk_recall(&pruned),
+        set.junk_frac()
+    );
+    Ok(())
+}
+
+fn cmd_fewshot(args: &[String]) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let fcfg = fewshot::FewShotConfig {
+        model: if cfg.model.starts_with("fs_") {
+            cfg.model.clone()
+        } else {
+            "fs_w64".into()
+        },
+        meta_iters: cfg.extra_or("meta_iters", 60),
+        eval_episodes: cfg.extra_or("eval_episodes", 20),
+        seed: cfg.seed,
+        ..fewshot::FewShotConfig::default()
+    };
+    let out = fewshot::run(&fcfg)?;
+    println!(
+        "width={} (n={}): query acc {:.4} (pre-adapt {:.4})",
+        out.width, out.n_params, out.query_accuracy, out.pre_adapt_accuracy
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("info") => cmd_info(),
+        Some("train") => cmd_train(&args[1..]),
+        Some("pretrain") => cmd_pretrain(&args[1..]),
+        Some("prune") => cmd_prune(&args[1..]),
+        Some("fewshot") => cmd_fewshot(&args[1..]),
+        Some("help") | None => {
+            println!(
+                "usage: sama <info|train|pretrain|prune|fewshot> [key=value ...]\n\
+                 see module docs in rust/src/main.rs"
+            );
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}' (try `sama help`)"),
+    }
+}

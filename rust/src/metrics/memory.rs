@@ -1,0 +1,195 @@
+//! Analytic GPU-memory cost model — the substitution for `nvidia-smi` on
+//! this CPU-only image (DESIGN.md §3).
+//!
+//! The model counts the live tensors each algorithm must hold at its peak,
+//! using standard transformer activation accounting. It is *calibrated*
+//! against the paper's Table 2 (BERT-base, global batch 48, 1 GPU):
+//! the point of Fig. 1/Tables 2, 8, 9 is the *ratios* between algorithms
+//! and the scaling trends in model size / worker count, and those fall out
+//! of the structure (what must be kept alive), not the constants.
+//!
+//! Peak-memory structure per algorithm:
+//!
+//! | algo | weights+grads+opt | activations | extra (param-sized) |
+//! |---|---|---|---|
+//! | finetune  | 4n+4n+8n = 16n | A | — |
+//! | ITD       | 16n | A·K (full unrolled path) | K·θ copies |
+//! | CG        | 16n | 2A (double-backward) | ≈8n (grad graph + q,r,p,Hp) |
+//! | Neumann   | 16n | 2A | ≈6n (grad graph + series state) |
+//! | T1–T2     | 16n | A | 2n (θ copies) |
+//! | SAMA-NA   | 16n | A | 2n (θ_pert buffer + v) |
+//! | SAMA      | 16n | A | 2.5n (+ fused adaptation pass) |
+//!
+//! The Fig. 1-right claim is about the *absolute slope* dGiB/dparams: the
+//! second-order methods carry more param-proportional state, so their
+//! curves steepen fastest; SAMA's stays closest to plain finetuning.
+//!
+//! DDP over W workers splits the per-worker batch (activations ∝ 1/W)
+//! while replicating parameters/optimizer state — so memory/worker falls
+//! sub-linearly, exactly the Table 2 trend.
+
+use crate::config::Algo;
+
+/// Architecture description for the cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct ArchSpec {
+    pub n_params: u64,
+    pub n_layers: u64,
+    pub d_model: u64,
+    pub seq_len: u64,
+    pub mlp_ratio: u64,
+    /// Flash-style attention ⇒ no S² score materialization.
+    pub flash_attention: bool,
+}
+
+impl ArchSpec {
+    /// BERT-base, the paper's Table 1/2 base learner.
+    pub fn bert_base() -> ArchSpec {
+        ArchSpec {
+            n_params: 110_000_000,
+            n_layers: 12,
+            d_model: 768,
+            seq_len: 128,
+            mlp_ratio: 4,
+            flash_attention: false,
+        }
+    }
+
+    /// RoBERTa-style family at a given width multiple (Fig. 1 right).
+    pub fn roberta_scaled(width_mult: f64) -> ArchSpec {
+        let d = (768.0 * width_mult) as u64;
+        // params ≈ 12 layers × 12·d² + embeddings 50k·d
+        let n = 12 * 12 * d * d + 50_000 * d;
+        ArchSpec {
+            n_params: n,
+            n_layers: 12,
+            d_model: d,
+            seq_len: 256,
+            mlp_ratio: 4,
+            flash_attention: false,
+        }
+    }
+
+    /// Our artifact configs (for measured-vs-model sanity checks).
+    pub fn from_manifest(m: &crate::runtime::manifest::ModelDims, n_params: usize) -> ArchSpec {
+        ArchSpec {
+            n_params: n_params as u64,
+            n_layers: m.n_layers as u64,
+            d_model: m.d_model as u64,
+            seq_len: m.seq_len as u64,
+            mlp_ratio: m.mlp_ratio as u64,
+            flash_attention: true,
+        }
+    }
+
+    /// Activation bytes for a forward+backward over `batch` samples.
+    /// Per token per layer: qkv+attn-out (4d) + residuals/LN (4d) + MLP
+    /// hidden (mlp·d) + MLP out (d) floats; plus S·heads score tile if not
+    /// flash (heads·S ≈ S·d/64-ish — we fold heads into d/64).
+    pub fn activation_bytes(&self, batch: u64) -> u64 {
+        let per_token_per_layer =
+            (9 + self.mlp_ratio) * self.d_model + if self.flash_attention {
+                0
+            } else {
+                self.seq_len * (self.d_model / 64).max(1)
+            };
+        4 * batch * self.seq_len * self.n_layers * per_token_per_layer
+    }
+}
+
+/// Peak bytes per worker for one training step of `algo`.
+pub fn peak_bytes(
+    algo: Algo,
+    arch: &ArchSpec,
+    global_batch: u64,
+    workers: u64,
+    unroll: u64,
+) -> u64 {
+    let n = arch.n_params * 4; // bytes of one parameter-sized tensor
+    let per_worker_batch = (global_batch + workers - 1) / workers;
+    let act = arch.activation_bytes(per_worker_batch);
+    let static_mem = 4 * n; // weights + grads + Adam(m, v)
+    match algo {
+        Algo::None => static_mem + act,
+        Algo::Itd => static_mem + act * unroll + n * unroll,
+        Algo::Cg => static_mem + 2 * act + 8 * n,
+        Algo::Neumann => static_mem + 2 * act + 6 * n,
+        Algo::T1T2 => static_mem + act + 2 * n,
+        Algo::SamaNa => static_mem + act + 2 * n,
+        Algo::Sama => static_mem + act + 5 * n / 2,
+    }
+}
+
+pub fn gib(bytes: u64) -> f64 {
+    bytes as f64 / (1u64 << 30) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const B: u64 = 48;
+
+    #[test]
+    fn ordering_matches_paper_table2() {
+        // Table 2 (AGNews, BERT-base, batch 48): Neumann 26.0, CG 28.4,
+        // SAMA-NA 13.7, SAMA 14.3 — i.e. CG > Neumann > SAMA ≳ SAMA-NA.
+        let a = ArchSpec::bert_base();
+        let cg = peak_bytes(Algo::Cg, &a, B, 1, 10);
+        let ne = peak_bytes(Algo::Neumann, &a, B, 1, 10);
+        let sama = peak_bytes(Algo::Sama, &a, B, 1, 10);
+        let na = peak_bytes(Algo::SamaNa, &a, B, 1, 10);
+        assert!(cg > ne, "CG {cg} vs Neumann {ne}");
+        assert!(ne > sama, "Neumann {ne} vs SAMA {sama}");
+        assert!(sama > na, "SAMA {sama} vs SAMA-NA {na}");
+        // paper ratio Neumann/SAMA ≈ 26.0/14.3 ≈ 1.8; accept 1.3–2.5
+        let ratio = ne as f64 / sama as f64;
+        assert!((1.3..2.5).contains(&ratio), "Neumann/SAMA ratio = {ratio}");
+        // adaptation cost is marginal: SAMA within 10% of SAMA-NA (paper:
+        // 14.3 vs 13.7 ≈ +4%)
+        let ad = sama as f64 / na as f64;
+        assert!(ad < 1.10, "SAMA/SAMA-NA = {ad}");
+    }
+
+    #[test]
+    fn ddp_shrinks_per_worker_memory() {
+        // Table 2: SAMA 14.3 → 10.4 (2 GPUs) → 7.4 (4 GPUs)
+        let a = ArchSpec::bert_base();
+        let m1 = peak_bytes(Algo::Sama, &a, B, 1, 10);
+        let m2 = peak_bytes(Algo::Sama, &a, B, 2, 10);
+        let m4 = peak_bytes(Algo::Sama, &a, B, 4, 10);
+        assert!(m2 < m1 && m4 < m2);
+        // sub-linear: params replicate, activations split
+        let r2 = m1 as f64 / m2 as f64;
+        assert!((1.2..2.0).contains(&r2), "1→2 worker ratio {r2}");
+    }
+
+    #[test]
+    fn itd_memory_grows_with_unroll() {
+        let a = ArchSpec::bert_base();
+        let k2 = peak_bytes(Algo::Itd, &a, B, 1, 2);
+        let k10 = peak_bytes(Algo::Itd, &a, B, 1, 10);
+        assert!(k10 > 3 * k2 / 2, "ITD must scale with unroll: {k2} vs {k10}");
+        // and dominate everything else at K=10 (Tables 8/9: ITD worst)
+        assert!(k10 > peak_bytes(Algo::Cg, &a, B, 1, 10));
+    }
+
+    #[test]
+    fn sama_scales_most_gently_with_model_size() {
+        // Fig. 1 right: dGiB/dparams — SAMA's absolute slope is below the
+        // second-order methods' (and ITD's), close to plain finetuning.
+        let small = ArchSpec::roberta_scaled(1.0);
+        let big = ArchSpec::roberta_scaled(2.0);
+        let dp = (big.n_params - small.n_params) as f64;
+        let slope = |algo| {
+            (peak_bytes(algo, &big, 16, 1, 10) as f64
+                - peak_bytes(algo, &small, 16, 1, 10) as f64)
+                / dp
+        };
+        assert!(slope(Algo::Sama) < slope(Algo::Cg));
+        assert!(slope(Algo::Sama) < slope(Algo::Neumann));
+        assert!(slope(Algo::Sama) < slope(Algo::Itd));
+        let sama_gib = gib(peak_bytes(Algo::Sama, &big, 16, 1, 10));
+        assert!(sama_gib > 1.0, "sanity: {sama_gib} GiB");
+    }
+}

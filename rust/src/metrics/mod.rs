@@ -1,0 +1,106 @@
+//! Metrics: throughput meter, the analytic GPU-memory cost model behind the
+//! paper's Fig. 1 / Tables 2, 8, 9 reproductions, and markdown/CSV report
+//! tables shared by the benches.
+
+pub mod memory;
+pub mod report;
+
+use std::time::Instant;
+
+/// Samples/second meter over a training window.
+#[derive(Debug)]
+pub struct ThroughputMeter {
+    start: Instant,
+    samples: u64,
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputMeter {
+    pub fn new() -> Self {
+        ThroughputMeter { start: Instant::now(), samples: 0 }
+    }
+
+    pub fn add_samples(&mut self, n: usize) {
+        self.samples += n as u64;
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn samples_per_sec(&self) -> f64 {
+        self.samples as f64 / self.elapsed_secs().max(1e-9)
+    }
+}
+
+/// Simple scalar time-series (loss curves etc.) with CSV export.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Series {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, y)| y)
+    }
+
+    /// Mean of the final `k` values (smoothed endpoint).
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
+        let tail = &self.points[self.points.len().saturating_sub(k)..];
+        tail.iter().map(|&(_, y)| y).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = format!("step,{}\n", self.name);
+        for (x, y) in &self.points {
+            s.push_str(&format!("{x},{y}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_counts() {
+        let mut m = ThroughputMeter::new();
+        m.add_samples(10);
+        m.add_samples(5);
+        assert_eq!(m.samples(), 15);
+        assert!(m.samples_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn series_tail_mean() {
+        let mut s = Series::new("loss");
+        for i in 0..10 {
+            s.push(i as f64, i as f64);
+        }
+        assert_eq!(s.tail_mean(2), 8.5);
+        assert_eq!(s.last(), Some(9.0));
+        assert!(s.to_csv().starts_with("step,loss\n0,0\n"));
+    }
+}

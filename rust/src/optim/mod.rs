@@ -1,0 +1,260 @@
+//! Optimizers (Rust mirrors of the L1 fused kernels) and the **algorithmic
+//! adaptation diagonals** ∂u/∂g at the heart of SAMA (§3.2, Appendix C).
+//!
+//! Two implementations coexist by design:
+//!  * the AOT `adam_step_*` / `sgd_step_theta` artifacts (Pallas kernels) run
+//!    the hot path for θ/λ updates;
+//!  * these Rust versions update small states (λ in analytic problems,
+//!    biased regression, tests) and cross-check the kernels bit-for-bit-ish
+//!    in the integration suite.
+
+use crate::tensor::vecops;
+
+pub const ADAM_BETA1: f32 = 0.9;
+pub const ADAM_BETA2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// Element-wise optimizer interface: update in place, expose the adaptation
+/// diagonal ∂u/∂g evaluated at the current state + gradient.
+pub trait Optimizer {
+    fn step(&mut self, theta: &mut [f32], grad: &[f32]);
+    /// SAMA's adaptation diagonal d with v = d ⊙ g_direct (Eq. 4).
+    /// Written into `out`; `grad` is the *base* gradient at θ*.
+    fn adapt_diag(&self, grad: &[f32], out: &mut [f32]);
+    fn lr(&self) -> f32;
+    fn name(&self) -> &'static str;
+}
+
+/// Adam (bias-corrected) with decoupled weight decay.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub t: u64,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl Adam {
+    pub fn new(n: usize, lr: f32) -> Adam {
+        Adam {
+            lr,
+            beta1: ADAM_BETA1,
+            beta2: ADAM_BETA2,
+            eps: ADAM_EPS,
+            weight_decay: 0.0,
+            t: 0,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    pub fn with_weight_decay(mut self, wd: f32) -> Adam {
+        self.weight_decay = wd;
+        self
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, theta: &mut [f32], grad: &[f32]) {
+        assert_eq!(theta.len(), grad.len());
+        assert_eq!(theta.len(), self.m.len());
+        self.t += 1;
+        let c1 = 1.0 - self.beta1.powi(self.t as i32);
+        let c2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..theta.len() {
+            let g = grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let m_hat = self.m[i] / c1;
+            let v_hat = self.v[i] / c2;
+            theta[i] -= self.lr * m_hat / (v_hat.sqrt() + self.eps)
+                + self.lr * self.weight_decay * theta[i];
+        }
+    }
+
+    /// Closed-form ∂u/∂g for Adam (Appendix C; exact derivative incl. bias
+    /// correction — matches `kernels/ref.py::adam_adapt_ref`).
+    fn adapt_diag(&self, grad: &[f32], out: &mut [f32]) {
+        let t = (self.t + 1) as i32; // diag at the *upcoming* step
+        let c1 = 1.0 - self.beta1.powi(t);
+        let c2 = 1.0 - self.beta2.powi(t);
+        const GUARD: f32 = 1e-12;
+        for i in 0..grad.len() {
+            let g = grad[i];
+            let m_new = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            let v_new = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let s = (v_new / c2 + GUARD).sqrt();
+            let d = s + self.eps;
+            let num = (1.0 - self.beta1) * c2 * s * d - (1.0 - self.beta2) * m_new * g;
+            let den = c2 * s * d * d;
+            out[i] = (self.lr / c1) * num / den;
+        }
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+/// SGD with momentum + coupled weight decay (PyTorch semantics).
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub buf: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(n: usize, lr: f32, momentum: f32, weight_decay: f32) -> Sgd {
+        Sgd { lr, momentum, weight_decay, buf: vec![0.0; n] }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, theta: &mut [f32], grad: &[f32]) {
+        for i in 0..theta.len() {
+            let g = grad[i] + self.weight_decay * theta[i];
+            self.buf[i] = self.momentum * self.buf[i] + g;
+            theta[i] -= self.lr * self.buf[i];
+        }
+    }
+
+    /// ∂u/∂g = lr·I for SGD: the identity case of algorithmic adaptation —
+    /// this is exactly why SGD-assuming meta-gradient methods break under
+    /// Adam (§3.2).
+    fn adapt_diag(&self, grad: &[f32], out: &mut [f32]) {
+        let _ = grad;
+        out.fill(self.lr);
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// Numerical check helper: finite-difference du/dg for a single coordinate.
+/// Used by tests to pin the closed forms.
+pub fn fd_adapt_diag_adam(
+    m: f32,
+    v: f32,
+    g: f32,
+    t: u64,
+    lr: f32,
+    h: f32,
+) -> f32 {
+    let u = |gg: f32| -> f32 {
+        let b1 = ADAM_BETA1;
+        let b2 = ADAM_BETA2;
+        let c1 = 1.0 - b1.powi(t as i32);
+        let c2 = 1.0 - b2.powi(t as i32);
+        let m_new = b1 * m + (1.0 - b1) * gg;
+        let v_new = b2 * v + (1.0 - b2) * gg * gg;
+        lr * (m_new / c1) / ((v_new / c2).sqrt() + ADAM_EPS)
+    };
+    (u(g + h) - u(g - h)) / (2.0 * h)
+}
+
+/// Compute v = adapt_diag ⊙ g_direct into `out` (the SAMA perturbation
+/// direction, before ε-normalization).
+pub fn perturbation_direction(
+    opt: &dyn Optimizer,
+    g_base: &[f32],
+    g_direct: &[f32],
+    out: &mut [f32],
+) {
+    opt.adapt_diag(g_base, out);
+    for i in 0..out.len() {
+        out[i] *= g_direct[i];
+    }
+}
+
+/// ε = α / ‖v‖₂ (Eq. 5).
+pub fn sama_epsilon(alpha: f32, v: &[f32]) -> f32 {
+    alpha / vecops::norm2(v).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn adam_decreases_quadratic() {
+        // minimize f(x) = ‖x‖² — Adam should make steady progress.
+        let mut theta = vec![1.0f32; 8];
+        let mut opt = Adam::new(8, 0.05);
+        for _ in 0..400 {
+            let grad: Vec<f32> = theta.iter().map(|x| 2.0 * x).collect();
+            opt.step(&mut theta, &grad);
+        }
+        assert!(vecops::norm2(&theta) < 1e-2, "‖θ‖={}", vecops::norm2(&theta));
+    }
+
+    #[test]
+    fn sgd_momentum_matches_manual() {
+        let mut theta = vec![1.0f32, -2.0];
+        let mut opt = Sgd::new(2, 0.1, 0.9, 0.0);
+        opt.step(&mut theta, &[0.5, 0.5]);
+        assert!((theta[0] - (1.0 - 0.05)).abs() < 1e-6);
+        opt.step(&mut theta, &[0.5, 0.5]);
+        // buf = 0.9*0.5 + 0.5 = 0.95 → θ -= 0.095
+        assert!((theta[0] - (0.95 - 0.095)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_adapt_diag_matches_finite_difference() {
+        check(
+            "adam ∂u/∂g closed form vs FD",
+            23,
+            64,
+            |r: &mut Rng| {
+                let m = r.normal() * 0.1;
+                let v = (r.normal() * 0.1).abs() + 1e-3;
+                let g = r.normal() * 0.5 + 0.1;
+                (m, v, g)
+            },
+            |&(m, v, g)| {
+                let mut opt = Adam::new(1, 1e-3);
+                opt.m[0] = m;
+                opt.v[0] = v;
+                opt.t = 6; // diag evaluated at t+1 = 7
+                let mut out = [0.0f32];
+                opt.adapt_diag(&[g], &mut out);
+                let fd = fd_adapt_diag_adam(m, v, g, 7, 1e-3, 1e-4);
+                let tol = 1e-5 + 0.02 * fd.abs();
+                if (out[0] - fd).abs() < tol {
+                    Ok(())
+                } else {
+                    Err(format!("closed={} fd={fd}", out[0]))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn sgd_adapt_is_lr_identity() {
+        let opt = Sgd::new(4, 0.25, 0.9, 1e-4);
+        let mut out = vec![0.0; 4];
+        opt.adapt_diag(&[1.0, -1.0, 3.0, 0.0], &mut out);
+        assert_eq!(out, vec![0.25; 4]);
+    }
+
+    #[test]
+    fn epsilon_scales_inverse_to_norm() {
+        let v = vec![3.0f32, 4.0]; // ‖v‖ = 5
+        assert!((sama_epsilon(1.0, &v) - 0.2).abs() < 1e-7);
+        assert!((sama_epsilon(0.5, &v) - 0.1).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,247 @@
+//! `artifacts/manifest.json` schema — written by `python/compile/aot.py`,
+//! parsed with the in-tree JSON codec. Describes, per model config, the
+//! flat parameter layouts (for Rust-side init) and every artifact's input
+//! shapes/dtypes and output arity.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayoutEntry {
+    pub path: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    /// "normal" | "zeros" | "ones"
+    pub init: String,
+    pub std: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub n_classes: usize,
+    pub mlp_ratio: usize,
+    pub batch: usize,
+    pub unroll: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ConfigBlock {
+    pub model: ModelDims,
+    pub n_theta: usize,
+    pub n_mwn: usize,
+    pub n_mwn_corr: usize,
+    pub layout_theta: Vec<LayoutEntry>,
+    pub layout_mwn: Vec<LayoutEntry>,
+    pub layout_mwn_corr: Vec<LayoutEntry>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ConfigBlock>,
+}
+
+fn parse_tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .req("shape")?
+        .usize_arr()
+        .context("bad shape array")?;
+    let dtype = match j.req("dtype")?.as_str() {
+        Some("f32") => DType::F32,
+        Some("i32") => DType::I32,
+        other => bail!("unknown dtype {other:?}"),
+    };
+    Ok(TensorSpec { shape, dtype })
+}
+
+fn parse_layout(j: &Json) -> Result<Vec<LayoutEntry>> {
+    let arr = j.as_arr().context("layout must be an array")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for e in arr {
+        out.push(LayoutEntry {
+            path: e.req("path")?.as_str().context("path")?.to_string(),
+            shape: e.req("shape")?.usize_arr().context("shape")?,
+            offset: e.req("offset")?.as_usize().context("offset")?,
+            size: e.req("size")?.as_usize().context("size")?,
+            init: e.req("init")?.as_str().context("init")?.to_string(),
+            std: e.req("std")?.as_f64().context("std")? as f32,
+        });
+    }
+    Ok(out)
+}
+
+fn parse_model(j: &Json) -> Result<ModelDims> {
+    let u = |k: &str| -> Result<usize> {
+        j.req(k)?.as_usize().with_context(|| format!("model.{k}"))
+    };
+    Ok(ModelDims {
+        vocab: u("vocab")?,
+        d_model: u("d_model")?,
+        n_layers: u("n_layers")?,
+        n_heads: u("n_heads")?,
+        seq_len: u("seq_len")?,
+        n_classes: u("n_classes")?,
+        mlp_ratio: u("mlp_ratio")?,
+        batch: u("batch")?,
+        unroll: u("unroll")?,
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json parse")?;
+        let mut configs = BTreeMap::new();
+        for (name, cj) in j.req("configs")?.as_obj().context("configs obj")? {
+            let mut artifacts = BTreeMap::new();
+            for (aname, aj) in cj
+                .req("artifacts")?
+                .as_obj()
+                .context("artifacts obj")?
+            {
+                let inputs = aj
+                    .req("inputs")?
+                    .as_arr()
+                    .context("inputs")?
+                    .iter()
+                    .map(parse_tensor_spec)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = aj
+                    .req("outputs")?
+                    .as_arr()
+                    .context("outputs")?
+                    .iter()
+                    .map(parse_tensor_spec)
+                    .collect::<Result<Vec<_>>>()?;
+                artifacts.insert(
+                    aname.clone(),
+                    ArtifactSpec {
+                        file: aj.req("file")?.as_str().context("file")?.to_string(),
+                        inputs,
+                        outputs,
+                    },
+                );
+            }
+            configs.insert(
+                name.clone(),
+                ConfigBlock {
+                    model: parse_model(cj.req("model")?)?,
+                    n_theta: cj.req("n_theta")?.as_usize().context("n_theta")?,
+                    n_mwn: cj.req("n_mwn")?.as_usize().context("n_mwn")?,
+                    n_mwn_corr: cj
+                        .req("n_mwn_corr")?
+                        .as_usize()
+                        .context("n_mwn_corr")?,
+                    layout_theta: parse_layout(cj.req("layout_theta")?)?,
+                    layout_mwn: parse_layout(cj.req("layout_mwn")?)?,
+                    layout_mwn_corr: parse_layout(cj.req("layout_mwn_corr")?)?,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { configs })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigBlock> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("config '{name}' not in manifest"))
+    }
+}
+
+impl ConfigBlock {
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "configs": {
+        "t": {
+          "model": {"vocab": 8, "d_model": 4, "n_layers": 1, "n_heads": 1,
+                    "seq_len": 2, "n_classes": 3, "mlp_ratio": 4,
+                    "batch": 2, "unroll": 1},
+          "n_theta": 10, "n_mwn": 4, "n_mwn_corr": 6,
+          "layout_theta": [
+            {"path": "w", "shape": [2, 5], "offset": 0, "size": 10,
+             "init": "normal", "std": 0.02}
+          ],
+          "layout_mwn": [], "layout_mwn_corr": [],
+          "artifacts": {
+            "f": {"file": "t.f.hlo.txt",
+                  "inputs": [{"shape": [10], "dtype": "f32"},
+                             {"shape": [2, 2], "dtype": "i32"}],
+                  "outputs": [{"shape": [2, 3], "dtype": "f32"}]}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let c = m.config("t").unwrap();
+        assert_eq!(c.n_theta, 10);
+        assert_eq!(c.model.d_model, 4);
+        let a = c.artifact("f").unwrap();
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.inputs[1].numel(), 4);
+        assert_eq!(a.outputs[0].shape, vec![2, 3]);
+        assert_eq!(c.layout_theta[0].std, 0.02);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.config("t").unwrap().artifact("nope").is_err());
+        assert!(m.config("nope").is_err());
+    }
+}

@@ -1,0 +1,234 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the Rust hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. One
+//! compiled executable per artifact, cached on first use. Interchange is
+//! HLO *text* — the image's xla_extension 0.5.1 rejects jax ≥ 0.5's
+//! 64-bit-id serialized protos (see /opt/xla-example/README.md).
+//!
+//! PJRT handles are not `Send`; in the multi-worker coordinator each worker
+//! thread owns its own [`Runtime`] (mirroring one-process-per-GPU DDP).
+
+pub mod manifest;
+pub mod params;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ArtifactSpec, ConfigBlock, DType, Manifest, TensorSpec};
+
+/// An argument for an artifact execution.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    /// f32 scalar (rank-0 input).
+    Scalar(f32),
+}
+
+/// Per-runtime execution statistics (feeds the throughput meter).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub exec_seconds: f64,
+    pub compiles: u64,
+    pub compile_seconds: f64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+/// A PJRT CPU client plus a cache of compiled executables for one artifact
+/// directory + model config.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub config_name: String,
+    pub config: ConfigBlock,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` and bind to `config_name`.
+    pub fn new(dir: &Path, config_name: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let config = manifest.config(config_name)?.clone();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            config_name: config_name.to_string(),
+            config,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Default artifact dir: `$SAMA_ARTIFACTS` or `./artifacts`.
+    pub fn artifact_dir() -> PathBuf {
+        std::env::var("SAMA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Ensure `name` is compiled (compile is lazy + cached).
+    pub fn prepare(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.config.artifact(name)?;
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("loading {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_seconds += t0.elapsed().as_secs_f64();
+        }
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn arg_to_literal(spec: &TensorSpec, arg: &Arg) -> Result<xla::Literal> {
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match (spec.dtype, arg) {
+            (DType::F32, Arg::F32(data)) => {
+                if data.len() != spec.numel() {
+                    bail!(
+                        "f32 arg length {} != spec {:?}",
+                        data.len(),
+                        spec.shape
+                    );
+                }
+                let l = xla::Literal::vec1(data);
+                if spec.shape.len() == 1 {
+                    l
+                } else {
+                    l.reshape(&dims)
+                        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?
+                }
+            }
+            (DType::F32, Arg::Scalar(x)) => {
+                if !spec.shape.is_empty() && spec.numel() != 1 {
+                    bail!("scalar arg for non-scalar spec {:?}", spec.shape);
+                }
+                if spec.shape.is_empty() {
+                    xla::Literal::scalar(*x)
+                } else {
+                    xla::Literal::vec1(std::slice::from_ref(x))
+                }
+            }
+            (DType::I32, Arg::I32(data)) => {
+                if data.len() != spec.numel() {
+                    bail!(
+                        "i32 arg length {} != spec {:?}",
+                        data.len(),
+                        spec.shape
+                    );
+                }
+                let l = xla::Literal::vec1(data);
+                if spec.shape.len() == 1 {
+                    l
+                } else {
+                    l.reshape(&dims)
+                        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?
+                }
+            }
+            (dt, _) => bail!("arg/spec dtype mismatch for {dt:?}"),
+        };
+        Ok(lit)
+    }
+
+    /// Execute artifact `name` with `args`; returns one f32 vector per
+    /// declared output (all artifact outputs in this repo are f32).
+    pub fn exec(&self, name: &str, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        self.prepare(name)?;
+        let spec = self.config.artifact(name)?.clone();
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "artifact {name}: got {} args, expected {}",
+                args.len(),
+                spec.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        let mut bytes_in = 0u64;
+        for (tspec, arg) in spec.inputs.iter().zip(args) {
+            bytes_in += (tspec.numel() * 4) as u64;
+            literals.push(Self::arg_to_literal(tspec, arg)?);
+        }
+
+        let t0 = Instant::now();
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("prepared above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → always a tuple literal.
+        let parts = out_lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("tuple {name}: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact {name}: {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        let mut bytes_out = 0u64;
+        for (part, ospec) in parts.into_iter().zip(&spec.outputs) {
+            let v = part
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("output read {name}: {e:?}"))?;
+            if v.len() != ospec.numel() {
+                bail!(
+                    "artifact {name}: output len {} != spec {:?}",
+                    v.len(),
+                    ospec.shape
+                );
+            }
+            bytes_out += (v.len() * 4) as u64;
+            out.push(v);
+        }
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.exec_seconds += t0.elapsed().as_secs_f64();
+        st.bytes_in += bytes_in;
+        st.bytes_out += bytes_out;
+        Ok(out)
+    }
+
+    /// Number of flat θ parameters for the bound config.
+    pub fn n_theta(&self) -> usize {
+        self.config.n_theta
+    }
+
+    pub fn n_mwn(&self) -> usize {
+        self.config.n_mwn
+    }
+
+    pub fn n_mwn_corr(&self) -> usize {
+        self.config.n_mwn_corr
+    }
+}

@@ -1,0 +1,121 @@
+//! Parameter initialization from the manifest's flat layouts.
+//!
+//! The AOT side records, for every leaf tensor, its offset/size in the flat
+//! parameter vector plus an init rule (`normal(std)` / `zeros` / `ones`), so
+//! Rust can materialize fresh parameter vectors with no Python involved.
+
+use crate::runtime::manifest::LayoutEntry;
+use crate::util::rng::Rng;
+
+/// Build a flat parameter vector from a layout.
+pub fn init_flat(layout: &[LayoutEntry], total: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut out = vec![0.0f32; total];
+    for e in layout {
+        let dst = &mut out[e.offset..e.offset + e.size];
+        match e.init.as_str() {
+            "zeros" => {}
+            "ones" => dst.fill(1.0),
+            "normal" => {
+                for x in dst.iter_mut() {
+                    *x = rng.normal() * e.std;
+                }
+            }
+            other => panic!("unknown init kind '{other}' for {}", e.path),
+        }
+    }
+    out
+}
+
+/// Look up a leaf slice by its manifest path (debug/eval tooling).
+pub fn leaf<'a>(
+    layout: &[LayoutEntry],
+    flat: &'a [f32],
+    path: &str,
+) -> Option<&'a [f32]> {
+    layout
+        .iter()
+        .find(|e| e.path == path)
+        .map(|e| &flat[e.offset..e.offset + e.size])
+}
+
+/// Validate that a layout tiles [0, total) exactly once (manifest sanity).
+pub fn validate_layout(layout: &[LayoutEntry], total: usize) -> Result<(), String> {
+    let mut covered = vec![false; total];
+    for e in layout {
+        if e.offset + e.size > total {
+            return Err(format!(
+                "{} overruns flat vector: {}+{} > {total}",
+                e.path, e.offset, e.size
+            ));
+        }
+        if e.size != e.shape.iter().product::<usize>() {
+            return Err(format!("{}: size {} != shape {:?}", e.path, e.size, e.shape));
+        }
+        for c in &mut covered[e.offset..e.offset + e.size] {
+            if *c {
+                return Err(format!("{} overlaps an earlier entry", e.path));
+            }
+            *c = true;
+        }
+    }
+    if let Some(gap) = covered.iter().position(|&c| !c) {
+        return Err(format!("flat vector has an uncovered gap at {gap}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(path: &str, offset: usize, size: usize, init: &str, std: f32) -> LayoutEntry {
+        LayoutEntry {
+            path: path.into(),
+            shape: vec![size],
+            offset,
+            size,
+            init: init.into(),
+            std,
+        }
+    }
+
+    #[test]
+    fn init_respects_kinds() {
+        let layout = vec![
+            entry("a", 0, 4, "zeros", 0.0),
+            entry("b", 4, 4, "ones", 0.0),
+            entry("c", 8, 64, "normal", 0.5),
+        ];
+        let mut rng = Rng::new(1);
+        let flat = init_flat(&layout, 72, &mut rng);
+        assert_eq!(&flat[0..4], &[0.0; 4]);
+        assert_eq!(&flat[4..8], &[1.0; 4]);
+        let std = {
+            let c = &flat[8..72];
+            let mean = c.iter().sum::<f32>() / 64.0;
+            (c.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / 64.0).sqrt()
+        };
+        assert!((std - 0.5).abs() < 0.2, "std={std}");
+    }
+
+    #[test]
+    fn leaf_lookup() {
+        let layout = vec![entry("x", 0, 2, "zeros", 0.0), entry("y", 2, 3, "ones", 0.0)];
+        let flat = vec![0., 0., 1., 1., 1.];
+        assert_eq!(leaf(&layout, &flat, "y"), Some(&flat[2..5]));
+        assert_eq!(leaf(&layout, &flat, "z"), None);
+    }
+
+    #[test]
+    fn validate_catches_gap_and_overlap() {
+        let ok = vec![entry("a", 0, 2, "zeros", 0.0), entry("b", 2, 2, "zeros", 0.0)];
+        assert!(validate_layout(&ok, 4).is_ok());
+        let gap = vec![entry("a", 0, 2, "zeros", 0.0)];
+        assert!(validate_layout(&gap, 4).is_err());
+        let overlap = vec![
+            entry("a", 0, 3, "zeros", 0.0),
+            entry("b", 2, 2, "zeros", 0.0),
+        ];
+        assert!(validate_layout(&overlap, 4).is_err());
+    }
+}

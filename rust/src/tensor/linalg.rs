@@ -1,0 +1,152 @@
+//! Small dense linear algebra: Gaussian-elimination solve/inverse and a
+//! least-squares helper. Powers the biased-regression analytic suite
+//! (paper Appendix E), where the base Jacobian, true meta gradient and λ*
+//! all have closed forms built from (XᵀX + βI)⁻¹.
+
+use super::Tensor;
+
+/// Solve A·x = b for multiple right-hand sides: A (n,n), b (n,m) → x (n,m).
+/// Partial-pivot Gaussian elimination; panics on singular A.
+pub fn solve(a: &Tensor, b: &Tensor) -> Tensor {
+    let n = a.shape()[0];
+    assert_eq!(a.shape(), &[n, n], "A must be square");
+    assert_eq!(b.shape()[0], n, "rhs rows");
+    let m = b.shape()[1];
+
+    // augmented working copies (f64 internally for stability)
+    let mut aw: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let mut bw: Vec<f64> = b.data().iter().map(|&x| x as f64).collect();
+
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if aw[r * n + col].abs() > aw[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        assert!(
+            aw[piv * n + col].abs() > 1e-12,
+            "singular matrix at column {col}"
+        );
+        if piv != col {
+            for j in 0..n {
+                aw.swap(col * n + j, piv * n + j);
+            }
+            for j in 0..m {
+                bw.swap(col * m + j, piv * m + j);
+            }
+        }
+        // eliminate below
+        let d = aw[col * n + col];
+        for r in col + 1..n {
+            let f = aw[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..n {
+                aw[r * n + j] -= f * aw[col * n + j];
+            }
+            for j in 0..m {
+                bw[r * m + j] -= f * bw[col * m + j];
+            }
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0f64; n * m];
+    for r in (0..n).rev() {
+        for j in 0..m {
+            let mut s = bw[r * m + j];
+            for c in r + 1..n {
+                s -= aw[r * n + c] * x[c * m + j];
+            }
+            x[r * m + j] = s / aw[r * n + r];
+        }
+    }
+    Tensor::from_vec(x.into_iter().map(|v| v as f32).collect(), &[n, m])
+}
+
+/// A⁻¹ via solve against the identity.
+pub fn inverse(a: &Tensor) -> Tensor {
+    let n = a.shape()[0];
+    solve(a, &Tensor::identity(n))
+}
+
+/// Least squares: argmin_x ‖A·x − b‖² via normal equations (AᵀA)x = Aᵀb.
+/// Fine for the small, well-conditioned systems in App. E.
+pub fn lstsq(a: &Tensor, b: &Tensor) -> Tensor {
+    let at = a.t();
+    let ata = at.matmul(a);
+    let atb = at.matmul(b);
+    solve(&ata, &atb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::vecops;
+    use crate::util::proptest_lite::{assert_close, check};
+    use crate::util::rng::Rng;
+
+    fn well_conditioned(r: &mut Rng, n: usize) -> Tensor {
+        // A = Mᵀ·M + I is SPD and well-conditioned enough for tests.
+        let m = Tensor::from_vec(r.normal_vec(n * n, 1.0), &[n, n]);
+        m.t().matmul(&m).add(&Tensor::identity(n))
+    }
+
+    #[test]
+    fn solve_recovers_known_x() {
+        check(
+            "solve(A, A·x) == x",
+            13,
+            24,
+            |r| {
+                let n = 1 + r.below(10);
+                let a = well_conditioned(r, n);
+                let x = Tensor::from_vec(r.normal_vec(n, 1.0), &[n, 1]);
+                (a, x)
+            },
+            |(a, x)| {
+                let b = a.matmul(x);
+                let got = solve(a, &b);
+                assert_close(got.data(), x.data(), 1e-3, 1e-3)
+            },
+        );
+    }
+
+    #[test]
+    fn inverse_times_self_is_identity() {
+        check(
+            "A·A⁻¹ == I",
+            17,
+            16,
+            |r| {
+                let n = 1 + r.below(8);
+                well_conditioned(r, n)
+            },
+            |a| {
+                let n = a.shape()[0];
+                let prod = a.matmul(&inverse(a));
+                assert_close(prod.data(), Tensor::identity(n).data(), 1e-3, 1e-3)
+            },
+        );
+    }
+
+    #[test]
+    fn lstsq_exact_for_square() {
+        let mut r = Rng::new(5);
+        let a = well_conditioned(&mut r, 6);
+        let x = Tensor::from_vec(r.normal_vec(6, 1.0), &[6, 1]);
+        let b = a.matmul(&x);
+        let got = lstsq(&a, &b);
+        assert!(vecops::cosine(got.data(), x.data()) > 0.999);
+    }
+
+    #[test]
+    #[should_panic(expected = "singular")]
+    fn solve_rejects_singular() {
+        let a = Tensor::from_vec(vec![1., 2., 2., 4.], &[2, 2]);
+        let b = Tensor::from_vec(vec![1., 1.], &[2, 1]);
+        solve(&a, &b);
+    }
+}

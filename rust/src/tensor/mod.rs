@@ -1,0 +1,297 @@
+//! Host tensor substrate.
+//!
+//! The coordinator's own math lives here: flat-vector ops for optimizer
+//! state and collectives, a small row-major matrix type with a cache-blocked
+//! matmul and a Gaussian-elimination solver (used by the biased-regression
+//! analytic suite, App. E), and live-byte accounting feeding the memory
+//! reports (Fig. 1 / Tables 2, 8, 9).
+
+pub mod linalg;
+pub mod vecops;
+
+use std::sync::atomic::{AtomicI64, AtomicUsize, Ordering};
+
+/// Live bytes currently held by [`Tensor`] buffers (and anything else that
+/// opts into accounting through [`track_alloc`]/[`track_free`]).
+static LIVE_BYTES: AtomicI64 = AtomicI64::new(0);
+/// High-water mark of [`LIVE_BYTES`].
+static PEAK_BYTES: AtomicI64 = AtomicI64::new(0);
+/// Total number of tracked allocations (hot-loop allocation regression bench).
+static ALLOC_COUNT: AtomicUsize = AtomicUsize::new(0);
+
+pub fn track_alloc(bytes: usize) {
+    let live = LIVE_BYTES.fetch_add(bytes as i64, Ordering::Relaxed) + bytes as i64;
+    PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
+    ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn track_free(bytes: usize) {
+    LIVE_BYTES.fetch_sub(bytes as i64, Ordering::Relaxed);
+}
+
+pub fn live_bytes() -> i64 {
+    LIVE_BYTES.load(Ordering::Relaxed)
+}
+
+pub fn peak_bytes() -> i64 {
+    PEAK_BYTES.load(Ordering::Relaxed)
+}
+
+pub fn alloc_count() -> usize {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
+
+/// Reset the peak-tracking (between bench phases).
+pub fn reset_peak() {
+    PEAK_BYTES.store(LIVE_BYTES.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+/// Dense row-major f32 tensor with allocation accounting.
+#[derive(Debug)]
+pub struct Tensor {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl Clone for Tensor {
+    fn clone(&self) -> Self {
+        track_alloc(self.data.len() * 4);
+        Tensor { data: self.data.clone(), shape: self.shape.clone() }
+    }
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.shape == other.shape && self.data == other.data
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        track_alloc(n * 4);
+        Tensor { data: vec![0.0; n], shape: shape.to_vec() }
+    }
+
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        track_alloc(data.len() * 4);
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        Self::from_vec(vec![x], &[1])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(mut self) -> Vec<f32> {
+        track_free(self.data.len() * 4);
+        std::mem::take(&mut self.data)
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        let cols = self.shape[1];
+        self.data[i * cols + j] = v;
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.data.len(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.set2(j, i, self.at2(i, j));
+            }
+        }
+        out
+    }
+
+    /// Cache-blocked matmul: (m,k)·(k,n) → (m,n).
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(rhs.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "matmul inner dim: {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        const BLK: usize = 64;
+        for i0 in (0..m).step_by(BLK) {
+            for k0 in (0..k).step_by(BLK) {
+                for j0 in (0..n).step_by(BLK) {
+                    for i in i0..(i0 + BLK).min(m) {
+                        for kk in k0..(k0 + BLK).min(k) {
+                            let a = self.data[i * k + kk];
+                            if a == 0.0 {
+                                continue;
+                            }
+                            let row = kk * n;
+                            let orow = i * n;
+                            for j in j0..(j0 + BLK).min(n) {
+                                out.data[orow + j] += a * rhs.data[row + j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product: (m,k)·(k,) → (m,).
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(self.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        assert_eq!(k, v.len());
+        (0..m)
+            .map(|i| {
+                let row = &self.data[i * k..(i + 1) * k];
+                vecops::dot(row, v)
+            })
+            .collect()
+    }
+
+    pub fn identity(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.set2(i, i, 1.0);
+        }
+        t
+    }
+
+    pub fn add(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape, rhs.shape);
+        let mut out = self.clone();
+        for (o, r) in out.data.iter_mut().zip(&rhs.data) {
+            *o += r;
+        }
+        out
+    }
+
+    pub fn sub(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape, rhs.shape);
+        let mut out = self.clone();
+        for (o, r) in out.data.iter_mut().zip(&rhs.data) {
+            *o -= r;
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        let mut out = self.clone();
+        for o in out.data.iter_mut() {
+            *o *= s;
+        }
+        out
+    }
+}
+
+impl Drop for Tensor {
+    fn drop(&mut self) {
+        track_free(self.data.len() * 4);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{assert_close, check};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::from_vec(vec![1., 2., 3., 4.], &[2, 2]);
+        let b = Tensor::from_vec(vec![5., 6., 7., 8.], &[2, 2]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_identity_property() {
+        check(
+            "A·I == A",
+            42,
+            16,
+            |r| {
+                let m = 1 + r.below(12);
+                let n = 1 + r.below(12);
+                Tensor::from_vec(r.normal_vec(m * n, 1.0), &[m, n])
+            },
+            |a| {
+                let i = Tensor::identity(a.shape()[1]);
+                assert_close(a.matmul(&i).data(), a.data(), 1e-6, 1e-6)
+            },
+        );
+    }
+
+    #[test]
+    fn matmul_matches_matvec() {
+        check(
+            "matmul column == matvec",
+            7,
+            16,
+            |r| {
+                let m = 1 + r.below(10);
+                let k = 1 + r.below(10);
+                let a = Tensor::from_vec(r.normal_vec(m * k, 1.0), &[m, k]);
+                let v = r.normal_vec(k, 1.0);
+                (a, v)
+            },
+            |(a, v)| {
+                let col = Tensor::from_vec(v.clone(), &[v.len(), 1]);
+                let mm = a.matmul(&col);
+                let mv = a.matvec(v);
+                assert_close(mm.data(), &mv, 1e-5, 1e-5)
+            },
+        );
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut r = Rng::new(3);
+        let a = Tensor::from_vec(r.normal_vec(12, 1.0), &[3, 4]);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn alloc_accounting_balances() {
+        let before = live_bytes();
+        {
+            let _t = Tensor::zeros(&[128, 128]);
+            assert!(live_bytes() >= before + 128 * 128 * 4);
+        }
+        assert_eq!(live_bytes(), before);
+    }
+}

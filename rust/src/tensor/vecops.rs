@@ -1,0 +1,201 @@
+//! Flat-vector primitives used on the coordinator hot path (optimizer state,
+//! collectives, meta-gradient assembly). Kept free of allocation where the
+//! caller can provide output buffers — the step loop must not churn the heap.
+
+/// Dot product with 4-way unrolled accumulation (auto-vectorizes well).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// ‖x‖₂.
+#[inline]
+pub fn norm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+/// y += alpha * x.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// out = a + alpha * b (allocation-free into `out`).
+#[inline]
+pub fn add_scaled_into(a: &[f32], alpha: f32, b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] + alpha * b[i];
+    }
+}
+
+/// x *= s.
+#[inline]
+pub fn scale(x: &mut [f32], s: f32) {
+    for xi in x.iter_mut() {
+        *xi *= s;
+    }
+}
+
+/// Element-wise a ⊙ b into out.
+#[inline]
+pub fn hadamard_into(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        out[i] = a[i] * b[i];
+    }
+}
+
+/// Relative distance ‖a−b‖₂ / max(‖b‖₂, 1e-12).
+pub fn rel_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let d: f32 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f32>()
+        .sqrt();
+    d / norm2(b).max(1e-12)
+}
+
+/// Cosine similarity (0 if either is ~zero).
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let na = norm2(a);
+    let nb = norm2(b);
+    if na < 1e-20 || nb < 1e-20 {
+        return 0.0;
+    }
+    dot(a, b) / (na * nb)
+}
+
+/// mean of a slice.
+pub fn mean(x: &[f32]) -> f32 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().sum::<f32>() / x.len() as f32
+}
+
+/// Numerically-stable softmax into `out`.
+pub fn softmax_into(logits: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(logits.len(), out.len());
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0;
+    for (o, &l) in out.iter_mut().zip(logits) {
+        *o = (l - mx).exp();
+        z += *o;
+    }
+    for o in out.iter_mut() {
+        *o /= z;
+    }
+}
+
+/// argmax index.
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in x.iter().enumerate() {
+        if v > x[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dot_known() {
+        assert_eq!(dot(&[1., 2., 3.], &[4., 5., 6.]), 32.0);
+    }
+
+    #[test]
+    fn dot_matches_naive_property() {
+        check(
+            "unrolled dot == naive",
+            11,
+            64,
+            |r: &mut Rng| {
+                let n = r.below(67);
+                (r.normal_vec(n, 1.0), r.normal_vec(n, 1.0))
+            },
+            |(a, b)| {
+                let naive: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+                let fast = dot(a, b);
+                if (naive - fast).abs() <= 1e-4 * (1.0 + naive.abs()) {
+                    Ok(())
+                } else {
+                    Err(format!("{naive} vs {fast}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        check(
+            "softmax sums to 1",
+            5,
+            32,
+            |r: &mut Rng| {
+                let n = 1 + r.below(20);
+                r.normal_vec(n, 3.0)
+            },
+            |logits| {
+                let mut out = vec![0.0; logits.len()];
+                softmax_into(logits, &mut out);
+                let s: f32 = out.iter().sum();
+                if (s - 1.0).abs() < 1e-5 && out.iter().all(|&p| p >= 0.0) {
+                    Ok(())
+                } else {
+                    Err(format!("sum={s}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn cosine_of_self_is_one() {
+        let mut r = Rng::new(2);
+        let v = r.normal_vec(100, 1.0);
+        assert!((cosine(&v, &v) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn axpy_matches_add_scaled_into() {
+        let mut r = Rng::new(8);
+        let a = r.normal_vec(37, 1.0);
+        let b = r.normal_vec(37, 1.0);
+        let mut y = a.clone();
+        axpy(0.3, &b, &mut y);
+        let mut out = vec![0.0; 37];
+        add_scaled_into(&a, 0.3, &b, &mut out);
+        assert_eq!(y, out);
+    }
+
+    #[test]
+    fn argmax_finds_peak() {
+        assert_eq!(argmax(&[0.1, 5.0, -2.0, 4.9]), 1);
+    }
+}

@@ -1,0 +1,97 @@
+//! Shared substrate utilities: deterministic RNG, a JSON codec (serde is not
+//! vendored), a property-testing harness (proptest is not vendored), timing
+//! helpers and a tiny leveled logger.
+
+pub mod json;
+pub mod proptest_lite;
+pub mod rng;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+/// 0 = error, 1 = info (default), 2 = debug.
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(1);
+
+pub fn set_log_level(level: u8) {
+    LOG_LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn log_enabled(level: u8) -> bool {
+    LOG_LEVEL.load(Ordering::Relaxed) >= level
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(1) {
+            eprintln!("[sama] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(2) {
+            eprintln!("[sama:debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// Simple wall-clock stopwatch used by the bench harness + throughput meter.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Median-of-runs micro-bench helper (criterion is not vendored): runs
+/// `f` for `warmup` + `iters` iterations, returns (median_s, mean_s, min_s).
+pub fn bench_loop(warmup: usize, iters: usize, mut f: impl FnMut()) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    (median, mean, samples[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::hint::black_box((0..10_000).sum::<u64>());
+        assert!(sw.elapsed_secs() >= 0.0);
+    }
+
+    #[test]
+    fn bench_loop_returns_ordered_stats() {
+        let (median, mean, min) = bench_loop(1, 9, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(min <= median, "min {min} median {median}");
+        assert!(mean > 0.0);
+    }
+}

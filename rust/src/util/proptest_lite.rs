@@ -1,0 +1,96 @@
+//! Property-testing harness (proptest is not vendored on this image; see
+//! DESIGN.md §4). Runs a property over many randomized cases from a seeded
+//! [`Rng`] and, on failure, reports the failing case number + seed so the
+//! case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Number of cases per property (kept modest: several hundred properties run
+/// in the suite).
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` over `cases` randomized inputs produced by `gen`.
+///
+/// `gen` receives a per-case RNG; `prop` returns `Err(msg)` on violation.
+/// Panics with the case index, seed, and a debug rendering of the input.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = root.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (seed={seed}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f32 slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!(
+                "mismatch at [{i}]: {x} vs {y} (|Δ|={} > tol={tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Relative L2 distance ‖a−b‖/max(‖b‖, eps) — useful for gradient checks.
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f32 {
+    let num: f32 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f32>()
+        .sqrt();
+    let den: f32 = b.iter().map(|y| y * y).sum::<f32>().sqrt().max(1e-12);
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("abs-nonneg", 1, 32, |r| r.normal(), |x| {
+            if x.abs() >= 0.0 {
+                Ok(())
+            } else {
+                Err("negative abs".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_reports_failure() {
+        check("always-fails", 2, 4, |r| r.f32(), |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.5], 1e-3, 1e-3).is_err());
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-6], 1e-3, 0.0).is_ok());
+    }
+
+    #[test]
+    fn rel_l2_zero_for_equal() {
+        assert_eq!(rel_l2(&[1.0, -2.0], &[1.0, -2.0]), 0.0);
+    }
+}

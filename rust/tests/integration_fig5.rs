@@ -1,0 +1,72 @@
+//! Fig. 5 as an integration test: on the analytic biased-regression problem
+//! the algorithm quality ordering must hold quantitatively —
+//! cos(CG) ≈ 1 ≥ cos(Neumann) ≥ cos(SAMA) > 0.8, and every algorithm's λ
+//! trajectory approaches λ*.
+
+use sama::algos::{self, MetaStepCtx};
+use sama::bilevel::biased_regression::BiasedRegression;
+use sama::bilevel::BilevelProblem;
+use sama::config::Algo;
+use sama::optim::{Adam, Optimizer, Sgd};
+use sama::tensor::vecops;
+use sama::util::rng::Rng;
+
+fn mean_cos_and_progress(algo: Algo, iters: usize) -> (f32, f32) {
+    let mut rng = Rng::new(2024);
+    let mut p = BiasedRegression::random(&mut rng, 50, 40, 10, 0.5);
+    let lambda_star = p.exact_lambda_star();
+    let mut lambda = vec![0.0f32; 10];
+    let d0 = vecops::rel_dist(&lambda, &lambda_star);
+    let mut opt = Adam::new(10, 0.5);
+    let mut cos_sum = 0.0f32;
+    for step in 0..iters {
+        let w = p.w_star(&lambda);
+        let g_base = p.base_grad(&w, &lambda, step).unwrap().grad;
+        let sgd = Sgd::new(10, 0.05, 0.0, 0.0);
+        let zeros = vec![0.0f32; 10];
+        let ctx = MetaStepCtx {
+            theta: &w,
+            lambda: &lambda,
+            base_opt: &sgd,
+            g_base: &g_base,
+            step,
+            alpha: 1.0,
+            solver_iters: 8,
+            adam_m: &zeros,
+            adam_v: &zeros,
+            adam_t: 1.0,
+        };
+        let out = algos::meta_grad(algo, &mut p, &ctx).unwrap();
+        cos_sum += vecops::cosine(&out.grad, &p.exact_meta_grad(&lambda));
+        opt.step(&mut lambda, &out.grad);
+    }
+    let d1 = vecops::rel_dist(&lambda, &lambda_star);
+    (cos_sum / iters as f32, d1 / d0)
+}
+
+#[test]
+fn figure5_quality_ordering() {
+    let (cos_sama, prog_sama) = mean_cos_and_progress(Algo::Sama, 80);
+    let (cos_cg, prog_cg) = mean_cos_and_progress(Algo::Cg, 80);
+    let (cos_ne, prog_ne) = mean_cos_and_progress(Algo::Neumann, 80);
+
+    assert!(cos_cg > 0.995, "CG should be near exact: {cos_cg}");
+    assert!(cos_ne >= cos_sama - 0.02, "Neumann {cos_ne} vs SAMA {cos_sama}");
+    assert!(cos_sama > 0.8, "SAMA alignment too low: {cos_sama}");
+
+    for (name, prog) in [("sama", prog_sama), ("cg", prog_cg), ("neumann", prog_ne)] {
+        assert!(prog < 0.75, "{name} did not converge: ‖λ−λ*‖ ratio {prog}");
+    }
+}
+
+#[test]
+fn sama_na_equals_sama_under_sgd_base() {
+    // the adaptation matrix is lr·I for SGD — SAMA and SAMA-NA coincide in
+    // direction (§3.2's identity case).
+    let (cos_sama, _) = mean_cos_and_progress(Algo::Sama, 20);
+    let (cos_na, _) = mean_cos_and_progress(Algo::SamaNa, 20);
+    assert!(
+        (cos_sama - cos_na).abs() < 1e-3,
+        "{cos_sama} vs {cos_na}"
+    );
+}
