@@ -7,6 +7,10 @@
 //! calibrated model at BERT-base scale (the paper's units). Reproduction
 //! target: SAMA ≳1.7× Neumann/CG throughput and ≈½ memory at 1 worker;
 //! throughput scales and per-worker memory shrinks with workers.
+//!
+//! Multi-worker rows also report the §3.3 comm–compute overlap: total
+//! comm-engine seconds, worker-blocked seconds, and the hidden fraction
+//! (1 − blocked/comm) — the quantity the Tables 8–9 ablation toggles.
 
 mod common;
 
@@ -26,6 +30,9 @@ fn main() {
             "per-worker batch",
             "memory/worker (GiB @BERT-base)",
             "throughput (samples/s, projected W cores)",
+            "comm (s)",
+            "blocked (s)",
+            "hidden comm (%)",
         ],
     );
     let rows: Vec<(Algo, usize, &str)> = vec![
@@ -51,12 +58,20 @@ fn main() {
             per_worker_batch.to_string(),
             f2(mem),
             f1(out.report.projected_parallel_throughput()),
+            f2(out.report.comm_seconds()),
+            f2(out.report.blocked_seconds()),
+            f1(100.0 * out.report.hidden_comm_fraction()),
         ]);
     }
     t.print();
     println!(
         "single-core host: worker threads serialize, so scaling rows are\n\
          projected as measured×W (one core per worker = paper's 1 GPU/worker)."
+    );
+    println!(
+        "hidden comm % = 1 − blocked/comm: comm-engine seconds the workers\n\
+         never waited for (pipelined λ-reduce + streamed buckets, §3.3);\n\
+         1-worker rows have no interconnect and report 0."
     );
     println!(
         "paper Table 2 reference (GB, samples/s): Neumann 26.0/82.9, \

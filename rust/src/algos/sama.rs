@@ -18,7 +18,7 @@ use anyhow::Result;
 
 use super::{MetaGradOut, MetaStepCtx, OracleCounts};
 use crate::bilevel::BilevelProblem;
-use crate::optim::sama_epsilon;
+use crate::optim::{perturbation_direction, sama_epsilon};
 use crate::tensor::vecops;
 
 pub fn meta_grad(
@@ -33,10 +33,11 @@ pub fn meta_grad(
     let (g_meta, meta_loss) = problem.meta_direct_grad(ctx.theta, ctx.step)?;
 
     // Analytic pass: v = (∂u/∂g) ⊙ g_meta (identity when adapt=false).
+    // perturbation_direction writes the diag and multiplies in place — no
+    // per-meta-step clone of the adaptation diagonal.
     let mut v = vec![0.0f32; n];
     if adapt {
-        ctx.base_opt.adapt_diag(ctx.g_base, &mut v);
-        vecops::hadamard_into(&v.clone(), &g_meta, &mut v);
+        perturbation_direction(ctx.base_opt, ctx.g_base, &g_meta, &mut v);
     } else {
         v.copy_from_slice(&g_meta);
     }

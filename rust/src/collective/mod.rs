@@ -7,21 +7,32 @@
 //! runtime; gradients synchronize through a **ring all-reduce** implemented
 //! over channels, with:
 //!
-//!  * **bucketing** — gradients are chunked into fixed-size buckets, the
-//!    granularity at which communication can start before the full tensor
-//!    is ready (mirrors DDP's gradient buckets);
-//!  * **a dedicated comm thread per worker** — `all_reduce_async` hands the
-//!    buffer to the comm engine and returns immediately, so PJRT compute
-//!    overlaps the ring exchange exactly like NCCL streams overlap CUDA
-//!    compute. `overlap=false` degrades to a blocking wait (the ablation);
+//!  * **streaming buckets** — a reduce is a sequence of independently
+//!    completing buckets. [`Collective::submit_bucket`] lets a worker start
+//!    reducing early buckets while it is still producing later ones
+//!    (mirrors DDP firing a bucket's all-reduce from the autograd hook as
+//!    soon as the bucket fills), and each bucket comes back on its own
+//!    done-channel message, so [`Collective::try_progress`] can observe
+//!    partial completion;
+//!  * **a dedicated comm thread per worker** — buckets are ring-reduced by
+//!    the comm engine while PJRT compute proceeds, exactly like NCCL
+//!    streams overlap CUDA compute. `overlap=false` in the coordinator
+//!    degrades to submit-then-immediately-wait (the ablation);
+//!  * **reusable hop buffers** — the ring circulates its message buffers
+//!    (each engine recycles the allocation it just received for its next
+//!    send), so the steady-state hot path does not touch the allocator;
 //!  * **a simulated link** — every hop sleeps latency + bytes/bandwidth, so
 //!    the comm-bound regime (and the overlap win) is reproducible on one
 //!    host.
 //!
 //! SAMA's strategy maps to: passes 1–2 → no collective at all; pass 3 →
-//! one bucketed `all_reduce_async` overlapped with the next compute.
+//! one bucket-streamed all-reduce overlapped with first-order compute.
+//!
+//! **Contract** (standard DDP): all ranks submit the same reduces, with the
+//! same bucket boundaries, in the same order — and wait for them in submit
+//! order.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -61,15 +72,59 @@ impl LinkModel {
 pub struct CommStats {
     pub reduces: u64,
     pub bytes_sent: u64,
+    /// Seconds the comm engine spent ring-reducing (per-bucket, summed).
     pub comm_seconds: f64,
-    /// Seconds the *worker* spent blocked in `wait()` — comm time NOT
-    /// hidden by overlap. comm_seconds − blocked_seconds = hidden time.
+    /// Seconds the *worker* spent blocked inside `wait()` — comm time NOT
+    /// hidden by overlap. Non-blocking `try_progress()` polls charge
+    /// nothing: between polls the worker is free to do real work.
     pub blocked_seconds: f64,
+}
+
+impl CommStats {
+    /// Comm time hidden behind compute: `comm_seconds − blocked_seconds`.
+    pub fn hidden_seconds(&self) -> f64 {
+        (self.comm_seconds - self.blocked_seconds).max(0.0)
+    }
+
+    /// Fraction of comm time hidden behind compute (0 when no comm).
+    pub fn hidden_fraction(&self) -> f64 {
+        if self.comm_seconds <= 0.0 {
+            0.0
+        } else {
+            self.hidden_seconds() / self.comm_seconds
+        }
+    }
+
+    /// Fold another worker's counters into this one (fleet aggregation).
+    pub fn merge(&mut self, other: &CommStats) {
+        self.reduces += other.reduces;
+        self.bytes_sent += other.bytes_sent;
+        self.comm_seconds += other.comm_seconds;
+        self.blocked_seconds += other.blocked_seconds;
+    }
 }
 
 struct RingMsg {
     job: u64,
+    bucket: u32,
     chunk: Vec<f32>,
+}
+
+/// One bucket of one reduce, submitted to the comm engine.
+struct JobMsg {
+    job: u64,
+    bucket: u32,
+    offset: usize,
+    data: Vec<f32>,
+}
+
+/// One bucket of one reduce, completed by the comm engine.
+struct BucketDone {
+    job: u64,
+    bucket: u32,
+    offset: usize,
+    data: Vec<f32>,
+    secs: f64,
 }
 
 /// One worker's handle to the collective. Created by [`CommWorld::join`].
@@ -77,20 +132,45 @@ pub struct Collective {
     rank: usize,
     world: usize,
     job_tx: Sender<JobMsg>,
-    done_rx: Receiver<(u64, Vec<f32>, f64)>,
+    done_rx: Receiver<BucketDone>,
     next_job: u64,
     stats: CommStats,
+    /// Exact bytes-on-the-wire accumulator; `stats.bytes_sent` is this
+    /// rounded once (a per-call integer division would truncate ~world
+    /// bytes per reduce and drift with call count).
+    bytes_exact: f64,
 }
 
-struct JobMsg {
-    id: u64,
-    data: Vec<f32>,
-    bucket_elems: usize,
-}
-
-/// Pending asynchronous all-reduce.
+/// Pending asynchronous all-reduce: a set of independently completing
+/// buckets plus the assembled output buffer.
 pub struct PendingReduce {
     id: u64,
+    /// Buckets submitted so far.
+    buckets: u32,
+    /// Buckets whose reduced payload has been absorbed into `out`.
+    buckets_done: u32,
+    out: Vec<f32>,
+}
+
+impl PendingReduce {
+    /// Elements submitted so far (the final output length once waited).
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty()
+    }
+
+    /// Buckets completed so far (monotone, updated by
+    /// [`Collective::try_progress`] / [`Collective::wait`]).
+    pub fn buckets_done(&self) -> u32 {
+        self.buckets_done
+    }
+
+    pub fn buckets_submitted(&self) -> u32 {
+        self.buckets
+    }
 }
 
 /// Factory for a K-worker collective: builds the comm-thread ring.
@@ -104,7 +184,7 @@ pub struct CommWorld {
 
 struct Seat {
     job_tx: Sender<JobMsg>,
-    done_rx: Receiver<(u64, Vec<f32>, f64)>,
+    done_rx: Receiver<BucketDone>,
 }
 
 impl CommWorld {
@@ -122,7 +202,7 @@ impl CommWorld {
         let mut handles = Vec::with_capacity(world);
         for rank in 0..world {
             let (job_tx, job_rx) = channel::<JobMsg>();
-            let (done_tx, done_rx) = channel::<(u64, Vec<f32>, f64)>();
+            let (done_tx, done_rx) = channel::<BucketDone>();
             // comm thread `rank` sends to rank+1, receives from rank-1
             let to_next = ring_txs[(rank + 1) % world].clone();
             let from_prev = ring_rxs[rank].take().unwrap();
@@ -152,6 +232,7 @@ impl CommWorld {
             done_rx: seat.done_rx,
             next_job: 0,
             stats: CommStats::default(),
+            bytes_exact: 0.0,
         }
     }
 
@@ -174,35 +255,36 @@ impl Drop for CommWorld {
     }
 }
 
-/// The per-rank communication engine: executes ring all-reduces job by job.
-/// All ranks must submit jobs in the same order (standard DDP contract).
+/// The per-rank communication engine: ring-reduces buckets in submission
+/// order, posting each completed bucket independently. All ranks must
+/// submit buckets in the same order (standard DDP contract).
 fn comm_engine(
     rank: usize,
     world: usize,
     link: LinkModel,
     job_rx: Receiver<JobMsg>,
-    done_tx: Sender<(u64, Vec<f32>, f64)>,
+    done_tx: Sender<BucketDone>,
     to_next: Sender<RingMsg>,
     from_prev: Receiver<RingMsg>,
 ) {
-    while let Ok(JobMsg { id, mut data, bucket_elems }) = job_rx.recv() {
+    // Hop buffer recycled across hops/buckets/jobs: each engine reuses the
+    // allocation it last received from its ring predecessor, so after
+    // warm-up no hop allocates.
+    let mut spare: Vec<f32> = Vec::new();
+    while let Ok(JobMsg { job, bucket, offset, mut data }) = job_rx.recv() {
         let t0 = Instant::now();
         if world > 1 {
-            let n = data.len();
-            let mut off = 0;
-            while off < n {
-                let end = (off + bucket_elems).min(n);
-                ring_all_reduce(
-                    rank,
-                    world,
-                    link,
-                    id,
-                    &mut data[off..end],
-                    &to_next,
-                    &from_prev,
-                );
-                off = end;
-            }
+            ring_all_reduce(
+                rank,
+                world,
+                link,
+                job,
+                bucket,
+                &mut data,
+                &to_next,
+                &from_prev,
+                &mut spare,
+            );
             // average (DDP semantics)
             let inv = 1.0 / world as f32;
             for x in data.iter_mut() {
@@ -210,21 +292,28 @@ fn comm_engine(
             }
         }
         let secs = t0.elapsed().as_secs_f64();
-        if done_tx.send((id, data, secs)).is_err() {
+        if done_tx
+            .send(BucketDone { job, bucket, offset, data, secs })
+            .is_err()
+        {
             return;
         }
     }
 }
 
 /// Textbook ring all-reduce (reduce-scatter + all-gather) over one bucket.
+/// `spare` is the recycled hop buffer (see [`comm_engine`]).
+#[allow(clippy::too_many_arguments)]
 fn ring_all_reduce(
     rank: usize,
     world: usize,
     link: LinkModel,
     job: u64,
+    bucket: u32,
     buf: &mut [f32],
     to_next: &Sender<RingMsg>,
     from_prev: &Receiver<RingMsg>,
+    spare: &mut Vec<f32>,
 ) {
     let n = buf.len();
     let chunk_of = |c: usize| -> std::ops::Range<usize> {
@@ -238,29 +327,39 @@ fn ring_all_reduce(
     for r in 0..world - 1 {
         let send_c = (rank + world - r) % world;
         let range = chunk_of(send_c);
-        let chunk = buf[range].to_vec();
+        let mut chunk = std::mem::take(spare);
+        chunk.clear();
+        chunk.extend_from_slice(&buf[range]);
         std::thread::sleep(link.hop_cost(chunk.len() * 4));
-        to_next.send(RingMsg { job, chunk }).expect("ring send");
+        to_next
+            .send(RingMsg { job, bucket, chunk })
+            .expect("ring send");
         let msg = from_prev.recv().expect("ring recv");
-        debug_assert_eq!(msg.job, job);
+        debug_assert_eq!((msg.job, msg.bucket), (job, bucket));
         let recv_c = (rank + world - r - 1) % world;
         let range = chunk_of(recv_c);
         for (dst, src) in buf[range].iter_mut().zip(&msg.chunk) {
             *dst += src;
         }
+        *spare = msg.chunk; // recycle the received allocation
     }
     // all-gather: circulate the fully-reduced chunks
     for r in 0..world - 1 {
         let send_c = (rank + 1 + world - r) % world;
         let range = chunk_of(send_c);
-        let chunk = buf[range].to_vec();
+        let mut chunk = std::mem::take(spare);
+        chunk.clear();
+        chunk.extend_from_slice(&buf[range]);
         std::thread::sleep(link.hop_cost(chunk.len() * 4));
-        to_next.send(RingMsg { job, chunk }).expect("ring send");
+        to_next
+            .send(RingMsg { job, bucket, chunk })
+            .expect("ring send");
         let msg = from_prev.recv().expect("ring recv");
-        debug_assert_eq!(msg.job, job);
+        debug_assert_eq!((msg.job, msg.bucket), (job, bucket));
         let recv_c = (rank + world - r) % world;
         let range = chunk_of(recv_c);
         buf[range].copy_from_slice(&msg.chunk);
+        *spare = msg.chunk;
     }
 }
 
@@ -277,27 +376,98 @@ impl Collective {
         &self.stats
     }
 
-    /// Start an asynchronous bucketed all-reduce; compute may proceed.
-    pub fn all_reduce_async(&mut self, data: Vec<f32>, bucket_elems: usize) -> PendingReduce {
+    /// Open a streaming all-reduce: buckets are appended with
+    /// [`submit_bucket`](Collective::submit_bucket) and start reducing
+    /// immediately, before later buckets exist.
+    pub fn begin_reduce(&mut self) -> PendingReduce {
         let id = self.next_job;
         self.next_job += 1;
         self.stats.reduces += 1;
-        self.stats.bytes_sent += (data.len() * 4) as u64 * 2 * (self.world as u64 - 1)
-            / self.world.max(1) as u64;
-        self.job_tx
-            .send(JobMsg { id, data, bucket_elems })
-            .expect("comm engine alive");
-        PendingReduce { id }
+        PendingReduce { id, buckets: 0, buckets_done: 0, out: Vec::new() }
     }
 
-    /// Wait for a pending reduce; returns the averaged buffer.
-    pub fn wait(&mut self, pending: PendingReduce) -> Vec<f32> {
-        let t0 = Instant::now();
-        let (id, data, comm_secs) = self.done_rx.recv().expect("comm engine alive");
-        assert_eq!(id, pending.id, "reduces must be waited in submit order");
-        self.stats.blocked_seconds += t0.elapsed().as_secs_f64();
-        self.stats.comm_seconds += comm_secs;
-        data
+    /// Append one bucket to an open reduce and hand it to the comm engine.
+    /// The bucket's ring exchange starts as soon as every rank has
+    /// submitted it — typically while the worker is still producing the
+    /// next bucket.
+    pub fn submit_bucket(&mut self, pending: &mut PendingReduce, data: Vec<f32>) {
+        let offset = pending.out.len();
+        pending.out.resize(offset + data.len(), 0.0);
+        // exact ring traffic: 2(K−1)/K of the payload per rank, kept in f64
+        // and rounded once (per-bucket integer division would truncate)
+        self.bytes_exact += (data.len() * 4) as f64 * 2.0
+            * (self.world as f64 - 1.0)
+            / self.world as f64;
+        self.stats.bytes_sent = self.bytes_exact.round() as u64;
+        let msg = JobMsg {
+            job: pending.id,
+            bucket: pending.buckets,
+            offset,
+            data,
+        };
+        pending.buckets += 1;
+        self.job_tx.send(msg).expect("comm engine alive");
+    }
+
+    /// Start an asynchronous bucketed all-reduce of a fully materialized
+    /// buffer; compute may proceed. Equivalent to `begin_reduce` +
+    /// `submit_bucket` per `bucket_elems` slice.
+    pub fn all_reduce_async(&mut self, data: Vec<f32>, bucket_elems: usize) -> PendingReduce {
+        let bucket_elems = bucket_elems.max(1);
+        let mut pending = self.begin_reduce();
+        if data.len() <= bucket_elems {
+            // single bucket: move the buffer, no copy
+            self.submit_bucket(&mut pending, data);
+        } else {
+            let mut off = 0;
+            while off < data.len() {
+                let end = (off + bucket_elems).min(data.len());
+                self.submit_bucket(&mut pending, data[off..end].to_vec());
+                off = end;
+            }
+        }
+        pending
+    }
+
+    /// Absorb one completed bucket into the pending reduce's output.
+    fn absorb(&mut self, pending: &mut PendingReduce, msg: BucketDone) {
+        assert_eq!(
+            msg.job, pending.id,
+            "reduces must be progressed/waited in submit order"
+        );
+        debug_assert!(msg.bucket < pending.buckets);
+        pending.out[msg.offset..msg.offset + msg.data.len()]
+            .copy_from_slice(&msg.data);
+        pending.buckets_done += 1;
+        self.stats.comm_seconds += msg.secs;
+    }
+
+    /// Non-blocking: absorb any buckets the engine has finished; returns
+    /// how many of this reduce's buckets are complete so far.
+    pub fn try_progress(&mut self, pending: &mut PendingReduce) -> u32 {
+        while pending.buckets_done < pending.buckets {
+            match self.done_rx.try_recv() {
+                Ok(msg) => self.absorb(pending, msg),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    panic!("comm engine died mid-reduce")
+                }
+            }
+        }
+        pending.buckets_done
+    }
+
+    /// Wait for all of a pending reduce's buckets; returns the averaged
+    /// buffer. Only time spent actually blocking on unfinished buckets is
+    /// charged to `blocked_seconds`.
+    pub fn wait(&mut self, mut pending: PendingReduce) -> Vec<f32> {
+        while pending.buckets_done < pending.buckets {
+            let t0 = Instant::now();
+            let msg = self.done_rx.recv().expect("comm engine alive");
+            self.stats.blocked_seconds += t0.elapsed().as_secs_f64();
+            self.absorb(&mut pending, msg);
+        }
+        pending.out
     }
 
     /// Blocking all-reduce (overlap disabled / ablation path).
@@ -380,6 +550,51 @@ mod tests {
         }
     }
 
+    /// The heart of the streaming design: a worker can submit bucket 0,
+    /// see it complete (`try_progress`), and only then produce + submit
+    /// bucket 1 — impossible with an all-or-nothing pending reduce.
+    #[test]
+    fn buckets_complete_independently_while_streaming() {
+        let link = LinkModel { bandwidth: 1e8, latency: 5e-5 };
+        let out = run_world(2, link, |rank, coll| {
+            let mut p = coll.begin_reduce();
+            coll.submit_bucket(&mut p, vec![rank as f32; 100]);
+            // poll until bucket 0 is fully reduced; bucket 1 not submitted
+            while coll.try_progress(&mut p) < 1 {
+                std::thread::sleep(Duration::from_micros(50));
+            }
+            assert_eq!(p.buckets_done(), 1);
+            assert_eq!(p.buckets_submitted(), 1);
+            coll.submit_bucket(&mut p, vec![10.0 + rank as f32; 50]);
+            let done = coll.wait(p);
+            assert_eq!(done.len(), 150);
+            done
+        });
+        for o in &out {
+            for &x in &o[..100] {
+                assert!((x - 0.5).abs() < 1e-6); // mean of 0,1
+            }
+            for &x in &o[100..] {
+                assert!((x - 10.5).abs() < 1e-6); // mean of 10,11
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_reduce_counts_once_in_stats() {
+        let out = run_world(2, LinkModel::instant(), |rank, coll| {
+            let mut p = coll.begin_reduce();
+            for _ in 0..4 {
+                coll.submit_bucket(&mut p, vec![rank as f32; 16]);
+            }
+            let _ = coll.wait(p);
+            vec![coll.stats().reduces as f32]
+        });
+        for o in &out {
+            assert_eq!(o[0], 1.0);
+        }
+    }
+
     #[test]
     fn overlap_hides_link_cost() {
         // slow link: 1 KiB buffer at 1 MiB/s ≈ ~ms of comm per hop.
@@ -418,8 +633,32 @@ mod tests {
             let _ = coll.all_reduce_sync(vec![1.0; 1000], 250);
             vec![coll.stats().bytes_sent as f32]
         });
-        // ring all-reduce moves 2(K-1)/K · bytes per rank
+        // ring all-reduce moves 2(K-1)/K · bytes per rank; the f64
+        // accumulator makes this exact (was ±64 with truncating u64 math)
         let expect = (1000.0 * 4.0) * 2.0 * 3.0 / 4.0;
-        assert!((out[0][0] - expect).abs() < 64.0);
+        assert!(
+            (out[0][0] - expect).abs() < 0.5,
+            "bytes {} vs exact {expect}",
+            out[0][0]
+        );
+    }
+
+    /// Repeated odd-sized reduces must not drift: 250 elems × 3 ranks →
+    /// 2000/3 bytes per reduce; after 30 reduces the truncating u64 math
+    /// under-counted by ~30·2 bytes, the f64 path stays within rounding.
+    #[test]
+    fn bytes_accounting_does_not_truncate_per_call() {
+        let out = run_world(3, LinkModel::instant(), |_, coll| {
+            for _ in 0..30 {
+                let _ = coll.all_reduce_sync(vec![1.0; 250], 64);
+            }
+            vec![coll.stats().bytes_sent as f32]
+        });
+        let expect = 30.0 * (250.0 * 4.0) * 2.0 * 2.0 / 3.0;
+        assert!(
+            (out[0][0] - expect).abs() < 1.0,
+            "bytes {} vs exact {expect}",
+            out[0][0]
+        );
     }
 }

@@ -99,7 +99,13 @@ pub struct TrainConfig {
     /// Gradient bucket size in elements (comm–comp overlap granularity).
     pub bucket_elems: usize,
     /// Overlap communication with computation (the paper's §3.3 strategy).
+    /// With ≥2 workers this also pipelines the λ-gradient reduce behind the
+    /// next base forward (one-step-stale λ, DDP-style).
     pub overlap: bool,
+    /// Stream the λ-gradient to the collective bucket-by-bucket while the
+    /// F2SA θ-nudge is still being applied (overlap granularity below one
+    /// tensor). `false` submits the fully materialized gradient at once.
+    pub stream_grads: bool,
     /// Free-form extras (dataset knobs etc.).
     pub extra: BTreeMap<String, String>,
 }
@@ -124,6 +130,7 @@ impl Default for TrainConfig {
             link_latency: 20e-6,
             bucket_elems: 1 << 16,
             overlap: true,
+            stream_grads: true,
             extra: BTreeMap::new(),
         }
     }
@@ -168,6 +175,9 @@ impl TrainConfig {
                 self.bucket_elems = value.parse().context("bucket_elems")?
             }
             "overlap" => self.overlap = value.parse().context("overlap")?,
+            "stream_grads" => {
+                self.stream_grads = value.parse().context("stream_grads")?
+            }
             other => {
                 self.extra.insert(other.into(), value.into());
             }
@@ -230,11 +240,17 @@ mod tests {
         c.apply_overrides(&[
             "algo=neumann".into(),
             "workers=4".into(),
+            "stream_grads=false".into(),
+            "bucket_elems=4096".into(),
+            "overlap=false".into(),
             "noise=0.3".into(),
         ])
         .unwrap();
         assert_eq!(c.algo, Algo::Neumann);
         assert_eq!(c.workers, 4);
+        assert!(!c.stream_grads);
+        assert!(!c.overlap);
+        assert_eq!(c.bucket_elems, 4096);
         assert_eq!(c.extra_or::<f32>("noise", 0.0), 0.3);
     }
 

@@ -9,9 +9,18 @@
 //!
 //! PJRT handles are not `Send`; in the multi-worker coordinator each worker
 //! thread owns its own [`Runtime`] (mirroring one-process-per-GPU DDP).
+//!
+//! The `xla` crate is only available behind the `pjrt` cargo feature (it
+//! cannot be vendored on this image); without it the module compiles
+//! against [`xla_stub`], whose client constructor fails with an actionable
+//! "PJRT unavailable" error while the rest of the crate works normally.
 
 pub mod manifest;
 pub mod params;
+#[cfg(not(feature = "pjrt"))]
+mod xla_stub;
+#[cfg(not(feature = "pjrt"))]
+use xla_stub as xla;
 
 use std::cell::RefCell;
 use std::collections::HashMap;

@@ -55,15 +55,6 @@ pub fn scale(x: &mut [f32], s: f32) {
     }
 }
 
-/// Element-wise a ⊙ b into out.
-#[inline]
-pub fn hadamard_into(a: &[f32], b: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(a.len(), b.len());
-    for i in 0..a.len() {
-        out[i] = a[i] * b[i];
-    }
-}
-
 /// Relative distance ‖a−b‖₂ / max(‖b‖₂, 1e-12).
 pub fn rel_dist(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());

@@ -1,6 +1,11 @@
 //! Integration tests over the real AOT artifacts + PJRT runtime.
 //! Require `make artifacts` to have run (they are skipped-with-failure
 //! otherwise, which is intentional: the build is broken without artifacts).
+//!
+//! Gated on the `pjrt` feature — without the `xla` crate the runtime is a
+//! stub and these cannot execute.
+
+#![cfg(feature = "pjrt")]
 
 use sama::bilevel::cls_problem::ClsProblem;
 use sama::bilevel::BilevelProblem;

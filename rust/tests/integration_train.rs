@@ -2,6 +2,12 @@
 //! artifacts, across algorithms, worker counts and apps. Budgets are small —
 //! these verify *system* behaviour (everything wires up, losses move, DDP
 //! replicas agree), not paper-level accuracy (that's `cargo bench`).
+//!
+//! Gated on the `pjrt` feature: they execute AOT artifacts through the
+//! PJRT runtime, which is stubbed out on images without the `xla` crate
+//! (tier-1 runs the artifact-free suite; see tests in `src/`).
+
+#![cfg(feature = "pjrt")]
 
 use sama::apps::pretraining::{self, Method};
 use sama::apps::pruning::{self, PruneMetric};
@@ -86,11 +92,41 @@ fn second_order_baselines_run_on_artifacts() {
 }
 
 #[test]
-fn overlap_off_is_equivalent_in_results() {
-    // overlap changes timing, never numerics: same seeds → same final θ.
+fn overlap_ablation_preserves_quality() {
+    // overlap=true pipelines the λ-reduce behind the next base forward
+    // (one-step-stale λ, §3.3), so bitwise θ equality no longer holds with
+    // ≥2 workers — training quality must be unaffected and both runs
+    // finite; the timing difference itself is asserted in the tier-1
+    // coordinator test `overlap_hides_comm_and_ablation_does_not`.
+    let mut a = base_cfg();
+    a.steps = 40;
+    a.workers = 2;
+    a.overlap = true;
+    let mut b = a.clone();
+    b.overlap = false;
+    let ra = wrench::run(&a, "agnews").unwrap();
+    let rb = wrench::run(&b, "agnews").unwrap();
+    assert!(ra.test_accuracy > 0.25, "overlap=true acc {}", ra.test_accuracy);
+    assert!(rb.test_accuracy > 0.25, "overlap=false acc {}", rb.test_accuracy);
+    // one-step staleness must cost at most noise, not learning quality
+    assert!(
+        (ra.test_accuracy - rb.test_accuracy).abs() < 0.1,
+        "pipelining changed accuracy too much: {} vs {}",
+        ra.test_accuracy,
+        rb.test_accuracy
+    );
+    for r in [&ra, &rb] {
+        assert!(r.report.meta_loss.points.iter().all(|(_, y)| y.is_finite()));
+    }
+}
+
+#[test]
+fn overlap_off_is_equivalent_single_worker() {
+    // with one worker there is no interconnect and no pipelining: the
+    // overlap flag must not change numerics at all.
     let mut a = base_cfg();
     a.steps = 20;
-    a.workers = 2;
+    a.workers = 1;
     a.overlap = true;
     let mut b = a.clone();
     b.overlap = false;
@@ -103,7 +139,7 @@ fn overlap_off_is_equivalent_in_results() {
         .zip(&rb.report.final_theta)
         .map(|(x, y)| (x - y).abs())
         .fold(0.0, f32::max);
-    assert!(d < 1e-5, "overlap changed numerics: max|Δθ| = {d}");
+    assert!(d < 1e-6, "single-worker overlap changed numerics: max|Δθ| = {d}");
 }
 
 #[test]

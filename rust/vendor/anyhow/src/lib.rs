@@ -1,0 +1,203 @@
+//! Minimal offline shim for the [`anyhow`](https://docs.rs/anyhow) API
+//! surface used by the `sama` crate: [`Error`], [`Result`], the [`Context`]
+//! extension trait and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The build image has no registry access, so the real crate cannot be
+//! fetched; this shim is call-compatible for everything in-tree. Like the
+//! real `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that keeps the blanket `From<E: std::error::Error>`
+//! conversion (which powers `?`) coherent with the identity `From<Error>`.
+
+use std::fmt::{self, Display};
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: a root cause plus a stack of human-readable contexts.
+pub struct Error {
+    /// `chain[0]` is the outermost context; the last entry is the root
+    /// cause. Mirrors `anyhow`'s Debug rendering ("Caused by:" list).
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context layer (what `Context::context` does).
+    pub fn context<C: Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message (matches `anyhow`'s `Display`).
+    pub fn root_cause_message(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((head, rest)) => {
+                f.write_str(head)?;
+                if !rest.is_empty() {
+                    f.write_str("\n\nCaused by:")?;
+                    for cause in rest {
+                        write!(f, "\n    {cause}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        // flatten the std source() chain into our context stack
+        let mut chain = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`, as in the real crate.
+pub trait Context<T>: Sized {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let n: i32 = s.parse().context("parsing int")?;
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("42").unwrap(), 42);
+        let err = parse("nope").unwrap_err();
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("parsing int"), "{dbg}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn context_on_option_and_result_of_error() {
+        let none: Option<u8> = None;
+        let e = none.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+
+        let r: Result<u8> = Err(Error::msg("root"));
+        let e = r.with_context(|| format!("layer {}", 1)).unwrap_err();
+        assert_eq!(format!("{e}"), "layer 1");
+        assert!(format!("{e:?}").contains("root"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e}"), "x = 3");
+        fn f(flag: bool) -> Result<()> {
+            ensure!(flag, "flag was {flag}");
+            bail!("reached end")
+        }
+        assert_eq!(format!("{}", f(false).unwrap_err()), "flag was false");
+        assert_eq!(format!("{}", f(true).unwrap_err()), "reached end");
+    }
+}
