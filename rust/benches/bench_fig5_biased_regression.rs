@@ -28,6 +28,7 @@ fn run_algo(algo: Algo, meta_steps: usize) -> (f64, f64, f64) {
     let mut meta_opt = Adam::new(12, 0.5);
     let mut cos_sum = 0.0f64;
 
+    let mut scratch = algos::sama::SamaScratch::new();
     for step in 0..meta_steps {
         // inner solve: closed form (paper App. E evaluates at convergence)
         let w = p.w_star(&lambda);
@@ -46,7 +47,7 @@ fn run_algo(algo: Algo, meta_steps: usize) -> (f64, f64, f64) {
             adam_v: &zeros,
             adam_t: 1.0,
         };
-        let out = algos::meta_grad(algo, &mut p, &ctx).unwrap();
+        let out = algos::meta_grad(algo, &mut p, &ctx, &mut scratch).unwrap();
         let exact = p.exact_meta_grad(&lambda);
         cos_sum += vecops::cosine(&out.grad, &exact) as f64;
         meta_opt.step(&mut lambda, &out.grad);

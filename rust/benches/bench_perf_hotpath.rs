@@ -8,68 +8,180 @@
 
 mod common;
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use sama::bilevel::cls_problem::ClsProblem;
 use sama::bilevel::{BilevelProblem, ParamKind};
-use sama::collective::{CommStats, CommWorld, LinkModel};
+use sama::collective::{BucketPlan, CommStats, CommWorld, LinkModel, ReduceTag};
 use sama::config::MetaOps;
 use sama::data::wrench_sim;
 use sama::metrics::report::{f2, Table};
 use sama::runtime::{params, Runtime};
 use sama::util::bench_loop;
+use sama::util::json::Json;
 use sama::util::rng::Rng;
 
-/// Collective overlap probe: one 256 KiB all-reduce on a 50 MB/s link,
-/// with vs without ~6 ms of compute in the window. Reports the comm-engine
-/// seconds, the worker-blocked seconds and the hidden share — the same
-/// counters `bench_table2_ddp` aggregates over a full run.
-fn comm_overlap_probe() {
-    let link = LinkModel { bandwidth: 50e6, latency: 2e-5 };
-    let spin = |d: Duration| {
-        let t0 = Instant::now();
-        while t0.elapsed() < d {
-            std::hint::black_box(0u64);
-        }
-    };
-    let run = move |overlapped: bool| -> CommStats {
-        let cw = CommWorld::new(2, link);
-        let mut handles = Vec::new();
-        for rank in 0..2 {
-            let cw = Arc::clone(&cw);
-            handles.push(std::thread::spawn(move || {
-                let mut coll = cw.join(rank);
-                for _ in 0..8 {
-                    let p = coll.all_reduce_async(vec![rank as f32; 65536], 8192);
-                    if overlapped {
-                        spin(Duration::from_millis(6));
-                    }
-                    let _ = coll.wait(p);
+const PROBE_ELEMS: usize = 65536; // 256 KiB payload per reduce
+const PROBE_LINK: LinkModel = LinkModel { bandwidth: 50e6, latency: 2e-5 };
+
+fn spin(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::black_box(0u64);
+    }
+}
+
+/// Aggregate outcome of one probe mode (all ranks merged).
+struct ProbeOut {
+    stats: CommStats,
+    /// Rank 0's final bucket size in bytes.
+    bucket_bytes: usize,
+    /// Rank 0's bucket count on the final reduce.
+    bucket_count: u32,
+}
+
+/// Fixed-bucket probe: 8 all-reduces, with or without ~6 ms of compute in
+/// the window — the Tables 8–9 ablation in miniature.
+fn probe_fixed(overlapped: bool) -> ProbeOut {
+    let cw = CommWorld::new(2, PROBE_LINK);
+    let mut handles = Vec::new();
+    for rank in 0..2 {
+        let cw = Arc::clone(&cw);
+        handles.push(std::thread::spawn(move || {
+            let mut coll = cw.join(rank);
+            let mut buckets = 0u32;
+            for _ in 0..8 {
+                let p = coll.all_reduce_async(
+                    vec![rank as f32; PROBE_ELEMS],
+                    8192,
+                    ReduceTag::Theta,
+                );
+                if overlapped {
+                    spin(Duration::from_millis(6));
                 }
-                coll.stats().clone()
-            }));
+                buckets = p.buckets_submitted();
+                let _ = coll.wait(p);
+            }
+            (coll.stats().clone(), buckets)
+        }));
+    }
+    let mut stats = CommStats::default();
+    let mut bucket_count = 0;
+    for (rank, h) in handles.into_iter().enumerate() {
+        let (st, buckets) = h.join().unwrap();
+        stats.merge(&st);
+        if rank == 0 {
+            bucket_count = buckets;
         }
-        let mut total = CommStats::default();
-        for h in handles {
-            total.merge(&h.join().unwrap());
+    }
+    ProbeOut { stats, bucket_bytes: 8192 * 4, bucket_count }
+}
+
+/// Auto-tuned probe: the same payload produced as a stream (~90 ns/elem of
+/// compute behind each bucket), with [`BucketPlan`] rebalancing toward the
+/// comm ≈ producer balance point, profile rank-synced through Ctrl
+/// reduces — the §3.3 streamed schedule in miniature.
+fn probe_autotuned() -> ProbeOut {
+    let cw = CommWorld::new(2, PROBE_LINK);
+    let mut handles = Vec::new();
+    for rank in 0..2 {
+        let cw = Arc::clone(&cw);
+        handles.push(std::thread::spawn(move || {
+            let mut coll = cw.join(rank);
+            let mut plan = BucketPlan::from_bytes(8192 * 4, true);
+            let data = vec![rank as f32; PROBE_ELEMS];
+            let mut last_buckets = 0u32;
+            for _ in 0..16 {
+                let mut pending = coll.begin_reduce(ReduceTag::Theta);
+                let t0 = Instant::now();
+                let mut off = 0;
+                while off < data.len() {
+                    let end = (off + plan.elems()).min(data.len());
+                    // producer: ~90 ns of backward compute per element
+                    spin(Duration::from_nanos(90 * (end - off) as u64));
+                    coll.submit_bucket(&mut pending, data[off..end].to_vec());
+                    off = end;
+                }
+                let producer_secs = t0.elapsed().as_secs_f64();
+                let (_, profile) = coll.wait_profiled(pending);
+                last_buckets = profile.buckets;
+                plan.observe(producer_secs, &profile);
+                if plan.retune_due() {
+                    plan.retune(Some(&mut coll));
+                }
+            }
+            (coll.stats().clone(), plan.bytes(), last_buckets)
+        }));
+    }
+    let mut stats = CommStats::default();
+    let (mut bucket_bytes, mut bucket_count) = (0, 0);
+    for (rank, h) in handles.into_iter().enumerate() {
+        let (st, bytes, buckets) = h.join().unwrap();
+        stats.merge(&st);
+        if rank == 0 {
+            bucket_bytes = bytes;
+            bucket_count = buckets;
         }
-        total
-    };
+    }
+    ProbeOut { stats, bucket_bytes, bucket_count }
+}
+
+/// Collective overlap probe (artifact-free): blocking vs overlapped vs
+/// auto-tuned-streamed, on a 50 MB/s link. Also emits the machine-readable
+/// `BENCH_hotpath.json` so the perf trajectory is tracked across PRs.
+fn comm_overlap_probe() {
+    let blocking = probe_fixed(false);
+    let overlapped = probe_fixed(true);
+    let tuned = probe_autotuned();
+
     let mut t = Table::new(
         "§Perf: collective overlap probe (256 KiB ×8, 2 ranks, 50 MB/s link)",
-        &["mode", "comm s", "blocked s", "hidden %"],
+        &["mode", "comm s", "blocked s", "hidden %", "bucket KiB", "buckets"],
     );
-    for (name, overlapped) in [("blocking wait", false), ("6 ms compute in window", true)] {
-        let st = run(overlapped);
+    for (name, p) in [
+        ("blocking wait", &blocking),
+        ("6 ms compute in window", &overlapped),
+        ("streamed + auto-tuned buckets", &tuned),
+    ] {
         t.row(vec![
             name.into(),
-            f2(st.comm_seconds),
-            f2(st.blocked_seconds),
-            format!("{:.0}%", 100.0 * st.hidden_fraction()),
+            f2(p.stats.comm_seconds),
+            f2(p.stats.blocked_seconds),
+            format!("{:.0}%", 100.0 * p.stats.hidden_fraction()),
+            format!("{:.0}", p.bucket_bytes as f64 / 1024.0),
+            p.bucket_count.to_string(),
         ]);
     }
     t.print();
+
+    // machine-readable perf trajectory (consumed across PRs; artifact-free)
+    let num = Json::Num;
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert("hidden_comm_fraction".into(), num(tuned.stats.hidden_fraction()));
+    obj.insert("bucket_count".into(), num(tuned.bucket_count as f64));
+    obj.insert("chosen_bucket_bytes".into(), num(tuned.bucket_bytes as f64));
+    obj.insert("comm_seconds".into(), num(tuned.stats.comm_seconds));
+    obj.insert("blocked_seconds".into(), num(tuned.stats.blocked_seconds));
+    obj.insert(
+        "hidden_comm_fraction_fixed_overlap".into(),
+        num(overlapped.stats.hidden_fraction()),
+    );
+    obj.insert(
+        "hidden_comm_fraction_blocking".into(),
+        num(blocking.stats.hidden_fraction()),
+    );
+    obj.insert("world".into(), num(2.0));
+    obj.insert("link_bandwidth".into(), num(PROBE_LINK.bandwidth));
+    obj.insert("link_latency".into(), num(PROBE_LINK.latency));
+    obj.insert("probe".into(), t.to_json());
+    let path = std::env::var("SAMA_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    match std::fs::write(&path, format!("{}\n", Json::Obj(obj))) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
 fn main() {

@@ -15,6 +15,7 @@
 mod common;
 
 use sama::apps::wrench;
+use sama::collective::ReduceTag;
 use sama::config::Algo;
 use sama::metrics::memory::{gib, peak_bytes, ArchSpec};
 use sama::metrics::report::{f1, f2, Table};
@@ -33,6 +34,8 @@ fn main() {
             "comm (s)",
             "blocked (s)",
             "hidden comm (%)",
+            "hidden θ/λ (%)",
+            "bucket KiB (final)",
         ],
     );
     let rows: Vec<(Algo, usize, &str)> = vec![
@@ -52,6 +55,16 @@ fn main() {
         let out = wrench::run(&cfg, "agnews").expect("run");
         let per_worker_batch = 48 / workers;
         let mem = gib(peak_bytes(algo, &arch, 48, workers as u64, 10));
+        let totals = out.report.comm_totals();
+        let tag_hidden = |tag: ReduceTag| -> f64 {
+            let ts = totals.tag(tag);
+            if ts.comm_seconds <= 0.0 {
+                0.0
+            } else {
+                100.0 * (ts.comm_seconds - ts.blocked_seconds).max(0.0)
+                    / ts.comm_seconds
+            }
+        };
         t.row(vec![
             algo.name().into(),
             workers.to_string(),
@@ -61,6 +74,12 @@ fn main() {
             f2(out.report.comm_seconds()),
             f2(out.report.blocked_seconds()),
             f1(100.0 * out.report.hidden_comm_fraction()),
+            format!(
+                "{}/{}",
+                f1(tag_hidden(ReduceTag::Theta)),
+                f1(tag_hidden(ReduceTag::Lambda))
+            ),
+            format!("{:.0}", out.report.bucket_elems_final as f64 * 4.0 / 1024.0),
         ]);
     }
     t.print();
@@ -70,8 +89,11 @@ fn main() {
     );
     println!(
         "hidden comm % = 1 − blocked/comm: comm-engine seconds the workers\n\
-         never waited for (pipelined λ-reduce + streamed buckets, §3.3);\n\
-         1-worker rows have no interconnect and report 0."
+         never waited for (layer-streamed θ buckets + pipelined stale-λ\n\
+         drain + streamed λ buckets, §3.3); the θ/λ split shows which\n\
+         stream hides its reduce; 1-worker rows have no interconnect and\n\
+         report 0. bucket KiB is the auto-tuner's final (rank-identical)\n\
+         pick — set bucket_elems= to pin it."
     );
     println!(
         "paper Table 2 reference (GB, samples/s): Neumann 26.0/82.9, \

@@ -67,16 +67,20 @@ pub struct MetaStepCtx<'a> {
     pub adam_t: f32,
 }
 
-/// Dispatch a meta-gradient computation by algorithm.
+/// Dispatch a meta-gradient computation by algorithm. `scratch` is the
+/// caller's long-lived SAMA workspace (the coordinator threads one per
+/// worker); non-SAMA baselines ignore it.
 pub fn meta_grad(
     algo: Algo,
     problem: &mut dyn BilevelProblem,
     ctx: &MetaStepCtx,
+    scratch: &mut sama::SamaScratch,
 ) -> Result<MetaGradOut> {
     match algo {
-        Algo::Sama => sama::meta_grad(problem, ctx, true),
-        Algo::SamaNa => sama::meta_grad(problem, ctx, false),
-        Algo::T1T2 => sama::meta_grad(problem, ctx, false), // unroll pinned by caller
+        Algo::Sama => sama::meta_grad(problem, ctx, true, scratch),
+        Algo::SamaNa => sama::meta_grad(problem, ctx, false, scratch),
+        // unroll pinned by caller
+        Algo::T1T2 => sama::meta_grad(problem, ctx, false, scratch),
         Algo::Neumann => baselines::neumann(problem, ctx),
         Algo::Cg => baselines::cg(problem, ctx),
         Algo::Itd => baselines::itd(problem, ctx),

@@ -21,10 +21,57 @@ use crate::bilevel::BilevelProblem;
 use crate::optim::{perturbation_direction, sama_epsilon};
 use crate::tensor::vecops;
 
+/// Reusable per-worker workspace for [`meta_grad`]: the perturbation
+/// direction, the θ± evaluation point and the output gradient are the three
+/// θ/λ-sized temporaries of a SAMA meta step. `theta_pert` never leaves the
+/// function; `v` and `grad` are handed out inside [`MetaGradOut`] and come
+/// back through [`recycle_v`](SamaScratch::recycle_v) /
+/// [`recycle_grad`](SamaScratch::recycle_grad) once the coordinator is done
+/// with them — so the steady-state meta step allocates nothing here.
+#[derive(Debug, Default)]
+pub struct SamaScratch {
+    v: Vec<f32>,
+    theta_pert: Vec<f32>,
+    grad: Vec<f32>,
+}
+
+impl SamaScratch {
+    pub fn new() -> SamaScratch {
+        SamaScratch::default()
+    }
+
+    /// Return the buffer handed out as [`MetaGradOut::perturb_v`].
+    pub fn recycle_v(&mut self, v: Vec<f32>) {
+        self.v = v;
+    }
+
+    /// Return the buffer handed out as [`MetaGradOut::grad`].
+    pub fn recycle_grad(&mut self, grad: Vec<f32>) {
+        self.grad = grad;
+    }
+
+    /// Take the recycled gradient buffer (cleared) — for callers that
+    /// assemble the meta gradient outside [`meta_grad`], like the
+    /// coordinator's fused-artifact fast path.
+    pub fn take_grad_buf(&mut self) -> Vec<f32> {
+        let mut g = std::mem::take(&mut self.grad);
+        g.clear();
+        g
+    }
+
+    fn take_zeroed(buf: &mut Vec<f32>, n: usize) -> Vec<f32> {
+        let mut b = std::mem::take(buf);
+        b.clear();
+        b.resize(n, 0.0);
+        b
+    }
+}
+
 pub fn meta_grad(
     problem: &mut dyn BilevelProblem,
     ctx: &MetaStepCtx,
     adapt: bool,
+    scratch: &mut SamaScratch,
 ) -> Result<MetaGradOut> {
     let n = problem.n_theta();
     assert_eq!(ctx.theta.len(), n);
@@ -34,8 +81,9 @@ pub fn meta_grad(
 
     // Analytic pass: v = (∂u/∂g) ⊙ g_meta (identity when adapt=false).
     // perturbation_direction writes the diag and multiplies in place — no
-    // per-meta-step clone of the adaptation diagonal.
-    let mut v = vec![0.0f32; n];
+    // per-meta-step clone of the adaptation diagonal, and the buffer itself
+    // is recycled from the previous meta step.
+    let mut v = SamaScratch::take_zeroed(&mut scratch.v, n);
     if adapt {
         perturbation_direction(ctx.base_opt, ctx.g_base, &g_meta, &mut v);
     } else {
@@ -44,19 +92,21 @@ pub fn meta_grad(
 
     let eps = sama_epsilon(ctx.alpha, &v);
 
-    // Passes 2–3: λ-gradient at θ± on the *same* base batch.
-    let mut theta_pert = vec![0.0f32; n];
-    vecops::add_scaled_into(ctx.theta, eps, &v, &mut theta_pert);
-    let (g_plus, _) = problem.lambda_grad(&theta_pert, ctx.lambda, ctx.step)?;
-    vecops::add_scaled_into(ctx.theta, -eps, &v, &mut theta_pert);
-    let (g_minus, _) = problem.lambda_grad(&theta_pert, ctx.lambda, ctx.step)?;
+    // Passes 2–3: λ-gradient at θ± on the *same* base batch, evaluated
+    // through the long-lived `theta_pert` workspace.
+    scratch.theta_pert.clear();
+    scratch.theta_pert.resize(n, 0.0);
+    vecops::add_scaled_into(ctx.theta, eps, &v, &mut scratch.theta_pert);
+    let (g_plus, _) =
+        problem.lambda_grad(&scratch.theta_pert, ctx.lambda, ctx.step)?;
+    vecops::add_scaled_into(ctx.theta, -eps, &v, &mut scratch.theta_pert);
+    let (g_minus, _) =
+        problem.lambda_grad(&scratch.theta_pert, ctx.lambda, ctx.step)?;
 
     let inv = -1.0 / (2.0 * eps);
-    let grad: Vec<f32> = g_plus
-        .iter()
-        .zip(&g_minus)
-        .map(|(p, m)| (p - m) * inv)
-        .collect();
+    let mut grad = std::mem::take(&mut scratch.grad);
+    grad.clear();
+    grad.extend(g_plus.iter().zip(&g_minus).map(|(p, m)| (p - m) * inv));
 
     Ok(MetaGradOut {
         grad,
@@ -117,8 +167,9 @@ mod tests {
         };
         let opt = Sgd::new(8, 0.05, 0.0, 0.0);
         let zeros = vec![0.0; 8];
+        let mut scratch = SamaScratch::new();
         let out =
-            meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), false)
+            meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), false, &mut scratch)
                 .unwrap();
         let exact = p.exact_meta_grad(&lambda);
         let cos = cosine(&out.grad, &exact);
@@ -141,8 +192,11 @@ mod tests {
         };
         let opt = Sgd::new(6, 0.3, 0.0, 0.0);
         let zeros = vec![0.0; 6];
-        let a = meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), true).unwrap();
-        let b = meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), false).unwrap();
+        let mut scratch = SamaScratch::new();
+        let a = meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), true, &mut scratch)
+            .unwrap();
+        let b = meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), false, &mut scratch)
+            .unwrap();
         let cos = cosine(&a.grad, &b.grad);
         assert!(cos > 0.999, "cos = {cos}");
     }
@@ -167,8 +221,11 @@ mod tests {
             opt.step(&mut th, &g);
         }
         let zeros = vec![0.0; 6];
-        let a = meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), true).unwrap();
-        let b = meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), false).unwrap();
+        let mut scratch = SamaScratch::new();
+        let a = meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), true, &mut scratch)
+            .unwrap();
+        let b = meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), false, &mut scratch)
+            .unwrap();
         let cos = cosine(&a.grad, &b.grad);
         assert!(cos < 0.99999, "adaptation had no effect (cos={cos})");
         // both still correlate with the closed form
@@ -188,7 +245,10 @@ mod tests {
         };
         let opt = Sgd::new(4, 0.1, 0.0, 0.0);
         let zeros = vec![0.0; 4];
-        let out = meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), false).unwrap();
+        let mut scratch = SamaScratch::new();
+        let out =
+            meta_grad(&mut p, &ctx(&w, &lambda, &opt, &g_base, &zeros), false, &mut scratch)
+                .unwrap();
         let expect = 1.0 / vecops::norm2(&out.perturb_v).max(1e-12);
         assert!((out.epsilon - expect).abs() < 1e-6 * expect);
         assert_eq!(out.counts.first_order_grads, 3);

@@ -245,6 +245,7 @@ fn coordinator_report_from(w: coordinator::WorkerReport) -> coordinator::TrainRe
         comm: vec![w.comm],
         weight_sums: w.weight_sums,
         weight_counts: w.weight_counts,
+        bucket_elems_final: w.bucket_elems_final,
     }
 }
 

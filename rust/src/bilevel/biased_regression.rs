@@ -19,9 +19,15 @@
 
 use anyhow::Result;
 
-use super::{BaseGrad, BilevelProblem};
+use super::{BaseGrad, BaseGradMeta, BilevelProblem};
 use crate::tensor::{linalg, vecops, Tensor};
 use crate::util::rng::Rng;
+
+/// Column blocks per streamed backward (see
+/// [`BilevelProblem::base_grad_streamed`]): enough segments that the first
+/// is on the wire while most of the backward is still running, few enough
+/// that per-segment overhead stays invisible at this problem size.
+const STREAM_SEGMENTS: usize = 8;
 
 pub struct BiasedRegression {
     pub x: Tensor,       // (n, d) base design
@@ -164,6 +170,47 @@ impl BilevelProblem for BiasedRegression {
         })
     }
 
+    /// Layer-streamed backward: the forward (residual) needs all of w, but
+    /// the gradient's column blocks are independent — each is sunk as soon
+    /// as its Xᵀ-block matvec finishes, so a DDP caller reduces block 0
+    /// while blocks 1.. are still multiplying. Identical op order to
+    /// [`base_grad`](Self::base_grad) (same transpose, same `dot`, same
+    /// scale-then-add), so the concatenation is bitwise equal.
+    fn base_grad_streamed(
+        &mut self,
+        w: &[f32],
+        lambda: &[f32],
+        _step: usize,
+        sink: &mut dyn FnMut(&[f32]),
+    ) -> Result<BaseGradMeta> {
+        let mut r = self.x.matvec(w);
+        for (ri, yi) in r.iter_mut().zip(&self.y) {
+            *ri -= yi;
+        }
+        let xt = self.x.t();
+        let n = self.x.shape()[0];
+        let xtd = xt.data();
+        let seg_elems = self.d.div_ceil(STREAM_SEGMENTS).max(1);
+        let mut seg = Vec::with_capacity(seg_elems);
+        let mut j0 = 0;
+        while j0 < self.d {
+            let j1 = (j0 + seg_elems).min(self.d);
+            seg.clear();
+            for j in j0..j1 {
+                let s = vecops::dot(&xtd[j * n..(j + 1) * n], &r);
+                seg.push(s * 2.0 + 2.0 * self.beta * (w[j] - lambda[j]));
+            }
+            sink(&seg);
+            j0 = j1;
+        }
+        Ok(BaseGradMeta {
+            loss: self.base_loss(w, lambda),
+            sample_losses: vec![],
+            sample_weights: vec![],
+            sample_indices: vec![],
+        })
+    }
+
     /// ∂L_meta/∂w = 2X'ᵀ(X'w−y').
     fn meta_direct_grad(&mut self, w: &[f32], _step: usize) -> Result<(Vec<f32>, f32)> {
         let mut r = self.xp.matvec(w);
@@ -233,6 +280,29 @@ mod tests {
                 }
             },
         );
+    }
+
+    /// The streamed-backward contract: concatenated segments must equal
+    /// `base_grad` **bitwise**, so the coordinator's streamed and
+    /// unstreamed schedules are numerically interchangeable.
+    #[test]
+    fn streamed_base_grad_is_bitwise_identical() {
+        let mut rng = Rng::new(51);
+        let mut p = instance(rng.next_u64());
+        let w = rng.normal_vec(p.d, 1.0);
+        let lam = rng.normal_vec(p.d, 1.0);
+        let full = p.base_grad(&w, &lam, 0).unwrap();
+        let mut streamed = Vec::new();
+        let mut segments = 0usize;
+        let meta = p
+            .base_grad_streamed(&w, &lam, 0, &mut |seg| {
+                streamed.extend_from_slice(seg);
+                segments += 1;
+            })
+            .unwrap();
+        assert!(segments > 1, "expected a multi-segment stream");
+        assert_eq!(streamed, full.grad, "streamed grad differs bitwise");
+        assert_eq!(meta.loss.to_bits(), full.loss.to_bits());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use anyhow::{bail, Result};
 
-use super::{AdaptPerturbOut, BaseGrad, BilevelProblem, ParamKind};
+use super::{AdaptPerturbOut, BaseGrad, BaseGradMeta, BilevelProblem, ParamKind};
 use crate::config::MetaOps;
 use crate::data::ClsDataset;
 use crate::runtime::{Arg, Runtime};
@@ -90,20 +90,21 @@ impl ClsProblem {
         match self.unc_mode {
             UncMode::Zero => Ok(vec![0.0; self.batch]),
             UncMode::Ema { decay } => {
-                let ema = match &mut self.ema_theta {
+                // update the EMA in place, then borrow it — the buffer is
+                // allocated once and reused every call (the old path did a
+                // `theta.to_vec()` + `clone()` per uncertainty evaluation,
+                // two θ-sized allocations on the hot loop)
+                match &mut self.ema_theta {
                     Some(e) => {
                         for (ei, ti) in e.iter_mut().zip(theta) {
                             *ei = decay * *ei + (1.0 - decay) * ti;
                         }
-                        e.clone()
                     }
-                    None => {
-                        self.ema_theta = Some(theta.to_vec());
-                        theta.to_vec()
-                    }
-                };
+                    None => self.ema_theta = Some(theta.to_vec()),
+                }
                 let cur = self.logits(theta, tokens, labels)?;
-                let old = self.logits(&ema, tokens, labels)?;
+                let ema = self.ema_theta.as_deref().expect("ema initialized");
+                let old = self.logits(ema, tokens, labels)?;
                 let c = self.n_classes;
                 let mut unc = vec![0.0f32; self.batch];
                 let mut pc = vec![0.0f32; c];
@@ -223,6 +224,36 @@ impl BilevelProblem for ClsProblem {
         let loss = out.pop().unwrap()[0];
         let grad = out.pop().unwrap();
         Ok(BaseGrad { grad, loss, sample_losses, sample_weights, sample_indices })
+    }
+
+    /// Streamed backward: PJRT returns the flat gradient from one fused
+    /// artifact exec, so true mid-kernel streaming is not possible — but
+    /// the layout manifest knows the per-layer segment boundaries, and
+    /// re-exposing them lets the caller put layer 0 on the wire while the
+    /// remaining layers are still being sliced/submitted (and fill the rest
+    /// of the window with the work behind the reduce). Per-layer backward
+    /// artifacts would make this a true mid-backward stream (ROADMAP).
+    fn base_grad_streamed(
+        &mut self,
+        theta: &[f32],
+        lambda: &[f32],
+        step: usize,
+        sink: &mut dyn FnMut(&[f32]),
+    ) -> Result<BaseGradMeta> {
+        let (grad, meta) = self.base_grad(theta, lambda, step)?.into_parts();
+        let mut covered = 0usize;
+        for e in &self.runtime.config.layout_theta {
+            let end = e.offset + e.size;
+            if e.offset != covered || end > grad.len() {
+                break; // defensive: non-contiguous layout → flat tail below
+            }
+            sink(&grad[e.offset..end]);
+            covered = end;
+        }
+        if covered < grad.len() {
+            sink(&grad[covered..]);
+        }
+        Ok(meta)
     }
 
     fn meta_direct_grad(&mut self, theta: &[f32], step: usize) -> Result<(Vec<f32>, f32)> {

@@ -36,6 +36,30 @@ pub struct BaseGrad {
     pub sample_indices: Vec<usize>,
 }
 
+impl BaseGrad {
+    /// Split into (gradient, bookkeeping metadata) — the streamed gradient
+    /// API delivers the former through a sink and returns the latter.
+    pub fn into_parts(self) -> (Vec<f32>, BaseGradMeta) {
+        let BaseGrad { grad, loss, sample_losses, sample_weights, sample_indices } =
+            self;
+        (
+            grad,
+            BaseGradMeta { loss, sample_losses, sample_weights, sample_indices },
+        )
+    }
+}
+
+/// Scalar/bookkeeping outputs of a base gradient evaluation, without the
+/// gradient itself — which [`BilevelProblem::base_grad_streamed`] delivers
+/// incrementally through its sink while the backward is still running.
+#[derive(Clone, Debug)]
+pub struct BaseGradMeta {
+    pub loss: f32,
+    pub sample_losses: Vec<f32>,
+    pub sample_weights: Vec<f32>,
+    pub sample_indices: Vec<usize>,
+}
+
 /// Output of the fused adapt+perturb artifact (SAMA's analytic pass).
 #[derive(Clone, Debug)]
 pub struct AdaptPerturbOut {
@@ -59,6 +83,29 @@ pub trait BilevelProblem {
     /// ∂L_base/∂θ at (θ, λ) on batch `step`.
     fn base_grad(&mut self, theta: &[f32], lambda: &[f32], step: usize)
         -> Result<BaseGrad>;
+
+    /// Streamed variant of [`base_grad`](Self::base_grad): delivers the
+    /// gradient as consecutive layout-ordered segments through `sink` as
+    /// each segment materializes (per layer / per column block), so a DDP
+    /// caller can start reducing early segments while later ones are still
+    /// being computed — the sub-tensor analogue of autograd-hook bucketing.
+    ///
+    /// Contract: the concatenated segments must equal `base_grad(..).grad`
+    /// **bitwise** on the same `step` (the coordinator's streamed and
+    /// unstreamed schedules must be numerically interchangeable), and the
+    /// returned metadata must match the corresponding [`BaseGrad`] fields.
+    /// The default computes the full gradient, then yields one segment.
+    fn base_grad_streamed(
+        &mut self,
+        theta: &[f32],
+        lambda: &[f32],
+        step: usize,
+        sink: &mut dyn FnMut(&[f32]),
+    ) -> Result<BaseGradMeta> {
+        let (grad, meta) = self.base_grad(theta, lambda, step)?.into_parts();
+        sink(&grad);
+        Ok(meta)
+    }
 
     /// Direct gradient ∂L_meta/∂θ on the meta batch for `step`.
     fn meta_direct_grad(&mut self, theta: &[f32], step: usize)

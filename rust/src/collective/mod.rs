@@ -14,6 +14,10 @@
 //!    soon as the bucket fills), and each bucket comes back on its own
 //!    done-channel message, so [`Collective::try_progress`] can observe
 //!    partial completion;
+//!  * **tagged out-of-order completion** — every reduce carries a
+//!    [`ReduceTag`] and owns a private done channel, so multiple reduces
+//!    (θ and λ) can be in flight simultaneously and waited in *any* order.
+//!    [`CommStats`] attributes comm/blocked seconds per tag;
 //!  * **a dedicated comm thread per worker** — buckets are ring-reduced by
 //!    the comm engine while PJRT compute proceeds, exactly like NCCL
 //!    streams overlap CUDA compute. `overlap=false` in the coordinator
@@ -21,6 +25,10 @@
 //!  * **reusable hop buffers** — the ring circulates its message buffers
 //!    (each engine recycles the allocation it just received for its next
 //!    send), so the steady-state hot path does not touch the allocator;
+//!  * **adaptive bucket sizing** — [`BucketPlan`] replaces a static bucket
+//!    knob with a byte-targeted size rebalanced from per-bucket producer
+//!    vs. link profiles (DDP-style), kept rank-consistent by syncing the
+//!    profile through a tiny `Ctrl`-tagged reduce;
 //!  * **a simulated link** — every hop sleeps latency + bytes/bandwidth, so
 //!    the comm-bound regime (and the overlap win) is reproducible on one
 //!    host.
@@ -29,8 +37,11 @@
 //! one bucket-streamed all-reduce overlapped with first-order compute.
 //!
 //! **Contract** (standard DDP): all ranks submit the same reduces, with the
-//! same bucket boundaries, in the same order — and wait for them in submit
-//! order.
+//! same bucket boundaries, in the same *submission* order — the comm engine
+//! ring-reduces buckets strictly in that order. What is relaxed relative to
+//! DDP's `wait()` is the completion side: waits may happen in any order
+//! (each reduce owns its done channel), so a θ-reduce can be drained while
+//! an earlier-submitted λ-reduce is still on the wire, and vice versa.
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -65,6 +76,62 @@ impl LinkModel {
             Duration::from_secs_f64(secs)
         }
     }
+
+    /// Analytic ring all-reduce seconds for one bucket of `elems` f32s
+    /// across `world` ranks: 2(K−1) hops, each moving ≈ elems/K elements.
+    /// The [`BucketPlan`] tests pin the tuner against this closed form.
+    pub fn ring_bucket_secs(&self, elems: usize, world: usize) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        let hops = 2 * (world - 1);
+        let chunk_bytes = elems.div_ceil(world) * 4;
+        hops as f64 * (self.latency + chunk_bytes as f64 / self.bandwidth)
+    }
+}
+
+/// Which logical gradient stream a reduce belongs to. Tags drive the
+/// per-stream comm/blocked attribution in [`CommStats`] — the quantity the
+/// Tables 8–9 ablation needs split by stream to show *which* reduce is
+/// hidden.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReduceTag {
+    /// Base-gradient (θ) all-reduce, every base step.
+    Theta,
+    /// Meta-gradient (λ) all-reduce, once per meta update.
+    Lambda,
+    /// Control-plane traffic (bucket auto-tuner profile sync, tests).
+    Ctrl,
+}
+
+impl ReduceTag {
+    pub const ALL: [ReduceTag; 3] =
+        [ReduceTag::Theta, ReduceTag::Lambda, ReduceTag::Ctrl];
+
+    fn idx(self) -> usize {
+        match self {
+            ReduceTag::Theta => 0,
+            ReduceTag::Lambda => 1,
+            ReduceTag::Ctrl => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ReduceTag::Theta => "theta",
+            ReduceTag::Lambda => "lambda",
+            ReduceTag::Ctrl => "ctrl",
+        }
+    }
+}
+
+/// Per-tag slice of the aggregate counters.
+#[derive(Clone, Debug, Default)]
+pub struct TagStats {
+    pub reduces: u64,
+    pub buckets: u64,
+    pub comm_seconds: f64,
+    pub blocked_seconds: f64,
 }
 
 /// Aggregate communication statistics for one worker's comm engine.
@@ -78,6 +145,9 @@ pub struct CommStats {
     /// hidden by overlap. Non-blocking `try_progress()` polls charge
     /// nothing: between polls the worker is free to do real work.
     pub blocked_seconds: f64,
+    /// The same comm/blocked attribution split by [`ReduceTag`]
+    /// (indexed via [`CommStats::tag`]).
+    pub per_tag: [TagStats; 3],
 }
 
 impl CommStats {
@@ -95,12 +165,23 @@ impl CommStats {
         }
     }
 
+    /// Counters for one reduce stream.
+    pub fn tag(&self, tag: ReduceTag) -> &TagStats {
+        &self.per_tag[tag.idx()]
+    }
+
     /// Fold another worker's counters into this one (fleet aggregation).
     pub fn merge(&mut self, other: &CommStats) {
         self.reduces += other.reduces;
         self.bytes_sent += other.bytes_sent;
         self.comm_seconds += other.comm_seconds;
         self.blocked_seconds += other.blocked_seconds;
+        for (mine, theirs) in self.per_tag.iter_mut().zip(&other.per_tag) {
+            mine.reduces += theirs.reduces;
+            mine.buckets += theirs.buckets;
+            mine.comm_seconds += theirs.comm_seconds;
+            mine.blocked_seconds += theirs.blocked_seconds;
+        }
     }
 }
 
@@ -110,12 +191,15 @@ struct RingMsg {
     chunk: Vec<f32>,
 }
 
-/// One bucket of one reduce, submitted to the comm engine.
+/// One bucket of one reduce, submitted to the comm engine. Carries the
+/// reduce's private done channel, so completed buckets route to the right
+/// [`PendingReduce`] regardless of the order the worker waits in.
 struct JobMsg {
     job: u64,
     bucket: u32,
     offset: usize,
     data: Vec<f32>,
+    done_tx: Sender<BucketDone>,
 }
 
 /// One bucket of one reduce, completed by the comm engine.
@@ -132,24 +216,38 @@ pub struct Collective {
     rank: usize,
     world: usize,
     job_tx: Sender<JobMsg>,
-    done_rx: Receiver<BucketDone>,
     next_job: u64,
     stats: CommStats,
     /// Exact bytes-on-the-wire accumulator; `stats.bytes_sent` is this
     /// rounded once (a per-call integer division would truncate ~world
     /// bytes per reduce and drift with call count).
     bytes_exact: f64,
+    /// Recycled bucket payload buffers: [`Collective::absorb`] banks every
+    /// completed bucket's allocation here, and submitters take them back
+    /// via [`Collective::take_bucket_buf`] — so after warm-up the worker
+    /// side of the bucket stream allocates nothing, mirroring the engines'
+    /// hop-buffer recycling.
+    spare_buckets: Vec<Vec<f32>>,
 }
 
 /// Pending asynchronous all-reduce: a set of independently completing
-/// buckets plus the assembled output buffer.
+/// buckets plus the assembled output buffer. Owns its done channel, so any
+/// number of reduces can be pending at once and resolved in any order.
 pub struct PendingReduce {
     id: u64,
+    tag: ReduceTag,
     /// Buckets submitted so far.
     buckets: u32,
     /// Buckets whose reduced payload has been absorbed into `out`.
     buckets_done: u32,
+    /// Comm-engine seconds absorbed so far (per-bucket, summed).
+    comm_secs: f64,
     out: Vec<f32>,
+    /// Cloned into each submitted bucket's [`JobMsg`]; dropped when the
+    /// final wait starts so a dead comm engine disconnects the channel
+    /// (a panic, not a silent hang).
+    done_tx: Option<Sender<BucketDone>>,
+    done_rx: Receiver<BucketDone>,
 }
 
 impl PendingReduce {
@@ -160,6 +258,10 @@ impl PendingReduce {
 
     pub fn is_empty(&self) -> bool {
         self.out.is_empty()
+    }
+
+    pub fn tag(&self) -> ReduceTag {
+        self.tag
     }
 
     /// Buckets completed so far (monotone, updated by
@@ -173,6 +275,18 @@ impl PendingReduce {
     }
 }
 
+/// Per-reduce completion profile returned by [`Collective::wait_profiled`]
+/// — the raw material for [`BucketPlan`] rebalancing.
+#[derive(Clone, Copy, Debug)]
+pub struct ReduceProfile {
+    pub buckets: u32,
+    pub elems: usize,
+    /// Comm-engine seconds summed over this reduce's buckets.
+    pub comm_seconds: f64,
+    /// Seconds the worker spent blocked inside this wait.
+    pub blocked_seconds: f64,
+}
+
 /// Factory for a K-worker collective: builds the comm-thread ring.
 pub struct CommWorld {
     world: usize,
@@ -184,7 +298,6 @@ pub struct CommWorld {
 
 struct Seat {
     job_tx: Sender<JobMsg>,
-    done_rx: Receiver<BucketDone>,
 }
 
 impl CommWorld {
@@ -202,15 +315,14 @@ impl CommWorld {
         let mut handles = Vec::with_capacity(world);
         for rank in 0..world {
             let (job_tx, job_rx) = channel::<JobMsg>();
-            let (done_tx, done_rx) = channel::<BucketDone>();
             // comm thread `rank` sends to rank+1, receives from rank-1
             let to_next = ring_txs[(rank + 1) % world].clone();
             let from_prev = ring_rxs[rank].take().unwrap();
             let link = link;
             handles.push(std::thread::spawn(move || {
-                comm_engine(rank, world, link, job_rx, done_tx, to_next, from_prev);
+                comm_engine(rank, world, link, job_rx, to_next, from_prev);
             }));
-            seats.push(Some(Seat { job_tx, done_rx }));
+            seats.push(Some(Seat { job_tx }));
         }
         Arc::new(CommWorld {
             world,
@@ -229,10 +341,10 @@ impl CommWorld {
             rank,
             world: self.world,
             job_tx: seat.job_tx,
-            done_rx: seat.done_rx,
             next_job: 0,
             stats: CommStats::default(),
             bytes_exact: 0.0,
+            spare_buckets: Vec::new(),
         }
     }
 
@@ -256,14 +368,14 @@ impl Drop for CommWorld {
 }
 
 /// The per-rank communication engine: ring-reduces buckets in submission
-/// order, posting each completed bucket independently. All ranks must
-/// submit buckets in the same order (standard DDP contract).
+/// order, posting each completed bucket to its reduce's private done
+/// channel. All ranks must submit buckets in the same order (standard DDP
+/// contract); waits are free to happen in any order.
 fn comm_engine(
     rank: usize,
     world: usize,
     link: LinkModel,
     job_rx: Receiver<JobMsg>,
-    done_tx: Sender<BucketDone>,
     to_next: Sender<RingMsg>,
     from_prev: Receiver<RingMsg>,
 ) {
@@ -271,7 +383,7 @@ fn comm_engine(
     // allocation it last received from its ring predecessor, so after
     // warm-up no hop allocates.
     let mut spare: Vec<f32> = Vec::new();
-    while let Ok(JobMsg { job, bucket, offset, mut data }) = job_rx.recv() {
+    while let Ok(JobMsg { job, bucket, offset, mut data, done_tx }) = job_rx.recv() {
         let t0 = Instant::now();
         if world > 1 {
             ring_all_reduce(
@@ -292,12 +404,9 @@ fn comm_engine(
             }
         }
         let secs = t0.elapsed().as_secs_f64();
-        if done_tx
-            .send(BucketDone { job, bucket, offset, data, secs })
-            .is_err()
-        {
-            return;
-        }
+        // a dropped PendingReduce (worker abandoned the reduce) is not an
+        // engine error — later jobs may still be live
+        let _ = done_tx.send(BucketDone { job, bucket, offset, data, secs });
     }
 }
 
@@ -376,14 +485,55 @@ impl Collective {
         &self.stats
     }
 
+    /// Take a recycled bucket buffer (cleared; allocates only before the
+    /// pool has warmed up). Fill it and hand it to
+    /// [`submit_bucket`](Collective::submit_bucket); the allocation comes
+    /// back to the pool when the reduced bucket is absorbed.
+    pub fn take_bucket_buf(&mut self, capacity: usize) -> Vec<f32> {
+        match self.spare_buckets.pop() {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => Vec::with_capacity(capacity),
+        }
+    }
+
+    /// Return an unused bucket buffer to the pool (e.g. an empty tail
+    /// buffer after a stream divided evenly into buckets).
+    pub fn recycle_bucket_buf(&mut self, buf: Vec<f32>) {
+        self.bank_bucket_buf(buf);
+    }
+
+    fn bank_bucket_buf(&mut self, buf: Vec<f32>) {
+        // bound the pool: enough for two reduces' worth of in-flight
+        // buckets, without hoarding a whole gradient history
+        const MAX_SPARES: usize = 16;
+        if self.spare_buckets.len() < MAX_SPARES && buf.capacity() > 0 {
+            self.spare_buckets.push(buf);
+        }
+    }
+
     /// Open a streaming all-reduce: buckets are appended with
     /// [`submit_bucket`](Collective::submit_bucket) and start reducing
-    /// immediately, before later buckets exist.
-    pub fn begin_reduce(&mut self) -> PendingReduce {
+    /// immediately, before later buckets exist. Any number of reduces may
+    /// be open at once; they complete independently (tagged channels).
+    pub fn begin_reduce(&mut self, tag: ReduceTag) -> PendingReduce {
         let id = self.next_job;
         self.next_job += 1;
         self.stats.reduces += 1;
-        PendingReduce { id, buckets: 0, buckets_done: 0, out: Vec::new() }
+        self.stats.per_tag[tag.idx()].reduces += 1;
+        let (done_tx, done_rx) = channel::<BucketDone>();
+        PendingReduce {
+            id,
+            tag,
+            buckets: 0,
+            buckets_done: 0,
+            comm_secs: 0.0,
+            out: Vec::new(),
+            done_tx: Some(done_tx),
+            done_rx,
+        }
     }
 
     /// Append one bucket to an open reduce and hand it to the comm engine.
@@ -399,11 +549,17 @@ impl Collective {
             * (self.world as f64 - 1.0)
             / self.world as f64;
         self.stats.bytes_sent = self.bytes_exact.round() as u64;
+        self.stats.per_tag[pending.tag.idx()].buckets += 1;
         let msg = JobMsg {
             job: pending.id,
             bucket: pending.buckets,
             offset,
             data,
+            done_tx: pending
+                .done_tx
+                .as_ref()
+                .expect("reduce already waited")
+                .clone(),
         };
         pending.buckets += 1;
         self.job_tx.send(msg).expect("comm engine alive");
@@ -412,9 +568,14 @@ impl Collective {
     /// Start an asynchronous bucketed all-reduce of a fully materialized
     /// buffer; compute may proceed. Equivalent to `begin_reduce` +
     /// `submit_bucket` per `bucket_elems` slice.
-    pub fn all_reduce_async(&mut self, data: Vec<f32>, bucket_elems: usize) -> PendingReduce {
+    pub fn all_reduce_async(
+        &mut self,
+        data: Vec<f32>,
+        bucket_elems: usize,
+        tag: ReduceTag,
+    ) -> PendingReduce {
         let bucket_elems = bucket_elems.max(1);
-        let mut pending = self.begin_reduce();
+        let mut pending = self.begin_reduce(tag);
         if data.len() <= bucket_elems {
             // single bucket: move the buffer, no copy
             self.submit_bucket(&mut pending, data);
@@ -422,33 +583,44 @@ impl Collective {
             let mut off = 0;
             while off < data.len() {
                 let end = (off + bucket_elems).min(data.len());
-                self.submit_bucket(&mut pending, data[off..end].to_vec());
+                let mut b = self.take_bucket_buf(end - off);
+                b.extend_from_slice(&data[off..end]);
+                self.submit_bucket(&mut pending, b);
                 off = end;
             }
         }
         pending
     }
 
-    /// Absorb one completed bucket into the pending reduce's output.
+    /// Absorb one completed bucket into the pending reduce's output; the
+    /// payload's allocation goes back to the bucket-buffer pool.
     fn absorb(&mut self, pending: &mut PendingReduce, msg: BucketDone) {
-        assert_eq!(
-            msg.job, pending.id,
-            "reduces must be progressed/waited in submit order"
-        );
+        debug_assert_eq!(msg.job, pending.id, "bucket routed to wrong reduce");
         debug_assert!(msg.bucket < pending.buckets);
         pending.out[msg.offset..msg.offset + msg.data.len()]
             .copy_from_slice(&msg.data);
         pending.buckets_done += 1;
+        pending.comm_secs += msg.secs;
         self.stats.comm_seconds += msg.secs;
+        self.stats.per_tag[pending.tag.idx()].comm_seconds += msg.secs;
+        self.bank_bucket_buf(msg.data);
     }
 
     /// Non-blocking: absorb any buckets the engine has finished; returns
     /// how many of this reduce's buckets are complete so far.
+    ///
+    /// Engine-death detection happens at [`wait`](Collective::wait), which
+    /// drops the reduce's local sender and then panics on disconnect; while
+    /// the reduce is still open for submission its own `done_tx` keeps the
+    /// channel connected, so polling sees `Empty` (like an NCCL query on a
+    /// dead peer) — callers must eventually `wait` the reduce.
     pub fn try_progress(&mut self, pending: &mut PendingReduce) -> u32 {
         while pending.buckets_done < pending.buckets {
-            match self.done_rx.try_recv() {
+            match pending.done_rx.try_recv() {
                 Ok(msg) => self.absorb(pending, msg),
                 Err(TryRecvError::Empty) => break,
+                // unreachable while pending.done_tx is Some, kept as a
+                // guard should the sealing rules ever change
                 Err(TryRecvError::Disconnected) => {
                     panic!("comm engine died mid-reduce")
                 }
@@ -459,21 +631,199 @@ impl Collective {
 
     /// Wait for all of a pending reduce's buckets; returns the averaged
     /// buffer. Only time spent actually blocking on unfinished buckets is
-    /// charged to `blocked_seconds`.
-    pub fn wait(&mut self, mut pending: PendingReduce) -> Vec<f32> {
+    /// charged to `blocked_seconds`. Reduces may be waited in any order —
+    /// each owns its done channel, so waiting a later-submitted reduce
+    /// first simply buffers the earlier one's completions.
+    pub fn wait(&mut self, pending: PendingReduce) -> Vec<f32> {
+        self.wait_profiled(pending).0
+    }
+
+    /// [`wait`](Collective::wait), also returning the reduce's completion
+    /// profile (bucket count, comm/blocked seconds) for bucket retuning.
+    pub fn wait_profiled(
+        &mut self,
+        mut pending: PendingReduce,
+    ) -> (Vec<f32>, ReduceProfile) {
+        // No more buckets can be submitted (pending is consumed): drop our
+        // sender so an engine death disconnects the channel and the recv
+        // below panics instead of hanging forever.
+        pending.done_tx = None;
+        let mut blocked = 0.0f64;
         while pending.buckets_done < pending.buckets {
             let t0 = Instant::now();
-            let msg = self.done_rx.recv().expect("comm engine alive");
-            self.stats.blocked_seconds += t0.elapsed().as_secs_f64();
+            let msg = pending.done_rx.recv().expect("comm engine alive");
+            let dt = t0.elapsed().as_secs_f64();
+            blocked += dt;
+            self.stats.blocked_seconds += dt;
+            self.stats.per_tag[pending.tag.idx()].blocked_seconds += dt;
             self.absorb(&mut pending, msg);
         }
-        pending.out
+        let profile = ReduceProfile {
+            buckets: pending.buckets,
+            elems: pending.out.len(),
+            comm_seconds: pending.comm_secs,
+            blocked_seconds: blocked,
+        };
+        (pending.out, profile)
     }
 
     /// Blocking all-reduce (overlap disabled / ablation path).
-    pub fn all_reduce_sync(&mut self, data: Vec<f32>, bucket_elems: usize) -> Vec<f32> {
-        let p = self.all_reduce_async(data, bucket_elems);
+    pub fn all_reduce_sync(
+        &mut self,
+        data: Vec<f32>,
+        bucket_elems: usize,
+        tag: ReduceTag,
+    ) -> Vec<f32> {
+        let p = self.all_reduce_async(data, bucket_elems, tag);
         self.wait(p)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive bucket sizing
+// ---------------------------------------------------------------------------
+
+/// Byte-targeted gradient bucket sizing with DDP-style feedback
+/// rebalancing.
+///
+/// Static mode pins the size. Adaptive mode accumulates, per streamed
+/// reduce, the producer seconds (time the worker took to materialize the
+/// gradient) and the comm-engine seconds, and periodically nudges the
+/// bucket size toward the comm ≈ producer balance point. Per bucket of `e`
+/// elements the two costs are
+///
+/// ```text
+/// t_comm(e) = a + b·e    (ring latency + wire time)
+/// t_prod(e) = c·e        (producer streams at a fixed element rate)
+/// ```
+///
+/// and the fixed-point update `e ← e · t_comm(e)/t_prod(e) = a/c + (b/c)·e`
+/// converges linearly to the analytic balance `e* = a/(c − b)` whenever the
+/// link outruns the producer per element (`b < c`); in the comm-bound
+/// regime (`b ≥ c`) it pushes to `max_elems`, which maximizes latency
+/// amortization — the right answer in both cases. Each step's ratio is
+/// clamped to ×/÷4 so one noisy profile cannot blow up the size.
+///
+/// **Rank consistency.** Bucket boundaries must be identical on every rank
+/// (the ring matches buckets positionally), so with `world > 1` the
+/// profile is averaged across ranks through a tiny `Ctrl`-tagged blocking
+/// reduce before the update — all ranks then apply the same arithmetic to
+/// the same bytes and land on the same size.
+#[derive(Clone, Debug)]
+pub struct BucketPlan {
+    elems: usize,
+    min_elems: usize,
+    max_elems: usize,
+    adaptive: bool,
+    /// Streamed reduces between retunes.
+    retune_every: u32,
+    acc_producer_secs: f64,
+    acc_comm_secs: f64,
+    acc_buckets: u64,
+    reduces_seen: u32,
+    retunes: u64,
+}
+
+impl BucketPlan {
+    pub const MIN_ELEMS: usize = 1 << 10;
+    pub const MAX_ELEMS: usize = 1 << 22;
+    const RETUNE_EVERY: u32 = 4;
+
+    /// Plan starting at `elems` per bucket; `adaptive=false` pins it (the
+    /// static `bucket_elems` override).
+    pub fn new(elems: usize, adaptive: bool) -> BucketPlan {
+        let elems = elems.max(1);
+        BucketPlan {
+            elems,
+            // never shrink below the static seed's own floor
+            min_elems: Self::MIN_ELEMS.min(elems),
+            max_elems: Self::MAX_ELEMS.max(elems),
+            adaptive,
+            retune_every: Self::RETUNE_EVERY,
+            acc_producer_secs: 0.0,
+            acc_comm_secs: 0.0,
+            acc_buckets: 0,
+            reduces_seen: 0,
+            retunes: 0,
+        }
+    }
+
+    /// Byte-targeted constructor (DDP speaks bytes; gradients here are f32).
+    pub fn from_bytes(bytes: usize, adaptive: bool) -> BucketPlan {
+        BucketPlan::new(bytes.div_ceil(4), adaptive)
+    }
+
+    /// Current bucket size in elements.
+    pub fn elems(&self) -> usize {
+        self.elems
+    }
+
+    /// Current bucket size in bytes.
+    pub fn bytes(&self) -> usize {
+        self.elems * 4
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.adaptive
+    }
+
+    /// Retunes applied so far.
+    pub fn retunes(&self) -> u64 {
+        self.retunes
+    }
+
+    /// Record one streamed reduce: total producer seconds (gradient
+    /// materialization time) and the reduce's completion profile.
+    pub fn observe(&mut self, producer_secs: f64, profile: &ReduceProfile) {
+        if !self.adaptive || profile.buckets == 0 {
+            return;
+        }
+        self.acc_producer_secs += producer_secs;
+        self.acc_comm_secs += profile.comm_seconds;
+        self.acc_buckets += profile.buckets as u64;
+        self.reduces_seen += 1;
+    }
+
+    /// Enough profiles accumulated for a retune?
+    pub fn retune_due(&self) -> bool {
+        self.adaptive
+            && self.reduces_seen >= self.retune_every
+            && self.acc_buckets > 0
+    }
+
+    /// Rebalance from the accumulated profile. With `Some(coll)` (world >
+    /// 1) the per-bucket means are first averaged across ranks through a
+    /// `Ctrl` reduce so every rank computes the identical new size; all
+    /// ranks must therefore call this at the same schedule point. Returns
+    /// the new size when a retune happened.
+    pub fn retune(&mut self, coll: Option<&mut Collective>) -> Option<usize> {
+        if !self.retune_due() {
+            return None;
+        }
+        let mut prod = (self.acc_producer_secs / self.acc_buckets as f64) as f32;
+        let mut comm = (self.acc_comm_secs / self.acc_buckets as f64) as f32;
+        if let Some(coll) = coll {
+            if coll.world() > 1 {
+                // ring all-gather hands every rank the same bytes, so the
+                // update below is bitwise rank-identical
+                let synced =
+                    coll.all_reduce_sync(vec![prod, comm], 2, ReduceTag::Ctrl);
+                prod = synced[0];
+                comm = synced[1];
+            }
+        }
+        self.acc_producer_secs = 0.0;
+        self.acc_comm_secs = 0.0;
+        self.acc_buckets = 0;
+        self.reduces_seen = 0;
+        if prod <= 0.0 || comm <= 0.0 {
+            return None;
+        }
+        let ratio = (comm as f64 / prod as f64).clamp(0.25, 4.0);
+        self.elems = ((self.elems as f64 * ratio).round() as usize)
+            .clamp(self.min_elems, self.max_elems);
+        self.retunes += 1;
+        Some(self.elems)
     }
 }
 
@@ -504,7 +854,7 @@ mod tests {
             let out = run_world(world, LinkModel::instant(), move |rank, coll| {
                 let data: Vec<f32> =
                     (0..10).map(|i| (rank * 100 + i) as f32).collect();
-                coll.all_reduce_sync(data, 4)
+                coll.all_reduce_sync(data, 4, ReduceTag::Theta)
             });
             for rank in 0..world {
                 for i in 0..10 {
@@ -526,7 +876,7 @@ mod tests {
     fn uneven_lengths_and_small_buckets() {
         let out = run_world(3, LinkModel::instant(), |rank, coll| {
             let data = vec![rank as f32 + 1.0; 17]; // 17 not divisible by 3
-            coll.all_reduce_sync(data, 5)
+            coll.all_reduce_sync(data, 5, ReduceTag::Theta)
         });
         for o in &out {
             for &x in o {
@@ -538,8 +888,13 @@ mod tests {
     #[test]
     fn multiple_reduces_stay_ordered() {
         let out = run_world(2, LinkModel::instant(), |rank, coll| {
-            let p1 = coll.all_reduce_async(vec![rank as f32; 8], 8);
-            let p2 = coll.all_reduce_async(vec![10.0 * rank as f32; 8], 8);
+            let p1 =
+                coll.all_reduce_async(vec![rank as f32; 8], 8, ReduceTag::Theta);
+            let p2 = coll.all_reduce_async(
+                vec![10.0 * rank as f32; 8],
+                8,
+                ReduceTag::Lambda,
+            );
             let a = coll.wait(p1);
             let b = coll.wait(p2);
             vec![a[0], b[0]]
@@ -550,6 +905,88 @@ mod tests {
         }
     }
 
+    /// The heart of the tagged design: two reduces in flight, waited in
+    /// *reverse* submission order — and in submit order, and with
+    /// interleaved try_progress — must all yield bitwise-identical reduced
+    /// vectors and consistent per-tag stats. (The pre-tag collective
+    /// panicked on any wait that was not in submit order.)
+    #[test]
+    fn reduces_complete_out_of_order() {
+        #[derive(Clone, Copy, PartialEq)]
+        enum WaitOrder {
+            SubmitOrder,
+            Reversed,
+            Interleaved,
+        }
+        let mut reference: Option<Vec<Vec<f32>>> = None;
+        for order in [WaitOrder::SubmitOrder, WaitOrder::Reversed, WaitOrder::Interleaved] {
+            let out = run_world(3, LinkModel::instant(), move |rank, coll| {
+                let theta: Vec<f32> =
+                    (0..97).map(|i| (i as f32) * 0.31 + rank as f32).collect();
+                let lambda: Vec<f32> =
+                    (0..41).map(|i| (i as f32) * -0.17 + rank as f32).collect();
+                // both reduces in flight simultaneously, θ submitted first
+                let mut pt = coll.all_reduce_async(theta, 16, ReduceTag::Theta);
+                let mut pl =
+                    coll.all_reduce_async(lambda, 16, ReduceTag::Lambda);
+                let (t, l) = match order {
+                    WaitOrder::SubmitOrder => {
+                        let t = coll.wait(pt);
+                        (t, coll.wait(pl))
+                    }
+                    WaitOrder::Reversed => {
+                        // λ waited first, while θ is still pending
+                        let l = coll.wait(pl);
+                        (coll.wait(pt), l)
+                    }
+                    WaitOrder::Interleaved => {
+                        // poll both until done, then drain
+                        for _ in 0..100 {
+                            coll.try_progress(&mut pt);
+                            coll.try_progress(&mut pl);
+                            if pt.buckets_done() == pt.buckets_submitted()
+                                && pl.buckets_done() == pl.buckets_submitted()
+                            {
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_micros(20));
+                        }
+                        (coll.wait(pt), coll.wait(pl))
+                    }
+                };
+                let st = coll.stats();
+                // per-tag attribution is complete and consistent
+                assert_eq!(st.tag(ReduceTag::Theta).reduces, 1);
+                assert_eq!(st.tag(ReduceTag::Lambda).reduces, 1);
+                assert_eq!(st.tag(ReduceTag::Theta).buckets, 7); // ceil(97/16)
+                assert_eq!(st.tag(ReduceTag::Lambda).buckets, 3); // ceil(41/16)
+                let tag_comm: f64 = ReduceTag::ALL
+                    .iter()
+                    .map(|&tg| st.tag(tg).comm_seconds)
+                    .sum();
+                let tag_blocked: f64 = ReduceTag::ALL
+                    .iter()
+                    .map(|&tg| st.tag(tg).blocked_seconds)
+                    .sum();
+                assert!((tag_comm - st.comm_seconds).abs() < 1e-12);
+                assert!((tag_blocked - st.blocked_seconds).abs() < 1e-12);
+                let mut v = t;
+                v.extend(l);
+                v
+            });
+            match &reference {
+                None => reference = Some(out),
+                Some(r) => {
+                    // bitwise identical across wait orders
+                    assert!(
+                        r == &out,
+                        "wait order changed the reduced values"
+                    );
+                }
+            }
+        }
+    }
+
     /// The heart of the streaming design: a worker can submit bucket 0,
     /// see it complete (`try_progress`), and only then produce + submit
     /// bucket 1 — impossible with an all-or-nothing pending reduce.
@@ -557,7 +994,7 @@ mod tests {
     fn buckets_complete_independently_while_streaming() {
         let link = LinkModel { bandwidth: 1e8, latency: 5e-5 };
         let out = run_world(2, link, |rank, coll| {
-            let mut p = coll.begin_reduce();
+            let mut p = coll.begin_reduce(ReduceTag::Theta);
             coll.submit_bucket(&mut p, vec![rank as f32; 100]);
             // poll until bucket 0 is fully reduced; bucket 1 not submitted
             while coll.try_progress(&mut p) < 1 {
@@ -583,15 +1020,21 @@ mod tests {
     #[test]
     fn streamed_reduce_counts_once_in_stats() {
         let out = run_world(2, LinkModel::instant(), |rank, coll| {
-            let mut p = coll.begin_reduce();
+            let mut p = coll.begin_reduce(ReduceTag::Lambda);
             for _ in 0..4 {
                 coll.submit_bucket(&mut p, vec![rank as f32; 16]);
             }
             let _ = coll.wait(p);
-            vec![coll.stats().reduces as f32]
+            vec![
+                coll.stats().reduces as f32,
+                coll.stats().tag(ReduceTag::Lambda).reduces as f32,
+                coll.stats().tag(ReduceTag::Lambda).buckets as f32,
+            ]
         });
         for o in &out {
             assert_eq!(o[0], 1.0);
+            assert_eq!(o[1], 1.0);
+            assert_eq!(o[2], 4.0);
         }
     }
 
@@ -609,7 +1052,7 @@ mod tests {
         };
         let out = run_world(2, link, move |rank, coll| {
             let data = vec![rank as f32; 1024];
-            let p = coll.all_reduce_async(data, 256);
+            let p = coll.all_reduce_async(data, 256, ReduceTag::Theta);
             busy(); // overlapped compute
             let _ = coll.wait(p);
             vec![
@@ -630,7 +1073,7 @@ mod tests {
     #[test]
     fn bytes_accounting_scales_with_world() {
         let out = run_world(4, LinkModel::instant(), |_, coll| {
-            let _ = coll.all_reduce_sync(vec![1.0; 1000], 250);
+            let _ = coll.all_reduce_sync(vec![1.0; 1000], 250, ReduceTag::Theta);
             vec![coll.stats().bytes_sent as f32]
         });
         // ring all-reduce moves 2(K-1)/K · bytes per rank; the f64
@@ -650,7 +1093,8 @@ mod tests {
     fn bytes_accounting_does_not_truncate_per_call() {
         let out = run_world(3, LinkModel::instant(), |_, coll| {
             for _ in 0..30 {
-                let _ = coll.all_reduce_sync(vec![1.0; 250], 64);
+                let _ =
+                    coll.all_reduce_sync(vec![1.0; 250], 64, ReduceTag::Theta);
             }
             vec![coll.stats().bytes_sent as f32]
         });
@@ -660,5 +1104,107 @@ mod tests {
             "bytes {} vs exact {expect}",
             out[0][0]
         );
+    }
+
+    // ---- BucketPlan -------------------------------------------------------
+
+    /// Feed the tuner synthetic profiles from a [`LinkModel`] closed form
+    /// and a fixed producer rate; it must converge to within 2× of the
+    /// analytic comm ≈ producer balance point — from both directions.
+    #[test]
+    fn auto_tuner_converges_to_balance_point() {
+        let link = LinkModel { bandwidth: 1e8, latency: 1e-4 };
+        let world = 4usize;
+        let producer_elems_per_sec = 1e7f64;
+        // t_comm(e) = a + b·e with a = 2(K−1)·lat, b = 8(K−1)/(K·BW);
+        // t_prod(e) = e / rate ⇒ e* = a / (1/rate − b)
+        let a = 2.0 * (world as f64 - 1.0) * link.latency;
+        let b = 8.0 * (world as f64 - 1.0) / (world as f64 * link.bandwidth);
+        let c = 1.0 / producer_elems_per_sec;
+        assert!(c > b, "test setup must be producer-bound");
+        let e_star = a / (c - b);
+
+        for start in [256usize, 1 << 16] {
+            let mut plan = BucketPlan::new(start, true);
+            for _ in 0..60 {
+                let e = plan.elems();
+                let profile = ReduceProfile {
+                    buckets: 1,
+                    elems: e,
+                    comm_seconds: link.ring_bucket_secs(e, world),
+                    blocked_seconds: 0.0,
+                };
+                plan.observe(e as f64 / producer_elems_per_sec, &profile);
+                plan.retune(None);
+            }
+            let e = plan.elems() as f64;
+            assert!(
+                e > e_star / 2.0 && e < e_star * 2.0,
+                "start {start}: tuned {e} vs analytic balance {e_star:.0}"
+            );
+            assert!(plan.retunes() > 0);
+        }
+    }
+
+    /// Comm-bound regime (producer outruns the link per element): the
+    /// tuner must grow buckets to the cap, maximizing latency amortization.
+    #[test]
+    fn auto_tuner_maxes_out_when_comm_bound() {
+        let link = LinkModel { bandwidth: 1e6, latency: 1e-5 };
+        let world = 2usize;
+        let mut plan = BucketPlan::new(1 << 12, true);
+        for _ in 0..80 {
+            let e = plan.elems();
+            let profile = ReduceProfile {
+                buckets: 1,
+                elems: e,
+                comm_seconds: link.ring_bucket_secs(e, world),
+                blocked_seconds: 0.0,
+            };
+            // producer is 100× faster than the wire
+            plan.observe(e as f64 / 1e9, &profile);
+            plan.retune(None);
+        }
+        assert_eq!(plan.elems(), BucketPlan::MAX_ELEMS);
+    }
+
+    /// Static plans never move, whatever the profile says.
+    #[test]
+    fn static_plan_is_pinned() {
+        let mut plan = BucketPlan::new(2048, false);
+        let profile = ReduceProfile {
+            buckets: 4,
+            elems: 8192,
+            comm_seconds: 1.0,
+            blocked_seconds: 0.0,
+        };
+        plan.observe(1e-3, &profile);
+        assert!(!plan.retune_due());
+        assert_eq!(plan.retune(None), None);
+        assert_eq!(plan.elems(), 2048);
+    }
+
+    /// Multi-rank retune: the synced profile must leave every rank with
+    /// the identical bucket size (bucket boundaries are a collective
+    /// contract), even when local timings disagree wildly.
+    #[test]
+    fn synced_retune_is_rank_identical() {
+        let out = run_world(3, LinkModel::instant(), |rank, coll| {
+            let mut plan = BucketPlan::new(4096, true);
+            for _ in 0..BucketPlan::RETUNE_EVERY {
+                let profile = ReduceProfile {
+                    buckets: 2,
+                    elems: 8192,
+                    // ranks observe very different comm seconds
+                    comm_seconds: 1e-3 * (rank as f64 + 1.0),
+                    blocked_seconds: 0.0,
+                };
+                plan.observe(4e-3, &profile);
+            }
+            let new = plan.retune(Some(coll)).expect("retune due");
+            vec![new as f32]
+        });
+        assert_eq!(out[0], out[1]);
+        assert_eq!(out[1], out[2]);
     }
 }

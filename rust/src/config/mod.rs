@@ -97,7 +97,14 @@ pub struct TrainConfig {
     /// Simulated per-message latency (seconds).
     pub link_latency: f64,
     /// Gradient bucket size in elements (comm–comp overlap granularity).
+    /// With `bucket_auto` this is only the *initial* size; setting
+    /// `bucket_elems=` explicitly pins it (turns `bucket_auto` off).
     pub bucket_elems: usize,
+    /// Adaptive bucket sizing: rebalance the bucket size toward the
+    /// comm ≈ producer balance point from per-bucket profiles (DDP-style),
+    /// rank-synced so bucket boundaries stay a collective contract. Takes
+    /// effect with `overlap` + `stream_grads` and ≥2 workers.
+    pub bucket_auto: bool,
     /// Overlap communication with computation (the paper's §3.3 strategy).
     /// With ≥2 workers this also pipelines the λ-gradient reduce behind the
     /// next base forward (one-step-stale λ, DDP-style).
@@ -129,6 +136,7 @@ impl Default for TrainConfig {
             link_bandwidth: 8e9,
             link_latency: 20e-6,
             bucket_elems: 1 << 16,
+            bucket_auto: true,
             overlap: true,
             stream_grads: true,
             extra: BTreeMap::new(),
@@ -172,7 +180,13 @@ impl TrainConfig {
                 self.link_latency = value.parse().context("link_latency")?
             }
             "bucket_elems" => {
-                self.bucket_elems = value.parse().context("bucket_elems")?
+                self.bucket_elems = value.parse().context("bucket_elems")?;
+                // an explicit size is a static override (DDP's
+                // bucket_cap_mb analogue): the auto-tuner stands down
+                self.bucket_auto = false;
+            }
+            "bucket_auto" => {
+                self.bucket_auto = value.parse().context("bucket_auto")?
             }
             "overlap" => self.overlap = value.parse().context("overlap")?,
             "stream_grads" => {
@@ -203,7 +217,15 @@ impl TrainConfig {
         let j = Json::parse(&text).context("config json")?;
         let mut cfg = TrainConfig::default();
         let obj = j.as_obj().context("config must be a JSON object")?;
-        for (k, v) in obj {
+        // `bucket_auto` must be applied after `bucket_elems` (whose setter
+        // pins the plan): JSON objects are unordered (BTreeMap iterates
+        // alphabetically, auto before elems), so a file asking for both an
+        // initial size AND auto-tuning would otherwise silently lose auto.
+        let ordered = obj
+            .iter()
+            .filter(|(k, _)| k.as_str() != "bucket_auto")
+            .chain(obj.iter().filter(|(k, _)| k.as_str() == "bucket_auto"));
+        for (k, v) in ordered {
             let vs = match v {
                 Json::Str(s) => s.clone(),
                 Json::Num(n) => {
@@ -237,6 +259,7 @@ mod tests {
     #[test]
     fn overrides_apply() {
         let mut c = TrainConfig::default();
+        assert!(c.bucket_auto, "auto-tuning is the default");
         c.apply_overrides(&[
             "algo=neumann".into(),
             "workers=4".into(),
@@ -251,7 +274,30 @@ mod tests {
         assert!(!c.stream_grads);
         assert!(!c.overlap);
         assert_eq!(c.bucket_elems, 4096);
+        // an explicit bucket size pins the plan (static override) ...
+        assert!(!c.bucket_auto);
         assert_eq!(c.extra_or::<f32>("noise", 0.0), 0.3);
+        // ... unless auto is re-enabled after it
+        c.apply_overrides(&["bucket_auto=true".into()]).unwrap();
+        assert!(c.bucket_auto);
+    }
+
+    /// A JSON file may ask for an initial bucket size AND auto-tuning:
+    /// `bucket_auto` is applied last regardless of (unordered) key order,
+    /// so the `bucket_elems` setter's auto-off override does not win.
+    #[test]
+    fn json_bucket_auto_survives_explicit_bucket_elems() {
+        let path = std::env::temp_dir().join("sama_cfg_bucket_auto_test.json");
+        std::fs::write(
+            &path,
+            r#"{"bucket_auto": true, "bucket_elems": 8192, "workers": 2}"#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_json_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(cfg.bucket_elems, 8192);
+        assert!(cfg.bucket_auto, "bucket_auto lost to key ordering");
+        assert_eq!(cfg.workers, 2);
     }
 
     #[test]

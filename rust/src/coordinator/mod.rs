@@ -1,27 +1,37 @@
 //! The bilevel training coordinator — the paper's system contribution (§3.3)
 //! as a leader/worker runtime.
 //!
-//! ## Pipelined schedule (per worker, `overlap=true`)
+//! ## Three-stream pipelined schedule (per worker, `overlap=true`)
 //!
 //! ```text
 //! for step in 0..steps:
-//!     base pass:  g ← ∂L_base/∂θ on the local shard          (PJRT)
-//!                 ── the λ-reduce submitted at the previous meta step
-//!                    finishes *behind* this forward/backward; it is
-//!                    drained here and λ ← AdamStep(λ, ĝ_λ) applied ──
-//!                 all-reduce(g)  [streamed buckets]           (comm engine)
-//!                 overlap window: loss curve + per-sample
-//!                                 weight bookkeeping          (compute)
-//!                 wait(g); θ ← AdamStep(θ, ḡ)                 (L1 kernel)
+//!     base pass — the backward is LAYER-STREAMED (base_grad_streamed):
+//!       stream A (θ buckets):   each gradient segment the backward emits
+//!                               fills byte-targeted buckets; submit_bucket
+//!                               fires MID-backward, so early layers are on
+//!                               the ring while later layers still compute
+//!       stream B (stale λ):     the λ-reduce submitted at the previous
+//!                               meta step drains via try_progress between
+//!                               θ buckets; once the backward ends, its
+//!                               deferred λ ← AdamStep(λ, ĝ_λ) runs INSIDE
+//!                               the θ-reduce's window (out-of-order wait —
+//!                               λ resolves while θ is still on the wire)
+//!       overlap window:         λ drain + λ step + loss curve + per-sample
+//!                               weight bookkeeping
+//!       wait(θ); θ ← AdamStep(θ, ḡ)                        (L1 kernel)
+//!     every few steps: bucket retune — per-bucket producer vs. comm-engine
+//!       profiles are averaged through a tiny Ctrl-tagged reduce, then every
+//!       rank applies the identical comm≈compute rebalance (BucketPlan), so
+//!       bucket boundaries stay a collective contract
 //!     every `unroll` steps — meta pass (SAMA placement, Fig. 2):
-//!                 pass 1  g_meta ← ∂L_meta/∂θ        LOCAL, no sync
-//!                 fused   v, ε, θ±  (adapt+perturb)   LOCAL   (L1 kernel)
-//!                 pass 2  g_λ⁺ ← ∂L_base(θ⁺)/∂λ       LOCAL, no sync
-//!                 pass 3  g_λ⁻ ← ∂L_base(θ⁻)/∂λ       → ĝ_λ buckets are
-//!                         *streamed* to the collective, interleaved
-//!                         slice-by-slice with the F2SA θ-nudge; the
-//!                         in-flight reduce then rides behind the NEXT
-//!                         base forward (drained at the top of step+1)
+//!       pass 1  g_meta ← ∂L_meta/∂θ        LOCAL, no sync
+//!       fused   v, ε, θ±  (adapt+perturb)   LOCAL   (L1 kernel)
+//!       pass 2  g_λ⁺ ← ∂L_base(θ⁺)/∂λ       LOCAL, no sync
+//!       pass 3  g_λ⁻ ← ∂L_base(θ⁻)/∂λ       → stream C (λ buckets):
+//!               ĝ_λ is streamed to the collective interleaved slice-by-
+//!               slice with the F2SA θ-nudge; the in-flight reduce then
+//!               rides behind the NEXT base forward+streamed backward and
+//!               is drained as stream B of step+1
 //! ```
 //!
 //! Gradient synchronization happens **once** per meta update (plus the
@@ -33,22 +43,27 @@
 //! is pipelined across the meta→base boundary: the next base forward runs
 //! against a one-step-stale λ while ĝ_λ is still on the wire (standard
 //! DDP-style delayed update; the meta pass itself always sees the fully
-//! updated λ). `overlap=false` degrades every all-reduce to a blocking
-//! submit-then-wait with no work in the window, so `blocked_seconds ≈
-//! comm_seconds` and the Tables 8–9 ablation measures a real difference.
-//! Single-worker runs have no interconnect and never pipeline, so analytic
-//! convergence tests are unaffected by the overlap flag.
+//! updated λ). The tagged collective lets the θ- and λ-reduces resolve in
+//! either order, so neither stream ever parks the worker for the other.
+//! `overlap=false` degrades every all-reduce to a blocking submit-then-wait
+//! with no work in the window, so `blocked_seconds ≈ comm_seconds` and the
+//! Tables 8–9 ablation measures a real difference. Single-worker runs have
+//! no interconnect and never pipeline, so analytic convergence tests are
+//! unaffected by the overlap flag.
 
 pub mod checkpoint;
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::algos::sama::SamaScratch;
 use crate::algos::{self, MetaStepCtx};
-use crate::bilevel::{BilevelProblem, ParamKind};
+use crate::bilevel::{BaseGradMeta, BilevelProblem, ParamKind};
 use crate::collective::{
-    Collective, CommStats, CommWorld, LinkModel, PendingReduce,
+    BucketPlan, Collective, CommStats, CommWorld, LinkModel, PendingReduce,
+    ReduceTag,
 };
 use crate::config::{Algo, TrainConfig};
 use crate::metrics::Series;
@@ -92,6 +107,9 @@ pub struct WorkerReport {
     pub weight_sums: Vec<f32>,
     pub weight_counts: Vec<u32>,
     pub exec_seconds: f64,
+    /// Gradient bucket size (elements) the run ended on — the static knob,
+    /// or the auto-tuner's final pick (rank-identical by construction).
+    pub bucket_elems_final: usize,
 }
 
 /// Merged training outcome.
@@ -107,6 +125,9 @@ pub struct TrainReport {
     pub comm: Vec<CommStats>,
     pub weight_sums: Vec<f32>,
     pub weight_counts: Vec<u32>,
+    /// Final gradient bucket size in elements (see
+    /// [`WorkerReport::bucket_elems_final`]).
+    pub bucket_elems_final: usize,
 }
 
 impl TrainReport {
@@ -180,7 +201,7 @@ pub fn train(
         LinkModel { bandwidth: cfg.link_bandwidth, latency: cfg.link_latency }
     };
     let comm_world = CommWorld::new(world, link);
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
 
     let reports: Vec<WorkerReport> = std::thread::scope(|scope| {
         let mut handles = Vec::new();
@@ -242,6 +263,7 @@ fn merge_reports(
         comm,
         weight_sums,
         weight_counts,
+        bucket_elems_final: lead.bucket_elems_final,
     })
 }
 
@@ -332,6 +354,27 @@ fn apply_lambda_step(
     Ok(())
 }
 
+/// The overlap window's bookkeeping for one base step: loss curve, sample
+/// counters, per-sample weight accumulation. One implementation — both
+/// ablation arms run exactly this, only its position in the schedule moves.
+fn bookkeep(
+    meta: &BaseGradMeta,
+    step: usize,
+    samples: &mut u64,
+    base_loss: &mut Series,
+    weight_sums: &mut [f32],
+    weight_counts: &mut [u32],
+) {
+    *samples += meta.sample_indices.len().max(1) as u64;
+    base_loss.push(step as f64, meta.loss as f64);
+    if !weight_sums.is_empty() {
+        for (i, &idx) in meta.sample_indices.iter().enumerate() {
+            weight_sums[idx] += meta.sample_weights[i];
+            weight_counts[idx] += 1;
+        }
+    }
+}
+
 /// Submit ĝ_λ for reduction while applying the F2SA θ-nudge.
 ///
 /// With `stream_grads`, the gradient goes out bucket-by-bucket interleaved
@@ -339,22 +382,28 @@ fn apply_lambda_step(
 /// the ring while the worker is still doing first-order compute — the
 /// sub-tensor analogue of DDP firing bucket all-reduces from autograd
 /// hooks. Otherwise the whole buffer is submitted, then the nudge applied.
+/// Consumed λ-gradient/perturbation buffers are recycled into `scratch`.
 fn submit_lambda_reduce(
     coll: &mut Collective,
     cfg: &TrainConfig,
+    plan: &BucketPlan,
     out: algos::MetaGradOut,
     theta: &mut [f32],
+    scratch: &mut SamaScratch,
 ) -> PendingReduce {
-    let nudge = !out.perturb_v.is_empty() && out.epsilon > 0.0;
+    let algos::MetaGradOut { grad, perturb_v, epsilon, .. } = out;
+    let nudge = !perturb_v.is_empty() && epsilon > 0.0;
     if !cfg.stream_grads {
-        let pending = coll.all_reduce_async(out.grad, cfg.bucket_elems);
+        let pending =
+            coll.all_reduce_async(grad, plan.elems(), ReduceTag::Lambda);
         if nudge {
-            vecops::axpy(-out.epsilon, &out.perturb_v, theta);
+            vecops::axpy(-epsilon, &perturb_v, theta);
         }
+        scratch.recycle_v(perturb_v);
         return pending;
     }
-    let n = out.grad.len();
-    let bucket = cfg.bucket_elems.max(1);
+    let n = grad.len();
+    let bucket = plan.elems().max(1);
     let n_buckets = n.div_ceil(bucket);
     // split the nudge into as many slices as there are λ buckets so every
     // submission has compute right behind it
@@ -363,25 +412,29 @@ fn submit_lambda_reduce(
     } else {
         0
     };
-    let mut pending = coll.begin_reduce();
+    let mut pending = coll.begin_reduce(ReduceTag::Lambda);
     let (mut goff, mut toff) = (0usize, 0usize);
     while goff < n {
         let gend = (goff + bucket).min(n);
-        coll.submit_bucket(&mut pending, out.grad[goff..gend].to_vec());
+        let mut b = coll.take_bucket_buf(gend - goff);
+        b.extend_from_slice(&grad[goff..gend]);
+        coll.submit_bucket(&mut pending, b);
         goff = gend;
         if t_chunk > 0 && toff < theta.len() {
             let tend = (toff + t_chunk).min(theta.len());
             vecops::axpy(
-                -out.epsilon,
-                &out.perturb_v[toff..tend],
+                -epsilon,
+                &perturb_v[toff..tend],
                 &mut theta[toff..tend],
             );
             toff = tend;
         }
     }
     if nudge && toff < theta.len() {
-        vecops::axpy(-out.epsilon, &out.perturb_v[toff..], &mut theta[toff..]);
+        vecops::axpy(-epsilon, &perturb_v[toff..], &mut theta[toff..]);
     }
+    scratch.recycle_grad(grad);
+    scratch.recycle_v(perturb_v);
     pending
 }
 
@@ -415,58 +468,127 @@ fn run_worker(
     let mut weight_counts = vec![0u32; track_n];
     let mut samples = 0u64;
     let mut g_base_last = vec![0.0f32; n_theta];
+    let mut scratch = SamaScratch::new();
 
     // T1–T2 / DARTS is definitionally one-step unrolling.
     let unroll = if cfg.algo == Algo::T1T2 { 1 } else { cfg.unroll.max(1) };
     // λ-reduce pipelining across the meta→base boundary: only meaningful
     // (and only exercised) with a real interconnect.
     let pipeline_lambda = cfg.overlap && coll.world() > 1;
+    // Layer-streamed base backward: θ buckets fire mid-backward.
+    let stream_base = cfg.overlap && cfg.stream_grads;
+    // Bucket auto-tuning needs streamed producer profiles and a real link;
+    // a static override (`bucket_auto=false`) pins the size.
+    let adaptive =
+        cfg.bucket_auto && stream_base && coll.world() > 1;
+    let mut plan = BucketPlan::new(cfg.bucket_elems, adaptive);
     let mut pending_lambda: Option<PendingReduce> = None;
-    let t_start = std::time::Instant::now();
+    let t_start = Instant::now();
 
     for step in 0..cfg.steps {
         // ---- base pass -------------------------------------------------
-        let bg = problem.base_grad(&theta, &lambda, step)?;
-
-        // The λ-reduce submitted at the previous meta step has been riding
-        // behind the base forward/backward above — drain it and apply the
-        // deferred λ update (one-step-stale pipeline, overlap=true only).
-        if let Some(p) = pending_lambda.take() {
-            let g_lambda = coll.wait(p);
-            apply_lambda_step(problem, &mut lambda, &mut meta_state, &g_lambda)?;
-        }
-
-        let crate::bilevel::BaseGrad {
-            grad,
-            loss,
-            sample_weights,
-            sample_indices,
-            ..
-        } = bg;
-        // per-step bookkeeping: the overlap window's work for the base
-        // reduce (one copy — both ablation arms must stay identical)
-        let mut bookkeep = || {
-            samples += sample_indices.len().max(1) as u64;
-            base_loss.push(step as f64, loss as f64);
-            if track_n > 0 {
-                for (i, &idx) in sample_indices.iter().enumerate() {
-                    weight_sums[idx] += sample_weights[i];
-                    weight_counts[idx] += 1;
-                }
+        let g_synced = if stream_base {
+            // Streamed: the backward emits gradient segments; full buckets
+            // go on the wire immediately (stream A), and between buckets
+            // the previous meta step's λ-reduce absorbs any finished
+            // buckets (stream B) without blocking.
+            let bucket = plan.elems().max(1);
+            let mut pending = coll.begin_reduce(ReduceTag::Theta);
+            let mut buf: Vec<f32> = coll.take_bucket_buf(bucket);
+            let t_produce = Instant::now();
+            let meta = {
+                let coll = &mut *coll;
+                let pending = &mut pending;
+                let lam = &mut pending_lambda;
+                let buf = &mut buf;
+                problem.base_grad_streamed(
+                    &theta,
+                    &lambda,
+                    step,
+                    &mut |seg: &[f32]| {
+                        let mut rest = seg;
+                        while !rest.is_empty() {
+                            let take = (bucket - buf.len()).min(rest.len());
+                            buf.extend_from_slice(&rest[..take]);
+                            rest = &rest[take..];
+                            if buf.len() == bucket {
+                                let next = coll.take_bucket_buf(bucket);
+                                let full = std::mem::replace(buf, next);
+                                coll.submit_bucket(pending, full);
+                                if let Some(p) = lam.as_mut() {
+                                    coll.try_progress(p);
+                                }
+                            }
+                        }
+                    },
+                )?
+            };
+            let producer_secs = t_produce.elapsed().as_secs_f64();
+            if !buf.is_empty() {
+                coll.submit_bucket(&mut pending, buf);
+            } else {
+                coll.recycle_bucket_buf(buf);
             }
-        };
-        let g_synced = if cfg.overlap {
-            // submit first; bookkeeping fills the overlap window while the
-            // buckets circulate the ring
-            let pending = coll.all_reduce_async(grad, cfg.bucket_elems);
-            bookkeep();
-            coll.wait(pending)
-        } else {
-            // ablation: block through the whole reduce, then do the same
-            // bookkeeping with nothing in flight
-            let g = coll.all_reduce_sync(grad, cfg.bucket_elems);
-            bookkeep();
+            // The λ-reduce has had the whole backward to complete; drain
+            // it and run the deferred λ ← AdamStep *inside* the θ-reduce's
+            // window (tagged out-of-order wait).
+            if let Some(p) = pending_lambda.take() {
+                let g_lambda = coll.wait(p);
+                apply_lambda_step(problem, &mut lambda, &mut meta_state, &g_lambda)?;
+            }
+            bookkeep(
+                &meta,
+                step,
+                &mut samples,
+                &mut base_loss,
+                &mut weight_sums,
+                &mut weight_counts,
+            );
+            let (g, profile) = coll.wait_profiled(pending);
+            plan.observe(producer_secs, &profile);
+            if plan.retune_due() {
+                let sync = if coll.world() > 1 { Some(&mut *coll) } else { None };
+                plan.retune(sync);
+            }
             g
+        } else {
+            let bg = problem.base_grad(&theta, &lambda, step)?;
+            // Unstreamed overlap: drain the pipelined λ-reduce right after
+            // the base backward (its pre-PR-2 position).
+            if let Some(p) = pending_lambda.take() {
+                let g_lambda = coll.wait(p);
+                apply_lambda_step(problem, &mut lambda, &mut meta_state, &g_lambda)?;
+            }
+            let (grad, meta) = bg.into_parts();
+            let g = if cfg.overlap {
+                // submit first; bookkeeping fills the overlap window while
+                // the buckets circulate the ring
+                let pending =
+                    coll.all_reduce_async(grad, plan.elems(), ReduceTag::Theta);
+                bookkeep(
+                    &meta,
+                    step,
+                    &mut samples,
+                    &mut base_loss,
+                    &mut weight_sums,
+                    &mut weight_counts,
+                );
+                coll.wait(pending)
+            } else {
+                // ablation: block through the whole reduce, then do the
+                // same bookkeeping with nothing in flight
+                let g =
+                    coll.all_reduce_sync(grad, plan.elems(), ReduceTag::Theta);
+                bookkeep(
+                    &meta,
+                    step,
+                    &mut samples,
+                    &mut base_loss,
+                    &mut weight_sums,
+                    &mut weight_counts,
+                );
+                g
+            }
         };
         g_base_last.copy_from_slice(&g_synced);
 
@@ -508,16 +630,25 @@ fn run_worker(
                 &base_state,
                 &g_base_last,
                 step,
+                &mut scratch,
             )?;
             meta_loss.push(step as f64, out.meta_loss as f64);
 
             if cfg.overlap {
                 // SAMA's single synchronization point: stream ĝ_λ buckets
                 // interleaved with the F2SA θ-nudge ...
-                let pending = submit_lambda_reduce(coll, cfg, out, &mut theta);
+                let pending = submit_lambda_reduce(
+                    coll,
+                    cfg,
+                    &plan,
+                    out,
+                    &mut theta,
+                    &mut scratch,
+                );
                 if pipeline_lambda {
                     // ... then let the reduce ride behind the next base
-                    // forward; drained at the top of step+1.
+                    // forward + streamed backward; drained there as
+                    // stream B.
                     pending_lambda = Some(pending);
                 } else {
                     let g_lambda = coll.wait(pending);
@@ -531,11 +662,13 @@ fn run_worker(
             } else {
                 // ablation: blocking semantics — the full reduce happens
                 // with the worker parked, the nudge strictly after.
+                let algos::MetaGradOut { grad, perturb_v, epsilon, .. } = out;
                 let g_lambda =
-                    coll.all_reduce_sync(out.grad, cfg.bucket_elems);
-                if !out.perturb_v.is_empty() && out.epsilon > 0.0 {
-                    vecops::axpy(-out.epsilon, &out.perturb_v, &mut theta);
+                    coll.all_reduce_sync(grad, plan.elems(), ReduceTag::Lambda);
+                if !perturb_v.is_empty() && epsilon > 0.0 {
+                    vecops::axpy(-epsilon, &perturb_v, &mut theta);
                 }
+                scratch.recycle_v(perturb_v);
                 apply_lambda_step(
                     problem,
                     &mut lambda,
@@ -565,11 +698,13 @@ fn run_worker(
         weight_sums,
         weight_counts,
         exec_seconds: t_start.elapsed().as_secs_f64(),
+        bucket_elems_final: plan.elems(),
     })
 }
 
 /// One meta-gradient computation, preferring the fused L1 artifact for
 /// SAMA's adapt+perturb when the problem provides it.
+#[allow(clippy::too_many_arguments)]
 fn meta_step(
     cfg: &TrainConfig,
     problem: &mut dyn BilevelProblem,
@@ -578,6 +713,7 @@ fn meta_step(
     base_state: &OptState,
     g_base: &[f32],
     step: usize,
+    scratch: &mut SamaScratch,
 ) -> Result<algos::MetaGradOut> {
     // Fast path: full SAMA with an Adam base → fused artifact pipeline.
     if cfg.algo == Algo::Sama && matches!(base_state.kind, BaseOpt::Adam) {
@@ -595,11 +731,10 @@ fn meta_step(
             let (g_plus, _) = problem.lambda_grad(&ap.theta_plus, lambda, step)?;
             let (g_minus, _) = problem.lambda_grad(&ap.theta_minus, lambda, step)?;
             let inv = -1.0 / (2.0 * ap.epsilon);
-            let grad: Vec<f32> = g_plus
-                .iter()
-                .zip(&g_minus)
-                .map(|(p, m)| (p - m) * inv)
-                .collect();
+            let mut grad = scratch.take_grad_buf();
+            grad.extend(
+                g_plus.iter().zip(&g_minus).map(|(p, m)| (p - m) * inv),
+            );
             return Ok(algos::MetaGradOut {
                 grad,
                 meta_loss: ml,
@@ -627,7 +762,7 @@ fn meta_step(
         adam_v: &base_state.v,
         adam_t: (base_state.t + 1) as f32,
     };
-    algos::meta_grad(cfg.algo, problem, &ctx)
+    algos::meta_grad(cfg.algo, problem, &ctx, scratch)
 }
 
 /// Convenience single-worker entry for analytic problems (tests, Fig. 5).
@@ -741,6 +876,47 @@ mod tests {
         assert!(rep.meta_loss.points.is_empty());
     }
 
+    /// The streamed and unstreamed base-backward schedules must be
+    /// numerically interchangeable: same problem, same seed, stream_grads
+    /// on/off → bitwise-identical final parameters (single worker, so the
+    /// collective is an identity and only the schedule differs).
+    #[test]
+    fn streamed_base_backward_matches_unstreamed_bitwise() {
+        let run = |stream: bool| {
+            let mut rng = Rng::new(99);
+            let mut p = BiasedRegression::random(&mut rng, 40, 30, 8, 2.0);
+            let cfg = TrainConfig {
+                steps: 120,
+                stream_grads: stream,
+                overlap: true,
+                ..small_cfg(Algo::Sama)
+            };
+            train_single(
+                &cfg,
+                &mut p,
+                vec![0.0; 8],
+                vec![0.0; 8],
+                BaseOpt::Sgd { momentum: 0.0 },
+                &RunOptions::default(),
+            )
+            .unwrap()
+        };
+        let streamed = run(true);
+        let unstreamed = run(false);
+        assert_eq!(
+            streamed.final_theta, unstreamed.final_theta,
+            "θ diverged between schedules"
+        );
+        assert_eq!(
+            streamed.final_lambda, unstreamed.final_lambda,
+            "λ diverged between schedules"
+        );
+        assert_eq!(
+            streamed.samples_processed,
+            unstreamed.samples_processed
+        );
+    }
+
     // ---- overlap ablation: the comm must actually hide ------------------
 
     /// Stand-in for a PJRT forward/backward of duration `d`. Sleeping (not
@@ -838,8 +1014,8 @@ mod tests {
         }
     }
 
-    fn slow_link_report(overlap: bool) -> TrainReport {
-        let cfg = TrainConfig {
+    fn slow_link_cfg(overlap: bool) -> TrainConfig {
+        TrainConfig {
             algo: Algo::SamaNa,
             workers: 2,
             steps: 10,
@@ -853,15 +1029,21 @@ mod tests {
             link_bandwidth: 16e6,
             link_latency: 5e-5,
             bucket_elems: 2048,
+            // pin the bucket size: this test asserts on timing, and the
+            // tuner would legitimately move the size mid-run
+            bucket_auto: false,
             overlap,
             ..TrainConfig::default()
-        };
+        }
+    }
+
+    fn slow_link_report(overlap: bool) -> TrainReport {
         let factory = SlowFactory {
             n_theta: 64,
             n_lambda: 8192,
             busy: Duration::from_millis(4),
         };
-        train(&cfg, &factory, &RunOptions::default()).unwrap()
+        train(&slow_link_cfg(overlap), &factory, &RunOptions::default()).unwrap()
     }
 
     /// The Tables 8–9 ablation criterion: with a slow link, `overlap=true`
@@ -898,6 +1080,42 @@ mod tests {
         );
     }
 
+    /// With `bucket_auto` on, the producer-bound slow-link setup (4 ms of
+    /// compute behind every tiny reduce) must pull the bucket size *down*
+    /// from the static seed — and every rank must land on the same size
+    /// (bucket boundaries are a collective contract). Also pins the
+    /// per-tag attribution: every stream reduced the expected number of
+    /// times.
+    #[test]
+    fn auto_tuner_engages_and_stays_rank_identical() {
+        let mut cfg = slow_link_cfg(true);
+        cfg.bucket_auto = true;
+        let factory = SlowFactory {
+            n_theta: 64,
+            n_lambda: 8192,
+            busy: Duration::from_millis(4),
+        };
+        let rep = train(&cfg, &factory, &RunOptions::default()).unwrap();
+        assert!(
+            rep.bucket_elems_final < cfg.bucket_elems,
+            "producer-bound run should shrink buckets: {} vs seed {}",
+            rep.bucket_elems_final,
+            cfg.bucket_elems
+        );
+        for st in &rep.comm {
+            // 10 θ-reduces (one per base step), 10 λ-reduces (unroll=1),
+            // plus at least one Ctrl profile sync from the tuner
+            assert_eq!(st.tag(ReduceTag::Theta).reduces, 10);
+            assert_eq!(st.tag(ReduceTag::Lambda).reduces, 10);
+            assert!(st.tag(ReduceTag::Ctrl).reduces >= 1);
+            let split: f64 = ReduceTag::ALL
+                .iter()
+                .map(|&t| st.tag(t).comm_seconds)
+                .sum();
+            assert!((split - st.comm_seconds).abs() < 1e-9);
+        }
+    }
+
     // ---- merge_reports ---------------------------------------------------
 
     fn worker_report(rank: usize, samples: u64, sums: Vec<f32>, counts: Vec<u32>) -> WorkerReport {
@@ -914,6 +1132,7 @@ mod tests {
             weight_sums: sums,
             weight_counts: counts,
             exec_seconds: 0.1,
+            bucket_elems_final: 1 << 14,
         }
     }
 
@@ -934,6 +1153,7 @@ mod tests {
         assert_eq!(merged.samples_processed, 21);
         assert_eq!(merged.workers, 3);
         assert_eq!(merged.wall_seconds, 2.0);
+        assert_eq!(merged.bucket_elems_final, 1 << 14);
         // comm stats preserved per-rank, in rank order
         assert_eq!(merged.comm.len(), 3);
         assert_eq!(merged.comm[0].reduces, 0);

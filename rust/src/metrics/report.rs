@@ -53,6 +53,29 @@ impl Table {
         out
     }
 
+    /// Table as a JSON array of row objects keyed by column name, numeric
+    /// cells parsed — machine-readable bench output (perf trajectory
+    /// tracking; see `BENCH_hotpath.json`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let rows = self
+            .rows
+            .iter()
+            .map(|row| {
+                let mut obj = std::collections::BTreeMap::new();
+                for (col, cell) in self.columns.iter().zip(row) {
+                    let v = cell
+                        .parse::<f64>()
+                        .map(Json::Num)
+                        .unwrap_or_else(|_| Json::Str(cell.clone()));
+                    obj.insert(col.clone(), v);
+                }
+                Json::Obj(obj)
+            })
+            .collect();
+        Json::Arr(rows)
+    }
+
     pub fn to_csv(&self) -> String {
         let mut out = self.columns.join(",");
         out.push('\n');

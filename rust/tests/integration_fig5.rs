@@ -19,6 +19,7 @@ fn mean_cos_and_progress(algo: Algo, iters: usize) -> (f32, f32) {
     let d0 = vecops::rel_dist(&lambda, &lambda_star);
     let mut opt = Adam::new(10, 0.5);
     let mut cos_sum = 0.0f32;
+    let mut scratch = algos::sama::SamaScratch::new();
     for step in 0..iters {
         let w = p.w_star(&lambda);
         let g_base = p.base_grad(&w, &lambda, step).unwrap().grad;
@@ -36,7 +37,7 @@ fn mean_cos_and_progress(algo: Algo, iters: usize) -> (f32, f32) {
             adam_v: &zeros,
             adam_t: 1.0,
         };
-        let out = algos::meta_grad(algo, &mut p, &ctx).unwrap();
+        let out = algos::meta_grad(algo, &mut p, &ctx, &mut scratch).unwrap();
         cos_sum += vecops::cosine(&out.grad, &p.exact_meta_grad(&lambda));
         opt.step(&mut lambda, &out.grad);
     }
