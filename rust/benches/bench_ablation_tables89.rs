@@ -12,9 +12,15 @@
 mod common;
 
 use sama::apps::wrench;
+use sama::collective::{CommStats, ReduceTag};
 use sama::config::Algo;
 use sama::metrics::memory::{gib, peak_bytes, ArchSpec};
 use sama::metrics::report::{f1, f2, pct, Table};
+
+/// `hidden θ/λ (%)` column (same metric as `bench_table2_ddp`).
+fn tag_hidden(totals: &CommStats, tag: ReduceTag) -> f64 {
+    100.0 * totals.tag(tag).hidden_fraction()
+}
 
 fn main() {
     common::require_artifacts();
@@ -51,6 +57,8 @@ fn main() {
             "accuracy (%)",
             "throughput (samples/s, projected)",
             "memory (GiB @BERT-base)",
+            "hidden θ/λ (%)",
+            "peer-wait θ/λ (s)",
         ],
     );
     for row in rows {
@@ -67,15 +75,30 @@ fn main() {
             row.workers as u64,
             10,
         ));
+        let totals = out.report.comm_totals();
         t.row(vec![
             row.label.into(),
             pct(out.test_accuracy as f64),
             f1(out.report.projected_parallel_throughput()),
             f2(mem),
+            format!(
+                "{}/{}",
+                f1(tag_hidden(&totals, ReduceTag::Theta)),
+                f1(tag_hidden(&totals, ReduceTag::Lambda))
+            ),
+            format!(
+                "{}/{}",
+                f2(totals.tag(ReduceTag::Theta).peer_wait_seconds),
+                f2(totals.tag(ReduceTag::Lambda).peer_wait_seconds)
+            ),
         ]);
         eprintln!("[tables89] {} done", row.label);
     }
     t.print();
+    println!(
+        "hidden θ/λ and peer-wait θ/λ: per-stream comm attribution \
+         (1-worker rows have no interconnect and report 0/0)."
+    );
     println!(
         "paper Table 8 reference (acc/thr/mem): Finetune 85.79/169/7.8, \
          ITD 85.78/28/22.9, CG 86.78/65/22.0, Neumann 86.65/67/19.7, \

@@ -2,6 +2,11 @@
 //! for ITD / CG / Neumann / T1–T2 / SAMA, from the analytic memory model
 //! calibrated in `metrics::memory` (DESIGN.md §Hardware-Adaptation: no GPUs
 //! on this image, the *ratios and slopes* are the reproduction target).
+//!
+//! Purely analytic — no training runs, no collective, so the per-tag comm
+//! attribution the other benches print (hidden θ/λ, peer-wait θ/λ) has no
+//! counterpart here; see `bench_fig1_throughput_memory` for the measured
+//! side of Fig. 1.
 
 mod common;
 

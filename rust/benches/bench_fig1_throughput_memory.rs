@@ -10,6 +10,7 @@
 mod common;
 
 use sama::apps::wrench;
+use sama::collective::ReduceTag;
 use sama::config::Algo;
 use sama::metrics::memory::{gib, peak_bytes, ArchSpec};
 use sama::metrics::report::{f1, f2, Table};
@@ -24,6 +25,8 @@ fn main() {
             "workers",
             "throughput (samples/s, projected W cores)",
             "memory/worker (GiB, BERT-base model)",
+            "hidden θ/λ (%)",
+            "peer-wait θ/λ (s)",
         ],
     );
     let rows: Vec<(Algo, usize)> = vec![
@@ -41,17 +44,32 @@ fn main() {
         cfg.steps = common::thr_steps();
         let out = wrench::run(&cfg, "agnews").expect("run");
         let mem = gib(peak_bytes(algo, &arch, 48, workers as u64, 10));
+        let totals = out.report.comm_totals();
+        let tag_hidden =
+            |tag: ReduceTag| 100.0 * totals.tag(tag).hidden_fraction();
         t.row(vec![
             algo.name().into(),
             workers.to_string(),
             f1(out.report.projected_parallel_throughput()),
             f2(mem),
+            format!(
+                "{}/{}",
+                f1(tag_hidden(ReduceTag::Theta)),
+                f1(tag_hidden(ReduceTag::Lambda))
+            ),
+            format!(
+                "{}/{}",
+                f2(totals.tag(ReduceTag::Theta).peer_wait_seconds),
+                f2(totals.tag(ReduceTag::Lambda).peer_wait_seconds)
+            ),
         ]);
     }
     t.print();
     println!(
         "expected shape (paper Fig. 1 bottom-left): SAMA/SAMA-NA ≳1.7× the \
          throughput of Neumann/CG at ~half the memory; SAMA workers extend \
-         the frontier up-left."
+         the frontier up-left. hidden/peer-wait θ/λ: per-stream comm \
+         attribution (multi-worker rows only; fig1_model_scaling is \
+         analytic and has no collective)."
     );
 }

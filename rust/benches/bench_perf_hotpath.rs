@@ -128,13 +128,52 @@ fn probe_autotuned() -> ProbeOut {
     ProbeOut { stats, bucket_bytes, bucket_count }
 }
 
+/// Multi-ring contention probe: a fat θ-reduce is in flight when a small
+/// λ-reduce is submitted and waited λ-first. With one shared ring the λ
+/// bucket queues behind every θ bucket on the engine FIFO; with λ on its
+/// own ring it clears immediately — λ-tag blocked/peer-wait is the
+/// contention removed.
+fn probe_rings(rings: usize) -> CommStats {
+    let cw = CommWorld::with_rings(2, PROBE_LINK, rings);
+    let mut handles = Vec::new();
+    for rank in 0..2 {
+        let cw = Arc::clone(&cw);
+        handles.push(std::thread::spawn(move || {
+            let mut coll = cw.join(rank);
+            for _ in 0..4 {
+                let pt = coll.all_reduce_async(
+                    vec![rank as f32; PROBE_ELEMS],
+                    8192,
+                    ReduceTag::Theta,
+                );
+                let pl = coll.all_reduce_async(
+                    vec![1.0 + rank as f32; 1024],
+                    8192,
+                    ReduceTag::Lambda,
+                );
+                let _ = coll.wait(pl);
+                let _ = coll.wait(pt);
+            }
+            coll.stats().clone()
+        }));
+    }
+    let mut stats = CommStats::default();
+    for h in handles {
+        stats.merge(&h.join().unwrap());
+    }
+    stats
+}
+
 /// Collective overlap probe (artifact-free): blocking vs overlapped vs
-/// auto-tuned-streamed, on a 50 MB/s link. Also emits the machine-readable
-/// `BENCH_hotpath.json` so the perf trajectory is tracked across PRs.
+/// auto-tuned-streamed, on a 50 MB/s link, plus the multi-ring contention
+/// split. Also emits the machine-readable `BENCH_hotpath.json` so the
+/// perf trajectory is tracked across PRs.
 fn comm_overlap_probe() {
     let blocking = probe_fixed(false);
     let overlapped = probe_fixed(true);
     let tuned = probe_autotuned();
+    let rings1 = probe_rings(1);
+    let rings2 = probe_rings(2);
 
     let mut t = Table::new(
         "§Perf: collective overlap probe (256 KiB ×8, 2 ranks, 50 MB/s link)",
@@ -156,6 +195,33 @@ fn comm_overlap_probe() {
     }
     t.print();
 
+    let mut rt = Table::new(
+        "§Perf: multi-ring contention probe (256 KiB θ in flight, 4 KiB λ \
+         waited first, 2 ranks)",
+        &[
+            "rings",
+            "λ blocked s",
+            "λ peer-wait s",
+            "θ wire s",
+            "total comm s",
+        ],
+    );
+    for (name, p) in [("1 (shared)", &rings1), ("2 (θ/λ split)", &rings2)] {
+        rt.row(vec![
+            name.into(),
+            f2(p.tag(ReduceTag::Lambda).blocked_seconds),
+            f2(p.tag(ReduceTag::Lambda).peer_wait_seconds),
+            f2(p.tag(ReduceTag::Theta).wire_seconds),
+            f2(p.comm_seconds),
+        ]);
+    }
+    rt.print();
+    println!(
+        "λ blocked on the shared ring ≈ the θ stream's wire time (FIFO \
+         queueing); the second ring removes it — the per-tag contention \
+         the coordinator's rings=2 default exploits."
+    );
+
     // machine-readable perf trajectory (consumed across PRs; artifact-free)
     let num = Json::Num;
     let mut obj: BTreeMap<String, Json> = BTreeMap::new();
@@ -171,6 +237,29 @@ fn comm_overlap_probe() {
     obj.insert(
         "hidden_comm_fraction_blocking".into(),
         num(blocking.stats.hidden_fraction()),
+    );
+    obj.insert(
+        "lambda_blocked_rings1".into(),
+        num(rings1.tag(ReduceTag::Lambda).blocked_seconds),
+    );
+    obj.insert(
+        "lambda_blocked_rings2".into(),
+        num(rings2.tag(ReduceTag::Lambda).blocked_seconds),
+    );
+    obj.insert(
+        "ring_contention_removed_seconds".into(),
+        num(
+            rings1.tag(ReduceTag::Lambda).blocked_seconds
+                - rings2.tag(ReduceTag::Lambda).blocked_seconds,
+        ),
+    );
+    obj.insert(
+        "peer_wait_seconds_tuned".into(),
+        num(tuned.stats.peer_wait_seconds),
+    );
+    obj.insert(
+        "wire_seconds_tuned".into(),
+        num(tuned.stats.wire_seconds),
     );
     obj.insert("world".into(), num(2.0));
     obj.insert("link_bandwidth".into(), num(PROBE_LINK.bandwidth));

@@ -10,7 +10,10 @@
 //!
 //! Multi-worker rows also report the §3.3 comm–compute overlap: total
 //! comm-engine seconds, worker-blocked seconds, and the hidden fraction
-//! (1 − blocked/comm) — the quantity the Tables 8–9 ablation toggles.
+//! (1 − blocked/comm) — the quantity the Tables 8–9 ablation toggles —
+//! plus the per-tag peer-wait split (engine seconds blocked on a
+//! straggling rank rather than moving bytes) and a `rings=1` comparison
+//! row showing the serialization the multi-ring collective removes.
 
 mod common;
 
@@ -35,38 +38,36 @@ fn main() {
             "blocked (s)",
             "hidden comm (%)",
             "hidden θ/λ (%)",
+            "peer-wait θ/λ (s)",
             "bucket KiB (final)",
         ],
     );
-    let rows: Vec<(Algo, usize, &str)> = vec![
-        (Algo::Neumann, 1, "cls_b48"),
-        (Algo::Cg, 1, "cls_b48"),
-        (Algo::SamaNa, 1, "cls_b48"),
-        (Algo::Sama, 1, "cls_b48"),
-        (Algo::Sama, 2, "cls_b24"),
-        (Algo::Sama, 4, "cls_b12"),
+    let rows: Vec<(&str, Algo, usize, &str, usize)> = vec![
+        ("neumann", Algo::Neumann, 1, "cls_b48", 2),
+        ("cg", Algo::Cg, 1, "cls_b48", 2),
+        ("sama_na", Algo::SamaNa, 1, "cls_b48", 2),
+        ("sama", Algo::Sama, 1, "cls_b48", 2),
+        ("sama", Algo::Sama, 2, "cls_b24", 2),
+        // single shared ring: the θ/λ serialization the multi-ring
+        // collective removes, on an otherwise identical run
+        ("sama rings=1", Algo::Sama, 2, "cls_b24", 1),
+        ("sama", Algo::Sama, 4, "cls_b12", 2),
     ];
-    for (algo, workers, model) in rows {
+    for (label, algo, workers, model, rings) in rows {
         let mut cfg = common::wrench_cfg();
         cfg.algo = algo;
         cfg.workers = workers;
         cfg.model = model.into();
         cfg.steps = common::thr_steps();
+        cfg.rings = rings;
         let out = wrench::run(&cfg, "agnews").expect("run");
         let per_worker_batch = 48 / workers;
         let mem = gib(peak_bytes(algo, &arch, 48, workers as u64, 10));
         let totals = out.report.comm_totals();
-        let tag_hidden = |tag: ReduceTag| -> f64 {
-            let ts = totals.tag(tag);
-            if ts.comm_seconds <= 0.0 {
-                0.0
-            } else {
-                100.0 * (ts.comm_seconds - ts.blocked_seconds).max(0.0)
-                    / ts.comm_seconds
-            }
-        };
+        let tag_hidden =
+            |tag: ReduceTag| 100.0 * totals.tag(tag).hidden_fraction();
         t.row(vec![
-            algo.name().into(),
+            label.into(),
             workers.to_string(),
             per_worker_batch.to_string(),
             f2(mem),
@@ -78,6 +79,11 @@ fn main() {
                 "{}/{}",
                 f1(tag_hidden(ReduceTag::Theta)),
                 f1(tag_hidden(ReduceTag::Lambda))
+            ),
+            format!(
+                "{}/{}",
+                f2(totals.tag(ReduceTag::Theta).peer_wait_seconds),
+                f2(totals.tag(ReduceTag::Lambda).peer_wait_seconds)
             ),
             format!("{:.0}", out.report.bucket_elems_final as f64 * 4.0 / 1024.0),
         ]);
@@ -92,8 +98,13 @@ fn main() {
          never waited for (layer-streamed θ buckets + pipelined stale-λ\n\
          drain + streamed λ buckets, §3.3); the θ/λ split shows which\n\
          stream hides its reduce; 1-worker rows have no interconnect and\n\
-         report 0. bucket KiB is the auto-tuner's final (rank-identical)\n\
-         pick — set bucket_elems= to pin it."
+         report 0. peer-wait is engine time blocked on a straggling rank\n\
+         (not wire time — the old conflation inflated hidden %). Compare\n\
+         the 2-worker sama row against `sama rings=1`: with one shared\n\
+         ring the fat λ-reduce and the θ buckets serialize on the same\n\
+         engine, the per-tag contention the default rings=2 removes.\n\
+         bucket KiB is the auto-tuner's final (rank-identical) pick — set\n\
+         bucket_elems= to pin it."
     );
     println!(
         "paper Table 2 reference (GB, samples/s): Neumann 26.0/82.9, \

@@ -145,6 +145,8 @@ fn warmup_stats(cfg: &TrainConfig, set: &PruningSet) -> Result<Vec<(f32, f32, f3
     warm_cfg.algo = Algo::None;
     warm_cfg.workers = 1;
     warm_cfg.steps = (cfg.steps / 2).max(1);
+    // aux scoring run: keep it away from the user's checkpoint file
+    warm_cfg.checkpoint_path = String::new();
     let report = coordinator::train(&warm_cfg, &factory, &RunOptions::default())?;
     let (problem, _, _) = factory.build(0, 1)?;
     // downcast helper: rebuild a standalone ClsProblem for eval
@@ -195,6 +197,7 @@ fn forgetting_scores(cfg: &TrainConfig, set: &PruningSet) -> Result<Vec<f32>> {
         c.workers = 1;
         c.steps = (cfg.steps / (2 * checkpoints)).max(1);
         c.seed = cfg.seed + ck as u64; // reshuffle-ish
+        c.checkpoint_path = String::new(); // aux scoring run
         let report = match &theta {
             None => coordinator::train(&c, &factory, &RunOptions::default())?,
             Some(_) => {
@@ -281,6 +284,9 @@ pub fn retrain_and_eval(
     let mut c = cfg.clone();
     c.algo = Algo::None;
     c.workers = 1;
+    // retrain-from-scratch must not resume from (or clobber) the scoring
+    // run's checkpoint
+    c.checkpoint_path = String::new();
     let report = coordinator::train(&c, &factory, &RunOptions::default())?;
     let rt = Runtime::new(&Runtime::artifact_dir(), &cfg.model)?;
     let eval = ClsProblem::new(

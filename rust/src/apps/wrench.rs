@@ -139,6 +139,9 @@ pub fn run(cfg: &TrainConfig, dataset: &str) -> Result<WrenchOutcome> {
         warm_cfg.algo = crate::config::Algo::None;
         warm_cfg.workers = 1;
         warm_cfg.steps = pretrain_steps;
+        // the warm start is an internal aux run: never let it write to (or
+        // resume from) the user's checkpoint file
+        warm_cfg.checkpoint_path = String::new();
         let warm =
             coordinator::train(&warm_cfg, &warm_factory, &RunOptions::default())?;
         factory.theta_override = Some(warm.final_theta);

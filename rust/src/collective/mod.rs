@@ -18,10 +18,26 @@
 //!    [`ReduceTag`] and owns a private done channel, so multiple reduces
 //!    (θ and λ) can be in flight simultaneously and waited in *any* order.
 //!    [`CommStats`] attributes comm/blocked seconds per tag;
-//!  * **a dedicated comm thread per worker** — buckets are ring-reduced by
-//!    the comm engine while PJRT compute proceeds, exactly like NCCL
-//!    streams overlap CUDA compute. `overlap=false` in the coordinator
-//!    degrades to submit-then-immediately-wait (the ablation);
+//!  * **multiple independent rings per rank** — [`CommWorld::with_rings`]
+//!    spawns `R` comm engines per rank, each with its own cycle of
+//!    neighbor channels (the NCCL-channel analogue). A reduce is routed to
+//!    a ring by its [`ReduceTag`] (`tag.idx() % R`), so with `rings=2` the
+//!    θ buckets and a fat λ-reduce ride *separate* wires and a λ bucket
+//!    never queues behind in-flight θ buckets on the same engine. Ring
+//!    assignment only changes *when* a bucket is reduced, never the
+//!    summation order inside it, so results are bitwise-identical for any
+//!    ring count;
+//!  * **wire-time vs peer-wait attribution** — an engine's elapsed time on
+//!    a bucket is split into `wire_seconds` (time the payload actually
+//!    spends on the simulated link) and `peer_wait_seconds` (time blocked
+//!    in `recv()` at the ring rendezvous waiting for a straggler).
+//!    `comm_seconds` is the whole engine occupancy; treating all of it as
+//!    wire time inflated `hidden_fraction` whenever ranks arrived skewed;
+//!  * **a dedicated comm thread per worker and ring** — buckets are
+//!    ring-reduced by the comm engines while PJRT compute proceeds,
+//!    exactly like NCCL streams overlap CUDA compute. `overlap=false` in
+//!    the coordinator degrades to submit-then-immediately-wait (the
+//!    ablation);
 //!  * **reusable hop buffers** — the ring circulates its message buffers
 //!    (each engine recycles the allocation it just received for its next
 //!    send), so the steady-state hot path does not touch the allocator;
@@ -36,12 +52,15 @@
 //! SAMA's strategy maps to: passes 1–2 → no collective at all; pass 3 →
 //! one bucket-streamed all-reduce overlapped with first-order compute.
 //!
-//! **Contract** (standard DDP): all ranks submit the same reduces, with the
-//! same bucket boundaries, in the same *submission* order — the comm engine
-//! ring-reduces buckets strictly in that order. What is relaxed relative to
-//! DDP's `wait()` is the completion side: waits may happen in any order
-//! (each reduce owns its done channel), so a θ-reduce can be drained while
-//! an earlier-submitted λ-reduce is still on the wire, and vice versa.
+//! **Contract** (DDP, relaxed per ring): all ranks submit the same reduces,
+//! with the same bucket boundaries, in the same *per-ring* submission order
+//! — each ring's engine reduces its buckets strictly in that order, but
+//! different rings proceed independently (tag→ring routing is a pure
+//! function of the tag, so identical global submission orders across ranks
+//! imply identical per-ring orders). The completion side stays fully
+//! relaxed: waits may happen in any order (each reduce owns its done
+//! channel), so a θ-reduce can be drained while an earlier-submitted
+//! λ-reduce is still on the wire, and vice versa.
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -123,6 +142,15 @@ impl ReduceTag {
             ReduceTag::Ctrl => "ctrl",
         }
     }
+
+    /// Which of `rings` engines carries this tag's reduces. A pure
+    /// function of the tag, so every rank routes identically and the
+    /// per-ring submission order stays a collective contract. With two
+    /// rings θ (and the tiny Ctrl syncs) ride ring 0 while λ gets ring 1
+    /// to itself; with three, every tag has a private ring.
+    pub fn ring(self, rings: usize) -> usize {
+        self.idx() % rings.max(1)
+    }
 }
 
 /// Per-tag slice of the aggregate counters.
@@ -132,21 +160,48 @@ pub struct TagStats {
     pub buckets: u64,
     pub comm_seconds: f64,
     pub blocked_seconds: f64,
+    /// Seconds this tag's payloads spent on the simulated wire (hop
+    /// sleeps). The part of `comm_seconds` that is real link occupancy.
+    pub wire_seconds: f64,
+    /// Seconds this tag's engine spent blocked in `recv()` at the ring
+    /// rendezvous — waiting for a straggling peer, not moving bytes.
+    pub peer_wait_seconds: f64,
 }
 
-/// Aggregate communication statistics for one worker's comm engine.
+impl TagStats {
+    /// Fraction of this stream's comm time hidden behind compute (0 when
+    /// the stream never reduced) — the per-tag analogue of
+    /// [`CommStats::hidden_fraction`], shared by the benches' θ/λ columns.
+    pub fn hidden_fraction(&self) -> f64 {
+        if self.comm_seconds <= 0.0 {
+            0.0
+        } else {
+            (self.comm_seconds - self.blocked_seconds).max(0.0)
+                / self.comm_seconds
+        }
+    }
+}
+
+/// Aggregate communication statistics for one worker's comm engines.
 #[derive(Clone, Debug, Default)]
 pub struct CommStats {
     pub reduces: u64,
     pub bytes_sent: u64,
-    /// Seconds the comm engine spent ring-reducing (per-bucket, summed).
+    /// Seconds the comm engines spent ring-reducing (per-bucket, summed) —
+    /// total engine occupancy, i.e. `wire + peer-wait + copy overhead`.
     pub comm_seconds: f64,
     /// Seconds the *worker* spent blocked inside `wait()` — comm time NOT
     /// hidden by overlap. Non-blocking `try_progress()` polls charge
     /// nothing: between polls the worker is free to do real work.
     pub blocked_seconds: f64,
-    /// The same comm/blocked attribution split by [`ReduceTag`]
-    /// (indexed via [`CommStats::tag`]).
+    /// Wire-only share of `comm_seconds` (see [`TagStats::wire_seconds`]).
+    pub wire_seconds: f64,
+    /// Straggler share of `comm_seconds` (see
+    /// [`TagStats::peer_wait_seconds`]). Before this split, skewed rank
+    /// arrivals were booked as wire time and inflated `hidden_fraction`.
+    pub peer_wait_seconds: f64,
+    /// The same attribution split by [`ReduceTag`] (indexed via
+    /// [`CommStats::tag`]).
     pub per_tag: [TagStats; 3],
 }
 
@@ -165,6 +220,24 @@ impl CommStats {
         }
     }
 
+    /// Wire time hidden behind compute: `wire_seconds − blocked_seconds`.
+    /// Unlike [`hidden_seconds`](CommStats::hidden_seconds) this does not
+    /// credit straggler peer-wait as "communication that was hidden".
+    pub fn hidden_wire_seconds(&self) -> f64 {
+        (self.wire_seconds - self.blocked_seconds).max(0.0)
+    }
+
+    /// Fraction of *wire* time hidden behind compute (0 when no wire
+    /// traffic) — the deflated, honest variant of
+    /// [`hidden_fraction`](CommStats::hidden_fraction).
+    pub fn hidden_wire_fraction(&self) -> f64 {
+        if self.wire_seconds <= 0.0 {
+            0.0
+        } else {
+            self.hidden_wire_seconds() / self.wire_seconds
+        }
+    }
+
     /// Counters for one reduce stream.
     pub fn tag(&self, tag: ReduceTag) -> &TagStats {
         &self.per_tag[tag.idx()]
@@ -176,11 +249,15 @@ impl CommStats {
         self.bytes_sent += other.bytes_sent;
         self.comm_seconds += other.comm_seconds;
         self.blocked_seconds += other.blocked_seconds;
+        self.wire_seconds += other.wire_seconds;
+        self.peer_wait_seconds += other.peer_wait_seconds;
         for (mine, theirs) in self.per_tag.iter_mut().zip(&other.per_tag) {
             mine.reduces += theirs.reduces;
             mine.buckets += theirs.buckets;
             mine.comm_seconds += theirs.comm_seconds;
             mine.blocked_seconds += theirs.blocked_seconds;
+            mine.wire_seconds += theirs.wire_seconds;
+            mine.peer_wait_seconds += theirs.peer_wait_seconds;
         }
     }
 }
@@ -208,14 +285,21 @@ struct BucketDone {
     bucket: u32,
     offset: usize,
     data: Vec<f32>,
+    /// Total engine seconds on this bucket.
     secs: f64,
+    /// Seconds of `secs` spent on the simulated wire (hop sleeps).
+    wire_secs: f64,
+    /// Seconds of `secs` spent blocked in the ring `recv()` rendezvous.
+    peer_secs: f64,
 }
 
 /// One worker's handle to the collective. Created by [`CommWorld::join`].
 pub struct Collective {
     rank: usize,
     world: usize,
-    job_tx: Sender<JobMsg>,
+    /// One job queue per ring engine; reduces are routed by
+    /// [`ReduceTag::ring`].
+    job_txs: Vec<Sender<JobMsg>>,
     next_job: u64,
     stats: CommStats,
     /// Exact bytes-on-the-wire accumulator; `stats.bytes_sent` is this
@@ -287,9 +371,11 @@ pub struct ReduceProfile {
     pub blocked_seconds: f64,
 }
 
-/// Factory for a K-worker collective: builds the comm-thread ring.
+/// Factory for a K-worker collective: builds `rings` independent
+/// comm-thread rings.
 pub struct CommWorld {
     world: usize,
+    rings: usize,
     link: LinkModel,
     // per-rank plumbing handed out on join()
     seats: Mutex<Vec<Option<Seat>>>,
@@ -297,35 +383,64 @@ pub struct CommWorld {
 }
 
 struct Seat {
-    job_tx: Sender<JobMsg>,
+    job_txs: Vec<Sender<JobMsg>>,
 }
 
 impl CommWorld {
+    /// Single-ring world: every tag shares one engine per rank — the
+    /// pre-multi-ring behavior, kept as the conservative default for
+    /// direct embedders. The coordinator passes `cfg.rings` through
+    /// [`CommWorld::with_rings`].
     pub fn new(world: usize, link: LinkModel) -> Arc<CommWorld> {
+        Self::with_rings(world, link, 1)
+    }
+
+    /// A world with `rings` independent ring engines per rank. Each ring
+    /// gets its own cycle of neighbor channels and its own engine thread
+    /// per rank; reduces are routed to rings by [`ReduceTag::ring`], so
+    /// tags on different rings never queue behind each other. Reduced
+    /// values are bitwise-identical for any `rings` ≥ 1 (ring assignment
+    /// moves *when* a bucket is reduced, never its summation order).
+    pub fn with_rings(world: usize, link: LinkModel, rings: usize) -> Arc<CommWorld> {
         assert!(world >= 1);
-        // neighbor channels: ring_tx[i] sends to rank (i+1) % world
-        let mut ring_txs = Vec::with_capacity(world);
-        let mut ring_rxs: Vec<Option<Receiver<RingMsg>>> = Vec::with_capacity(world);
-        for _ in 0..world {
-            let (tx, rx) = channel::<RingMsg>();
-            ring_txs.push(tx);
-            ring_rxs.push(Some(rx));
+        let rings = rings.clamp(1, ReduceTag::ALL.len());
+        // neighbor channels per ring: ring_txs[r][i] sends to rank
+        // (i+1) % world on ring r
+        let mut ring_txs: Vec<Vec<Sender<RingMsg>>> = Vec::with_capacity(rings);
+        let mut ring_rxs: Vec<Vec<Option<Receiver<RingMsg>>>> =
+            Vec::with_capacity(rings);
+        for _ in 0..rings {
+            let mut txs = Vec::with_capacity(world);
+            let mut rxs = Vec::with_capacity(world);
+            for _ in 0..world {
+                let (tx, rx) = channel::<RingMsg>();
+                txs.push(tx);
+                rxs.push(Some(rx));
+            }
+            ring_txs.push(txs);
+            ring_rxs.push(rxs);
         }
         let mut seats = Vec::with_capacity(world);
-        let mut handles = Vec::with_capacity(world);
+        let mut handles = Vec::with_capacity(world * rings);
         for rank in 0..world {
-            let (job_tx, job_rx) = channel::<JobMsg>();
-            // comm thread `rank` sends to rank+1, receives from rank-1
-            let to_next = ring_txs[(rank + 1) % world].clone();
-            let from_prev = ring_rxs[rank].take().unwrap();
-            let link = link;
-            handles.push(std::thread::spawn(move || {
-                comm_engine(rank, world, link, job_rx, to_next, from_prev);
-            }));
-            seats.push(Some(Seat { job_tx }));
+            let mut job_txs = Vec::with_capacity(rings);
+            for r in 0..rings {
+                let (job_tx, job_rx) = channel::<JobMsg>();
+                // engine (rank, r) sends to rank+1, receives from rank-1,
+                // strictly within ring r
+                let to_next = ring_txs[r][(rank + 1) % world].clone();
+                let from_prev = ring_rxs[r][rank].take().unwrap();
+                let link = link;
+                handles.push(std::thread::spawn(move || {
+                    comm_engine(rank, world, link, job_rx, to_next, from_prev);
+                }));
+                job_txs.push(job_tx);
+            }
+            seats.push(Some(Seat { job_txs }));
         }
         Arc::new(CommWorld {
             world,
+            rings,
             link,
             seats: Mutex::new(seats),
             handles: Mutex::new(handles),
@@ -340,7 +455,7 @@ impl CommWorld {
         Collective {
             rank,
             world: self.world,
-            job_tx: seat.job_tx,
+            job_txs: seat.job_txs,
             next_job: 0,
             stats: CommStats::default(),
             bytes_exact: 0.0,
@@ -350,6 +465,10 @@ impl CommWorld {
 
     pub fn world(&self) -> usize {
         self.world
+    }
+
+    pub fn rings(&self) -> usize {
+        self.rings
     }
 
     pub fn link(&self) -> LinkModel {
@@ -367,10 +486,11 @@ impl Drop for CommWorld {
     }
 }
 
-/// The per-rank communication engine: ring-reduces buckets in submission
-/// order, posting each completed bucket to its reduce's private done
-/// channel. All ranks must submit buckets in the same order (standard DDP
-/// contract); waits are free to happen in any order.
+/// One per-rank, per-ring communication engine: ring-reduces its ring's
+/// buckets in submission order, posting each completed bucket to its
+/// reduce's private done channel. All ranks must submit buckets in the
+/// same per-ring order (DDP contract, relaxed from global order); waits
+/// are free to happen in any order.
 fn comm_engine(
     rank: usize,
     world: usize,
@@ -385,6 +505,7 @@ fn comm_engine(
     let mut spare: Vec<f32> = Vec::new();
     while let Ok(JobMsg { job, bucket, offset, mut data, done_tx }) = job_rx.recv() {
         let t0 = Instant::now();
+        let (mut wire_secs, mut peer_secs) = (0.0f64, 0.0f64);
         if world > 1 {
             ring_all_reduce(
                 rank,
@@ -396,6 +517,8 @@ fn comm_engine(
                 &to_next,
                 &from_prev,
                 &mut spare,
+                &mut wire_secs,
+                &mut peer_secs,
             );
             // average (DDP semantics)
             let inv = 1.0 / world as f32;
@@ -406,12 +529,24 @@ fn comm_engine(
         let secs = t0.elapsed().as_secs_f64();
         // a dropped PendingReduce (worker abandoned the reduce) is not an
         // engine error — later jobs may still be live
-        let _ = done_tx.send(BucketDone { job, bucket, offset, data, secs });
+        let _ = done_tx.send(BucketDone {
+            job,
+            bucket,
+            offset,
+            data,
+            secs,
+            wire_secs,
+            peer_secs,
+        });
     }
 }
 
 /// Textbook ring all-reduce (reduce-scatter + all-gather) over one bucket.
-/// `spare` is the recycled hop buffer (see [`comm_engine`]).
+/// `spare` is the recycled hop buffer (see [`comm_engine`]). `wire_secs`
+/// accumulates time spent on the simulated link (hop sleeps); `peer_secs`
+/// accumulates time blocked in the `recv()` rendezvous waiting for the
+/// ring predecessor — the straggler component that must NOT be booked as
+/// wire time.
 #[allow(clippy::too_many_arguments)]
 fn ring_all_reduce(
     rank: usize,
@@ -423,6 +558,8 @@ fn ring_all_reduce(
     to_next: &Sender<RingMsg>,
     from_prev: &Receiver<RingMsg>,
     spare: &mut Vec<f32>,
+    wire_secs: &mut f64,
+    peer_secs: &mut f64,
 ) {
     let n = buf.len();
     let chunk_of = |c: usize| -> std::ops::Range<usize> {
@@ -439,11 +576,15 @@ fn ring_all_reduce(
         let mut chunk = std::mem::take(spare);
         chunk.clear();
         chunk.extend_from_slice(&buf[range]);
+        let t_wire = Instant::now();
         std::thread::sleep(link.hop_cost(chunk.len() * 4));
+        *wire_secs += t_wire.elapsed().as_secs_f64();
         to_next
             .send(RingMsg { job, bucket, chunk })
             .expect("ring send");
+        let t_peer = Instant::now();
         let msg = from_prev.recv().expect("ring recv");
+        *peer_secs += t_peer.elapsed().as_secs_f64();
         debug_assert_eq!((msg.job, msg.bucket), (job, bucket));
         let recv_c = (rank + world - r - 1) % world;
         let range = chunk_of(recv_c);
@@ -459,11 +600,15 @@ fn ring_all_reduce(
         let mut chunk = std::mem::take(spare);
         chunk.clear();
         chunk.extend_from_slice(&buf[range]);
+        let t_wire = Instant::now();
         std::thread::sleep(link.hop_cost(chunk.len() * 4));
+        *wire_secs += t_wire.elapsed().as_secs_f64();
         to_next
             .send(RingMsg { job, bucket, chunk })
             .expect("ring send");
+        let t_peer = Instant::now();
         let msg = from_prev.recv().expect("ring recv");
+        *peer_secs += t_peer.elapsed().as_secs_f64();
         debug_assert_eq!((msg.job, msg.bucket), (job, bucket));
         let recv_c = (rank + world - r) % world;
         let range = chunk_of(recv_c);
@@ -479,6 +624,11 @@ impl Collective {
 
     pub fn world(&self) -> usize {
         self.world
+    }
+
+    /// Independent ring engines available to this rank.
+    pub fn rings(&self) -> usize {
+        self.job_txs.len()
     }
 
     pub fn stats(&self) -> &CommStats {
@@ -536,10 +686,11 @@ impl Collective {
         }
     }
 
-    /// Append one bucket to an open reduce and hand it to the comm engine.
-    /// The bucket's ring exchange starts as soon as every rank has
+    /// Append one bucket to an open reduce and hand it to its tag's ring
+    /// engine. The bucket's ring exchange starts as soon as every rank has
     /// submitted it — typically while the worker is still producing the
-    /// next bucket.
+    /// next bucket — and only queues behind earlier buckets on the *same*
+    /// ring, never behind other tags' traffic.
     pub fn submit_bucket(&mut self, pending: &mut PendingReduce, data: Vec<f32>) {
         let offset = pending.out.len();
         pending.out.resize(offset + data.len(), 0.0);
@@ -562,7 +713,8 @@ impl Collective {
                 .clone(),
         };
         pending.buckets += 1;
-        self.job_tx.send(msg).expect("comm engine alive");
+        let ring = pending.tag.ring(self.job_txs.len());
+        self.job_txs[ring].send(msg).expect("comm engine alive");
     }
 
     /// Start an asynchronous bucketed all-reduce of a fully materialized
@@ -602,7 +754,12 @@ impl Collective {
         pending.buckets_done += 1;
         pending.comm_secs += msg.secs;
         self.stats.comm_seconds += msg.secs;
-        self.stats.per_tag[pending.tag.idx()].comm_seconds += msg.secs;
+        self.stats.wire_seconds += msg.wire_secs;
+        self.stats.peer_wait_seconds += msg.peer_secs;
+        let tag = &mut self.stats.per_tag[pending.tag.idx()];
+        tag.comm_seconds += msg.secs;
+        tag.wire_seconds += msg.wire_secs;
+        tag.peer_wait_seconds += msg.peer_secs;
         self.bank_bucket_buf(msg.data);
     }
 
@@ -727,7 +884,9 @@ pub struct BucketPlan {
 impl BucketPlan {
     pub const MIN_ELEMS: usize = 1 << 10;
     pub const MAX_ELEMS: usize = 1 << 22;
-    const RETUNE_EVERY: u32 = 4;
+    /// Default streamed reduces between retunes; override with
+    /// [`BucketPlan::with_retune_every`] (the `retune_every=` knob).
+    pub const DEFAULT_RETUNE_EVERY: u32 = 4;
 
     /// Plan starting at `elems` per bucket; `adaptive=false` pins it (the
     /// static `bucket_elems` override).
@@ -739,13 +898,26 @@ impl BucketPlan {
             min_elems: Self::MIN_ELEMS.min(elems),
             max_elems: Self::MAX_ELEMS.max(elems),
             adaptive,
-            retune_every: Self::RETUNE_EVERY,
+            retune_every: Self::DEFAULT_RETUNE_EVERY,
             acc_producer_secs: 0.0,
             acc_comm_secs: 0.0,
             acc_buckets: 0,
             reduces_seen: 0,
             retunes: 0,
         }
+    }
+
+    /// Set the retune cadence (streamed reduces between rebalances).
+    /// Clamped to ≥ 1; a longer cadence averages more profiles per retune
+    /// (steadier) at the cost of slower adaptation.
+    pub fn with_retune_every(mut self, every: u32) -> BucketPlan {
+        self.retune_every = every.max(1);
+        self
+    }
+
+    /// Current retune cadence.
+    pub fn retune_every(&self) -> u32 {
+        self.retune_every
     }
 
     /// Byte-targeted constructor (DDP speaks bytes; gradients here are f32).
@@ -831,11 +1003,16 @@ impl BucketPlan {
 mod tests {
     use super::*;
 
-    fn run_world<F>(world: usize, link: LinkModel, f: F) -> Vec<Vec<f32>>
+    fn run_world_rings<F>(
+        world: usize,
+        link: LinkModel,
+        rings: usize,
+        f: F,
+    ) -> Vec<Vec<f32>>
     where
         F: Fn(usize, &mut Collective) -> Vec<f32> + Send + Sync + Clone + 'static,
     {
-        let cw = CommWorld::new(world, link);
+        let cw = CommWorld::with_rings(world, link, rings);
         let mut handles = Vec::new();
         for rank in 0..world {
             let cw = Arc::clone(&cw);
@@ -846,6 +1023,13 @@ mod tests {
             }));
         }
         handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn run_world<F>(world: usize, link: LinkModel, f: F) -> Vec<Vec<f32>>
+    where
+        F: Fn(usize, &mut Collective) -> Vec<f32> + Send + Sync + Clone + 'static,
+    {
+        run_world_rings(world, link, 1, f)
     }
 
     #[test]
@@ -1038,6 +1222,147 @@ mod tests {
         }
     }
 
+    /// Ring assignment must never change arithmetic: the same θ/λ/Ctrl
+    /// submissions under 1, 2 and 3 rings yield bitwise-identical reduced
+    /// vectors, identical per-tag reduce/bucket counts, and jobs routed by
+    /// tag (`ReduceTag::ring`) rather than interleaved arbitrarily.
+    #[test]
+    fn multi_ring_is_bitwise_identical_to_single_ring() {
+        let mut reference: Option<Vec<Vec<f32>>> = None;
+        for rings in [1usize, 2, 3] {
+            let out =
+                run_world_rings(3, LinkModel::instant(), rings, |rank, coll| {
+                    let theta: Vec<f32> = (0..131)
+                        .map(|i| (i as f32) * 0.713 - rank as f32)
+                        .collect();
+                    let lambda: Vec<f32> = (0..53)
+                        .map(|i| (i as f32) * -0.291 + 2.0 * rank as f32)
+                        .collect();
+                    let ctrl = vec![0.25 * (rank as f32 + 1.0); 2];
+                    let pt = coll.all_reduce_async(theta, 32, ReduceTag::Theta);
+                    let pl =
+                        coll.all_reduce_async(lambda, 32, ReduceTag::Lambda);
+                    let c = coll.all_reduce_sync(ctrl, 2, ReduceTag::Ctrl);
+                    // λ waited before θ: cross-ring waits are out-of-order
+                    let l = coll.wait(pl);
+                    let t = coll.wait(pt);
+                    let st = coll.stats();
+                    assert_eq!(st.tag(ReduceTag::Theta).reduces, 1);
+                    assert_eq!(st.tag(ReduceTag::Lambda).reduces, 1);
+                    assert_eq!(st.tag(ReduceTag::Ctrl).reduces, 1);
+                    assert_eq!(st.tag(ReduceTag::Theta).buckets, 5); // ceil(131/32)
+                    assert_eq!(st.tag(ReduceTag::Lambda).buckets, 2); // ceil(53/32)
+                    let mut v = t;
+                    v.extend(l);
+                    v.extend(c);
+                    v
+                });
+            match &reference {
+                None => reference = Some(out),
+                Some(r) => assert!(
+                    r == &out,
+                    "ring count {rings} changed the reduced values"
+                ),
+            }
+        }
+    }
+
+    /// The contention the multi-ring design removes: a fat θ-reduce is in
+    /// flight when a small λ-reduce is submitted and waited. On one shared
+    /// ring the λ bucket queues behind every θ bucket (FIFO engine), so the
+    /// worker blocks for ~the whole θ wire time; with λ on its own ring it
+    /// blocks only for λ's own traffic. λ-tag blocked seconds must drop by
+    /// well over the flakiness margin, and the reduced values must stay
+    /// bitwise identical.
+    #[test]
+    fn second_ring_unblocks_lambda_from_theta_contention() {
+        let link = LinkModel { bandwidth: 50e6, latency: 1e-4 };
+        let run = |rings: usize| {
+            run_world_rings(2, link, rings, |rank, coll| {
+                // θ: 2 MB in 4 buckets ⇒ ~40 ms of wire per rank;
+                // λ: 4 KB ⇒ ~0.2 ms on an idle ring
+                let theta = vec![rank as f32 + 0.5; 1 << 19];
+                let lambda: Vec<f32> =
+                    (0..1024).map(|i| i as f32 * 0.01 - rank as f32).collect();
+                let pt = coll.all_reduce_async(theta, 1 << 17, ReduceTag::Theta);
+                let pl =
+                    coll.all_reduce_async(lambda, 1 << 17, ReduceTag::Lambda);
+                let l = coll.wait(pl); // λ first: measures the queueing
+                let t = coll.wait(pt);
+                let lam = coll.stats().tag(ReduceTag::Lambda);
+                let mut v = vec![
+                    lam.blocked_seconds as f32,
+                    lam.peer_wait_seconds as f32,
+                ];
+                v.extend_from_slice(&t[..8]);
+                v.extend_from_slice(&l[..8]);
+                v
+            })
+        };
+        let one = run(1);
+        let two = run(2);
+        for rank in 0..2 {
+            let (b1, b2) = (one[rank][0], two[rank][0]);
+            assert!(
+                b2 < 0.5 * b1,
+                "rank {rank}: λ blocked {b2}s with 2 rings vs {b1}s with 1 \
+                 — second ring removed no contention"
+            );
+            // values bitwise identical across ring counts
+            assert_eq!(one[rank][2..], two[rank][2..], "rank {rank} values");
+        }
+    }
+
+    /// The wire vs peer-wait split: both components are populated under a
+    /// real link, they never exceed total engine seconds, and the per-tag
+    /// splits sum to the aggregate ones.
+    #[test]
+    fn wire_and_peer_wait_split_is_consistent() {
+        let link = LinkModel { bandwidth: 20e6, latency: 1e-4 };
+        let out = run_world_rings(2, link, 2, |rank, coll| {
+            // rank 1 shows up late to the rendezvous: rank 0's engine must
+            // book that skew as peer-wait, not wire time
+            if rank == 1 {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            let _ = coll.all_reduce_sync(
+                vec![rank as f32; 1 << 15],
+                1 << 15,
+                ReduceTag::Theta,
+            );
+            let st = coll.stats();
+            let tag_wire: f64 =
+                ReduceTag::ALL.iter().map(|&t| st.tag(t).wire_seconds).sum();
+            let tag_peer: f64 = ReduceTag::ALL
+                .iter()
+                .map(|&t| st.tag(t).peer_wait_seconds)
+                .sum();
+            assert!((tag_wire - st.wire_seconds).abs() < 1e-12);
+            assert!((tag_peer - st.peer_wait_seconds).abs() < 1e-12);
+            assert!(
+                st.wire_seconds + st.peer_wait_seconds
+                    <= st.comm_seconds + 1e-9,
+                "split exceeds engine occupancy"
+            );
+            assert!(st.wire_seconds > 0.0, "wire time not measured");
+            vec![
+                st.wire_seconds as f32,
+                st.peer_wait_seconds as f32,
+                st.comm_seconds as f32,
+            ]
+        });
+        // the on-time rank blocks at the rendezvous for ~the skew: its
+        // peer-wait must dominate its wire time, and the old conflation
+        // (comm ≈ wire) must be visibly false for it
+        let on_time = &out[0];
+        assert!(
+            on_time[1] > on_time[0],
+            "rank 0 peer-wait {} should exceed wire {} under 20 ms skew",
+            on_time[1],
+            on_time[0]
+        );
+    }
+
     #[test]
     fn overlap_hides_link_cost() {
         // slow link: 1 KiB buffer at 1 MiB/s ≈ ~ms of comm per hop.
@@ -1191,7 +1516,7 @@ mod tests {
     fn synced_retune_is_rank_identical() {
         let out = run_world(3, LinkModel::instant(), |rank, coll| {
             let mut plan = BucketPlan::new(4096, true);
-            for _ in 0..BucketPlan::RETUNE_EVERY {
+            for _ in 0..BucketPlan::DEFAULT_RETUNE_EVERY {
                 let profile = ReduceProfile {
                     buckets: 2,
                     elems: 8192,

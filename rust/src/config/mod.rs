@@ -113,6 +113,23 @@ pub struct TrainConfig {
     /// F2SA θ-nudge is still being applied (overlap granularity below one
     /// tensor). `false` submits the fully materialized gradient at once.
     pub stream_grads: bool,
+    /// Independent comm rings per rank (NCCL-channel analogue). Reduces
+    /// route to rings by tag, so with `rings=2` the θ buckets and a fat
+    /// λ-reduce ride separate wires and never queue behind each other;
+    /// `rings=1` is the single shared engine. Any value is clamped to
+    /// [1, 3] (one ring per tag is the maximum that helps). Reduced values
+    /// are bitwise-identical for every setting.
+    pub rings: usize,
+    /// Streamed reduces between bucket auto-tuner rebalances (the old
+    /// hard-coded 4). Larger = steadier profiles, slower adaptation.
+    pub retune_every: u32,
+    /// Checkpoint file path; empty disables checkpointing. When set, the
+    /// leader saves training state there (and resumes from it at startup
+    /// if the file exists).
+    pub checkpoint_path: String,
+    /// Save a checkpoint every this many base steps; 0 = only at the end
+    /// of the run (when `checkpoint_path` is set).
+    pub checkpoint_every: usize,
     /// Free-form extras (dataset knobs etc.).
     pub extra: BTreeMap<String, String>,
 }
@@ -139,6 +156,10 @@ impl Default for TrainConfig {
             bucket_auto: true,
             overlap: true,
             stream_grads: true,
+            rings: 2,
+            retune_every: crate::collective::BucketPlan::DEFAULT_RETUNE_EVERY,
+            checkpoint_path: String::new(),
+            checkpoint_every: 0,
             extra: BTreeMap::new(),
         }
     }
@@ -191,6 +212,25 @@ impl TrainConfig {
             "overlap" => self.overlap = value.parse().context("overlap")?,
             "stream_grads" => {
                 self.stream_grads = value.parse().context("stream_grads")?
+            }
+            "rings" => {
+                let r: usize = value.parse().context("rings")?;
+                if r == 0 {
+                    bail!("rings must be >= 1");
+                }
+                self.rings = r;
+            }
+            "retune_every" => {
+                let n: u32 = value.parse().context("retune_every")?;
+                if n == 0 {
+                    bail!("retune_every must be >= 1");
+                }
+                self.retune_every = n;
+            }
+            "checkpoint_path" => self.checkpoint_path = value.into(),
+            "checkpoint_every" => {
+                self.checkpoint_every =
+                    value.parse().context("checkpoint_every")?
             }
             other => {
                 self.extra.insert(other.into(), value.into());
@@ -260,12 +300,18 @@ mod tests {
     fn overrides_apply() {
         let mut c = TrainConfig::default();
         assert!(c.bucket_auto, "auto-tuning is the default");
+        assert_eq!(c.rings, 2, "separate θ/λ rings are the default");
+        assert!(c.checkpoint_path.is_empty(), "checkpointing is opt-in");
         c.apply_overrides(&[
             "algo=neumann".into(),
             "workers=4".into(),
             "stream_grads=false".into(),
             "bucket_elems=4096".into(),
             "overlap=false".into(),
+            "rings=1".into(),
+            "retune_every=7".into(),
+            "checkpoint_path=/tmp/run.ck".into(),
+            "checkpoint_every=50".into(),
             "noise=0.3".into(),
         ])
         .unwrap();
@@ -273,6 +319,10 @@ mod tests {
         assert_eq!(c.workers, 4);
         assert!(!c.stream_grads);
         assert!(!c.overlap);
+        assert_eq!(c.rings, 1);
+        assert_eq!(c.retune_every, 7);
+        assert_eq!(c.checkpoint_path, "/tmp/run.ck");
+        assert_eq!(c.checkpoint_every, 50);
         assert_eq!(c.bucket_elems, 4096);
         // an explicit bucket size pins the plan (static override) ...
         assert!(!c.bucket_auto);
@@ -305,6 +355,8 @@ mod tests {
         let mut c = TrainConfig::default();
         assert!(c.apply_overrides(&["algo=wat".into()]).is_err());
         assert!(c.apply_overrides(&["no-equals".into()]).is_err());
+        assert!(c.apply_overrides(&["rings=0".into()]).is_err());
+        assert!(c.apply_overrides(&["retune_every=0".into()]).is_err());
     }
 
     #[test]

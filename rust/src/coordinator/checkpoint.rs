@@ -1,14 +1,26 @@
 //! Checkpointing: binary save/restore of training state (θ, λ, optimizer
-//! moments, step counters) so long runs can resume — a launcher necessity
-//! the paper's Betty implementation gets from PyTorch; here it is a small
-//! self-contained format (serde is not vendored).
+//! moments, step counters, comm-tuner state) so long runs can resume — a
+//! launcher necessity the paper's Betty implementation gets from PyTorch;
+//! here it is a small self-contained format (serde is not vendored).
+//! Wired into the training loop by `coordinator::train` via the
+//! `checkpoint_path=` / `checkpoint_every=` knobs.
 //!
 //! Format (little-endian):
 //! ```text
 //! magic "SAMA" | version u32 | step u64 | base_t u64 | meta_t u64 |
-//! 5 × (len u64, f32 data): theta, lambda, base_m, base_v, meta_m, meta_v
+//! 6 × (len u64, f32 data): theta, lambda, base_m, base_v, meta_m, meta_v
+//! v2+: bucket_elems u64 | (len u64, f32 data): pending_lambda
 //! ```
 //! plus a trailing crc32-like checksum (fletcher64 over the payload).
+//!
+//! Version 2 appends the converged [`BucketPlan`] size (so a resumed run's
+//! auto-tuner starts from where it converged instead of re-warming from
+//! scratch) and the reduced-but-unapplied λ-gradient of an in-flight
+//! pipelined λ-reduce (so a resume reproduces the uninterrupted schedule
+//! bit-for-bit). Version 1 files are still readable: the version-gated
+//! fields default to 0 / empty.
+//!
+//! [`BucketPlan`]: crate::collective::BucketPlan
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -16,7 +28,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 const MAGIC: &[u8; 4] = b"SAMA";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// Everything needed to resume a bilevel run.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -30,6 +42,16 @@ pub struct Checkpoint {
     pub base_v: Vec<f32>,
     pub meta_m: Vec<f32>,
     pub meta_v: Vec<f32>,
+    /// Gradient bucket size (elements) the run's [`BucketPlan`] was at
+    /// when the checkpoint was taken; 0 in v1 files (= unknown, resume
+    /// from the configured size).
+    ///
+    /// [`BucketPlan`]: crate::collective::BucketPlan
+    pub bucket_elems: u64,
+    /// A pipelined λ-reduce that was in flight at checkpoint time, already
+    /// ring-reduced but not yet applied as a λ-step (the coordinator's
+    /// "stream B"). Empty when none was pending (and in v1 files).
+    pub pending_lambda: Vec<f32>,
 }
 
 fn fletcher64(data: &[u8]) -> u64 {
@@ -56,13 +78,25 @@ fn read_u64(r: &mut impl Read) -> Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
-fn read_vec(r: &mut impl Read) -> Result<Vec<f32>> {
+fn read_vec(r: &mut &[u8]) -> Result<Vec<f32>> {
     let len = read_u64(r)? as usize;
-    if len > (1 << 31) {
-        bail!("implausible vector length {len} in checkpoint");
-    }
-    let mut bytes = vec![0u8; len * 4];
-    r.read_exact(&mut bytes)?;
+    // Bound the allocation by the bytes actually left in the payload: the
+    // length header is attacker-controlled and passes the checksum (the
+    // checksum covers it), so a plausibility cap alone still allowed an
+    // up-to-8-GiB allocation from a tiny crafted file.
+    let data = *r;
+    let need = len
+        .checked_mul(4)
+        .filter(|&b| b <= data.len())
+        .with_context(|| {
+            format!(
+                "checkpoint vector length {len} exceeds remaining payload \
+                 ({} bytes)",
+                data.len()
+            )
+        })?;
+    let (bytes, rest) = data.split_at(need);
+    *r = rest;
     Ok(bytes
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -85,6 +119,9 @@ impl Checkpoint {
         ] {
             push_vec(&mut payload, v);
         }
+        // v2 fields (version-gated on read)
+        payload.extend_from_slice(&self.bucket_elems.to_le_bytes());
+        push_vec(&mut payload, &self.pending_lambda);
         let mut out = Vec::with_capacity(payload.len() + 16);
         out.extend_from_slice(MAGIC);
         out.extend_from_slice(&VERSION.to_le_bytes());
@@ -102,7 +139,7 @@ impl Checkpoint {
         let mut vb = [0u8; 4];
         data.read_exact(&mut vb)?;
         let version = u32::from_le_bytes(vb);
-        if version != VERSION {
+        if version == 0 || version > VERSION {
             bail!("unsupported checkpoint version {version}");
         }
         if data.len() < 8 {
@@ -123,6 +160,12 @@ impl Checkpoint {
         let base_v = read_vec(&mut r)?;
         let meta_m = read_vec(&mut r)?;
         let meta_v = read_vec(&mut r)?;
+        // version-gated fields: absent in v1, defaulted
+        let (bucket_elems, pending_lambda) = if version >= 2 {
+            (read_u64(&mut r)?, read_vec(&mut r)?)
+        } else {
+            (0, Vec::new())
+        };
         if !r.is_empty() {
             bail!("trailing bytes in checkpoint payload");
         }
@@ -136,6 +179,8 @@ impl Checkpoint {
             base_v,
             meta_m,
             meta_v,
+            bucket_elems,
+            pending_lambda,
         })
     }
 
@@ -174,7 +219,34 @@ mod tests {
             base_v: rng.normal_vec(1000, 0.1),
             meta_m: rng.normal_vec(57, 0.1),
             meta_v: rng.normal_vec(57, 0.1),
+            bucket_elems: 1 << 15,
+            pending_lambda: rng.normal_vec(57, 0.2),
         }
+    }
+
+    /// Serialize `ck` in the legacy v1 layout (no bucket_elems / pending
+    /// λ) — the back-compat fixture.
+    fn to_bytes_v1(ck: &Checkpoint) -> Vec<u8> {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&ck.step.to_le_bytes());
+        payload.extend_from_slice(&ck.base_t.to_le_bytes());
+        payload.extend_from_slice(&ck.meta_t.to_le_bytes());
+        for v in [
+            &ck.theta,
+            &ck.lambda,
+            &ck.base_m,
+            &ck.base_v,
+            &ck.meta_m,
+            &ck.meta_v,
+        ] {
+            push_vec(&mut payload, v);
+        }
+        let mut out = Vec::with_capacity(payload.len() + 16);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&payload);
+        out.extend_from_slice(&fletcher64(&payload).to_le_bytes());
+        out
     }
 
     #[test]
@@ -213,6 +285,62 @@ mod tests {
         assert!(Checkpoint::from_bytes(&bytes).is_err());
         let mut bytes = ck.to_bytes();
         bytes[4] = 99; // version
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+        let mut bytes = ck.to_bytes();
+        bytes[4] = 0; // version 0 is not a valid back-compat target
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    /// v1 files (pre-bucket-plan) still load: the version-gated fields
+    /// come back as their defaults, everything else round-trips.
+    #[test]
+    fn v1_checkpoint_still_loads() {
+        let ck = sample(6);
+        let back = Checkpoint::from_bytes(&to_bytes_v1(&ck)).unwrap();
+        assert_eq!(back.bucket_elems, 0, "v1 has no bucket plan");
+        assert!(back.pending_lambda.is_empty(), "v1 has no pending λ");
+        let expect = Checkpoint {
+            bucket_elems: 0,
+            pending_lambda: Vec::new(),
+            ..ck
+        };
+        assert_eq!(back, expect);
+    }
+
+    /// A crafted length header must not drive the allocation: the file
+    /// below is tiny, checksums correctly, and claims a 2³¹-element vector
+    /// — reading it has to fail on the remaining-payload bound instead of
+    /// attempting an 8 GiB allocation.
+    #[test]
+    fn oversized_length_header_is_rejected_before_allocating() {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u64.to_le_bytes()); // step
+        payload.extend_from_slice(&1u64.to_le_bytes()); // base_t
+        payload.extend_from_slice(&0u64.to_le_bytes()); // meta_t
+        // theta: len header says 2^31 elements, then only 8 bytes follow
+        payload.extend_from_slice(&(1u64 << 31).to_le_bytes());
+        payload.extend_from_slice(&[0u8; 8]);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&fletcher64(&payload).to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(
+            err.to_string().contains("exceeds remaining payload"),
+            "{err}"
+        );
+        // and a length whose byte size overflows usize×4 is also caught
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u64.to_le_bytes());
+        payload.extend_from_slice(&1u64.to_le_bytes());
+        payload.extend_from_slice(&0u64.to_le_bytes());
+        payload.extend_from_slice(&u64::MAX.to_le_bytes());
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&fletcher64(&payload).to_le_bytes());
         assert!(Checkpoint::from_bytes(&bytes).is_err());
     }
 

@@ -11,18 +11,22 @@
 //!                               fires MID-backward, so early layers are on
 //!                               the ring while later layers still compute
 //!       stream B (stale λ):     the λ-reduce submitted at the previous
-//!                               meta step drains via try_progress between
-//!                               θ buckets; once the backward ends, its
-//!                               deferred λ ← AdamStep(λ, ĝ_λ) runs INSIDE
-//!                               the θ-reduce's window (out-of-order wait —
-//!                               λ resolves while θ is still on the wire)
+//!                               meta step drains via try_progress at every
+//!                               segment the backward emits (with `rings≥2`
+//!                               λ rides its own ring, so its buckets land
+//!                               independently of θ-bucket gaps); once the
+//!                               backward ends, its deferred
+//!                               λ ← AdamStep(λ, ĝ_λ) runs INSIDE the
+//!                               θ-reduce's window (out-of-order wait — λ
+//!                               resolves while θ is still on the wire)
 //!       overlap window:         λ drain + λ step + loss curve + per-sample
 //!                               weight bookkeeping
 //!       wait(θ); θ ← AdamStep(θ, ḡ)                        (L1 kernel)
-//!     every few steps: bucket retune — per-bucket producer vs. comm-engine
-//!       profiles are averaged through a tiny Ctrl-tagged reduce, then every
-//!       rank applies the identical comm≈compute rebalance (BucketPlan), so
-//!       bucket boundaries stay a collective contract
+//!     every `retune_every` streamed reduces: bucket retune — per-bucket
+//!       producer vs. comm-engine profiles are averaged through a tiny
+//!       Ctrl-tagged reduce, then every rank applies the identical
+//!       comm≈compute rebalance (BucketPlan), so bucket boundaries stay a
+//!       collective contract
 //!     every `unroll` steps — meta pass (SAMA placement, Fig. 2):
 //!       pass 1  g_meta ← ∂L_meta/∂θ        LOCAL, no sync
 //!       fused   v, ε, θ±  (adapt+perturb)   LOCAL   (L1 kernel)
@@ -32,6 +36,11 @@
 //!               slice with the F2SA θ-nudge; the in-flight reduce then
 //!               rides behind the NEXT base forward+streamed backward and
 //!               is drained as stream B of step+1
+//!     every `checkpoint_every` steps (and at the end), leader only:
+//!       Checkpoint::save — θ, λ, both optimizer states, step counters,
+//!       the tuner's bucket size, and (if stream B is in flight) the
+//!       already-reduced-but-unapplied ĝ_λ, so a resumed run replays the
+//!       pipelined schedule bit-for-bit
 //! ```
 //!
 //! Gradient synchronization happens **once** per meta update (plus the
@@ -50,13 +59,35 @@
 //! Tables 8–9 ablation measures a real difference. Single-worker runs have
 //! no interconnect and never pipeline, so analytic convergence tests are
 //! unaffected by the overlap flag.
+//!
+//! **Multi-ring decoupling.** `rings=2` (default) gives λ its own comm
+//! ring (`CommWorld::with_rings`, NCCL-channel analogue): in the pipelined
+//! schedule the stale λ-reduce is enqueued before the next step's θ
+//! buckets, so on one shared engine the fat λ transfer serializes ahead of
+//! θ and the θ wait absorbs both; with separate rings each stream pays
+//! only for its own traffic. Ring assignment never changes reduce
+//! arithmetic — `rings=1` and `rings=2` produce bitwise-identical θ/λ.
+//!
+//! **Checkpoint / resume.** `checkpoint_path=` enables durable state: at
+//! startup every worker restores from the file if it exists (ranks share
+//! the leader's state — θ/λ are replicated by construction), and rank 0
+//! saves every `checkpoint_every` steps plus at run end. An in-flight
+//! pipelined λ-reduce is resolved to its (deterministic) reduced value and
+//! stored *unapplied*, so the resumed schedule applies it exactly where
+//! the uninterrupted one would have. Problem-internal state (e.g. the cls
+//! EMA uncertainty) is not captured — checkpointed resume is exact for
+//! problems whose oracles are pure functions of (θ, λ, step). Loss-curve
+//! series and sample counters restart from the resume point.
 
 pub mod checkpoint;
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
+
+use self::checkpoint::Checkpoint;
 
 use crate::algos::sama::SamaScratch;
 use crate::algos::{self, MetaStepCtx};
@@ -188,7 +219,25 @@ pub struct RunOptions {
     pub eval_every: usize,
 }
 
+/// Load the resume checkpoint named by `cfg.checkpoint_path`, if any.
+/// Missing file = fresh start; an unreadable/corrupt file is an error
+/// (silently restarting a long run from scratch would be worse).
+fn load_resume(cfg: &TrainConfig) -> Result<Option<Checkpoint>> {
+    if cfg.checkpoint_path.is_empty() {
+        return Ok(None);
+    }
+    let path = Path::new(&cfg.checkpoint_path);
+    if !path.exists() {
+        return Ok(None);
+    }
+    Checkpoint::load(path)
+        .with_context(|| format!("resuming from {path:?}"))
+        .map(Some)
+}
+
 /// Run a full bilevel training job across `cfg.workers` simulated devices.
+/// With `cfg.checkpoint_path` set, resumes from that file when it exists
+/// and saves leader-side checkpoints into it as the run progresses.
 pub fn train(
     cfg: &TrainConfig,
     factory: &dyn ProblemFactory,
@@ -200,13 +249,17 @@ pub fn train(
     } else {
         LinkModel { bandwidth: cfg.link_bandwidth, latency: cfg.link_latency }
     };
-    let comm_world = CommWorld::new(world, link);
+    let comm_world = CommWorld::with_rings(world, link, cfg.rings.max(1));
+    // one load, shared by every rank: θ/λ are replicated across ranks by
+    // construction, so all workers restart from the leader's saved state
+    let resume = Arc::new(load_resume(cfg)?);
     let t0 = Instant::now();
 
     let reports: Vec<WorkerReport> = std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for rank in 0..world {
             let comm_world = Arc::clone(&comm_world);
+            let resume = Arc::clone(&resume);
             let cfg = cfg.clone();
             let opts = opts.clone();
             handles.push(scope.spawn(move || -> Result<WorkerReport> {
@@ -222,6 +275,7 @@ pub fn train(
                     &mut coll,
                     theta0,
                     lambda0,
+                    resume.as_ref().as_ref(),
                 )
             }));
         }
@@ -375,6 +429,41 @@ fn bookkeep(
     }
 }
 
+/// Stream B's state across the meta→base pipeline boundary.
+enum LambdaStream {
+    /// No λ-reduce pending.
+    Idle,
+    /// ĝ_λ submitted, riding the (λ-tagged) ring behind base compute.
+    InFlight(PendingReduce),
+    /// Reduced but not yet applied as a λ-step. Produced when a checkpoint
+    /// resolves an in-flight reduce (the reduced value is deterministic,
+    /// so waiting early cannot change it), or restored from a checkpoint's
+    /// `pending_lambda`; applied at the exact schedule point an
+    /// `InFlight` wait would have been.
+    Ready(Vec<f32>),
+}
+
+/// Drain stream B at its schedule point: wait out an in-flight reduce (or
+/// take a checkpoint-resolved one) and run the deferred λ ← AdamStep.
+fn drain_lambda(
+    coll: &mut Collective,
+    problem: &mut dyn BilevelProblem,
+    lambda: &mut Vec<f32>,
+    meta_state: &mut OptState,
+    stream: &mut LambdaStream,
+) -> Result<()> {
+    match std::mem::replace(stream, LambdaStream::Idle) {
+        LambdaStream::Idle => Ok(()),
+        LambdaStream::InFlight(p) => {
+            let g_lambda = coll.wait(p);
+            apply_lambda_step(problem, lambda, meta_state, &g_lambda)
+        }
+        LambdaStream::Ready(g_lambda) => {
+            apply_lambda_step(problem, lambda, meta_state, &g_lambda)
+        }
+    }
+}
+
 /// Submit ĝ_λ for reduction while applying the F2SA θ-nudge.
 ///
 /// With `stream_grads`, the gradient goes out bucket-by-bucket interleaved
@@ -448,6 +537,7 @@ fn run_worker(
     coll: &mut Collective,
     mut theta: Vec<f32>,
     mut lambda: Vec<f32>,
+    resume: Option<&Checkpoint>,
 ) -> Result<WorkerReport> {
     let n_theta = problem.n_theta();
     let n_lambda = problem.n_lambda();
@@ -481,11 +571,61 @@ fn run_worker(
     // a static override (`bucket_auto=false`) pins the size.
     let adaptive =
         cfg.bucket_auto && stream_base && coll.world() > 1;
-    let mut plan = BucketPlan::new(cfg.bucket_elems, adaptive);
-    let mut pending_lambda: Option<PendingReduce> = None;
+    let mut lambda_stream = LambdaStream::Idle;
+    let mut start_step = 0usize;
+
+    // Resume: every rank restores the leader's saved state (θ/λ are
+    // replicated across ranks by construction, so this keeps the world
+    // consistent); the schedule picks up exactly where the save left it.
+    if let Some(ck) = resume {
+        anyhow::ensure!(
+            ck.theta.len() == n_theta && ck.base_m.len() == n_theta
+                && ck.base_v.len() == n_theta,
+            "checkpoint θ/optimizer size {} does not match problem ({n_theta})",
+            ck.theta.len()
+        );
+        anyhow::ensure!(
+            ck.lambda.len() == n_lambda && ck.meta_m.len() == n_lambda
+                && ck.meta_v.len() == n_lambda,
+            "checkpoint λ/optimizer size {} does not match problem ({n_lambda})",
+            ck.lambda.len()
+        );
+        theta.copy_from_slice(&ck.theta);
+        lambda.copy_from_slice(&ck.lambda);
+        base_state.m.copy_from_slice(&ck.base_m);
+        base_state.v.copy_from_slice(&ck.base_v);
+        base_state.t = ck.base_t;
+        meta_state.m.copy_from_slice(&ck.meta_m);
+        meta_state.v.copy_from_slice(&ck.meta_v);
+        meta_state.t = ck.meta_t;
+        start_step = (ck.step as usize).min(cfg.steps);
+        if !ck.pending_lambda.is_empty() {
+            anyhow::ensure!(
+                ck.pending_lambda.len() == n_lambda,
+                "checkpoint pending λ-gradient size {} vs {n_lambda}",
+                ck.pending_lambda.len()
+            );
+            lambda_stream = LambdaStream::Ready(ck.pending_lambda.clone());
+        }
+    }
+
+    // The adaptive plan resumes from the checkpointed converged size
+    // instead of re-warming from the configured seed; a static plan
+    // (`bucket_elems=` pin) always honors the config.
+    let plan_seed = match resume {
+        Some(ck) if adaptive && ck.bucket_elems > 0 => ck.bucket_elems as usize,
+        _ => cfg.bucket_elems,
+    };
+    let mut plan = BucketPlan::new(plan_seed, adaptive)
+        .with_retune_every(cfg.retune_every.max(1));
+    // A failed checkpoint save must NOT abort this rank mid-loop: the
+    // other ranks would block forever at their next ring rendezvous
+    // (their peer never submits again) and train() would hang instead of
+    // erroring. Finish the schedule, surface the failure at the end.
+    let mut ck_err: Option<anyhow::Error> = None;
     let t_start = Instant::now();
 
-    for step in 0..cfg.steps {
+    for step in start_step..cfg.steps {
         // ---- base pass -------------------------------------------------
         let g_synced = if stream_base {
             // Streamed: the backward emits gradient segments; full buckets
@@ -499,13 +639,20 @@ fn run_worker(
             let meta = {
                 let coll = &mut *coll;
                 let pending = &mut pending;
-                let lam = &mut pending_lambda;
+                let lam = &mut lambda_stream;
                 let buf = &mut buf;
                 problem.base_grad_streamed(
                     &theta,
                     &lambda,
                     step,
                     &mut |seg: &[f32]| {
+                        // stream B drains at every segment the backward
+                        // emits — with λ on its own ring its buckets land
+                        // independently of θ-bucket gaps, so the poll is
+                        // no longer tied to a θ submission
+                        if let LambdaStream::InFlight(p) = lam {
+                            coll.try_progress(p);
+                        }
                         let mut rest = seg;
                         while !rest.is_empty() {
                             let take = (bucket - buf.len()).min(rest.len());
@@ -515,7 +662,7 @@ fn run_worker(
                                 let next = coll.take_bucket_buf(bucket);
                                 let full = std::mem::replace(buf, next);
                                 coll.submit_bucket(pending, full);
-                                if let Some(p) = lam.as_mut() {
+                                if let LambdaStream::InFlight(p) = lam {
                                     coll.try_progress(p);
                                 }
                             }
@@ -532,10 +679,13 @@ fn run_worker(
             // The λ-reduce has had the whole backward to complete; drain
             // it and run the deferred λ ← AdamStep *inside* the θ-reduce's
             // window (tagged out-of-order wait).
-            if let Some(p) = pending_lambda.take() {
-                let g_lambda = coll.wait(p);
-                apply_lambda_step(problem, &mut lambda, &mut meta_state, &g_lambda)?;
-            }
+            drain_lambda(
+                coll,
+                problem,
+                &mut lambda,
+                &mut meta_state,
+                &mut lambda_stream,
+            )?;
             bookkeep(
                 &meta,
                 step,
@@ -555,10 +705,13 @@ fn run_worker(
             let bg = problem.base_grad(&theta, &lambda, step)?;
             // Unstreamed overlap: drain the pipelined λ-reduce right after
             // the base backward (its pre-PR-2 position).
-            if let Some(p) = pending_lambda.take() {
-                let g_lambda = coll.wait(p);
-                apply_lambda_step(problem, &mut lambda, &mut meta_state, &g_lambda)?;
-            }
+            drain_lambda(
+                coll,
+                problem,
+                &mut lambda,
+                &mut meta_state,
+                &mut lambda_stream,
+            )?;
             let (grad, meta) = bg.into_parts();
             let g = if cfg.overlap {
                 // submit first; bookkeeping fills the overlap window while
@@ -649,7 +802,7 @@ fn run_worker(
                     // ... then let the reduce ride behind the next base
                     // forward + streamed backward; drained there as
                     // stream B.
-                    pending_lambda = Some(pending);
+                    lambda_stream = LambdaStream::InFlight(pending);
                 } else {
                     let g_lambda = coll.wait(pending);
                     apply_lambda_step(
@@ -679,12 +832,70 @@ fn run_worker(
         } else if opts.eval_every > 0 && step % opts.eval_every == 0 {
             meta_loss.push(step as f64, problem.meta_loss(&theta, step)? as f64);
         }
+
+        // ---- leader-side checkpoint -------------------------------------
+        let ck_due = rank == 0
+            && !cfg.checkpoint_path.is_empty()
+            && ((cfg.checkpoint_every > 0
+                && (step + 1) % cfg.checkpoint_every == 0)
+                || step + 1 == cfg.steps);
+        if ck_due {
+            // Resolve an in-flight λ-reduce to its reduced value without
+            // applying the deferred step: the reduction is deterministic,
+            // so waiting early here cannot change what the next step's
+            // drain point will apply — the resumed schedule stays
+            // bit-for-bit identical to the uninterrupted one.
+            if matches!(lambda_stream, LambdaStream::InFlight(_)) {
+                if let LambdaStream::InFlight(p) =
+                    std::mem::replace(&mut lambda_stream, LambdaStream::Idle)
+                {
+                    lambda_stream = LambdaStream::Ready(coll.wait(p));
+                }
+            }
+            let pending = match &lambda_stream {
+                LambdaStream::Ready(g) => g.clone(),
+                _ => Vec::new(),
+            };
+            let ck = Checkpoint {
+                step: (step + 1) as u64,
+                base_t: base_state.t,
+                meta_t: meta_state.t,
+                theta: theta.clone(),
+                lambda: lambda.clone(),
+                base_m: base_state.m.clone(),
+                base_v: base_state.v.clone(),
+                meta_m: meta_state.m.clone(),
+                meta_v: meta_state.v.clone(),
+                bucket_elems: plan.elems() as u64,
+                pending_lambda: pending,
+            };
+            if ck_err.is_none() {
+                if let Err(e) = ck.save(Path::new(&cfg.checkpoint_path)) {
+                    let e = e.context(format!(
+                        "saving checkpoint to {}",
+                        cfg.checkpoint_path
+                    ));
+                    eprintln!("[coordinator] checkpoint save failed: {e:#}");
+                    ck_err = Some(e);
+                }
+            }
+        }
     }
 
     // drain a λ-reduce left in flight by a meta step on the final iteration
-    if let Some(p) = pending_lambda.take() {
-        let g_lambda = coll.wait(p);
-        apply_lambda_step(problem, &mut lambda, &mut meta_state, &g_lambda)?;
+    drain_lambda(
+        coll,
+        problem,
+        &mut lambda,
+        &mut meta_state,
+        &mut lambda_stream,
+    )?;
+
+    // now that every collective op this rank owes its peers has run, a
+    // deferred checkpoint failure can be surfaced: resumability was lost,
+    // which the caller asked for by setting `checkpoint_path`
+    if let Some(e) = ck_err {
+        return Err(e);
     }
 
     Ok(WorkerReport {
@@ -766,6 +977,7 @@ fn meta_step(
 }
 
 /// Convenience single-worker entry for analytic problems (tests, Fig. 5).
+/// Honors the same checkpoint knobs as [`train`].
 pub fn train_single(
     cfg: &TrainConfig,
     problem: &mut dyn BilevelProblem,
@@ -776,8 +988,19 @@ pub fn train_single(
 ) -> Result<WorkerReport> {
     let comm_world = CommWorld::new(1, LinkModel::instant());
     let mut coll = comm_world.join(0);
-    run_worker(cfg, base_opt, opts, 0, problem, &mut coll, theta0, lambda0)
-        .context("single-worker run")
+    let resume = load_resume(cfg)?;
+    run_worker(
+        cfg,
+        base_opt,
+        opts,
+        0,
+        problem,
+        &mut coll,
+        theta0,
+        lambda0,
+        resume.as_ref(),
+    )
+    .context("single-worker run")
 }
 
 #[cfg(test)]
@@ -1114,6 +1337,200 @@ mod tests {
                 .sum();
             assert!((split - st.comm_seconds).abs() < 1e-9);
         }
+    }
+
+    // ---- multi-ring decoupling ------------------------------------------
+
+    /// Comm-bound two-worker run where the fat λ-reduce saturates the
+    /// link: `rings=1` vs `rings=2` must produce bitwise-identical final
+    /// θ/λ with identical per-tag traffic, while the second ring strictly
+    /// cuts the θ-stream's blocked time — in the pipelined schedule the
+    /// stale-λ reduce is enqueued ahead of the next step's θ buckets, so
+    /// on one shared engine the λ transfer serializes ahead of θ and the
+    /// θ wait absorbs it. (The mirror case — λ queueing behind in-flight θ
+    /// buckets — is pinned at the collective level:
+    /// `second_ring_unblocks_lambda_from_theta_contention`.)
+    #[test]
+    fn second_ring_decouples_streams_and_stays_bitwise_identical() {
+        let cfg = |rings: usize| TrainConfig {
+            algo: Algo::SamaNa,
+            workers: 2,
+            steps: 10,
+            unroll: 1,
+            meta_warmup: 0,
+            base_lr: 1e-3,
+            meta_lr: 1e-3,
+            sama_alpha: 1.0,
+            // comm-bound: λ = 16384 f32 → 64 KiB ≈ 16 ms of ring time at
+            // 4 MB/s vs ~1 ms of compute — overlap cannot hide it, so
+            // single-ring serialization is visible in the θ wait
+            link_bandwidth: 4e6,
+            link_latency: 5e-5,
+            bucket_elems: 4096,
+            bucket_auto: false,
+            overlap: true,
+            rings,
+            ..TrainConfig::default()
+        };
+        let factory = SlowFactory {
+            n_theta: 4096,
+            n_lambda: 16384,
+            busy: Duration::from_millis(1),
+        };
+        let one = train(&cfg(1), &factory, &RunOptions::default()).unwrap();
+        let two = train(&cfg(2), &factory, &RunOptions::default()).unwrap();
+
+        assert_eq!(
+            one.final_theta, two.final_theta,
+            "ring count changed θ"
+        );
+        assert_eq!(
+            one.final_lambda, two.final_lambda,
+            "ring count changed λ"
+        );
+        let (t1, t2) = (one.comm_totals(), two.comm_totals());
+        for tag in [ReduceTag::Theta, ReduceTag::Lambda] {
+            assert_eq!(t1.tag(tag).reduces, t2.tag(tag).reduces);
+            assert_eq!(t1.tag(tag).buckets, t2.tag(tag).buckets);
+        }
+        let (b1, b2) = (
+            t1.tag(ReduceTag::Theta).blocked_seconds,
+            t2.tag(ReduceTag::Theta).blocked_seconds,
+        );
+        assert!(
+            b2 < 0.5 * b1,
+            "θ blocked {b2:.4}s with 2 rings vs {b1:.4}s with 1 — the \
+             second ring removed no contention"
+        );
+    }
+
+    // ---- checkpoint / resume ---------------------------------------------
+
+    /// Deterministic multi-worker factory for resume tests: every rank
+    /// builds the identical analytic problem.
+    struct BrFactory;
+
+    impl ProblemFactory for BrFactory {
+        fn build(
+            &self,
+            _rank: usize,
+            _world: usize,
+        ) -> Result<(Box<dyn BilevelProblem>, Vec<f32>, Vec<f32>)> {
+            let mut rng = Rng::new(4242);
+            let p = BiasedRegression::random(&mut rng, 40, 30, 8, 2.0);
+            Ok((Box::new(p), vec![0.0; 8], vec![0.0; 8]))
+        }
+
+        fn base_opt(&self) -> BaseOpt {
+            BaseOpt::Sgd { momentum: 0.0 }
+        }
+    }
+
+    fn resume_cfg(steps: usize, path: &str) -> TrainConfig {
+        TrainConfig {
+            steps,
+            workers: 2,
+            // near-instant but real interconnect: the full pipelined
+            // schedule runs (λ in flight across the meta→base boundary)
+            link_bandwidth: 1e12,
+            link_latency: 0.0,
+            bucket_auto: false,
+            checkpoint_path: path.into(),
+            ..small_cfg(Algo::Sama)
+        }
+    }
+
+    /// The resume contract: run 36 of 60 steps, checkpoint (with the
+    /// pipelined λ-reduce in flight at the cut — the hard case), then
+    /// resume to 60 → final θ and λ are bit-for-bit what the
+    /// uninterrupted 60-step run produces.
+    #[test]
+    fn checkpoint_resume_reproduces_uninterrupted_run_bitwise() {
+        let dir = std::env::temp_dir().join("sama_resume_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ck");
+        std::fs::remove_file(&path).ok();
+        let spath = path.to_str().unwrap().to_string();
+
+        let uninterrupted =
+            train(&resume_cfg(60, ""), &BrFactory, &RunOptions::default())
+                .unwrap();
+        let _part =
+            train(&resume_cfg(36, &spath), &BrFactory, &RunOptions::default())
+                .unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.step, 36);
+        // the cut lands right after a meta step (unroll=3 → meta at step
+        // 35), so the checkpoint must carry the reduced-but-unapplied ĝ_λ
+        assert!(
+            !ck.pending_lambda.is_empty(),
+            "cut should land with the pipelined λ-reduce in flight"
+        );
+
+        let resumed =
+            train(&resume_cfg(60, &spath), &BrFactory, &RunOptions::default())
+                .unwrap();
+        assert_eq!(
+            resumed.final_theta, uninterrupted.final_theta,
+            "resumed θ diverged from the uninterrupted run"
+        );
+        assert_eq!(
+            resumed.final_lambda, uninterrupted.final_lambda,
+            "resumed λ diverged from the uninterrupted run"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// ROADMAP "bucket plan persistence": the checkpoint carries the
+    /// auto-tuner's converged size, and a resumed run's plan starts there
+    /// instead of re-warming from the configured seed.
+    #[test]
+    fn checkpoint_persists_and_restores_tuner_bucket_size() {
+        let dir = std::env::temp_dir().join("sama_resume_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tuner.ck");
+        std::fs::remove_file(&path).ok();
+        let mut cfg = slow_link_cfg(true);
+        cfg.bucket_auto = true;
+        cfg.checkpoint_path = path.to_str().unwrap().into();
+        let factory = SlowFactory {
+            n_theta: 64,
+            n_lambda: 8192,
+            busy: Duration::from_millis(4),
+        };
+        let first = train(&cfg, &factory, &RunOptions::default()).unwrap();
+        assert!(
+            first.bucket_elems_final < cfg.bucket_elems,
+            "producer-bound run should have shrunk buckets"
+        );
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.bucket_elems as usize, first.bucket_elems_final);
+
+        // resume with no extra steps: the report's final size must be the
+        // restored (checkpointed) one, not the config seed
+        let resumed = train(&cfg, &factory, &RunOptions::default()).unwrap();
+        assert_eq!(resumed.bucket_elems_final, first.bucket_elems_final);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// `retune_every=` pins the tuner cadence: with a cadence longer than
+    /// the run no retune may fire, so the size stays at the seed even with
+    /// `bucket_auto` on.
+    #[test]
+    fn retune_every_knob_defers_retuning() {
+        let mut cfg = slow_link_cfg(true);
+        cfg.bucket_auto = true;
+        cfg.retune_every = 1000;
+        let factory = SlowFactory {
+            n_theta: 64,
+            n_lambda: 8192,
+            busy: Duration::from_millis(4),
+        };
+        let rep = train(&cfg, &factory, &RunOptions::default()).unwrap();
+        assert_eq!(
+            rep.bucket_elems_final, cfg.bucket_elems,
+            "no retune may fire before the configured cadence"
+        );
     }
 
     // ---- merge_reports ---------------------------------------------------
