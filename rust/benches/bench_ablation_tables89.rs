@@ -15,7 +15,7 @@ use sama::apps::wrench;
 use sama::collective::{CommStats, ReduceTag};
 use sama::config::Algo;
 use sama::metrics::memory::{gib, peak_bytes, ArchSpec};
-use sama::metrics::report::{f1, f2, pct, Table};
+use sama::metrics::report::{f1, f2, pct, slash_join, Table};
 
 /// `hidden θ/λ (%)` column (same metric as `bench_table2_ddp`).
 fn tag_hidden(totals: &CommStats, tag: ReduceTag) -> f64 {
@@ -59,6 +59,7 @@ fn main() {
             "memory (GiB @BERT-base)",
             "hidden θ/λ (%)",
             "peer-wait θ/λ (s)",
+            "ring busy (s)",
         ],
     );
     for row in rows {
@@ -91,13 +92,16 @@ fn main() {
                 f2(totals.tag(ReduceTag::Theta).peer_wait_seconds),
                 f2(totals.tag(ReduceTag::Lambda).peer_wait_seconds)
             ),
+            slash_join(totals.per_ring.iter().map(|r| f2(r.busy_seconds))),
         ]);
         eprintln!("[tables89] {} done", row.label);
     }
     t.print();
     println!(
-        "hidden θ/λ and peer-wait θ/λ: per-stream comm attribution \
-         (1-worker rows have no interconnect and report 0/0)."
+        "hidden θ/λ and peer-wait θ/λ: per-stream comm attribution; ring \
+         busy: per-ring engine occupancy (queueing between tags sharing a \
+         ring shows up here). 1-worker rows have no interconnect and \
+         report 0/0."
     );
     println!(
         "paper Table 8 reference (acc/thr/mem): Finetune 85.79/169/7.8, \

@@ -13,7 +13,7 @@ use sama::apps::wrench;
 use sama::collective::ReduceTag;
 use sama::config::Algo;
 use sama::metrics::memory::{gib, peak_bytes, ArchSpec};
-use sama::metrics::report::{f1, f2, Table};
+use sama::metrics::report::{f1, f2, slash_join, Table};
 
 fn main() {
     common::require_artifacts();
@@ -27,6 +27,7 @@ fn main() {
             "memory/worker (GiB, BERT-base model)",
             "hidden θ/λ (%)",
             "peer-wait θ/λ (s)",
+            "ring busy (s)",
         ],
     );
     let rows: Vec<(Algo, usize)> = vec![
@@ -62,6 +63,7 @@ fn main() {
                 f2(totals.tag(ReduceTag::Theta).peer_wait_seconds),
                 f2(totals.tag(ReduceTag::Lambda).peer_wait_seconds)
             ),
+            slash_join(totals.per_ring.iter().map(|r| f2(r.busy_seconds))),
         ]);
     }
     t.print();
@@ -69,7 +71,7 @@ fn main() {
         "expected shape (paper Fig. 1 bottom-left): SAMA/SAMA-NA ≳1.7× the \
          throughput of Neumann/CG at ~half the memory; SAMA workers extend \
          the frontier up-left. hidden/peer-wait θ/λ: per-stream comm \
-         attribution (multi-worker rows only; fig1_model_scaling is \
-         analytic and has no collective)."
+         attribution; ring busy: per-ring engine occupancy (multi-worker \
+         rows only; fig1_model_scaling is analytic and has no collective)."
     );
 }

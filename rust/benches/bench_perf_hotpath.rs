@@ -14,7 +14,10 @@ use std::time::{Duration, Instant};
 
 use sama::bilevel::cls_problem::ClsProblem;
 use sama::bilevel::{BilevelProblem, ParamKind};
-use sama::collective::{BucketPlan, CommStats, CommWorld, LinkModel, ReduceTag};
+use sama::collective::{
+    BucketPlan, CommStats, CommWorld, LinkModel, LinkProfile, ReduceTag,
+    RoutePolicy, Topology,
+};
 use sama::config::MetaOps;
 use sama::data::wrench_sim;
 use sama::metrics::report::{f2, Table};
@@ -164,16 +167,65 @@ fn probe_rings(rings: usize) -> CommStats {
     stats
 }
 
+/// Topology routing probe: the ISSUE's acceptance workload. A two-ring
+/// heterogeneous topology (ring 0 = slow inter-node path, ring 1 = fast
+/// intra-node path); a fat θ-reduce is in flight while small λ and Ctrl
+/// reduces are submitted and waited first. Under `tag` routing θ+Ctrl are
+/// pinned to the slow ring (Ctrl queues behind the whole θ transfer);
+/// under `size` routing θ takes the fast ring and the small reduces hitch
+/// onto the empty one — λ+Ctrl blocked seconds collapse.
+fn probe_routing(policy: RoutePolicy) -> CommStats {
+    let slow = LinkProfile { latency: 1e-4, bytes_per_sec: 20e6 };
+    let fast = LinkProfile { latency: 1e-6, bytes_per_sec: 1e9 };
+    // nodes=1: ring 0 = slow inter-fabric ring, ring 1 = fast intra ring
+    let cw =
+        CommWorld::with_topology(Topology::hierarchical(2, 1, 2, fast, slow), policy);
+    let mut handles = Vec::new();
+    for rank in 0..2 {
+        let cw = Arc::clone(&cw);
+        handles.push(std::thread::spawn(move || {
+            let mut coll = cw.join(rank);
+            for _ in 0..4 {
+                let pt = coll.all_reduce_async(
+                    vec![rank as f32; PROBE_ELEMS],
+                    8192,
+                    ReduceTag::Theta,
+                );
+                let pl = coll.all_reduce_async(
+                    vec![1.0 + rank as f32; 1024],
+                    8192,
+                    ReduceTag::Lambda,
+                );
+                let _ = coll.all_reduce_sync(
+                    vec![0.5; 4],
+                    4,
+                    ReduceTag::Ctrl,
+                );
+                let _ = coll.wait(pl);
+                let _ = coll.wait(pt);
+            }
+            coll.stats().clone()
+        }));
+    }
+    let mut stats = CommStats::default();
+    for h in handles {
+        stats.merge(&h.join().unwrap());
+    }
+    stats
+}
+
 /// Collective overlap probe (artifact-free): blocking vs overlapped vs
 /// auto-tuned-streamed, on a 50 MB/s link, plus the multi-ring contention
-/// split. Also emits the machine-readable `BENCH_hotpath.json` so the
-/// perf trajectory is tracked across PRs.
+/// split and the topology routing probe. Also emits the machine-readable
+/// `BENCH_hotpath.json` so the perf trajectory is tracked across PRs.
 fn comm_overlap_probe() {
     let blocking = probe_fixed(false);
     let overlapped = probe_fixed(true);
     let tuned = probe_autotuned();
     let rings1 = probe_rings(1);
     let rings2 = probe_rings(2);
+    let route_tag = probe_routing(RoutePolicy::Tag);
+    let route_sized = probe_routing(RoutePolicy::Sized);
 
     let mut t = Table::new(
         "§Perf: collective overlap probe (256 KiB ×8, 2 ranks, 50 MB/s link)",
@@ -222,6 +274,47 @@ fn comm_overlap_probe() {
          the coordinator's rings=2 default exploits."
     );
 
+    let small_blocked = |p: &CommStats| {
+        p.tag(ReduceTag::Lambda).blocked_seconds
+            + p.tag(ReduceTag::Ctrl).blocked_seconds
+    };
+    let mut tt = Table::new(
+        "§Perf: topology routing probe (2-ring hetero: slow inter ring + \
+         fast intra ring, 256 KiB θ in flight, small λ/Ctrl waited first)",
+        &[
+            "route",
+            "λ+Ctrl blocked s",
+            "ring busy s (slow/fast)",
+            "ring qdepth hwm",
+            "total comm s",
+        ],
+    );
+    for (name, p) in [("tag (pinned)", &route_tag), ("size (scheduler)", &route_sized)] {
+        tt.row(vec![
+            name.into(),
+            f2(small_blocked(p)),
+            format!(
+                "{}/{}",
+                f2(p.ring(0).busy_seconds),
+                f2(p.ring(1).busy_seconds)
+            ),
+            format!(
+                "{}/{}",
+                p.ring(0).queue_depth_hwm,
+                p.ring(1).queue_depth_hwm
+            ),
+            f2(p.comm_seconds),
+        ]);
+    }
+    tt.print();
+    println!(
+        "tag routing pins θ+Ctrl to ring 0 — on a heterogeneous topology \
+         that is the slow inter-node ring, and the tiny Ctrl syncs queue \
+         behind the whole θ transfer; size routing sends θ to the fast \
+         ring and hitches the small reduces onto the empty one. Reduced \
+         values are bitwise-identical under both policies."
+    );
+
     // machine-readable perf trajectory (consumed across PRs; artifact-free)
     let num = Json::Num;
     let mut obj: BTreeMap<String, Json> = BTreeMap::new();
@@ -254,6 +347,38 @@ fn comm_overlap_probe() {
         ),
     );
     obj.insert(
+        "route_small_blocked_tag".into(),
+        num(small_blocked(&route_tag)),
+    );
+    obj.insert(
+        "route_small_blocked_sized".into(),
+        num(small_blocked(&route_sized)),
+    );
+    obj.insert(
+        "route_contention_removed_seconds".into(),
+        num(small_blocked(&route_tag) - small_blocked(&route_sized)),
+    );
+    obj.insert(
+        "ring_busy_seconds_rings2".into(),
+        Json::Arr(
+            rings2
+                .per_ring
+                .iter()
+                .map(|r| Json::Num(r.busy_seconds))
+                .collect(),
+        ),
+    );
+    obj.insert(
+        "ring_queue_depth_hwm_rings2".into(),
+        Json::Arr(
+            rings2
+                .per_ring
+                .iter()
+                .map(|r| Json::Num(r.queue_depth_hwm as f64))
+                .collect(),
+        ),
+    );
+    obj.insert(
         "peer_wait_seconds_tuned".into(),
         num(tuned.stats.peer_wait_seconds),
     );
@@ -264,6 +389,16 @@ fn comm_overlap_probe() {
     obj.insert("world".into(), num(2.0));
     obj.insert("link_bandwidth".into(), num(PROBE_LINK.bandwidth));
     obj.insert("link_latency".into(), num(PROBE_LINK.latency));
+    // stamp the active topology override: SAMA_TEST_TOPOLOGY=hier reshapes
+    // every flat-constructed probe above, and the cross-PR perf trajectory
+    // must not mix those numbers with flat baselines unmarked
+    obj.insert(
+        "test_topology_env".into(),
+        Json::Str(
+            std::env::var("SAMA_TEST_TOPOLOGY")
+                .unwrap_or_else(|_| "flat".into()),
+        ),
+    );
     obj.insert("probe".into(), t.to_json());
     let path = std::env::var("SAMA_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_hotpath.json".into());

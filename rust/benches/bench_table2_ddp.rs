@@ -18,10 +18,34 @@
 mod common;
 
 use sama::apps::wrench;
-use sama::collective::ReduceTag;
+use sama::collective::{ReduceTag, RoutePolicy, TopologyKind};
 use sama::config::Algo;
 use sama::metrics::memory::{gib, peak_bytes, ArchSpec};
-use sama::metrics::report::{f1, f2, Table};
+use sama::metrics::report::{f1, f2, slash_join, Table};
+
+struct Row {
+    label: &'static str,
+    algo: Algo,
+    workers: usize,
+    model: &'static str,
+    rings: usize,
+    route: RoutePolicy,
+    topology: TopologyKind,
+}
+
+impl Row {
+    fn new(label: &'static str, algo: Algo, workers: usize, model: &'static str) -> Row {
+        Row {
+            label,
+            algo,
+            workers,
+            model,
+            rings: 2,
+            route: RoutePolicy::Sized,
+            topology: TopologyKind::Flat,
+        }
+    }
+}
 
 fn main() {
     common::require_artifacts();
@@ -39,36 +63,52 @@ fn main() {
             "hidden comm (%)",
             "hidden θ/λ (%)",
             "peer-wait θ/λ (s)",
+            "ring busy (s)",
+            "ring qdepth",
             "bucket KiB (final)",
         ],
     );
-    let rows: Vec<(&str, Algo, usize, &str, usize)> = vec![
-        ("neumann", Algo::Neumann, 1, "cls_b48", 2),
-        ("cg", Algo::Cg, 1, "cls_b48", 2),
-        ("sama_na", Algo::SamaNa, 1, "cls_b48", 2),
-        ("sama", Algo::Sama, 1, "cls_b48", 2),
-        ("sama", Algo::Sama, 2, "cls_b24", 2),
+    let rows: Vec<Row> = vec![
+        Row::new("neumann", Algo::Neumann, 1, "cls_b48"),
+        Row::new("cg", Algo::Cg, 1, "cls_b48"),
+        Row::new("sama_na", Algo::SamaNa, 1, "cls_b48"),
+        Row::new("sama", Algo::Sama, 1, "cls_b48"),
+        Row::new("sama", Algo::Sama, 2, "cls_b24"),
         // single shared ring: the θ/λ serialization the multi-ring
         // collective removes, on an otherwise identical run
-        ("sama rings=1", Algo::Sama, 2, "cls_b24", 1),
-        ("sama", Algo::Sama, 4, "cls_b12", 2),
+        Row { rings: 1, ..Row::new("sama rings=1", Algo::Sama, 2, "cls_b24") },
+        // fixed tag routing: small reduces stay pinned behind whatever
+        // shares their ring — the queueing size routing removes
+        Row {
+            route: RoutePolicy::Tag,
+            ..Row::new("sama route=tag", Algo::Sama, 2, "cls_b24")
+        },
+        // NUMA-like two-node topology (inter-node hops ¼ bandwidth / 4×
+        // latency by default): the hetero regime the ring scheduler routes
+        Row {
+            topology: TopologyKind::Hier,
+            ..Row::new("sama topo=hier", Algo::Sama, 2, "cls_b24")
+        },
+        Row::new("sama", Algo::Sama, 4, "cls_b12"),
     ];
-    for (label, algo, workers, model, rings) in rows {
+    for row in rows {
         let mut cfg = common::wrench_cfg();
-        cfg.algo = algo;
-        cfg.workers = workers;
-        cfg.model = model.into();
+        cfg.algo = row.algo;
+        cfg.workers = row.workers;
+        cfg.model = row.model.into();
         cfg.steps = common::thr_steps();
-        cfg.rings = rings;
+        cfg.rings = row.rings;
+        cfg.route = row.route;
+        cfg.topology = row.topology;
         let out = wrench::run(&cfg, "agnews").expect("run");
-        let per_worker_batch = 48 / workers;
-        let mem = gib(peak_bytes(algo, &arch, 48, workers as u64, 10));
+        let per_worker_batch = 48 / row.workers;
+        let mem = gib(peak_bytes(row.algo, &arch, 48, row.workers as u64, 10));
         let totals = out.report.comm_totals();
         let tag_hidden =
             |tag: ReduceTag| 100.0 * totals.tag(tag).hidden_fraction();
         t.row(vec![
-            label.into(),
-            workers.to_string(),
+            row.label.into(),
+            row.workers.to_string(),
             per_worker_batch.to_string(),
             f2(mem),
             f1(out.report.projected_parallel_throughput()),
@@ -85,6 +125,10 @@ fn main() {
                 f2(totals.tag(ReduceTag::Theta).peer_wait_seconds),
                 f2(totals.tag(ReduceTag::Lambda).peer_wait_seconds)
             ),
+            slash_join(totals.per_ring.iter().map(|r| f2(r.busy_seconds))),
+            slash_join(
+                totals.per_ring.iter().map(|r| r.queue_depth_hwm.to_string()),
+            ),
             format!("{:.0}", out.report.bucket_elems_final as f64 * 4.0 / 1024.0),
         ]);
     }
@@ -99,12 +143,16 @@ fn main() {
          drain + streamed λ buckets, §3.3); the θ/λ split shows which\n\
          stream hides its reduce; 1-worker rows have no interconnect and\n\
          report 0. peer-wait is engine time blocked on a straggling rank\n\
-         (not wire time — the old conflation inflated hidden %). Compare\n\
-         the 2-worker sama row against `sama rings=1`: with one shared\n\
-         ring the fat λ-reduce and the θ buckets serialize on the same\n\
-         engine, the per-tag contention the default rings=2 removes.\n\
-         bucket KiB is the auto-tuner's final (rank-identical) pick — set\n\
-         bucket_elems= to pin it."
+         (not wire time — the old conflation inflated hidden %). ring busy\n\
+         / qdepth are the per-ring occupancy split: engine seconds and the\n\
+         bucket queue's high-water mark per ring, so queueing between tags\n\
+         sharing a ring is directly visible. Compare the 2-worker sama row\n\
+         against `sama rings=1` (one shared engine serializes everything),\n\
+         `sama route=tag` (fixed θ+Ctrl/λ ring pinning vs the default\n\
+         size/occupancy routing) and `sama topo=hier` (two NUMA-like nodes\n\
+         with a derated inter-node fabric — topology=hier, nodes=,\n\
+         intra_*/inter_* knobs). bucket KiB is the auto-tuner's final\n\
+         (rank-identical) pick — set bucket_elems= to pin it."
     );
     println!(
         "paper Table 2 reference (GB, samples/s): Neumann 26.0/82.9, \

@@ -377,6 +377,40 @@ impl BilevelProblem for ClsProblem {
         self.train.n()
     }
 
+    /// The one piece of problem-internal state the oracles depend on: the
+    /// EMA-of-θ buffer behind [`UncMode::Ema`] uncertainty. It is a pure
+    /// function of the replicated θ history (rank-replicated by
+    /// construction), so the leader's blob restores exactly on every rank;
+    /// batch order needs no state (a pure function of `step`). Layout:
+    /// empty = EMA not yet primed, else `[1.0, ema...]`.
+    fn save_state(&self) -> Vec<f32> {
+        match &self.ema_theta {
+            None => Vec::new(),
+            Some(e) => {
+                let mut v = Vec::with_capacity(e.len() + 1);
+                v.push(1.0);
+                v.extend_from_slice(e);
+                v
+            }
+        }
+    }
+
+    fn restore_state(&mut self, state: &[f32]) -> Result<()> {
+        if state.is_empty() {
+            self.ema_theta = None;
+            return Ok(());
+        }
+        let n = self.n_theta();
+        anyhow::ensure!(
+            state[0] == 1.0 && state.len() == n + 1,
+            "cls problem state blob malformed: tag {} len {} (θ size {n})",
+            state[0],
+            state.len()
+        );
+        self.ema_theta = Some(state[1..].to_vec());
+        Ok(())
+    }
+
     fn sama_adapt_perturb(
         &mut self,
         theta: &[f32],

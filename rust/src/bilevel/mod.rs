@@ -164,6 +164,35 @@ pub trait BilevelProblem {
         0
     }
 
+    /// Problem-internal state that must survive checkpoint/resume (EMA
+    /// buffers, data-order RNG counters, …) as a flat f32 blob, stored in
+    /// checkpoint format v3 and handed back to
+    /// [`restore_state`](Self::restore_state) on resume. Default:
+    /// stateless (empty blob).
+    ///
+    /// **Contract:** the blob must be *rank-replicated* — a pure function
+    /// of the replicated (θ, λ, step) history, like the cls EMA-of-θ
+    /// buffer — because the leader's blob is restored on every rank.
+    /// Rank-local state (e.g. shard-private RNGs) needs per-rank shards
+    /// the checkpoint does not yet carry.
+    fn save_state(&self) -> Vec<f32> {
+        Vec::new()
+    }
+
+    /// Restore what [`save_state`](Self::save_state) produced (called on
+    /// every rank at resume, before any oracle call). The stateless
+    /// default accepts only an empty blob: silently dropping state a
+    /// checkpoint carries would break the bit-exact-resume contract.
+    fn restore_state(&mut self, state: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            state.is_empty(),
+            "checkpoint carries {} floats of problem-internal state, but \
+             this problem has no restore_state hook",
+            state.len()
+        );
+        Ok(())
+    }
+
     /// Fused SAMA adapt+perturb via the L1 Pallas artifact, if this problem
     /// is runtime-backed. `Ok(None)` → coordinator falls back to the Rust
     /// implementation (analytic problems).

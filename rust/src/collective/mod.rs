@@ -18,21 +18,36 @@
 //!    [`ReduceTag`] and owns a private done channel, so multiple reduces
 //!    (θ and λ) can be in flight simultaneously and waited in *any* order.
 //!    [`CommStats`] attributes comm/blocked seconds per tag;
-//!  * **multiple independent rings per rank** — [`CommWorld::with_rings`]
-//!    spawns `R` comm engines per rank, each with its own cycle of
-//!    neighbor channels (the NCCL-channel analogue). A reduce is routed to
-//!    a ring by its [`ReduceTag`] (`tag.idx() % R`), so with `rings=2` the
-//!    θ buckets and a fat λ-reduce ride *separate* wires and a λ bucket
-//!    never queues behind in-flight θ buckets on the same engine. Ring
+//!  * **multiple independent rings per rank, each with a concrete path** —
+//!    [`CommWorld::with_topology`] spawns `R` comm engines per rank, each
+//!    with its own cycle of neighbor channels (the NCCL-channel analogue).
+//!    A [`Topology`] assigns every ring a path of per-hop [`LinkProfile`]s
+//!    (NUMA-like rank grouping: an all-inter fabric ring plus affinity
+//!    rings that ride intra-node links and pay the inter fabric on every
+//!    node-crossing hop), so the simulated hop cost is a function of the
+//!    *traversed link*, not one global number;
+//!  * **deterministic size/occupancy routing** — a [`RingScheduler`] per
+//!    rank routes each reduce at `begin_reduce` time: [`RoutePolicy::Tag`]
+//!    reproduces the fixed `tag.idx() % R` partition (θ+Ctrl vs λ), while
+//!    [`RoutePolicy::Sized`] picks the ring with the least modelled finish
+//!    time, so a small Ctrl/λ reduce hitches onto the emptier/faster ring
+//!    instead of queueing behind a fat θ transfer. Every scheduler input
+//!    is rank-replicated (submission sequence, synced bucket sizes, static
+//!    topology, profiles averaged through the Ctrl-tagged retune reduce),
+//!    so all ranks route identically with no extra coordination. Ring
 //!    assignment only changes *when* a bucket is reduced, never the
 //!    summation order inside it, so results are bitwise-identical for any
-//!    ring count;
+//!    topology, ring count or policy;
 //!  * **wire-time vs peer-wait attribution** — an engine's elapsed time on
 //!    a bucket is split into `wire_seconds` (time the payload actually
 //!    spends on the simulated link) and `peer_wait_seconds` (time blocked
 //!    in `recv()` at the ring rendezvous waiting for a straggler).
 //!    `comm_seconds` is the whole engine occupancy; treating all of it as
 //!    wire time inflated `hidden_fraction` whenever ranks arrived skewed;
+//!  * **per-ring attribution** — [`CommStats::per_ring`] tracks each
+//!    ring's busy/wire/peer-wait/blocked seconds and a queue-depth
+//!    high-water mark, so queueing delay between tags *sharing* a ring is
+//!    directly visible instead of only inferable by differencing runs;
 //!  * **a dedicated comm thread per worker and ring** — buckets are
 //!    ring-reduced by the comm engines while PJRT compute proceeds,
 //!    exactly like NCCL streams overlap CUDA compute. `overlap=false` in
@@ -55,17 +70,25 @@
 //! **Contract** (DDP, relaxed per ring): all ranks submit the same reduces,
 //! with the same bucket boundaries, in the same *per-ring* submission order
 //! — each ring's engine reduces its buckets strictly in that order, but
-//! different rings proceed independently (tag→ring routing is a pure
-//! function of the tag, so identical global submission orders across ranks
-//! imply identical per-ring orders). The completion side stays fully
-//! relaxed: waits may happen in any order (each reduce owns its done
-//! channel), so a θ-reduce can be drained while an earlier-submitted
-//! λ-reduce is still on the wire, and vice versa.
+//! different rings proceed independently (routing is a pure function of
+//! rank-replicated scheduler state, so identical global submission orders
+//! across ranks imply identical per-ring orders — see the determinism
+//! contract in [`topology`]). The completion side stays fully relaxed:
+//! waits may happen in any order (each reduce owns its done channel), so a
+//! θ-reduce can be drained while an earlier-submitted λ-reduce is still on
+//! the wire, and vice versa.
+
+pub mod topology;
+
+pub use topology::{
+    LinkProfile, RingPath, RingScheduler, RoutePolicy, SchedulerState,
+    Topology, TopologyKind,
+};
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 /// Simulated interconnect.
 #[derive(Clone, Copy, Debug)]
@@ -87,13 +110,9 @@ impl LinkModel {
         LinkModel { bandwidth: 8e9, latency: 20e-6 }
     }
 
-    fn hop_cost(&self, bytes: usize) -> Duration {
-        let secs = self.latency + bytes as f64 / self.bandwidth;
-        if secs <= 0.0 || !secs.is_finite() {
-            Duration::ZERO
-        } else {
-            Duration::from_secs_f64(secs)
-        }
+    /// This link as a per-hop [`LinkProfile`] (the topology layer's unit).
+    pub fn profile(&self) -> LinkProfile {
+        LinkProfile::from(*self)
     }
 
     /// Analytic ring all-reduce seconds for one bucket of `elems` f32s
@@ -182,6 +201,31 @@ impl TagStats {
     }
 }
 
+/// Per-ring slice of the aggregate counters: the attribution that makes
+/// queueing delay between tags *sharing* a ring directly visible (before
+/// this, it was only inferable by differencing `rings=1` vs `rings=2`
+/// runs).
+#[derive(Clone, Debug, Default)]
+pub struct RingStats {
+    /// Reduces routed to this ring.
+    pub reduces: u64,
+    /// Buckets submitted to this ring's engine.
+    pub buckets: u64,
+    /// Engine-occupancy seconds on this ring (per-bucket, summed) — the
+    /// per-ring slice of `comm_seconds`.
+    pub busy_seconds: f64,
+    /// Wire-only share of `busy_seconds`.
+    pub wire_seconds: f64,
+    /// Straggler share of `busy_seconds`.
+    pub peer_wait_seconds: f64,
+    /// Worker seconds blocked in `wait()` on reduces routed to this ring.
+    pub blocked_seconds: f64,
+    /// High-water mark of buckets simultaneously in flight on this ring
+    /// (submitted, not yet absorbed) — the queueing depth a reduce landing
+    /// here can serialize behind.
+    pub queue_depth_hwm: u64,
+}
+
 /// Aggregate communication statistics for one worker's comm engines.
 #[derive(Clone, Debug, Default)]
 pub struct CommStats {
@@ -203,6 +247,9 @@ pub struct CommStats {
     /// The same attribution split by [`ReduceTag`] (indexed via
     /// [`CommStats::tag`]).
     pub per_tag: [TagStats; 3],
+    /// The occupancy split by ring (one entry per comm engine; see
+    /// [`RingStats`]).
+    pub per_ring: Vec<RingStats>,
 }
 
 impl CommStats {
@@ -243,6 +290,11 @@ impl CommStats {
         &self.per_tag[tag.idx()]
     }
 
+    /// Counters for one ring (engine) of this worker.
+    pub fn ring(&self, ring: usize) -> &RingStats {
+        &self.per_ring[ring]
+    }
+
     /// Fold another worker's counters into this one (fleet aggregation).
     pub fn merge(&mut self, other: &CommStats) {
         self.reduces += other.reduces;
@@ -258,6 +310,19 @@ impl CommStats {
             mine.blocked_seconds += theirs.blocked_seconds;
             mine.wire_seconds += theirs.wire_seconds;
             mine.peer_wait_seconds += theirs.peer_wait_seconds;
+        }
+        if self.per_ring.len() < other.per_ring.len() {
+            self.per_ring
+                .resize_with(other.per_ring.len(), RingStats::default);
+        }
+        for (mine, theirs) in self.per_ring.iter_mut().zip(&other.per_ring) {
+            mine.reduces += theirs.reduces;
+            mine.buckets += theirs.buckets;
+            mine.busy_seconds += theirs.busy_seconds;
+            mine.wire_seconds += theirs.wire_seconds;
+            mine.peer_wait_seconds += theirs.peer_wait_seconds;
+            mine.blocked_seconds += theirs.blocked_seconds;
+            mine.queue_depth_hwm = mine.queue_depth_hwm.max(theirs.queue_depth_hwm);
         }
     }
 }
@@ -297,11 +362,20 @@ struct BucketDone {
 pub struct Collective {
     rank: usize,
     world: usize,
-    /// One job queue per ring engine; reduces are routed by
-    /// [`ReduceTag::ring`].
+    /// One job queue per ring engine; reduces are routed by the
+    /// [`RingScheduler`] when they are opened.
     job_txs: Vec<Sender<JobMsg>>,
+    /// Deterministic ring router (rank-replicated state; see the
+    /// determinism contract in [`topology`]).
+    sched: RingScheduler,
     next_job: u64,
     stats: CommStats,
+    /// Buckets currently in flight per ring (worker side: submitted, not
+    /// yet absorbed) — drives [`RingStats::queue_depth_hwm`].
+    ring_inflight: Vec<u32>,
+    /// Per-ring busy seconds at the last profile sync; the delta is the
+    /// measured window fed to [`RingScheduler::apply_profile`].
+    sync_busy_base: Vec<f64>,
     /// Exact bytes-on-the-wire accumulator; `stats.bytes_sent` is this
     /// rounded once (a per-call integer division would truncate ~world
     /// bytes per reduce and drift with call count).
@@ -320,6 +394,8 @@ pub struct Collective {
 pub struct PendingReduce {
     id: u64,
     tag: ReduceTag,
+    /// Ring this reduce was routed to (fixed at `begin_reduce`).
+    ring: usize,
     /// Buckets submitted so far.
     buckets: u32,
     /// Buckets whose reduced payload has been absorbed into `out`.
@@ -348,6 +424,12 @@ impl PendingReduce {
         self.tag
     }
 
+    /// Ring this reduce rides (the scheduler's routing decision) —
+    /// identical on every rank for the same reduce.
+    pub fn ring(&self) -> usize {
+        self.ring
+    }
+
     /// Buckets completed so far (monotone, updated by
     /// [`Collective::try_progress`] / [`Collective::wait`]).
     pub fn buckets_done(&self) -> u32 {
@@ -371,12 +453,11 @@ pub struct ReduceProfile {
     pub blocked_seconds: f64,
 }
 
-/// Factory for a K-worker collective: builds `rings` independent
-/// comm-thread rings.
+/// Factory for a K-worker collective: builds one comm-thread ring per
+/// [`Topology`] path.
 pub struct CommWorld {
-    world: usize,
-    rings: usize,
-    link: LinkModel,
+    topology: Arc<Topology>,
+    policy: RoutePolicy,
     // per-rank plumbing handed out on join()
     seats: Mutex<Vec<Option<Seat>>>,
     handles: Mutex<Vec<JoinHandle<()>>>,
@@ -387,23 +468,39 @@ struct Seat {
 }
 
 impl CommWorld {
-    /// Single-ring world: every tag shares one engine per rank — the
+    /// Single-ring flat world: every tag shares one engine per rank — the
     /// pre-multi-ring behavior, kept as the conservative default for
-    /// direct embedders. The coordinator passes `cfg.rings` through
-    /// [`CommWorld::with_rings`].
+    /// direct embedders. The coordinator builds its world through
+    /// [`CommWorld::with_topology`].
     pub fn new(world: usize, link: LinkModel) -> Arc<CommWorld> {
         Self::with_rings(world, link, 1)
     }
 
-    /// A world with `rings` independent ring engines per rank. Each ring
-    /// gets its own cycle of neighbor channels and its own engine thread
-    /// per rank; reduces are routed to rings by [`ReduceTag::ring`], so
-    /// tags on different rings never queue behind each other. Reduced
-    /// values are bitwise-identical for any `rings` ≥ 1 (ring assignment
-    /// moves *when* a bucket is reduced, never its summation order).
+    /// Flat world with `rings` identical ring engines per rank, routed by
+    /// [`ReduceTag`] — the PR 3 surface, preserved for embedders and
+    /// tests. (Under the `SAMA_TEST_TOPOLOGY=hier` CI matrix knob the flat
+    /// topology is upgraded to a gently heterogeneous two-node one; see
+    /// [`Topology::flat_or_env`]. Results are bitwise-identical either
+    /// way.)
     pub fn with_rings(world: usize, link: LinkModel, rings: usize) -> Arc<CommWorld> {
+        Self::with_topology(
+            Topology::flat_or_env(world, rings, link.profile()),
+            RoutePolicy::Tag,
+        )
+    }
+
+    /// A world shaped by an explicit [`Topology`]: one engine thread per
+    /// rank per ring, each ring with its own cycle of neighbor channels,
+    /// each engine sleeping per its own hop's [`LinkProfile`]. Reduces are
+    /// routed to rings by a per-rank [`RingScheduler`] under `policy`;
+    /// reduced values are bitwise-identical for any topology, ring count
+    /// or policy (routing moves *when* a bucket is reduced, never its
+    /// summation order).
+    pub fn with_topology(topology: Topology, policy: RoutePolicy) -> Arc<CommWorld> {
+        let world = topology.world();
+        let rings = topology.rings();
         assert!(world >= 1);
-        let rings = rings.clamp(1, ReduceTag::ALL.len());
+        let topology = Arc::new(topology);
         // neighbor channels per ring: ring_txs[r][i] sends to rank
         // (i+1) % world on ring r
         let mut ring_txs: Vec<Vec<Sender<RingMsg>>> = Vec::with_capacity(rings);
@@ -427,21 +524,20 @@ impl CommWorld {
             for r in 0..rings {
                 let (job_tx, job_rx) = channel::<JobMsg>();
                 // engine (rank, r) sends to rank+1, receives from rank-1,
-                // strictly within ring r
+                // strictly within ring r, over its own hop's link
                 let to_next = ring_txs[r][(rank + 1) % world].clone();
                 let from_prev = ring_rxs[r][rank].take().unwrap();
-                let link = link;
+                let hop = topology.path(r).hop(rank);
                 handles.push(std::thread::spawn(move || {
-                    comm_engine(rank, world, link, job_rx, to_next, from_prev);
+                    comm_engine(rank, world, hop, job_rx, to_next, from_prev);
                 }));
                 job_txs.push(job_tx);
             }
             seats.push(Some(Seat { job_txs }));
         }
         Arc::new(CommWorld {
-            world,
-            rings,
-            link,
+            topology,
+            policy,
             seats: Mutex::new(seats),
             handles: Mutex::new(handles),
         })
@@ -452,27 +548,38 @@ impl CommWorld {
         let seat = self.seats.lock().unwrap()[rank]
             .take()
             .expect("rank already joined");
+        let rings = self.topology.rings();
         Collective {
             rank,
-            world: self.world,
+            world: self.topology.world(),
             job_txs: seat.job_txs,
+            sched: RingScheduler::new(Arc::clone(&self.topology), self.policy),
             next_job: 0,
-            stats: CommStats::default(),
+            stats: CommStats {
+                per_ring: vec![RingStats::default(); rings],
+                ..CommStats::default()
+            },
+            ring_inflight: vec![0; rings],
+            sync_busy_base: vec![0.0; rings],
             bytes_exact: 0.0,
             spare_buckets: Vec::new(),
         }
     }
 
     pub fn world(&self) -> usize {
-        self.world
+        self.topology.world()
     }
 
     pub fn rings(&self) -> usize {
-        self.rings
+        self.topology.rings()
     }
 
-    pub fn link(&self) -> LinkModel {
-        self.link
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
     }
 }
 
@@ -488,13 +595,15 @@ impl Drop for CommWorld {
 
 /// One per-rank, per-ring communication engine: ring-reduces its ring's
 /// buckets in submission order, posting each completed bucket to its
-/// reduce's private done channel. All ranks must submit buckets in the
-/// same per-ring order (DDP contract, relaxed from global order); waits
-/// are free to happen in any order.
+/// reduce's private done channel. `link` is this engine's *own outgoing
+/// hop* on its ring's path (rank → rank+1), so hop cost is a function of
+/// the traversed link. All ranks must submit buckets in the same per-ring
+/// order (DDP contract, relaxed from global order); waits are free to
+/// happen in any order.
 fn comm_engine(
     rank: usize,
     world: usize,
-    link: LinkModel,
+    link: LinkProfile,
     job_rx: Receiver<JobMsg>,
     to_next: Sender<RingMsg>,
     from_prev: Receiver<RingMsg>,
@@ -551,7 +660,7 @@ fn comm_engine(
 fn ring_all_reduce(
     rank: usize,
     world: usize,
-    link: LinkModel,
+    link: LinkProfile,
     job: u64,
     bucket: u32,
     buf: &mut [f32],
@@ -635,6 +744,47 @@ impl Collective {
         &self.stats
     }
 
+    /// This rank's ring router (rank-replicated state).
+    pub fn scheduler(&self) -> &RingScheduler {
+        &self.sched
+    }
+
+    /// Scheduler state for checkpointing (see [`SchedulerState`]).
+    pub fn scheduler_state(&self) -> SchedulerState {
+        self.sched.state()
+    }
+
+    /// Restore checkpointed scheduler state (every rank restores the same
+    /// leader-saved state, so routing stays rank-replicated).
+    pub fn restore_scheduler(&mut self, st: &SchedulerState) {
+        self.sched.restore(st);
+    }
+
+    /// Measured per-ring busy seconds since the last profile sync — the
+    /// local contribution to the rank-averaged occupancy profile. Length
+    /// is always `rings()`, so the synced payload shape is a collective
+    /// contract.
+    pub fn ring_profile_window(&self) -> Vec<f32> {
+        self.stats
+            .per_ring
+            .iter()
+            .zip(&self.sync_busy_base)
+            .map(|(st, base)| (st.busy_seconds - base) as f32)
+            .collect()
+    }
+
+    /// Feed the rank-synced occupancy profile to the scheduler and open a
+    /// new measurement window. Must be called at a collectively-agreed
+    /// schedule point with collectively-identical values ([`BucketPlan::retune`]
+    /// piggybacks this on its Ctrl-tagged profile reduce).
+    pub fn apply_ring_profile(&mut self, synced_busy: &[f32]) {
+        self.sched.apply_profile(synced_busy);
+        for (base, st) in self.sync_busy_base.iter_mut().zip(&self.stats.per_ring)
+        {
+            *base = st.busy_seconds;
+        }
+    }
+
     /// Take a recycled bucket buffer (cleared; allocates only before the
     /// pool has warmed up). Fill it and hand it to
     /// [`submit_bucket`](Collective::submit_bucket); the allocation comes
@@ -668,15 +818,34 @@ impl Collective {
     /// [`submit_bucket`](Collective::submit_bucket) and start reducing
     /// immediately, before later buckets exist. Any number of reduces may
     /// be open at once; they complete independently (tagged channels).
+    /// Size-blind variant of
+    /// [`begin_reduce_sized`](Collective::begin_reduce_sized): under
+    /// size-based routing the scheduler sees a latency-only cost hint.
     pub fn begin_reduce(&mut self, tag: ReduceTag) -> PendingReduce {
+        self.begin_reduce_sized(tag, 0)
+    }
+
+    /// [`begin_reduce`](Collective::begin_reduce) with an expected total
+    /// size (elements, 0 = unknown). The hint drives the scheduler's
+    /// routing decision — it must be rank-identical (problem dimensions
+    /// and synced bucket plans are), and it does not bound what may
+    /// actually be submitted (occupancy is charged per real bucket).
+    pub fn begin_reduce_sized(
+        &mut self,
+        tag: ReduceTag,
+        hint_elems: usize,
+    ) -> PendingReduce {
         let id = self.next_job;
         self.next_job += 1;
         self.stats.reduces += 1;
         self.stats.per_tag[tag.idx()].reduces += 1;
+        let ring = self.sched.route(tag, hint_elems);
+        self.stats.per_ring[ring].reduces += 1;
         let (done_tx, done_rx) = channel::<BucketDone>();
         PendingReduce {
             id,
             tag,
+            ring,
             buckets: 0,
             buckets_done: 0,
             comm_secs: 0.0,
@@ -686,11 +855,11 @@ impl Collective {
         }
     }
 
-    /// Append one bucket to an open reduce and hand it to its tag's ring
-    /// engine. The bucket's ring exchange starts as soon as every rank has
-    /// submitted it — typically while the worker is still producing the
-    /// next bucket — and only queues behind earlier buckets on the *same*
-    /// ring, never behind other tags' traffic.
+    /// Append one bucket to an open reduce and hand it to the ring the
+    /// scheduler routed the reduce to. The bucket's ring exchange starts
+    /// as soon as every rank has submitted it — typically while the worker
+    /// is still producing the next bucket — and only queues behind earlier
+    /// buckets on the *same* ring, never behind other rings' traffic.
     pub fn submit_bucket(&mut self, pending: &mut PendingReduce, data: Vec<f32>) {
         let offset = pending.out.len();
         pending.out.resize(offset + data.len(), 0.0);
@@ -701,6 +870,12 @@ impl Collective {
             / self.world as f64;
         self.stats.bytes_sent = self.bytes_exact.round() as u64;
         self.stats.per_tag[pending.tag.idx()].buckets += 1;
+        let ring = pending.ring;
+        self.sched.charge(ring, data.len());
+        self.stats.per_ring[ring].buckets += 1;
+        self.ring_inflight[ring] += 1;
+        let hwm = &mut self.stats.per_ring[ring].queue_depth_hwm;
+        *hwm = (*hwm).max(self.ring_inflight[ring] as u64);
         let msg = JobMsg {
             job: pending.id,
             bucket: pending.buckets,
@@ -713,7 +888,6 @@ impl Collective {
                 .clone(),
         };
         pending.buckets += 1;
-        let ring = pending.tag.ring(self.job_txs.len());
         self.job_txs[ring].send(msg).expect("comm engine alive");
     }
 
@@ -727,7 +901,7 @@ impl Collective {
         tag: ReduceTag,
     ) -> PendingReduce {
         let bucket_elems = bucket_elems.max(1);
-        let mut pending = self.begin_reduce(tag);
+        let mut pending = self.begin_reduce_sized(tag, data.len());
         if data.len() <= bucket_elems {
             // single bucket: move the buffer, no copy
             self.submit_bucket(&mut pending, data);
@@ -760,6 +934,11 @@ impl Collective {
         tag.comm_seconds += msg.secs;
         tag.wire_seconds += msg.wire_secs;
         tag.peer_wait_seconds += msg.peer_secs;
+        self.ring_inflight[pending.ring] -= 1;
+        let ring = &mut self.stats.per_ring[pending.ring];
+        ring.busy_seconds += msg.secs;
+        ring.wire_seconds += msg.wire_secs;
+        ring.peer_wait_seconds += msg.peer_secs;
         self.bank_bucket_buf(msg.data);
     }
 
@@ -813,6 +992,7 @@ impl Collective {
             blocked += dt;
             self.stats.blocked_seconds += dt;
             self.stats.per_tag[pending.tag.idx()].blocked_seconds += dt;
+            self.stats.per_ring[pending.ring].blocked_seconds += dt;
             self.absorb(&mut pending, msg);
         }
         let profile = ReduceProfile {
@@ -966,8 +1146,11 @@ impl BucketPlan {
     /// Rebalance from the accumulated profile. With `Some(coll)` (world >
     /// 1) the per-bucket means are first averaged across ranks through a
     /// `Ctrl` reduce so every rank computes the identical new size; all
-    /// ranks must therefore call this at the same schedule point. Returns
-    /// the new size when a retune happened.
+    /// ranks must therefore call this at the same schedule point. The same
+    /// reduce piggybacks the per-ring measured-occupancy window, which
+    /// (once synced) retunes the [`RingScheduler`]'s cost model — one
+    /// control-plane round trip serves both tuners. Returns the new size
+    /// when a retune happened.
     pub fn retune(&mut self, coll: Option<&mut Collective>) -> Option<usize> {
         if !self.retune_due() {
             return None;
@@ -977,11 +1160,14 @@ impl BucketPlan {
         if let Some(coll) = coll {
             if coll.world() > 1 {
                 // ring all-gather hands every rank the same bytes, so the
-                // update below is bitwise rank-identical
-                let synced =
-                    coll.all_reduce_sync(vec![prod, comm], 2, ReduceTag::Ctrl);
+                // updates below are bitwise rank-identical
+                let mut payload = vec![prod, comm];
+                payload.extend(coll.ring_profile_window());
+                let n = payload.len();
+                let synced = coll.all_reduce_sync(payload, n, ReduceTag::Ctrl);
                 prod = synced[0];
                 comm = synced[1];
+                coll.apply_ring_profile(&synced[2..]);
             }
         }
         self.acc_producer_secs = 0.0;
@@ -1002,6 +1188,7 @@ impl BucketPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     fn run_world_rings<F>(
         world: usize,
@@ -1030,6 +1217,28 @@ mod tests {
         F: Fn(usize, &mut Collective) -> Vec<f32> + Send + Sync + Clone + 'static,
     {
         run_world_rings(world, link, 1, f)
+    }
+
+    fn run_world_topo<F>(
+        topo: Topology,
+        policy: RoutePolicy,
+        f: F,
+    ) -> Vec<Vec<f32>>
+    where
+        F: Fn(usize, &mut Collective) -> Vec<f32> + Send + Sync + Clone + 'static,
+    {
+        let world = topo.world();
+        let cw = CommWorld::with_topology(topo, policy);
+        let mut handles = Vec::new();
+        for rank in 0..world {
+            let cw = Arc::clone(&cw);
+            let f = f.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut coll = cw.join(rank);
+                f(rank, &mut coll)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
     }
 
     #[test]
@@ -1310,6 +1519,183 @@ mod tests {
             );
             // values bitwise identical across ring counts
             assert_eq!(one[rank][2..], two[rank][2..], "rank {rank} values");
+        }
+    }
+
+    /// The tentpole's safety contract: across rings ∈ {1,2,3} ×
+    /// {flat, heterogeneous} topologies × {tag, size} routing policies,
+    /// the same θ/λ/Ctrl submissions yield bitwise-identical reduced
+    /// vectors, and within every run all ranks make identical routing
+    /// decisions (the per-ring submission order is a collective contract).
+    #[test]
+    fn routing_is_deterministic_and_bitwise_across_topologies() {
+        let world = 3usize;
+        let fast = LinkProfile { latency: 1e-6, bytes_per_sec: 1e9 };
+        let slow = LinkProfile { latency: 5e-5, bytes_per_sec: 5e7 };
+        const VALS: usize = 131 + 53 + 2;
+        let mut reference: Option<Vec<Vec<f32>>> = None;
+        for rings in [1usize, 2, 3] {
+            for hier in [false, true] {
+                for policy in [RoutePolicy::Tag, RoutePolicy::Sized] {
+                    let topo = if hier {
+                        Topology::hierarchical(world, 2, rings, fast, slow)
+                    } else {
+                        Topology::flat(world, rings, fast)
+                    };
+                    let out = run_world_topo(topo, policy, |rank, coll| {
+                        let theta: Vec<f32> = (0..131)
+                            .map(|i| (i as f32) * 0.713 - rank as f32)
+                            .collect();
+                        let lambda: Vec<f32> = (0..53)
+                            .map(|i| (i as f32) * -0.291 + 2.0 * rank as f32)
+                            .collect();
+                        let ctrl = vec![0.25 * (rank as f32 + 1.0); 2];
+                        let pt =
+                            coll.all_reduce_async(theta, 32, ReduceTag::Theta);
+                        let pl =
+                            coll.all_reduce_async(lambda, 32, ReduceTag::Lambda);
+                        let pc =
+                            coll.all_reduce_async(ctrl, 2, ReduceTag::Ctrl);
+                        let routes =
+                            [pt.ring() as f32, pl.ring() as f32, pc.ring() as f32];
+                        let c = coll.wait(pc);
+                        // λ waited before θ: cross-ring waits out of order
+                        let l = coll.wait(pl);
+                        let t = coll.wait(pt);
+                        let mut v = t;
+                        v.extend(l);
+                        v.extend(c);
+                        v.extend(routes);
+                        v
+                    });
+                    let ctx = format!(
+                        "rings={rings} hier={hier} policy={}",
+                        policy.name()
+                    );
+                    for rank in 1..world {
+                        assert_eq!(
+                            out[0][VALS..],
+                            out[rank][VALS..],
+                            "{ctx}: rank {rank} routed differently"
+                        );
+                    }
+                    let vals: Vec<Vec<f32>> =
+                        out.iter().map(|o| o[..VALS].to_vec()).collect();
+                    match &reference {
+                        None => reference = Some(vals),
+                        Some(r) => assert!(
+                            r == &vals,
+                            "{ctx} changed the reduced values"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    /// The acceptance criterion for size/occupancy routing: on a two-ring
+    /// heterogeneous topology (ring 0 = slow inter-node path, ring 1 =
+    /// fast intra-node path), tag routing parks the tiny Ctrl reduces on
+    /// the slow ring *behind* the fat θ transfer (and pins θ itself to the
+    /// slow ring), while sized routing sends θ to the fast ring and lets
+    /// the small λ/Ctrl reduces hitch onto the empty one — λ+Ctrl blocked
+    /// seconds must drop strictly, with bitwise-identical reduced values.
+    #[test]
+    fn sized_routing_unblocks_small_reduces_on_hetero_topology() {
+        let slow = LinkProfile { latency: 1e-4, bytes_per_sec: 20e6 };
+        let fast = LinkProfile { latency: 1e-6, bytes_per_sec: 1e9 };
+        let run = |policy: RoutePolicy| {
+            // nodes=1: ring 0 = slow inter-fabric ring end-to-end,
+            // ring 1 = fast all-intra affinity ring
+            let topo = Topology::hierarchical(2, 1, 2, fast, slow);
+            run_world_topo(topo, policy, |rank, coll| {
+                let mut vals = Vec::new();
+                for it in 0..3 {
+                    // θ: 1 MiB in 4 buckets (~50 ms of wire on the slow
+                    // ring, ~1 ms on the fast one); λ: 4 KiB; Ctrl: 16 B
+                    let theta = vec![rank as f32 + 0.5 + it as f32; 1 << 18];
+                    let lambda: Vec<f32> = (0..1024)
+                        .map(|i| i as f32 * 0.01 - rank as f32)
+                        .collect();
+                    let ctrl = vec![0.5 + rank as f32 + it as f32; 4];
+                    let pt =
+                        coll.all_reduce_async(theta, 1 << 16, ReduceTag::Theta);
+                    let pl = coll
+                        .all_reduce_async(lambda, 1 << 16, ReduceTag::Lambda);
+                    // blocking Ctrl sync while θ is in flight — the
+                    // BucketPlan retune's position in the real schedule
+                    let c = coll.all_reduce_sync(ctrl, 4, ReduceTag::Ctrl);
+                    let l = coll.wait(pl);
+                    let t = coll.wait(pt);
+                    vals.extend_from_slice(&t[..8]);
+                    vals.extend_from_slice(&l[..8]);
+                    vals.extend_from_slice(&c);
+                }
+                let st = coll.stats();
+                let small_blocked = st.tag(ReduceTag::Lambda).blocked_seconds
+                    + st.tag(ReduceTag::Ctrl).blocked_seconds;
+                let mut v = vec![small_blocked as f32];
+                v.extend(vals);
+                v
+            })
+        };
+        let tag = run(RoutePolicy::Tag);
+        let sized = run(RoutePolicy::Sized);
+        for rank in 0..2 {
+            let (bt, bs) = (tag[rank][0], sized[rank][0]);
+            assert!(
+                bs < 0.5 * bt,
+                "rank {rank}: λ+Ctrl blocked {bs}s sized vs {bt}s tag — \
+                 size routing removed no contention"
+            );
+            assert_eq!(
+                tag[rank][1..],
+                sized[rank][1..],
+                "rank {rank}: routing policy changed the reduced values"
+            );
+        }
+    }
+
+    /// Per-ring attribution: ring busy/blocked seconds sum to the
+    /// aggregates, reduces land on the rings the tag policy names, and the
+    /// queue-depth high-water mark records the θ pile-up.
+    #[test]
+    fn per_ring_stats_split_busy_and_track_queue_depth() {
+        let link = LinkModel { bandwidth: 50e6, latency: 5e-5 };
+        let out = run_world_rings(2, link, 2, |rank, coll| {
+            // 4 θ buckets pile up on ring 0 (all submitted before any
+            // absorb); the single λ bucket rides ring 1
+            let pt = coll.all_reduce_async(
+                vec![rank as f32; 1 << 15],
+                1 << 13,
+                ReduceTag::Theta,
+            );
+            let pl = coll.all_reduce_async(
+                vec![1.0 + rank as f32; 512],
+                512,
+                ReduceTag::Lambda,
+            );
+            let _ = coll.wait(pl);
+            let _ = coll.wait(pt);
+            let st = coll.stats();
+            assert_eq!(st.per_ring.len(), 2);
+            let busy: f64 = st.per_ring.iter().map(|r| r.busy_seconds).sum();
+            assert!((busy - st.comm_seconds).abs() < 1e-9, "busy split");
+            let blocked: f64 =
+                st.per_ring.iter().map(|r| r.blocked_seconds).sum();
+            assert!((blocked - st.blocked_seconds).abs() < 1e-9);
+            let wire: f64 = st.per_ring.iter().map(|r| r.wire_seconds).sum();
+            assert!((wire - st.wire_seconds).abs() < 1e-12);
+            assert_eq!(st.ring(0).reduces, 1);
+            assert_eq!(st.ring(1).reduces, 1);
+            assert_eq!(st.ring(0).buckets, 4);
+            assert_eq!(st.ring(1).buckets, 1);
+            assert_eq!(st.ring(0).queue_depth_hwm, 4, "θ pile-up depth");
+            assert_eq!(st.ring(1).queue_depth_hwm, 1);
+            vec![st.ring(0).busy_seconds as f32]
+        });
+        for o in &out {
+            assert!(o[0] > 0.0, "ring 0 saw no engine time");
         }
     }
 

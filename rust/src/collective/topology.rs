@@ -1,0 +1,621 @@
+//! Topology layer of the collective: heterogeneous per-hop links, NUMA-like
+//! rank grouping, concrete per-ring paths, and the deterministic
+//! [`RingScheduler`] that routes reduces by message size and modelled ring
+//! occupancy.
+//!
+//! Real NCCL hides communication across *channels that differ in path*
+//! (NUMA/PCIe/NVLink affinity): two channels between the same ranks can
+//! have very different latency/bandwidth, and message routing picks a
+//! channel by size and load. The PR 3 rings were identical cycles
+//! distinguished only by `tag.idx() % rings` — ring count was a
+//! tag-partitioning trick, not a topology knob. This module makes it one:
+//!
+//!  * [`LinkProfile`] — latency + bytes/sec of one directed channel hop;
+//!  * [`Topology`] — ranks grouped into NUMA-like nodes, and each ring
+//!    assigned a concrete path: one [`LinkProfile`] per hop, so the
+//!    simulated hop cost in `ring_all_reduce` is a function of the
+//!    *traversed link* instead of one global number. The hierarchical
+//!    constructor builds one all-`inter` "fabric" ring (the NIC/IB
+//!    channel) plus "affinity" rings that ride `intra` inside a node and
+//!    pay `inter` on every node-crossing hop — crossing the node boundary
+//!    is never free;
+//!  * [`RingScheduler`] — replaces hard-coded `tag.idx() % rings` routing.
+//!    Under [`RoutePolicy::Sized`] each reduce is routed to the ring with
+//!    the least modelled finish time (virtual-time occupancy charged per
+//!    submitted bucket + the analytic cost of this reduce on that ring's
+//!    path), so a small Ctrl/λ reduce hitches onto the emptier/faster ring
+//!    instead of queueing behind a fat θ transfer. Measured per-ring busy
+//!    seconds, rank-averaged through the existing Ctrl-tagged retune
+//!    reduce (like `BucketPlan` profiles), correct the model via a
+//!    per-ring scale factor.
+//!
+//! **Determinism contract.** Every scheduler input is rank-replicated: the
+//! submission sequence (DDP contract), bucket sizes (`BucketPlan` is
+//! rank-synced), the static topology, and the measured profiles (averaged
+//! through a collective reduce before use). Routing is therefore a pure
+//! function of replicated state — all ranks route every reduce to the same
+//! ring without any extra coordination, the per-ring submission order
+//! stays a collective contract, and (since ring assignment only moves
+//! *when* a bucket reduces, never its summation order) results are
+//! bitwise-identical for any topology, ring count or policy.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::{LinkModel, ReduceTag};
+
+/// One directed channel hop: per-message latency plus wire rate. The
+/// per-hop analogue of the global [`LinkModel`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkProfile {
+    /// Per-message latency in seconds.
+    pub latency: f64,
+    /// Bytes per second per direction.
+    pub bytes_per_sec: f64,
+}
+
+impl LinkProfile {
+    /// An effectively-infinite link (tests).
+    pub fn instant() -> LinkProfile {
+        LinkProfile { latency: 0.0, bytes_per_sec: f64::INFINITY }
+    }
+
+    /// Seconds one message of `bytes` spends on this hop.
+    pub fn secs(&self, bytes: usize) -> f64 {
+        let s = self.latency + bytes as f64 / self.bytes_per_sec;
+        if s > 0.0 && s.is_finite() {
+            s
+        } else {
+            0.0
+        }
+    }
+
+    /// [`secs`](LinkProfile::secs) as a sleepable duration.
+    pub fn hop_cost(&self, bytes: usize) -> Duration {
+        Duration::from_secs_f64(self.secs(bytes))
+    }
+}
+
+impl From<LinkModel> for LinkProfile {
+    fn from(l: LinkModel) -> LinkProfile {
+        LinkProfile { latency: l.latency, bytes_per_sec: l.bandwidth }
+    }
+}
+
+/// One ring's concrete path: `hops[i]` is the link rank `i` uses to send
+/// to rank `(i+1) % world` on this ring.
+#[derive(Clone, Debug)]
+pub struct RingPath {
+    hops: Vec<LinkProfile>,
+}
+
+impl RingPath {
+    /// Every hop identical — the flat (pre-topology) ring.
+    pub fn uniform(world: usize, p: LinkProfile) -> RingPath {
+        RingPath { hops: vec![p; world.max(1)] }
+    }
+
+    /// The link rank `rank` sends over on this ring.
+    pub fn hop(&self, rank: usize) -> LinkProfile {
+        self.hops[rank]
+    }
+
+    pub fn hops(&self) -> &[LinkProfile] {
+        &self.hops
+    }
+
+    /// Seconds of one ring *step* (all ranks send simultaneously, then
+    /// rendezvous): gated by the slowest hop in the path.
+    pub fn step_secs(&self, bytes: usize) -> f64 {
+        self.hops
+            .iter()
+            .map(|h| h.secs(bytes))
+            .fold(0.0, f64::max)
+    }
+
+    /// Analytic ring all-reduce seconds for one bucket of `elems` f32s:
+    /// 2(K−1) steps, each moving ≈ elems/K elements, each gated by the
+    /// path's slowest hop. The per-path generalization of
+    /// [`LinkModel::ring_bucket_secs`].
+    pub fn reduce_secs(&self, elems: usize, world: usize) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        let chunk_bytes = elems.div_ceil(world) * 4;
+        (2 * (world - 1)) as f64 * self.step_secs(chunk_bytes)
+    }
+}
+
+/// Topology family selected by the `topology=` knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Every hop of every ring shares one link profile (PR 3 behavior).
+    Flat,
+    /// Ranks grouped into NUMA-like nodes; ring 0 rides the inter-node
+    /// fabric end-to-end, affinity rings use intra-node links inside a
+    /// node and the inter fabric on node-crossing hops.
+    Hier,
+}
+
+impl TopologyKind {
+    pub fn parse(s: &str) -> Result<TopologyKind> {
+        Ok(match s {
+            "flat" => TopologyKind::Flat,
+            "hier" | "hierarchical" | "numa" => TopologyKind::Hier,
+            _ => bail!("unknown topology '{s}' (flat|hier)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Flat => "flat",
+            TopologyKind::Hier => "hier",
+        }
+    }
+}
+
+/// Rank grouping plus one concrete [`RingPath`] per ring.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    world: usize,
+    node_of: Vec<usize>,
+    paths: Vec<RingPath>,
+}
+
+impl Topology {
+    fn clamp_rings(rings: usize) -> usize {
+        rings.clamp(1, ReduceTag::ALL.len())
+    }
+
+    /// Flat topology: `rings` identical cycles over one link profile —
+    /// exactly the pre-topology collective.
+    pub fn flat(world: usize, rings: usize, p: LinkProfile) -> Topology {
+        let world = world.max(1);
+        Topology {
+            world,
+            node_of: vec![0; world],
+            paths: vec![RingPath::uniform(world, p); Self::clamp_rings(rings)],
+        }
+    }
+
+    /// Hierarchical topology: ranks split into `nodes` contiguous blocks.
+    /// Ring 0 is the *fabric* ring — every hop rides the `inter` fabric
+    /// (the NIC/IB channel NCCL keeps even for co-located ranks). Rings
+    /// 1.. are *affinity* rings: hop `i → i+1` uses `intra` when both
+    /// ranks share a node and `inter` when it crosses nodes — crossing the
+    /// node boundary is never free, so with one rank per node the affinity
+    /// rings degrade to the fabric speed (no physical intra path exists).
+    /// With `nodes=1` this yields exactly the asymmetric pair the routing
+    /// tests exercise: one slow inter-fabric ring plus fast all-intra
+    /// affinity rings.
+    pub fn hierarchical(
+        world: usize,
+        nodes: usize,
+        rings: usize,
+        intra: LinkProfile,
+        inter: LinkProfile,
+    ) -> Topology {
+        let world = world.max(1);
+        let nodes = nodes.clamp(1, world);
+        // exactly `nodes` contiguous groups of floor/ceil(world/nodes)
+        // ranks each (a plain ceil-sized blocking would silently collapse
+        // e.g. world=6, nodes=4 into 3 nodes and mis-model the fabric)
+        let node_of: Vec<usize> = (0..world).map(|r| r * nodes / world).collect();
+        let rings = Self::clamp_rings(rings);
+        let mut paths = Vec::with_capacity(rings);
+        paths.push(RingPath::uniform(world, inter));
+        let affinity_hops: Vec<LinkProfile> = (0..world)
+            .map(|i| {
+                if node_of[i] != node_of[(i + 1) % world] {
+                    inter
+                } else {
+                    intra
+                }
+            })
+            .collect();
+        for _ in 1..rings {
+            paths.push(RingPath { hops: affinity_hops.clone() });
+        }
+        Topology { world, node_of, paths }
+    }
+
+    /// Compatibility constructor for flat-link callers
+    /// (`CommWorld::with_rings` and the coordinator's `topology=flat`
+    /// default): normally [`flat`](Topology::flat), but the
+    /// `SAMA_TEST_TOPOLOGY=hier` environment knob (the CI topology matrix)
+    /// upgrades it to a two-node hierarchy whose inter-node hops pay 2×
+    /// the latency — heterogeneous enough to exercise per-hop costs and
+    /// asymmetric rings, gentle enough to leave timing-sensitive tests
+    /// their margins. Results are bitwise-identical either way; because
+    /// this silently alters *timing* on every nominally-flat run, the
+    /// override announces itself on stderr once per process so a leftover
+    /// exported variable cannot skew benches unnoticed.
+    pub fn flat_or_env(world: usize, rings: usize, p: LinkProfile) -> Topology {
+        let hier = std::env::var("SAMA_TEST_TOPOLOGY")
+            .map(|v| v == "hier")
+            .unwrap_or(false);
+        if hier && world > 1 {
+            static NOTICE: std::sync::Once = std::sync::Once::new();
+            NOTICE.call_once(|| {
+                eprintln!(
+                    "[collective] SAMA_TEST_TOPOLOGY=hier: flat worlds \
+                     upgraded to a 2-node hierarchy (inter-node latency \
+                     ×2) — timing is NOT the flat baseline"
+                );
+            });
+            let inter = LinkProfile {
+                latency: p.latency * 2.0,
+                bytes_per_sec: p.bytes_per_sec,
+            };
+            Topology::hierarchical(world, 2, rings, p, inter)
+        } else {
+            Topology::flat(world, rings, p)
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn rings(&self) -> usize {
+        self.paths.len()
+    }
+
+    /// NUMA-like node of `rank`.
+    pub fn node_of(&self, rank: usize) -> usize {
+        self.node_of[rank]
+    }
+
+    pub fn path(&self, ring: usize) -> &RingPath {
+        &self.paths[ring]
+    }
+}
+
+/// How [`RingScheduler::route`] picks a ring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// PR 3 behavior: `ring = tag.idx() % rings` (θ+Ctrl / λ / Ctrl
+    /// partitioning, blind to size and load).
+    Tag,
+    /// Deterministic size/occupancy routing: least modelled finish time
+    /// over (charged virtual occupancy + this reduce's analytic cost),
+    /// ties to the lowest ring index.
+    Sized,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        Ok(match s {
+            "tag" => RoutePolicy::Tag,
+            "size" | "sized" => RoutePolicy::Sized,
+            _ => bail!("unknown route policy '{s}' (tag|size)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::Tag => "tag",
+            RoutePolicy::Sized => "size",
+        }
+    }
+}
+
+/// Scheduler state captured into a checkpoint (format v3) so a resumed
+/// run's routing continues from the same virtual clocks, scales and epoch
+/// instead of re-warming. Routing never changes reduce arithmetic, so this
+/// is about *schedule* continuity, not numerical correctness.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SchedulerState {
+    pub epoch: u64,
+    pub est_busy: Vec<f64>,
+    pub window_est: Vec<f64>,
+    pub scale: Vec<f64>,
+}
+
+/// Deterministic per-rank ring router (one instance per [`Collective`],
+/// all instances bitwise in lockstep — see the module doc's determinism
+/// contract).
+///
+/// [`Collective`]: super::Collective
+#[derive(Clone, Debug)]
+pub struct RingScheduler {
+    topo: Arc<Topology>,
+    policy: RoutePolicy,
+    /// Modelled seconds of work ever charged to each ring (virtual time —
+    /// rings never "drain", so this is least-loaded balancing over the
+    /// whole submission history, which is what stays deterministic).
+    est_busy: Vec<f64>,
+    /// Modelled seconds charged since the last profile sync; denominator
+    /// of the measured/modelled correction.
+    window_est: Vec<f64>,
+    /// Rank-synced measured/modelled correction per ring (1 until the
+    /// first [`apply_profile`](RingScheduler::apply_profile)).
+    scale: Vec<f64>,
+    /// Profile syncs applied so far (the checkpointed routing epoch).
+    epoch: u64,
+}
+
+impl RingScheduler {
+    pub fn new(topo: Arc<Topology>, policy: RoutePolicy) -> RingScheduler {
+        let rings = topo.rings();
+        RingScheduler {
+            topo,
+            policy,
+            est_busy: vec![0.0; rings],
+            window_est: vec![0.0; rings],
+            scale: vec![1.0; rings],
+            epoch: 0,
+        }
+    }
+
+    pub fn rings(&self) -> usize {
+        self.est_busy.len()
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Modelled seconds a reduce of `elems` f32s costs on `ring` (analytic
+    /// ring all-reduce over that ring's path; `elems` is floored to 1 so a
+    /// size-unknown hint still pays the latency term).
+    pub fn est_cost(&self, ring: usize, elems: usize) -> f64 {
+        self.topo.path(ring).reduce_secs(elems.max(1), self.topo.world())
+    }
+
+    /// Pick the ring for a reduce opened with `hint_elems` expected
+    /// elements (0 = unknown → latency-only cost). Pure: the charge
+    /// happens per submitted bucket via
+    /// [`charge`](RingScheduler::charge).
+    pub fn route(&self, tag: ReduceTag, hint_elems: usize) -> usize {
+        match self.policy {
+            RoutePolicy::Tag => tag.ring(self.rings()),
+            RoutePolicy::Sized => {
+                let mut best = 0usize;
+                let mut best_t = f64::INFINITY;
+                for (r, busy) in self.est_busy.iter().enumerate() {
+                    let t = self.scale[r] * (busy + self.est_cost(r, hint_elems));
+                    if t < best_t {
+                        best_t = t;
+                        best = r;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Charge one submitted bucket of `elems` f32s to `ring`'s virtual
+    /// clock (actual sizes, not the route-time hint).
+    pub fn charge(&mut self, ring: usize, elems: usize) {
+        let c = self.est_cost(ring, elems);
+        self.est_busy[ring] += c;
+        self.window_est[ring] += c;
+    }
+
+    /// Fold in rank-averaged measured busy seconds per ring (one window's
+    /// worth, aligned with [`window_est`](RingScheduler::charge)): each
+    /// ring's scale becomes measured/modelled, clamped so one noisy window
+    /// cannot blow the model up. Must be called with collectively-synced
+    /// values at a collectively-agreed schedule point (the `BucketPlan`
+    /// retune does both).
+    pub fn apply_profile(&mut self, synced_busy: &[f32]) {
+        for r in 0..self.rings().min(synced_busy.len()) {
+            let est = self.window_est[r];
+            let meas = synced_busy[r] as f64;
+            if est > 0.0 && meas > 0.0 {
+                self.scale[r] = (meas / est).clamp(0.125, 8.0);
+            }
+        }
+        self.window_est.fill(0.0);
+        self.epoch += 1;
+    }
+
+    pub fn state(&self) -> SchedulerState {
+        SchedulerState {
+            epoch: self.epoch,
+            est_busy: self.est_busy.clone(),
+            window_est: self.window_est.clone(),
+            scale: self.scale.clone(),
+        }
+    }
+
+    /// Restore checkpointed state. Vectors are taken only when their
+    /// length matches this world's ring count (a resume may legitimately
+    /// reconfigure `rings=`; routing determinism within the new run does
+    /// not depend on the old clocks). `window_est` is deliberately
+    /// re-zeroed rather than restored: the *measured* side of the profile
+    /// window (per-ring busy seconds) restarts from zero in the resumed
+    /// process, so restoring the modelled denominator would make the first
+    /// post-resume `apply_profile` divide a fresh numerator by a stale
+    /// window and slam the scale into its clamp.
+    pub fn restore(&mut self, st: &SchedulerState) {
+        self.epoch = st.epoch;
+        self.window_est.fill(0.0);
+        if st.est_busy.len() == self.rings() && st.scale.len() == self.rings() {
+            self.est_busy.copy_from_slice(&st.est_busy);
+            self.scale.copy_from_slice(&st.scale);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> LinkProfile {
+        LinkProfile { latency: 1e-6, bytes_per_sec: 1e9 }
+    }
+
+    fn slow() -> LinkProfile {
+        LinkProfile { latency: 1e-4, bytes_per_sec: 2e7 }
+    }
+
+    #[test]
+    fn flat_path_matches_linkmodel_analytic() {
+        let lm = LinkModel { bandwidth: 1e8, latency: 1e-4 };
+        let topo = Topology::flat(4, 2, lm.into());
+        for elems in [1usize, 1000, 4096, 100_000] {
+            let a = topo.path(0).reduce_secs(elems, 4);
+            let b = lm.ring_bucket_secs(elems, 4);
+            assert!(
+                (a - b).abs() < 1e-12,
+                "elems {elems}: path {a} vs LinkModel {b}"
+            );
+        }
+        // single rank: no ring traffic at all
+        assert_eq!(Topology::flat(1, 1, lm.into()).path(0).reduce_secs(100, 1), 0.0);
+    }
+
+    /// Non-divisible rank/node counts still produce exactly `nodes`
+    /// groups (ceil-sized blocking used to collapse 6/4 into 3 nodes and
+    /// mis-model the fabric's crossing count).
+    #[test]
+    fn hierarchical_builds_exactly_the_requested_node_count() {
+        let topo = Topology::hierarchical(6, 4, 2, fast(), slow());
+        let nodes: Vec<usize> = (0..6).map(|r| topo.node_of(r)).collect();
+        assert_eq!(nodes, vec![0, 0, 1, 2, 2, 3]);
+        // 4 contiguous groups → 4 crossing (inter) hops on the affinity ring
+        let crossings = topo
+            .path(1)
+            .hops()
+            .iter()
+            .filter(|h| **h == slow())
+            .count();
+        assert_eq!(crossings, 4);
+    }
+
+    #[test]
+    fn hierarchical_marks_node_crossings_and_affinity_rings() {
+        // 6 ranks, 2 nodes of 3: affinity rings cross at 2→3 and 5→0
+        let topo = Topology::hierarchical(6, 2, 3, fast(), slow());
+        assert_eq!(topo.rings(), 3);
+        for rank in 0..6 {
+            assert_eq!(topo.node_of(rank), rank / 3);
+        }
+        // ring 0 is the fabric ring: every hop rides inter
+        assert!(topo.path(0).hops().iter().all(|h| *h == slow()));
+        // affinity rings: intra in-node, inter on crossings — a node
+        // boundary is never free
+        for r in 1..3 {
+            for (i, hop) in topo.path(r).hops().iter().enumerate() {
+                let crossing = i == 2 || i == 5;
+                assert_eq!(
+                    *hop,
+                    if crossing { slow() } else { fast() },
+                    "ring {r} hop {i}"
+                );
+            }
+        }
+        // an affinity ring's step is gated by its slowest hop
+        assert!(
+            (topo.path(1).step_secs(4096) - slow().secs(4096)).abs() < 1e-15
+        );
+        // one rank per node: no intra path exists, so affinity rings
+        // degrade to fabric speed instead of inventing a free crossing
+        let spread = Topology::hierarchical(4, 4, 2, fast(), slow());
+        assert!(spread.path(1).hops().iter().all(|h| *h == slow()));
+        // one node: fabric ring slow, affinity rings all-intra — the
+        // asymmetric slow/fast pair the routing tests exercise
+        let one = Topology::hierarchical(4, 1, 2, fast(), slow());
+        assert!(one.path(0).hops().iter().all(|h| *h == slow()));
+        assert!(one.path(1).hops().iter().all(|h| *h == fast()));
+    }
+
+    #[test]
+    fn tag_policy_matches_modulo_routing() {
+        let topo = Arc::new(Topology::flat(3, 2, fast()));
+        let sched = RingScheduler::new(topo, RoutePolicy::Tag);
+        for tag in ReduceTag::ALL {
+            assert_eq!(sched.route(tag, 123), tag.ring(2));
+            // blind to size and occupancy
+            assert_eq!(sched.route(tag, 1 << 20), tag.ring(2));
+        }
+    }
+
+    /// The routing the tentpole exists for: on a slow-global/fast-affinity
+    /// two-ring topology, a fat reduce picks the fast ring; the next small
+    /// reduce hitches onto the *empty* slow ring rather than queueing
+    /// behind the fat transfer — and two independent scheduler instances
+    /// fed the identical sequence agree on every decision.
+    #[test]
+    fn sized_routing_prefers_fast_then_empty() {
+        // one node: ring 0 = slow fabric ring, ring 1 = fast intra ring
+        let topo = Arc::new(Topology::hierarchical(2, 1, 2, fast(), slow()));
+        let mut a = RingScheduler::new(Arc::clone(&topo), RoutePolicy::Sized);
+        let mut b = RingScheduler::new(topo, RoutePolicy::Sized);
+        let fat = 1 << 19; // ~2 MiB: ~0.1 s on the slow ring, ~2 ms on fast
+        let small = 256; // latency-dominated
+
+        let mut decisions = Vec::new();
+        for sched in [&mut a, &mut b] {
+            let r_fat = sched.route(ReduceTag::Theta, fat);
+            assert_eq!(r_fat, 1, "fat reduce should take the fast ring");
+            sched.charge(r_fat, fat);
+            let r_small = sched.route(ReduceTag::Ctrl, small);
+            assert_eq!(
+                r_small, 0,
+                "small reduce should hitch onto the empty slow ring \
+                 instead of queueing behind the fat transfer"
+            );
+            sched.charge(r_small, small);
+            decisions.push((r_fat, r_small, sched.state()));
+        }
+        assert_eq!(decisions[0], decisions[1], "ranks diverged");
+    }
+
+    #[test]
+    fn apply_profile_scales_clamps_and_resets() {
+        let topo = Arc::new(Topology::flat(2, 2, slow()));
+        let mut sched = RingScheduler::new(topo, RoutePolicy::Sized);
+        sched.charge(0, 1 << 16);
+        sched.charge(1, 1 << 10);
+        let est0 = sched.state().window_est[0];
+        assert!(est0 > 0.0);
+        // ring 0 measured 2× the model, ring 1 measured absurdly high
+        sched.apply_profile(&[(est0 * 2.0) as f32, 1e6]);
+        let st = sched.state();
+        assert!((st.scale[0] - 2.0).abs() < 1e-6, "scale {}", st.scale[0]);
+        assert_eq!(st.scale[1], 8.0, "clamp");
+        assert!(st.window_est.iter().all(|&w| w == 0.0), "window reset");
+        assert_eq!(st.epoch, 1);
+        // est_busy (the long-run clock) is untouched by the sync
+        assert!(st.est_busy[0] > 0.0);
+    }
+
+    #[test]
+    fn scheduler_state_roundtrips_and_rejects_ring_mismatch() {
+        let topo = Arc::new(Topology::flat(2, 2, slow()));
+        let mut sched = RingScheduler::new(Arc::clone(&topo), RoutePolicy::Sized);
+        sched.charge(0, 4096);
+        sched.charge(1, 128);
+        sched.apply_profile(&[0.5, 0.25]);
+        sched.charge(1, 999);
+        let st = sched.state();
+
+        let mut fresh = RingScheduler::new(Arc::clone(&topo), RoutePolicy::Sized);
+        fresh.restore(&st);
+        // clocks + scales + epoch round-trip; the measurement window does
+        // NOT (the measured side restarts at zero in a resumed process, so
+        // the modelled side must too — else the first post-resume profile
+        // sync divides a fresh numerator by a stale denominator)
+        let back = fresh.state();
+        assert_eq!(back.est_busy, st.est_busy);
+        assert_eq!(back.scale, st.scale);
+        assert_eq!(back.epoch, st.epoch);
+        assert!(back.window_est.iter().all(|&w| w == 0.0));
+
+        // a 1-ring world ignores the 2-ring vectors but keeps the epoch
+        let one = Arc::new(Topology::flat(2, 1, slow()));
+        let mut narrow = RingScheduler::new(one, RoutePolicy::Sized);
+        narrow.restore(&st);
+        assert_eq!(narrow.epoch(), st.epoch);
+        assert_eq!(narrow.state().est_busy, vec![0.0]);
+    }
+}

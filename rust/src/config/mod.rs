@@ -12,6 +12,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::collective::{RoutePolicy, TopologyKind};
 use crate::util::json::Json;
 
 /// Which meta-gradient algorithm drives the run (Fig. 1 table rows).
@@ -113,13 +114,37 @@ pub struct TrainConfig {
     /// F2SA θ-nudge is still being applied (overlap granularity below one
     /// tensor). `false` submits the fully materialized gradient at once.
     pub stream_grads: bool,
-    /// Independent comm rings per rank (NCCL-channel analogue). Reduces
-    /// route to rings by tag, so with `rings=2` the θ buckets and a fat
-    /// λ-reduce ride separate wires and never queue behind each other;
-    /// `rings=1` is the single shared engine. Any value is clamped to
-    /// [1, 3] (one ring per tag is the maximum that helps). Reduced values
-    /// are bitwise-identical for every setting.
+    /// Independent comm rings per rank (NCCL-channel analogue); `rings=1`
+    /// is the single shared engine. Any value is clamped to [1, 3] (one
+    /// ring per tag is the maximum that helps). Reduced values are
+    /// bitwise-identical for every setting.
     pub rings: usize,
+    /// Interconnect topology family: `flat` (every hop of every ring uses
+    /// the `link_*` profile) or `hier` (ranks grouped into `nodes`
+    /// NUMA-like nodes; ring 0 rides the `inter_*` fabric end-to-end,
+    /// affinity rings use `intra_*` inside a node and `inter_*` on
+    /// node-crossing hops). Bitwise results are topology-independent —
+    /// this is a performance-model knob.
+    pub topology: TopologyKind,
+    /// NUMA-like node count for `topology=hier` (clamped to [1, workers]).
+    pub nodes: usize,
+    /// Intra-node link bandwidth (bytes/sec) for `topology=hier`;
+    /// 0 = inherit `link_bandwidth`.
+    pub intra_bandwidth: f64,
+    /// Intra-node link latency (seconds) for `topology=hier`;
+    /// negative = inherit `link_latency`.
+    pub intra_latency: f64,
+    /// Inter-node link bandwidth (bytes/sec) for `topology=hier`;
+    /// 0 = `link_bandwidth / 4` (IB-vs-NVLink-ish derating).
+    pub inter_bandwidth: f64,
+    /// Inter-node link latency (seconds) for `topology=hier`;
+    /// negative = `link_latency × 4`.
+    pub inter_latency: f64,
+    /// Ring routing policy: `tag` pins θ+Ctrl / λ to fixed rings (the old
+    /// `tag.idx() % rings`), `size` (default) routes every reduce to the
+    /// ring with the least modelled finish time (size + occupancy aware,
+    /// deterministic across ranks). Bitwise results are policy-independent.
+    pub route: RoutePolicy,
     /// Streamed reduces between bucket auto-tuner rebalances (the old
     /// hard-coded 4). Larger = steadier profiles, slower adaptation.
     pub retune_every: u32,
@@ -157,6 +182,13 @@ impl Default for TrainConfig {
             overlap: true,
             stream_grads: true,
             rings: 2,
+            topology: TopologyKind::Flat,
+            nodes: 2,
+            intra_bandwidth: 0.0,
+            intra_latency: -1.0,
+            inter_bandwidth: 0.0,
+            inter_latency: -1.0,
+            route: RoutePolicy::Sized,
             retune_every: crate::collective::BucketPlan::DEFAULT_RETUNE_EVERY,
             checkpoint_path: String::new(),
             checkpoint_every: 0,
@@ -220,6 +252,29 @@ impl TrainConfig {
                 }
                 self.rings = r;
             }
+            "topology" => self.topology = TopologyKind::parse(value)?,
+            "nodes" => {
+                let n: usize = value.parse().context("nodes")?;
+                if n == 0 {
+                    bail!("nodes must be >= 1");
+                }
+                self.nodes = n;
+            }
+            "intra_bandwidth" => {
+                self.intra_bandwidth =
+                    value.parse().context("intra_bandwidth")?
+            }
+            "intra_latency" => {
+                self.intra_latency = value.parse().context("intra_latency")?
+            }
+            "inter_bandwidth" => {
+                self.inter_bandwidth =
+                    value.parse().context("inter_bandwidth")?
+            }
+            "inter_latency" => {
+                self.inter_latency = value.parse().context("inter_latency")?
+            }
+            "route" => self.route = RoutePolicy::parse(value)?,
             "retune_every" => {
                 let n: u32 = value.parse().context("retune_every")?;
                 if n == 0 {
@@ -300,7 +355,11 @@ mod tests {
     fn overrides_apply() {
         let mut c = TrainConfig::default();
         assert!(c.bucket_auto, "auto-tuning is the default");
-        assert_eq!(c.rings, 2, "separate θ/λ rings are the default");
+        assert_eq!(c.rings, 2, "two rings are the default");
+        assert_eq!(c.topology, TopologyKind::Flat, "flat links by default");
+        assert_eq!(c.route, RoutePolicy::Sized, "size routing is the default");
+        assert!(c.intra_bandwidth == 0.0 && c.inter_bandwidth == 0.0);
+        assert!(c.intra_latency < 0.0 && c.inter_latency < 0.0);
         assert!(c.checkpoint_path.is_empty(), "checkpointing is opt-in");
         c.apply_overrides(&[
             "algo=neumann".into(),
@@ -309,6 +368,13 @@ mod tests {
             "bucket_elems=4096".into(),
             "overlap=false".into(),
             "rings=1".into(),
+            "topology=hier".into(),
+            "nodes=4".into(),
+            "intra_bandwidth=1e9".into(),
+            "intra_latency=1e-6".into(),
+            "inter_bandwidth=2.5e8".into(),
+            "inter_latency=8e-5".into(),
+            "route=tag".into(),
             "retune_every=7".into(),
             "checkpoint_path=/tmp/run.ck".into(),
             "checkpoint_every=50".into(),
@@ -320,6 +386,13 @@ mod tests {
         assert!(!c.stream_grads);
         assert!(!c.overlap);
         assert_eq!(c.rings, 1);
+        assert_eq!(c.topology, TopologyKind::Hier);
+        assert_eq!(c.nodes, 4);
+        assert_eq!(c.intra_bandwidth, 1e9);
+        assert_eq!(c.intra_latency, 1e-6);
+        assert_eq!(c.inter_bandwidth, 2.5e8);
+        assert_eq!(c.inter_latency, 8e-5);
+        assert_eq!(c.route, RoutePolicy::Tag);
         assert_eq!(c.retune_every, 7);
         assert_eq!(c.checkpoint_path, "/tmp/run.ck");
         assert_eq!(c.checkpoint_every, 50);
@@ -357,6 +430,19 @@ mod tests {
         assert!(c.apply_overrides(&["no-equals".into()]).is_err());
         assert!(c.apply_overrides(&["rings=0".into()]).is_err());
         assert!(c.apply_overrides(&["retune_every=0".into()]).is_err());
+        assert!(c.apply_overrides(&["topology=mesh".into()]).is_err());
+        assert!(c.apply_overrides(&["nodes=0".into()]).is_err());
+        assert!(c.apply_overrides(&["route=random".into()]).is_err());
+    }
+
+    #[test]
+    fn topology_and_route_roundtrip() {
+        for k in [TopologyKind::Flat, TopologyKind::Hier] {
+            assert_eq!(TopologyKind::parse(k.name()).unwrap(), k);
+        }
+        for p in [RoutePolicy::Tag, RoutePolicy::Sized] {
+            assert_eq!(RoutePolicy::parse(p.name()).unwrap(), p);
+        }
     }
 
     #[test]

@@ -10,6 +10,9 @@
 //! magic "SAMA" | version u32 | step u64 | base_t u64 | meta_t u64 |
 //! 6 × (len u64, f32 data): theta, lambda, base_m, base_v, meta_m, meta_v
 //! v2+: bucket_elems u64 | (len u64, f32 data): pending_lambda
+//! v3+: route_epoch u64 |
+//!      2 × (len u64, f64 data): sched_est, sched_scale |
+//!      (len u64, f32 data): problem_state
 //! ```
 //! plus a trailing crc32-like checksum (fletcher64 over the payload).
 //!
@@ -17,10 +20,15 @@
 //! auto-tuner starts from where it converged instead of re-warming from
 //! scratch) and the reduced-but-unapplied λ-gradient of an in-flight
 //! pipelined λ-reduce (so a resume reproduces the uninterrupted schedule
-//! bit-for-bit). Version 1 files are still readable: the version-gated
-//! fields default to 0 / empty.
+//! bit-for-bit). Version 3 appends the [`RingScheduler`] state (routing
+//! epoch, virtual ring clocks and profile scales, as f64 so routing
+//! continuity survives the round trip exactly) and the
+//! `BilevelProblem::save_state` blob (problem-internal state such as the
+//! cls EMA uncertainty buffer). Version 1/2 files are still readable: the
+//! version-gated fields default to 0 / empty.
 //!
 //! [`BucketPlan`]: crate::collective::BucketPlan
+//! [`RingScheduler`]: crate::collective::RingScheduler
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -28,7 +36,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 const MAGIC: &[u8; 4] = b"SAMA";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
 /// Everything needed to resume a bilevel run.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -52,6 +60,23 @@ pub struct Checkpoint {
     /// ring-reduced but not yet applied as a λ-step (the coordinator's
     /// "stream B"). Empty when none was pending (and in v1 files).
     pub pending_lambda: Vec<f32>,
+    /// [`RingScheduler`] profile syncs applied when the checkpoint was
+    /// taken (0 in v1/v2 files).
+    ///
+    /// [`RingScheduler`]: crate::collective::RingScheduler
+    pub route_epoch: u64,
+    /// Scheduler virtual ring clocks (`est_busy`, one entry per ring;
+    /// empty in v1/v2 files = resume with fresh clocks). The measurement
+    /// window (`window_est`) is deliberately NOT part of the format:
+    /// `RingScheduler::restore` re-zeroes it, because the measured side of
+    /// the profile window also restarts from zero in a resumed process.
+    pub sched_est: Vec<f64>,
+    /// Scheduler measured/modelled correction scales.
+    pub sched_scale: Vec<f64>,
+    /// Problem-internal state blob (`BilevelProblem::save_state` — e.g.
+    /// the cls EMA uncertainty buffer). Empty when the problem is
+    /// stateless (and in v1/v2 files).
+    pub problem_state: Vec<f32>,
 }
 
 fn fletcher64(data: &[u8]) -> u64 {
@@ -72,35 +97,55 @@ fn push_vec(buf: &mut Vec<u8>, v: &[f32]) {
     }
 }
 
+fn push_vec_f64(buf: &mut Vec<u8>, v: &[f64]) {
+    buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
+    for x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
 fn read_u64(r: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
 }
 
-fn read_vec(r: &mut &[u8]) -> Result<Vec<f32>> {
+/// Length-prefixed vector of `N`-byte elements. Bounds the allocation by
+/// the bytes actually left in the payload: the length header is
+/// attacker-controlled and passes the checksum (the checksum covers it),
+/// so a plausibility cap alone still allowed an up-to-8-GiB allocation
+/// from a tiny crafted file. One width-generic implementation so the
+/// security-sensitive bound cannot drift between the f32 and f64 codecs.
+fn read_elems<const N: usize, T>(
+    r: &mut &[u8],
+    decode: fn([u8; N]) -> T,
+) -> Result<Vec<T>> {
     let len = read_u64(r)? as usize;
-    // Bound the allocation by the bytes actually left in the payload: the
-    // length header is attacker-controlled and passes the checksum (the
-    // checksum covers it), so a plausibility cap alone still allowed an
-    // up-to-8-GiB allocation from a tiny crafted file.
     let data = *r;
     let need = len
-        .checked_mul(4)
+        .checked_mul(N)
         .filter(|&b| b <= data.len())
         .with_context(|| {
             format!(
-                "checkpoint vector length {len} exceeds remaining payload \
-                 ({} bytes)",
+                "checkpoint vector length {len} (×{N} B) exceeds remaining \
+                 payload ({} bytes)",
                 data.len()
             )
         })?;
     let (bytes, rest) = data.split_at(need);
     *r = rest;
     Ok(bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .chunks_exact(N)
+        .map(|c| decode(c.try_into().unwrap()))
         .collect())
+}
+
+fn read_vec(r: &mut &[u8]) -> Result<Vec<f32>> {
+    read_elems(r, f32::from_le_bytes)
+}
+
+fn read_vec_f64(r: &mut &[u8]) -> Result<Vec<f64>> {
+    read_elems(r, f64::from_le_bytes)
 }
 
 impl Checkpoint {
@@ -122,6 +167,11 @@ impl Checkpoint {
         // v2 fields (version-gated on read)
         payload.extend_from_slice(&self.bucket_elems.to_le_bytes());
         push_vec(&mut payload, &self.pending_lambda);
+        // v3 fields: scheduler state + problem-internal state
+        payload.extend_from_slice(&self.route_epoch.to_le_bytes());
+        push_vec_f64(&mut payload, &self.sched_est);
+        push_vec_f64(&mut payload, &self.sched_scale);
+        push_vec(&mut payload, &self.problem_state);
         let mut out = Vec::with_capacity(payload.len() + 16);
         out.extend_from_slice(MAGIC);
         out.extend_from_slice(&VERSION.to_le_bytes());
@@ -160,12 +210,23 @@ impl Checkpoint {
         let base_v = read_vec(&mut r)?;
         let meta_m = read_vec(&mut r)?;
         let meta_v = read_vec(&mut r)?;
-        // version-gated fields: absent in v1, defaulted
+        // version-gated fields: absent in older files, defaulted
         let (bucket_elems, pending_lambda) = if version >= 2 {
             (read_u64(&mut r)?, read_vec(&mut r)?)
         } else {
             (0, Vec::new())
         };
+        let (route_epoch, sched_est, sched_scale, problem_state) =
+            if version >= 3 {
+                (
+                    read_u64(&mut r)?,
+                    read_vec_f64(&mut r)?,
+                    read_vec_f64(&mut r)?,
+                    read_vec(&mut r)?,
+                )
+            } else {
+                (0, Vec::new(), Vec::new(), Vec::new())
+            };
         if !r.is_empty() {
             bail!("trailing bytes in checkpoint payload");
         }
@@ -181,6 +242,10 @@ impl Checkpoint {
             meta_v,
             bucket_elems,
             pending_lambda,
+            route_epoch,
+            sched_est,
+            sched_scale,
+            problem_state,
         })
     }
 
@@ -221,12 +286,33 @@ mod tests {
             meta_v: rng.normal_vec(57, 0.1),
             bucket_elems: 1 << 15,
             pending_lambda: rng.normal_vec(57, 0.2),
+            route_epoch: 9,
+            sched_est: vec![0.125, 3.5e-3],
+            sched_scale: vec![1.0, 2.25],
+            problem_state: rng.normal_vec(41, 0.3),
         }
     }
 
-    /// Serialize `ck` in the legacy v1 layout (no bucket_elems / pending
-    /// λ) — the back-compat fixture.
-    fn to_bytes_v1(ck: &Checkpoint) -> Vec<u8> {
+    /// Strip the fields version `v` does not carry (legacy fixtures).
+    fn truncated_to(ck: &Checkpoint, v: u32) -> Checkpoint {
+        let mut out = ck.clone();
+        if v < 3 {
+            out.route_epoch = 0;
+            out.sched_est = Vec::new();
+            out.sched_scale = Vec::new();
+            out.problem_state = Vec::new();
+        }
+        if v < 2 {
+            out.bucket_elems = 0;
+            out.pending_lambda = Vec::new();
+        }
+        out
+    }
+
+    /// Serialize `ck` in a legacy layout — the back-compat fixtures
+    /// (v1: no bucket_elems / pending λ; v2: no scheduler / problem
+    /// state).
+    fn to_bytes_legacy(ck: &Checkpoint, version: u32) -> Vec<u8> {
         let mut payload = Vec::new();
         payload.extend_from_slice(&ck.step.to_le_bytes());
         payload.extend_from_slice(&ck.base_t.to_le_bytes());
@@ -241,9 +327,13 @@ mod tests {
         ] {
             push_vec(&mut payload, v);
         }
+        if version >= 2 {
+            payload.extend_from_slice(&ck.bucket_elems.to_le_bytes());
+            push_vec(&mut payload, &ck.pending_lambda);
+        }
         let mut out = Vec::with_capacity(payload.len() + 16);
         out.extend_from_slice(MAGIC);
-        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&version.to_le_bytes());
         out.extend_from_slice(&payload);
         out.extend_from_slice(&fletcher64(&payload).to_le_bytes());
         out
@@ -296,15 +386,36 @@ mod tests {
     #[test]
     fn v1_checkpoint_still_loads() {
         let ck = sample(6);
-        let back = Checkpoint::from_bytes(&to_bytes_v1(&ck)).unwrap();
+        let back = Checkpoint::from_bytes(&to_bytes_legacy(&ck, 1)).unwrap();
         assert_eq!(back.bucket_elems, 0, "v1 has no bucket plan");
         assert!(back.pending_lambda.is_empty(), "v1 has no pending λ");
-        let expect = Checkpoint {
-            bucket_elems: 0,
-            pending_lambda: Vec::new(),
-            ..ck
-        };
-        assert_eq!(back, expect);
+        assert_eq!(back, truncated_to(&ck, 1));
+    }
+
+    /// v2 files (pre-topology) still load: bucket plan and pending λ come
+    /// through, the v3 scheduler/problem-state fields default.
+    #[test]
+    fn v2_checkpoint_still_loads() {
+        let ck = sample(7);
+        let back = Checkpoint::from_bytes(&to_bytes_legacy(&ck, 2)).unwrap();
+        assert_eq!(back.bucket_elems, ck.bucket_elems);
+        assert_eq!(back.pending_lambda, ck.pending_lambda);
+        assert_eq!(back.route_epoch, 0, "v2 has no routing epoch");
+        assert!(back.sched_est.is_empty() && back.sched_scale.is_empty());
+        assert!(back.problem_state.is_empty(), "v2 has no problem state");
+        assert_eq!(back, truncated_to(&ck, 2));
+    }
+
+    /// The f64 codec must round-trip scheduler clocks exactly (f32
+    /// truncation would make resumed routing drift from uninterrupted).
+    #[test]
+    fn scheduler_f64_state_roundtrips_exactly() {
+        let mut ck = sample(8);
+        ck.sched_est = vec![1.0 / 3.0, 2.0_f64.powi(-40), 7.7e11];
+        ck.sched_scale = vec![0.125, 8.0, 1.0000000001, f64::MIN_POSITIVE];
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.sched_est, ck.sched_est);
+        assert_eq!(back.sched_scale, ck.sched_scale);
     }
 
     /// A crafted length header must not drive the allocation: the file

@@ -60,13 +60,25 @@
 //! no interconnect and never pipeline, so analytic convergence tests are
 //! unaffected by the overlap flag.
 //!
-//! **Multi-ring decoupling.** `rings=2` (default) gives λ its own comm
-//! ring (`CommWorld::with_rings`, NCCL-channel analogue): in the pipelined
-//! schedule the stale λ-reduce is enqueued before the next step's θ
-//! buckets, so on one shared engine the fat λ transfer serializes ahead of
-//! θ and the θ wait absorbs both; with separate rings each stream pays
-//! only for its own traffic. Ring assignment never changes reduce
-//! arithmetic — `rings=1` and `rings=2` produce bitwise-identical θ/λ.
+//! **Topology-aware multi-ring decoupling.** The comm world is built from
+//! the config's interconnect description (`CommWorld::with_topology`):
+//! `topology=flat` gives `rings=2` (default) identical engines, while
+//! `topology=hier` groups ranks into `nodes=` NUMA-like nodes and gives
+//! every ring a concrete path — ring 0 rides the `inter_*` fabric
+//! end-to-end, affinity rings use `intra_*` inside a node and pay
+//! `inter_*` on node-crossing hops (NCCL-channel analogue). Reduces are
+//! routed per `route=`: `tag` pins θ+Ctrl / λ to
+//! fixed rings; `size` (default) routes each reduce — the coordinator
+//! passes θ/λ size hints via `begin_reduce_sized` — to the ring with the
+//! least modelled finish time, so small Ctrl/λ reduces hitch onto the
+//! emptier/faster ring instead of queueing behind a fat θ transfer, and
+//! in the pipelined schedule the stale λ-reduce never serializes ahead of
+//! the next step's θ buckets on a shared engine. Routing decisions are a
+//! pure function of rank-replicated state (the measured occupancy profile
+//! rides the same Ctrl-tagged reduce as the bucket retune), so all ranks
+//! agree without extra traffic — and routing never changes reduce
+//! arithmetic: every topology × policy × ring count produces
+//! bitwise-identical θ/λ.
 //!
 //! **Checkpoint / resume.** `checkpoint_path=` enables durable state: at
 //! startup every worker restores from the file if it exists (ranks share
@@ -74,10 +86,13 @@
 //! saves every `checkpoint_every` steps plus at run end. An in-flight
 //! pipelined λ-reduce is resolved to its (deterministic) reduced value and
 //! stored *unapplied*, so the resumed schedule applies it exactly where
-//! the uninterrupted one would have. Problem-internal state (e.g. the cls
-//! EMA uncertainty) is not captured — checkpointed resume is exact for
-//! problems whose oracles are pure functions of (θ, λ, step). Loss-curve
-//! series and sample counters restart from the resume point.
+//! the uninterrupted one would have. Problem-internal state is captured
+//! through `BilevelProblem::{save_state, restore_state}` (format v3) —
+//! e.g. the cls EMA uncertainty buffer — so resume is bit-exact for
+//! problems whose hook state is rank-replicated, not just for pure
+//! oracles; the ring scheduler's clocks/scales/epoch are saved alongside
+//! so routing picks up where it left off. Loss-curve series and sample
+//! counters restart from the resume point.
 
 pub mod checkpoint;
 
@@ -93,8 +108,8 @@ use crate::algos::sama::SamaScratch;
 use crate::algos::{self, MetaStepCtx};
 use crate::bilevel::{BaseGradMeta, BilevelProblem, ParamKind};
 use crate::collective::{
-    BucketPlan, Collective, CommStats, CommWorld, LinkModel, PendingReduce,
-    ReduceTag,
+    BucketPlan, Collective, CommStats, CommWorld, LinkModel, LinkProfile,
+    PendingReduce, ReduceTag, SchedulerState, Topology, TopologyKind,
 };
 use crate::config::{Algo, TrainConfig};
 use crate::metrics::Series;
@@ -235,6 +250,50 @@ fn load_resume(cfg: &TrainConfig) -> Result<Option<Checkpoint>> {
         .map(Some)
 }
 
+/// Build the comm world the config describes: the interconnect topology
+/// (flat, or NUMA-like `topology=hier` with `nodes=` rank groups and
+/// separate intra/inter link profiles) plus the ring routing policy.
+/// Unset intra knobs inherit the flat `link_*` values; unset inter knobs
+/// derate them (¼ bandwidth, 4× latency — an IB-vs-NVLink-ish default).
+fn build_comm_world(cfg: &TrainConfig, world: usize) -> Arc<CommWorld> {
+    let link = if world == 1 {
+        LinkModel::instant()
+    } else {
+        LinkModel { bandwidth: cfg.link_bandwidth, latency: cfg.link_latency }
+    };
+    let rings = cfg.rings.max(1);
+    let topo = match cfg.topology {
+        TopologyKind::Flat => Topology::flat_or_env(world, rings, link.profile()),
+        TopologyKind::Hier => {
+            let pick = |knob: f64, fallback: f64| {
+                if knob > 0.0 {
+                    knob
+                } else {
+                    fallback
+                }
+            };
+            let intra = LinkProfile {
+                latency: if cfg.intra_latency >= 0.0 {
+                    cfg.intra_latency
+                } else {
+                    link.latency
+                },
+                bytes_per_sec: pick(cfg.intra_bandwidth, link.bandwidth),
+            };
+            let inter = LinkProfile {
+                latency: if cfg.inter_latency >= 0.0 {
+                    cfg.inter_latency
+                } else {
+                    link.latency * 4.0
+                },
+                bytes_per_sec: pick(cfg.inter_bandwidth, link.bandwidth / 4.0),
+            };
+            Topology::hierarchical(world, cfg.nodes.max(1), rings, intra, inter)
+        }
+    };
+    CommWorld::with_topology(topo, cfg.route)
+}
+
 /// Run a full bilevel training job across `cfg.workers` simulated devices.
 /// With `cfg.checkpoint_path` set, resumes from that file when it exists
 /// and saves leader-side checkpoints into it as the run progresses.
@@ -244,12 +303,7 @@ pub fn train(
     opts: &RunOptions,
 ) -> Result<TrainReport> {
     let world = cfg.workers.max(1);
-    let link = if world == 1 {
-        LinkModel::instant()
-    } else {
-        LinkModel { bandwidth: cfg.link_bandwidth, latency: cfg.link_latency }
-    };
-    let comm_world = CommWorld::with_rings(world, link, cfg.rings.max(1));
+    let comm_world = build_comm_world(cfg, world);
     // one load, shared by every rank: θ/λ are replicated across ranks by
     // construction, so all workers restart from the leader's saved state
     let resume = Arc::new(load_resume(cfg)?);
@@ -501,7 +555,7 @@ fn submit_lambda_reduce(
     } else {
         0
     };
-    let mut pending = coll.begin_reduce(ReduceTag::Lambda);
+    let mut pending = coll.begin_reduce_sized(ReduceTag::Lambda, n);
     let (mut goff, mut toff) = (0usize, 0usize);
     while goff < n {
         let gend = (goff + bucket).min(n);
@@ -607,6 +661,23 @@ fn run_worker(
             );
             lambda_stream = LambdaStream::Ready(ck.pending_lambda.clone());
         }
+        // Problem-internal state (EMA buffers, data-order RNGs): every
+        // rank restores the leader's blob — exact as long as the hook's
+        // state is rank-replicated (a pure function of the replicated
+        // θ/λ/step history, the documented contract).
+        problem
+            .restore_state(&ck.problem_state)
+            .context("restoring problem-internal checkpoint state")?;
+        // Routing continuity: virtual ring clocks, profile scales and the
+        // routing epoch pick up where the save left them (identical on
+        // every rank; ignored on a ring-count mismatch). The measurement
+        // window restarts from zero — see `RingScheduler::restore`.
+        coll.restore_scheduler(&SchedulerState {
+            epoch: ck.route_epoch,
+            est_busy: ck.sched_est.clone(),
+            window_est: Vec::new(),
+            scale: ck.sched_scale.clone(),
+        });
     }
 
     // The adaptive plan resumes from the checkpointed converged size
@@ -633,7 +704,7 @@ fn run_worker(
             // the previous meta step's λ-reduce absorbs any finished
             // buckets (stream B) without blocking.
             let bucket = plan.elems().max(1);
-            let mut pending = coll.begin_reduce(ReduceTag::Theta);
+            let mut pending = coll.begin_reduce_sized(ReduceTag::Theta, n_theta);
             let mut buf: Vec<f32> = coll.take_bucket_buf(bucket);
             let t_produce = Instant::now();
             let meta = {
@@ -856,6 +927,7 @@ fn run_worker(
                 LambdaStream::Ready(g) => g.clone(),
                 _ => Vec::new(),
             };
+            let sched = coll.scheduler_state();
             let ck = Checkpoint {
                 step: (step + 1) as u64,
                 base_t: base_state.t,
@@ -868,6 +940,10 @@ fn run_worker(
                 meta_v: meta_state.v.clone(),
                 bucket_elems: plan.elems() as u64,
                 pending_lambda: pending,
+                route_epoch: sched.epoch,
+                sched_est: sched.est_busy,
+                sched_scale: sched.scale,
+                problem_state: problem.save_state(),
             };
             if ck_err.is_none() {
                 if let Err(e) = ck.save(Path::new(&cfg.checkpoint_path)) {
@@ -1010,6 +1086,7 @@ mod tests {
 
     use crate::bilevel::biased_regression::BiasedRegression;
     use crate::bilevel::BaseGrad;
+    use crate::collective::RoutePolicy;
     use crate::util::rng::Rng;
 
     fn small_cfg(algo: Algo) -> TrainConfig {
@@ -1510,6 +1587,204 @@ mod tests {
         // restored (checkpointed) one, not the config seed
         let resumed = train(&cfg, &factory, &RunOptions::default()).unwrap();
         assert_eq!(resumed.bucket_elems_final, first.bucket_elems_final);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The tentpole's coordinator-level safety contract (acceptance
+    /// criterion): interconnect topology, routing policy and ring count
+    /// are performance-model knobs only — every combination trains to
+    /// bitwise-identical final θ/λ.
+    #[test]
+    fn topology_and_routing_do_not_change_numerics() {
+        let mk = |topology: TopologyKind, route: RoutePolicy, rings: usize| {
+            TrainConfig {
+                steps: 36,
+                workers: 2,
+                link_bandwidth: 1e12,
+                link_latency: 0.0,
+                bucket_auto: false,
+                topology,
+                route,
+                rings,
+                ..small_cfg(Algo::Sama)
+            }
+        };
+        let reference = train(
+            &mk(TopologyKind::Flat, RoutePolicy::Tag, 1),
+            &BrFactory,
+            &RunOptions::default(),
+        )
+        .unwrap();
+        for (topology, route, rings) in [
+            (TopologyKind::Flat, RoutePolicy::Sized, 2),
+            (TopologyKind::Hier, RoutePolicy::Tag, 2),
+            (TopologyKind::Hier, RoutePolicy::Sized, 3),
+        ] {
+            let rep = train(
+                &mk(topology, route, rings),
+                &BrFactory,
+                &RunOptions::default(),
+            )
+            .unwrap();
+            let ctx = format!(
+                "topology={} route={} rings={rings}",
+                topology.name(),
+                route.name()
+            );
+            assert_eq!(rep.final_theta, reference.final_theta, "{ctx}: θ");
+            assert_eq!(rep.final_lambda, reference.final_lambda, "{ctx}: λ");
+        }
+    }
+
+    // ---- problem-state checkpoint hooks ----------------------------------
+
+    /// Wrapper with genuine problem-internal state: an EMA of θ feeding
+    /// back into the base gradient (the cls EMA-uncertainty shape). The
+    /// EMA is a pure function of the replicated θ history, so it is
+    /// rank-replicated — exactly the `save_state` contract.
+    struct EmaProblem {
+        inner: BiasedRegression,
+        ema: Option<Vec<f32>>,
+    }
+
+    impl BilevelProblem for EmaProblem {
+        fn n_theta(&self) -> usize {
+            self.inner.n_theta()
+        }
+
+        fn n_lambda(&self) -> usize {
+            self.inner.n_lambda()
+        }
+
+        fn base_grad(
+            &mut self,
+            theta: &[f32],
+            lambda: &[f32],
+            step: usize,
+        ) -> Result<BaseGrad> {
+            match &mut self.ema {
+                Some(e) => {
+                    for (ei, ti) in e.iter_mut().zip(theta) {
+                        *ei = 0.9 * *ei + 0.1 * ti;
+                    }
+                }
+                None => self.ema = Some(theta.to_vec()),
+            }
+            let mut bg = self.inner.base_grad(theta, lambda, step)?;
+            let e = self.ema.as_ref().unwrap();
+            for (g, ei) in bg.grad.iter_mut().zip(e) {
+                *g += 0.05 * ei;
+            }
+            Ok(bg)
+        }
+
+        fn meta_direct_grad(
+            &mut self,
+            theta: &[f32],
+            step: usize,
+        ) -> Result<(Vec<f32>, f32)> {
+            self.inner.meta_direct_grad(theta, step)
+        }
+
+        fn lambda_grad(
+            &mut self,
+            theta: &[f32],
+            lambda: &[f32],
+            step: usize,
+        ) -> Result<(Vec<f32>, f32)> {
+            self.inner.lambda_grad(theta, lambda, step)
+        }
+
+        fn save_state(&self) -> Vec<f32> {
+            match &self.ema {
+                None => Vec::new(),
+                Some(e) => {
+                    let mut v = Vec::with_capacity(e.len() + 1);
+                    v.push(1.0);
+                    v.extend_from_slice(e);
+                    v
+                }
+            }
+        }
+
+        fn restore_state(&mut self, state: &[f32]) -> Result<()> {
+            if state.is_empty() {
+                self.ema = None;
+                return Ok(());
+            }
+            anyhow::ensure!(state[0] == 1.0 && state.len() == self.n_theta() + 1);
+            self.ema = Some(state[1..].to_vec());
+            Ok(())
+        }
+    }
+
+    struct EmaFactory;
+
+    impl ProblemFactory for EmaFactory {
+        fn build(
+            &self,
+            _rank: usize,
+            _world: usize,
+        ) -> Result<(Box<dyn BilevelProblem>, Vec<f32>, Vec<f32>)> {
+            let mut rng = Rng::new(4242);
+            let inner = BiasedRegression::random(&mut rng, 40, 30, 8, 2.0);
+            Ok((
+                Box::new(EmaProblem { inner, ema: None }),
+                vec![0.0; 8],
+                vec![0.0; 8],
+            ))
+        }
+
+        fn base_opt(&self) -> BaseOpt {
+            BaseOpt::Sgd { momentum: 0.0 }
+        }
+    }
+
+    /// ROADMAP "checkpoint problem-internal state": a problem whose
+    /// gradients depend on an internal EMA resumes bit-exactly because the
+    /// `save_state`/`restore_state` hooks carry the buffer through format
+    /// v3 — without them the resumed EMA would re-prime from θ@cut and
+    /// diverge. Also pins that v3 carries the ring scheduler's state.
+    #[test]
+    fn problem_state_hooks_make_stateful_resume_bit_exact() {
+        let dir = std::env::temp_dir().join("sama_resume_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state_ema.ck");
+        std::fs::remove_file(&path).ok();
+        let spath = path.to_str().unwrap().to_string();
+
+        let uninterrupted =
+            train(&resume_cfg(60, ""), &EmaFactory, &RunOptions::default())
+                .unwrap();
+        let _part =
+            train(&resume_cfg(36, &spath), &EmaFactory, &RunOptions::default())
+                .unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.step, 36);
+        assert_eq!(
+            ck.problem_state.len(),
+            8 + 1,
+            "EMA blob (tag + θ-sized buffer) missing from the checkpoint"
+        );
+        // v3 scheduler state rides along: one clock per (default 2) ring,
+        // charged by the run's submissions
+        assert_eq!(ck.sched_est.len(), 2);
+        assert!(
+            ck.sched_est.iter().any(|&x| x > 0.0),
+            "virtual ring clocks never charged"
+        );
+
+        let resumed =
+            train(&resume_cfg(60, &spath), &EmaFactory, &RunOptions::default())
+                .unwrap();
+        assert_eq!(
+            resumed.final_theta, uninterrupted.final_theta,
+            "resumed θ diverged — EMA state not restored"
+        );
+        assert_eq!(
+            resumed.final_lambda, uninterrupted.final_lambda,
+            "resumed λ diverged — EMA state not restored"
+        );
         std::fs::remove_file(&path).ok();
     }
 

@@ -109,6 +109,12 @@ pub fn pct(x: f64) -> String {
     format!("{:.2}", 100.0 * x)
 }
 
+/// Join already-formatted per-ring (or per-tag) values into one compact
+/// `a/b/c` cell — the benches' convention for per-stream splits.
+pub fn slash_join(vals: impl IntoIterator<Item = String>) -> String {
+    vals.into_iter().collect::<Vec<_>>().join("/")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,5 +142,11 @@ mod tests {
     fn row_arity_checked() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn slash_join_formats() {
+        assert_eq!(slash_join(vec!["0.10".to_string(), "0.02".into()]), "0.10/0.02");
+        assert_eq!(slash_join(Vec::<String>::new()), "");
     }
 }

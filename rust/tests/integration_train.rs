@@ -12,8 +12,14 @@
 use sama::apps::pretraining::{self, Method};
 use sama::apps::pruning::{self, PruneMetric};
 use sama::apps::wrench;
+use sama::bilevel::cls_problem::{ClsProblem, UncMode};
 use sama::config::{Algo, MetaOps, TrainConfig};
+use sama::coordinator::checkpoint::Checkpoint;
+use sama::coordinator::{train_single, BaseOpt, RunOptions};
 use sama::data::pruning_data::{generate, PruningSpec};
+use sama::data::wrench_sim;
+use sama::runtime::{params, Runtime};
+use sama::util::rng::Rng;
 
 fn base_cfg() -> TrainConfig {
     std::env::set_var(
@@ -140,6 +146,73 @@ fn overlap_off_is_equivalent_single_worker() {
         .map(|(x, y)| (x - y).abs())
         .fold(0.0, f32::max);
     assert!(d < 1e-6, "single-worker overlap changed numerics: max|Δθ| = {d}");
+}
+
+/// ROADMAP "checkpoint problem-internal state", cls half (mirrors the
+/// tier-1 `BiasedRegression`-based resume tests): with EMA uncertainty on,
+/// every base gradient depends on the EMA-of-θ history, and the
+/// `save_state`/`restore_state` hooks carry that buffer through checkpoint
+/// format v3 — so run-36 → resume-to-60 equals the uninterrupted 60-step
+/// run bit-for-bit.
+#[test]
+fn cls_ema_uncertainty_resume_is_bit_exact() {
+    let cfg0 = base_cfg(); // also points SAMA_ARTIFACTS at the repo
+    let dir = std::env::temp_dir().join("sama_cls_resume_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cls_ema.ck");
+    std::fs::remove_file(&path).ok();
+    let spath = path.to_str().unwrap().to_string();
+
+    let run = |steps: usize, ck_path: &str| {
+        let mut cfg = cfg0.clone();
+        cfg.steps = steps;
+        cfg.checkpoint_path = ck_path.into();
+        let rt = Runtime::new(&Runtime::artifact_dir(), &cfg.model).unwrap();
+        let mut rng = Rng::new(11);
+        let theta0 =
+            params::init_flat(&rt.config.layout_theta, rt.config.n_theta, &mut rng);
+        let mut rng_l = Rng::new(12);
+        let lambda0 =
+            params::init_flat(&rt.config.layout_mwn, rt.config.n_mwn, &mut rng_l);
+        let task = wrench_sim::generate("agnews", rt.config.model.seq_len, 1);
+        let mut p = ClsProblem::new(
+            rt,
+            task.train.clone(),
+            task.dev.clone(),
+            MetaOps::Reweight,
+            0,
+            1,
+        )
+        .with_unc_mode(UncMode::Ema { decay: 0.95 });
+        train_single(
+            &cfg,
+            &mut p,
+            theta0,
+            lambda0,
+            BaseOpt::Adam,
+            &RunOptions::default(),
+        )
+        .unwrap()
+    };
+
+    let uninterrupted = run(60, "");
+    let _part = run(36, &spath);
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.step, 36);
+    assert!(
+        !ck.problem_state.is_empty(),
+        "EMA uncertainty buffer missing from the checkpoint"
+    );
+    let resumed = run(60, &spath);
+    assert_eq!(
+        resumed.final_theta, uninterrupted.final_theta,
+        "resumed θ diverged — cls EMA state not restored"
+    );
+    assert_eq!(
+        resumed.final_lambda, uninterrupted.final_lambda,
+        "resumed λ diverged — cls EMA state not restored"
+    );
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]
