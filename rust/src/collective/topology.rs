@@ -37,7 +37,10 @@
 //! ring without any extra coordination, the per-ring submission order
 //! stays a collective contract, and (since ring assignment only moves
 //! *when* a bucket reduces, never its summation order) results are
-//! bitwise-identical for any topology, ring count or policy.
+//! bitwise-identical for any topology, ring count or policy. This contract
+//! is invariant 1 of `docs/INVARIANTS.md`; detlint's
+//! `route-outside-scheduler` rule keeps ring-selection arithmetic from
+//! growing outside this module.
 
 use std::sync::Arc;
 use std::time::Duration;

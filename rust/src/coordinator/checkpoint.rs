@@ -27,6 +27,11 @@
 //! cls EMA uncertainty buffer). Version 1/2 files are still readable: the
 //! version-gated fields default to 0 / empty.
 //!
+//! Checkpoint bytes are untrusted input: every length prefix is bounded
+//! against the remaining payload through `read_len_bounded` before any
+//! allocation is sized from it (invariant 3 of `docs/INVARIANTS.md`,
+//! enforced tree-wide by detlint's `unbounded-deser-alloc` rule).
+//!
 //! [`BucketPlan`]: crate::collective::BucketPlan
 //! [`RingScheduler`]: crate::collective::RingScheduler
 
@@ -110,29 +115,46 @@ fn read_u64(r: &mut impl Read) -> Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
-/// Length-prefixed vector of `N`-byte elements. Bounds the allocation by
-/// the bytes actually left in the payload: the length header is
-/// attacker-controlled and passes the checksum (the checksum covers it),
-/// so a plausibility cap alone still allowed an up-to-8-GiB allocation
-/// from a tiny crafted file. One width-generic implementation so the
+/// Read a length header and bound it by the bytes actually remaining:
+/// `len × elem_bytes` must fit in what's left of `r` or the read fails
+/// *before* any allocation. The length header is attacker-controlled and
+/// passes the checksum (the checksum covers it), so a plausibility cap
+/// alone still allowed an up-to-8-GiB allocation from a tiny crafted
+/// file. The `u64 → usize` conversion is checked too, so a 32-bit target
+/// cannot truncate the header below the bound. Every length-prefixed
+/// read in this module must come through here (`docs/INVARIANTS.md`;
+/// enforced tree-wide by detlint's `unbounded-deser-alloc` rule).
+pub(crate) fn read_len_bounded(
+    r: &mut &[u8],
+    elem_bytes: usize,
+) -> Result<usize> {
+    let raw = read_u64(r)?;
+    let remaining = r.len();
+    usize::try_from(raw)
+        .ok()
+        .and_then(|len| {
+            len.checked_mul(elem_bytes.max(1))
+                .filter(|&bytes| bytes <= remaining)
+                .map(|_| len)
+        })
+        .with_context(|| {
+            format!(
+                "checkpoint vector length {raw} (×{} B) exceeds remaining \
+                 payload ({remaining} bytes)",
+                elem_bytes.max(1)
+            )
+        })
+}
+
+/// Length-prefixed vector of `N`-byte elements, length-checked through
+/// [`read_len_bounded`]. One width-generic implementation so the
 /// security-sensitive bound cannot drift between the f32 and f64 codecs.
 fn read_elems<const N: usize, T>(
     r: &mut &[u8],
     decode: fn([u8; N]) -> T,
 ) -> Result<Vec<T>> {
-    let len = read_u64(r)? as usize;
-    let data = *r;
-    let need = len
-        .checked_mul(N)
-        .filter(|&b| b <= data.len())
-        .with_context(|| {
-            format!(
-                "checkpoint vector length {len} (×{N} B) exceeds remaining \
-                 payload ({} bytes)",
-                data.len()
-            )
-        })?;
-    let (bytes, rest) = data.split_at(need);
+    let len = read_len_bounded(r, N)?;
+    let (bytes, rest) = r.split_at(len * N);
     *r = rest;
     Ok(bytes
         .chunks_exact(N)
@@ -453,6 +475,29 @@ mod tests {
         bytes.extend_from_slice(&payload);
         bytes.extend_from_slice(&fletcher64(&payload).to_le_bytes());
         assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    /// `read_len_bounded` is the single chokepoint for length headers:
+    /// an exact fit passes (reader left right after the header), one
+    /// element too many fails before anything allocates.
+    #[test]
+    fn read_len_bounded_accepts_exact_fit_and_rejects_excess() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&3u64.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 12]); // exactly 3 × 4 bytes
+        let mut r: &[u8] = &buf;
+        assert_eq!(read_len_bounded(&mut r, 4).unwrap(), 3);
+        assert_eq!(r.len(), 12, "header consumed, payload untouched");
+
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&4u64.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 12]); // one element short of the claim
+        let mut r: &[u8] = &buf;
+        let err = read_len_bounded(&mut r, 4).unwrap_err();
+        assert!(
+            err.to_string().contains("exceeds remaining payload"),
+            "{err}"
+        );
     }
 
     #[test]

@@ -93,6 +93,11 @@
 //! oracles; the ring scheduler's clocks/scales/epoch are saved alongside
 //! so routing picks up where it left off. Loss-curve series and sample
 //! counters restart from the resume point.
+//!
+//! The determinism invariants the schedule depends on (replicated routing
+//! inputs, Ctrl-synced retune as the only wall-clock→decision route, exact
+//! accounting) are cataloged in `docs/INVARIANTS.md` and mechanically
+//! checked by `rust/tools/detlint`.
 
 pub mod checkpoint;
 
@@ -307,6 +312,8 @@ pub fn train(
     // one load, shared by every rank: θ/λ are replicated across ranks by
     // construction, so all workers restart from the leader's saved state
     let resume = Arc::new(load_resume(cfg)?);
+    // detlint: allow(wallclock-in-decision) — whole-run wall clock for the
+    // TrainReport; no routing or retune decision consumes it
     let t0 = Instant::now();
 
     let reports: Vec<WorkerReport> = std::thread::scope(|scope| {
@@ -694,6 +701,8 @@ fn run_worker(
     // (their peer never submits again) and train() would hang instead of
     // erroring. Finish the schedule, surface the failure at the end.
     let mut ck_err: Option<anyhow::Error> = None;
+    // detlint: allow(wallclock-in-decision) — per-rank step-time attribution
+    // for WorkerReport; no routing or retune decision consumes it
     let t_start = Instant::now();
 
     for step in start_step..cfg.steps {
@@ -706,6 +715,8 @@ fn run_worker(
             let bucket = plan.elems().max(1);
             let mut pending = coll.begin_reduce_sized(ReduceTag::Theta, n_theta);
             let mut buf: Vec<f32> = coll.take_bucket_buf(bucket);
+            // detlint: allow(wallclock-in-decision) — producer-time profile;
+            // BucketPlan::retune Ctrl-syncs it across ranks before deciding
             let t_produce = Instant::now();
             let meta = {
                 let coll = &mut *coll;

@@ -23,7 +23,7 @@ mod xla_stub;
 use xla_stub as xla;
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
@@ -57,7 +57,9 @@ pub struct Runtime {
     dir: PathBuf,
     pub config_name: String,
     pub config: ConfigBlock,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    // BTreeMap, not HashMap: iteration order is part of no contract today,
+    // but a deterministic container keeps it from ever becoming one
+    cache: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
     stats: RefCell<RuntimeStats>,
 }
 
@@ -73,7 +75,7 @@ impl Runtime {
             dir: dir.to_path_buf(),
             config_name: config_name.to_string(),
             config,
-            cache: RefCell::new(HashMap::new()),
+            cache: RefCell::new(BTreeMap::new()),
             stats: RefCell::new(RuntimeStats::default()),
         })
     }

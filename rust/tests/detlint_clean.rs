@@ -1,0 +1,23 @@
+//! Tier-1 gate: the real tree is detlint-clean.
+//!
+//! Every determinism/concurrency invariant in `docs/INVARIANTS.md` that
+//! detlint can check mechanically must hold over `src/` and `benches/` —
+//! zero findings. Intentional exceptions don't get deleted here, they get
+//! a `// detlint: allow(<rule>) — <reason>` at the point of use, so the
+//! full set of exceptions stays enumerable (and justified) in-tree.
+
+use std::path::Path;
+
+#[test]
+fn tree_is_detlint_clean() {
+    let rust_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let roots = [rust_dir.join("src"), rust_dir.join("benches")];
+    let (findings, files) = detlint::scan_tree(&roots).expect("scan tree");
+    assert!(files > 20, "walk is suspiciously small: {files} file(s)");
+    assert!(
+        findings.is_empty(),
+        "detlint findings — fix, or justify in place with \
+         `// detlint: allow(<rule>) — <reason>`:\n{}",
+        detlint::render(&findings)
+    );
+}

@@ -1,0 +1,14 @@
+//! detlint fixture — `bad-allow`, known-bad.
+//!
+//! Broken directives are findings in their own right, and they suppress
+//! nothing: the violation each one points at still fires. An allow is
+//! load-bearing documentation; a broken one silently enforces nothing.
+
+//~ bad-allow (the reason is mandatory) — detlint: allow(nondet-iteration)
+use std::collections::HashMap; //~ nondet-iteration
+
+// detlint: allow(nondet-map-iteration) — no such rule //~ bad-allow
+use std::collections::HashSet; //~ nondet-iteration
+
+// detlint: allowed(nondet-iteration) — `allowed(` is not `allow(` //~ bad-allow
+pub type Routes = HashMap<u64, u64>; //~ nondet-iteration

@@ -1,0 +1,21 @@
+//! detlint fixture — `float-accum-cast`, known-bad.
+//!
+//! The PR 1 bytes-accounting bug class: a float accumulator truncated to
+//! int on every call. Each truncation loses up to one unit, the loss
+//! scales with call count, and two ranks with different call counts stop
+//! agreeing on "exact" totals.
+
+pub struct Accounting {
+    bytes_exact: f64,
+}
+
+impl Accounting {
+    pub fn charge(&mut self, elems: usize, ratio: f64) -> u64 {
+        self.bytes_exact += elems as f64 * ratio;
+        self.bytes_exact as u64 //~ float-accum-cast
+    }
+
+    pub fn budget_micros(window_secs: f64) -> u64 {
+        (window_secs * 1_000_000.0) as u64 //~ float-accum-cast
+    }
+}

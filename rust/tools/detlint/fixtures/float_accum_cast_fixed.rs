@@ -1,0 +1,21 @@
+//! detlint fixture — `float-accum-cast`, fixed.
+//!
+//! Accounting stays integral (exact by construction), or rounds exactly
+//! once, explicitly — so the total is a pure function of the inputs, not
+//! of how many calls it took to get there.
+
+pub struct Accounting {
+    bytes_exact: u64,
+}
+
+impl Accounting {
+    pub fn charge(&mut self, elems: usize, num: u64, den: u64) -> u64 {
+        // integer accounting: no truncation to drift with call count
+        self.bytes_exact += (elems as u64 * num + den / 2) / den.max(1);
+        self.bytes_exact
+    }
+
+    pub fn budget_micros(window_secs: f64) -> u64 {
+        (window_secs * 1_000_000.0).round() as u64
+    }
+}

@@ -1,0 +1,22 @@
+//! detlint fixture — `lock-across-recv`, known-bad.
+//!
+//! A mutex guard held across a ring rendezvous: the peer that owns the
+//! next hop blocks on the lock, never reaches its own `recv()`, and the
+//! ring deadlocks — with every rank reporting itself "waiting normally".
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Mutex;
+
+pub fn drain_with_guard(state: &Mutex<Vec<u64>>, rx: &Receiver<u64>) -> u64 {
+    let mut pending = state.lock().expect("collective state lock poisoned");
+    let word = rx.recv().expect("ring peer hung up"); //~ lock-across-recv
+    pending.push(word);
+    word
+}
+
+pub fn publish_with_guard(state: &Mutex<Vec<u64>>, tx: &Sender<u64>) {
+    let pending = state.lock().expect("collective state lock poisoned");
+    for w in pending.iter() {
+        tx.send(*w).expect("ring peer hung up"); //~ lock-across-recv
+    }
+}

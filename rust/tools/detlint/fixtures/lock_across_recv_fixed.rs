@@ -1,0 +1,26 @@
+//! detlint fixture — `lock-across-recv`, fixed.
+//!
+//! Guards end before any rendezvous: copy out what the rendezvous needs,
+//! release the lock (block scope or explicit `drop`), then meet the
+//! peer. No rank can wedge the ring by sitting on shared state.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Mutex;
+
+pub fn recv_then_lock(state: &Mutex<Vec<u64>>, rx: &Receiver<u64>) -> u64 {
+    let word = rx.recv().expect("ring peer hung up");
+    {
+        let mut pending = state.lock().expect("collective state lock poisoned");
+        pending.push(word);
+    }
+    word
+}
+
+pub fn publish_after_drop(state: &Mutex<Vec<u64>>, tx: &Sender<u64>) {
+    let guard = state.lock().expect("collective state lock poisoned");
+    let snapshot: Vec<u64> = guard.clone();
+    drop(guard);
+    for w in snapshot {
+        tx.send(w).expect("ring peer hung up");
+    }
+}

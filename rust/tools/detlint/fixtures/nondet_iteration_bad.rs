@@ -1,0 +1,20 @@
+//! detlint fixture — `nondet-iteration`, known-bad.
+//!
+//! Hash iteration order is seeded per process: two ranks walking "the
+//! same" map serialize different blobs, route different reduces, retune
+//! to different bucket sizes. (Not compiled; scanned by the fixture tests.)
+
+use std::collections::HashMap; //~ nondet-iteration
+use std::collections::HashSet; //~ nondet-iteration
+
+/// Checkpoint blob built by map iteration: rank-divergent byte order.
+pub fn weight_blob(weights: &HashMap<u64, f32>) -> Vec<f32> { //~ nondet-iteration
+    weights.values().copied().collect()
+}
+
+/// Route dedup through a hash set: `len()` is fine, but the first
+/// iteration someone adds diverges across ranks.
+pub fn seen_routes(ids: &[u64]) -> usize {
+    let seen: HashSet<u64> = ids.iter().copied().collect(); //~ nondet-iteration
+    seen.len()
+}

@@ -1,0 +1,29 @@
+//! detlint fixture — `nondet-iteration`, fixed.
+//!
+//! Ordered containers make iteration order part of the type: every rank
+//! walks the same sequence. A lookup-only hash cache survives behind an
+//! allow that says *why* iteration order cannot leak.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Same blob on every rank: `BTreeMap` iterates in key order.
+pub fn weight_blob(weights: &BTreeMap<u64, f32>) -> Vec<f32> {
+    weights.values().copied().collect()
+}
+
+pub fn seen_routes(ids: &[u64]) -> usize {
+    let seen: BTreeSet<u64> = ids.iter().copied().collect();
+    seen.len()
+}
+
+pub struct ExeCache {
+    // detlint: allow(nondet-iteration) — lookup-only by key; never iterated,
+    // so hash order cannot reach a reduce, a route, or a blob
+    inner: std::collections::HashMap<String, u64>,
+}
+
+impl ExeCache {
+    pub fn get(&self, name: &str) -> Option<u64> {
+        self.inner.get(name).copied()
+    }
+}

@@ -1,0 +1,23 @@
+//! detlint fixture — `route-outside-scheduler`, known-bad.
+//!
+//! Ring routing re-derived outside `RingScheduler`: the two copies agree
+//! today, and the first time one changes (weighting, occupancy, a new
+//! ring class) ranks route the same tag to different rings.
+
+pub struct Tag(u64);
+
+impl Tag {
+    pub fn idx(&self) -> u64 {
+        self.0
+    }
+}
+
+/// A hand-rolled copy of the scheduler's partition function.
+pub fn ring_for(tag: &Tag, rings: u64) -> u64 {
+    tag.idx() % rings.max(1) //~ route-outside-scheduler
+}
+
+/// Same arithmetic hidden behind different names.
+pub fn spread(seq: u64, ring_count: u64) -> u64 {
+    seq % ring_count //~ route-outside-scheduler
+}

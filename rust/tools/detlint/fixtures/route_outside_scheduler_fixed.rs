@@ -1,0 +1,30 @@
+//! detlint fixture — `route-outside-scheduler`, fixed.
+//!
+//! Routing lives in the scheduler; everyone else asks it. The partition
+//! function itself carries an allow naming the contract (in the real
+//! tree it lives in `topology.rs`, where the rule is off by scoping).
+
+pub struct Tag(u64);
+
+impl Tag {
+    pub fn idx(&self) -> u64 {
+        self.0
+    }
+}
+
+pub struct RingScheduler {
+    rings: u64,
+}
+
+impl RingScheduler {
+    pub fn ring_for(&self, tag: &Tag) -> u64 {
+        // detlint: allow(route-outside-scheduler) — this *is* the scheduler's
+        // partition function; fixtures sit outside topology.rs, so say so
+        tag.idx() % self.rings.max(1)
+    }
+}
+
+/// Everyone else routes by asking the scheduler.
+pub fn dispatch(sched: &RingScheduler, tag: &Tag) -> u64 {
+    sched.ring_for(tag)
+}

@@ -1,0 +1,33 @@
+//! detlint fixture — `unbounded-deser-alloc`, known-bad.
+//!
+//! The `read_vec` bug class: a length header lifted straight out of the
+//! payload sizes an allocation before anyone checks it against the bytes
+//! actually remaining — an 11-byte crafted file driving an 8 GiB reserve.
+
+fn read_u64(r: &mut &[u8]) -> Option<u64> {
+    if r.len() < 8 {
+        return None;
+    }
+    let (head, rest) = r.split_at(8);
+    *r = rest;
+    Some(u64::from_le_bytes(head.try_into().ok()?))
+}
+
+/// Allocation sized directly by the wire length — no remaining-payload
+/// bound anywhere.
+pub fn read_blob(r: &mut &[u8]) -> Option<Vec<u8>> {
+    let mut out = Vec::with_capacity(read_u64(r)? as usize); //~ unbounded-deser-alloc
+    out.extend_from_slice(r);
+    Some(out)
+}
+
+/// Length laundered through a local before reaching `vec!` — still
+/// unbounded.
+pub fn read_words(r: &mut &[u8]) -> Option<Vec<u64>> {
+    let n = read_u64(r)? as usize;
+    let mut vals = vec![0u64; n]; //~ unbounded-deser-alloc
+    for v in vals.iter_mut() {
+        *v = read_u64(r)?;
+    }
+    Some(vals)
+}

@@ -1,0 +1,53 @@
+//! detlint fixture — `unbounded-deser-alloc`, fixed.
+//!
+//! Same decoder, with every wire length checked against the bytes
+//! actually remaining before it sizes anything — the
+//! `checkpoint::read_len_bounded` pattern.
+
+fn read_u64(r: &mut &[u8]) -> Option<u64> {
+    if r.len() < 8 {
+        return None;
+    }
+    let (head, rest) = r.split_at(8);
+    *r = rest;
+    Some(u64::from_le_bytes(head.try_into().ok()?))
+}
+
+/// Read a length header and require `len * elem_bytes` to fit in the
+/// remaining payload before anyone allocates from it.
+fn read_len_bounded(r: &mut &[u8], elem_bytes: usize) -> Option<usize> {
+    let raw = read_u64(r)?;
+    let len = usize::try_from(raw).ok()?;
+    let need = len.checked_mul(elem_bytes.max(1))?;
+    if need <= r.len() {
+        Some(len)
+    } else {
+        None
+    }
+}
+
+pub fn read_blob(r: &mut &[u8]) -> Option<Vec<u8>> {
+    let len = read_len_bounded(r, 1)?;
+    let mut out = Vec::with_capacity(len);
+    out.extend_from_slice(&r[..len]);
+    *r = &r[len..];
+    Some(out)
+}
+
+pub fn read_words(r: &mut &[u8]) -> Option<Vec<u64>> {
+    let n = read_len_bounded(r, 8)?;
+    let mut vals = vec![0u64; n];
+    for v in vals.iter_mut() {
+        *v = read_u64(r)?;
+    }
+    Some(vals)
+}
+
+/// Clamping to the remaining payload also counts as a bound.
+pub fn read_tail(r: &mut &[u8]) -> Option<Vec<u8>> {
+    let len = read_u64(r)? as usize;
+    let len = len.min(r.len());
+    let mut out = Vec::with_capacity(len);
+    out.extend_from_slice(&r[..len]);
+    Some(out)
+}

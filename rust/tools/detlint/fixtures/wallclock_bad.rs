@@ -1,0 +1,28 @@
+//! detlint fixture — `wallclock-in-decision`, known-bad.
+//!
+//! Wall clock is the canonical rank-divergent input: two ranks reading
+//! their own clocks and branching on the result route differently, and
+//! the collective deadlocks or silently diverges.
+
+use std::time::{Instant, SystemTime}; //~ wallclock-in-decision
+
+/// Routes to the "fast" ring when the last reduce felt slow — felt slow
+/// *on this rank*, so ranks disagree.
+pub fn pick_ring(last_reduce_started: Instant, rings: usize) -> usize {
+    let elapsed = last_reduce_started.elapsed();
+    let now = Instant::now(); //~ wallclock-in-decision
+    let _ = now;
+    if elapsed.as_millis() > 5 {
+        0
+    } else {
+        rings - 1
+    }
+}
+
+/// Epoch-stamps a retune decision: every rank stamps a different epoch.
+pub fn retune_epoch() -> u64 {
+    SystemTime::now() //~ wallclock-in-decision
+        .duration_since(SystemTime::UNIX_EPOCH) //~ wallclock-in-decision
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}

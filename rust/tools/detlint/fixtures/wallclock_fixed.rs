@@ -1,0 +1,25 @@
+//! detlint fixture — `wallclock-in-decision`, fixed.
+//!
+//! Decisions consume the Ctrl-synced profile value — already averaged
+//! across ranks, identical on every rank — and raw timestamps survive
+//! only on the metrics/attribution path, behind an allow that says so.
+
+use std::time::{Duration, Instant};
+
+/// Routing input is the *synced* reduce cost, not a local clock read:
+/// every rank sees the same number, so every rank picks the same ring.
+pub fn pick_ring(synced_reduce_cost: Duration, rings: usize) -> usize {
+    if synced_reduce_cost.as_millis() > 5 {
+        0
+    } else {
+        rings - 1
+    }
+}
+
+/// Attribution-only stamp; the value feeds the metrics sink and nothing
+/// else.
+pub fn stamp_attribution() -> Instant {
+    // detlint: allow(wallclock-in-decision) — attribution-only timestamp;
+    // never compared or routed on, so ranks may disagree freely
+    Instant::now()
+}

@@ -1,0 +1,450 @@
+//! Minimal token-level Rust lexer.
+//!
+//! Just enough lexing for the rule engine in [`crate::rules`]: identifiers,
+//! numeric literals (with a float/int distinction), string/char literals,
+//! lifetimes and operators, each carrying its 1-based source line. Comments
+//! and literal *contents* are deliberately dropped — every detlint rule is a
+//! token-shape pattern, and skipping comments/strings here is precisely what
+//! keeps the rules from firing on prose like "`tag.idx() % rings`" in a doc
+//! comment.
+//!
+//! The lexer is also where `// detlint: allow(<rule>) — <reason>` directives
+//! are collected (plain `//` comments only; doc comments are prose and never
+//! carry directives).
+
+/// Token kind. Keywords are ordinary [`TokKind::Ident`]s — rules match on
+/// text.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    /// Integer literal (any base, any suffix except `f32`/`f64`).
+    Int,
+    /// Float literal (decimal point, exponent started, or `f32`/`f64`
+    /// suffix).
+    Float,
+    /// String literal of any flavor (`"…"`, `r#"…"#`, `b"…"`).
+    Str,
+    /// Character or byte literal (`'x'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`, `'_`).
+    Lifetime,
+    /// Operator / punctuation; multi-character operators (`::`, `=>`,
+    /// `..=`) are one token.
+    Op,
+}
+
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based source line of the token's first character.
+    pub line: usize,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_op(&self, s: &str) -> bool {
+        self.kind == TokKind::Op && self.text == s
+    }
+}
+
+/// One `// detlint: allow(…)` directive.
+#[derive(Clone, Debug)]
+pub struct AllowDirective {
+    /// Line the directive appears on.
+    pub line: usize,
+    /// True when the comment shares its line with code — the allow then
+    /// applies to that line; otherwise it applies to the next code line.
+    pub inline: bool,
+    /// Rule names inside `allow(…)`.
+    pub rules: Vec<String>,
+    /// True when a non-empty justification follows the closing paren.
+    pub has_reason: bool,
+    /// True when the directive could not be parsed at all (e.g. a
+    /// `detlint:` marker without a well-formed `allow(…)`).
+    pub malformed: bool,
+}
+
+/// Lex output: the token stream plus any allow directives encountered.
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub allows: Vec<AllowDirective>,
+}
+
+const OPS3: [&str; 4] = ["..=", "<<=", ">>=", "..."];
+const OPS2: [&str; 19] = [
+    "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "+=", "-=", "*=",
+    "/=", "%=", "^=", "&=", "|=", "<<", ">>",
+];
+
+pub fn lex(src: &str) -> Lexed {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut allows: Vec<AllowDirective> = Vec::new();
+
+    let at = |i: usize, c: char| i < n && s[i] == c;
+
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // ---- comments -------------------------------------------------
+        if c == '/' && at(i + 1, '/') {
+            let start = i;
+            while i < n && s[i] != '\n' {
+                i += 1;
+            }
+            let text: String = s[start..i].iter().collect();
+            // doc comments (`///`, `//!`) are prose — no directives there
+            let is_doc = text.starts_with("///") || text.starts_with("//!");
+            if !is_doc {
+                let inline =
+                    tokens.last().map(|t| t.line) == Some(line);
+                parse_allow(&text, line, inline, &mut allows);
+            }
+            continue;
+        }
+        if c == '/' && at(i + 1, '*') {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if s[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if s[i] == '/' && at(i + 1, '*') {
+                    depth += 1;
+                    i += 2;
+                } else if s[i] == '*' && at(i + 1, '/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // ---- raw / byte strings ---------------------------------------
+        if let Some((end, newlines)) = raw_string_end(&s, i) {
+            tokens.push(Token { kind: TokKind::Str, text: String::new(), line });
+            line += newlines;
+            i = end;
+            continue;
+        }
+        if c == '"' || (c == 'b' && at(i + 1, '"')) {
+            i += usize::from(c == 'b') + 1;
+            while i < n {
+                if s[i] == '\\' {
+                    i += 2;
+                } else if s[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    if s[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            tokens.push(Token { kind: TokKind::Str, text: String::new(), line });
+            continue;
+        }
+        // ---- char literal vs lifetime ---------------------------------
+        if c == '\'' || (c == 'b' && at(i + 1, '\'')) {
+            let q = i + usize::from(c == 'b'); // index of the quote
+            if at(q + 1, '\\') {
+                // escaped char literal
+                i = q + 2;
+                while i < n && s[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+                tokens.push(Token { kind: TokKind::Char, text: String::new(), line });
+                continue;
+            }
+            if q + 2 < n && s[q + 2] == '\'' && s[q + 1] != '\'' {
+                // plain char literal 'x'
+                i = q + 3;
+                tokens.push(Token { kind: TokKind::Char, text: String::new(), line });
+                continue;
+            }
+            if c == '\'' {
+                // lifetime
+                let start = i;
+                i += 1;
+                while i < n && (s[i].is_alphanumeric() || s[i] == '_') {
+                    i += 1;
+                }
+                tokens.push(Token {
+                    kind: TokKind::Lifetime,
+                    text: s[start..i].iter().collect(),
+                    line,
+                });
+                continue;
+            }
+            // lone `b` followed by something odd: fall through as ident
+        }
+        // ---- numbers --------------------------------------------------
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (s[i].is_ascii_alphanumeric() || s[i] == '_') {
+                i += 1;
+            }
+            let mut is_float = false;
+            // decimal point followed by a digit (keeps `0..n` an Int + `..`)
+            if at(i, '.') && i + 1 < n && s[i + 1].is_ascii_digit() {
+                is_float = true;
+                i += 1;
+                while i < n && (s[i].is_ascii_alphanumeric() || s[i] == '_') {
+                    i += 1;
+                }
+            }
+            let text: String = s[start..i].iter().collect();
+            if text.ends_with("f32") || text.ends_with("f64") {
+                is_float = true;
+            }
+            tokens.push(Token {
+                kind: if is_float { TokKind::Float } else { TokKind::Int },
+                text,
+                line,
+            });
+            continue;
+        }
+        // ---- identifiers / keywords -----------------------------------
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (s[i].is_alphanumeric() || s[i] == '_') {
+                i += 1;
+            }
+            tokens.push(Token {
+                kind: TokKind::Ident,
+                text: s[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // ---- operators ------------------------------------------------
+        let rest_starts_with = |op: &str| {
+            op.chars().enumerate().all(|(k, oc)| at(i + k, oc))
+        };
+        if let Some(op) = OPS3.iter().find(|op| rest_starts_with(op)) {
+            tokens.push(Token { kind: TokKind::Op, text: (*op).to_string(), line });
+            i += 3;
+            continue;
+        }
+        if let Some(op) = OPS2.iter().find(|op| rest_starts_with(op)) {
+            tokens.push(Token { kind: TokKind::Op, text: (*op).to_string(), line });
+            i += 2;
+            continue;
+        }
+        tokens.push(Token { kind: TokKind::Op, text: c.to_string(), line });
+        i += 1;
+    }
+
+    Lexed { tokens, allows }
+}
+
+/// If position `i` starts a raw (or raw-byte) string, return the index one
+/// past its end plus how many newlines it spans.
+fn raw_string_end(s: &[char], i: usize) -> Option<(usize, usize)> {
+    let n = s.len();
+    let mut j = i;
+    if j < n && s[j] == 'b' {
+        j += 1;
+    }
+    if j >= n || s[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < n && s[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || s[j] != '"' {
+        return None;
+    }
+    j += 1;
+    let mut newlines = 0usize;
+    while j < n {
+        if s[j] == '\n' {
+            newlines += 1;
+            j += 1;
+            continue;
+        }
+        if s[j] == '"' {
+            let mut k = 0usize;
+            while k < hashes && j + 1 + k < n && s[j + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return Some((j + 1 + hashes, newlines));
+            }
+        }
+        j += 1;
+    }
+    Some((n, newlines))
+}
+
+/// Parse a `detlint:` directive out of one line comment, if present.
+fn parse_allow(
+    comment: &str,
+    line: usize,
+    inline: bool,
+    allows: &mut Vec<AllowDirective>,
+) {
+    let Some(pos) = comment.find("detlint:") else {
+        return;
+    };
+    let rest = comment[pos + "detlint:".len()..].trim_start();
+    let Some(body) = rest.strip_prefix("allow(") else {
+        allows.push(AllowDirective {
+            line,
+            inline,
+            rules: Vec::new(),
+            has_reason: false,
+            malformed: true,
+        });
+        return;
+    };
+    let Some(close) = body.find(')') else {
+        allows.push(AllowDirective {
+            line,
+            inline,
+            rules: Vec::new(),
+            has_reason: false,
+            malformed: true,
+        });
+        return;
+    };
+    let rules: Vec<String> = body[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    let reason = body[close + 1..]
+        .trim_start_matches(|c: char| {
+            c.is_whitespace() || c == '—' || c == '–' || c == '-' || c == ':'
+        })
+        .trim();
+    allows.push(AllowDirective {
+        line,
+        inline,
+        rules,
+        has_reason: !reason.is_empty(),
+        malformed: false,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_dropped() {
+        let src = r##"
+// HashMap in a comment
+/// HashMap in a doc comment
+/* block HashMap /* nested */ still comment */
+let s = "HashMap<String, u32>";
+let r = r#"Instant::now()"#;
+let real = BTreeMap::new();
+"##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"HashMap".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"Instant".to_string()), "{ids:?}");
+        assert!(ids.contains(&"BTreeMap".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a str) -> char { 'x' }").tokens;
+        let lifetimes: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        let chars: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Char).collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert_eq!(chars.len(), 1);
+    }
+
+    #[test]
+    fn float_vs_int_literals() {
+        let toks = lex("let a = 1; let b = 2.0; let c = 1f32; let d = 0..9;")
+            .tokens;
+        let kinds: Vec<(TokKind, String)> = toks
+            .into_iter()
+            .filter(|t| matches!(t.kind, TokKind::Int | TokKind::Float))
+            .map(|t| (t.kind, t.text))
+            .collect();
+        assert_eq!(
+            kinds,
+            vec![
+                (TokKind::Int, "1".into()),
+                (TokKind::Float, "2.0".into()),
+                (TokKind::Float, "1f32".into()),
+                (TokKind::Int, "0".into()),
+                (TokKind::Int, "9".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn lines_are_tracked_across_multiline_constructs() {
+        let src = "let a = 1;\n/* c\nc\nc */\nlet b = 2;\n";
+        let toks = lex(src).tokens;
+        let b = toks.iter().find(|t| t.is_ident("b")).unwrap();
+        assert_eq!(b.line, 5);
+    }
+
+    #[test]
+    fn allow_directives_are_collected() {
+        let src = "\
+// detlint: allow(nondet-iteration) — lookup-only, never iterated
+let x = 1;
+let y = 2; // detlint: allow(wallclock-in-decision, float-accum-cast) — two rules
+// detlint: allow(nondet-iteration)
+// detlint: allowed(whoops)
+/// detlint: allow(nondet-iteration) — doc comments are prose, not directives
+";
+        let lexed = lex(src);
+        assert_eq!(lexed.allows.len(), 4);
+        assert!(!lexed.allows[0].inline && lexed.allows[0].has_reason);
+        assert_eq!(lexed.allows[0].rules, vec!["nondet-iteration"]);
+        assert!(lexed.allows[1].inline);
+        assert_eq!(lexed.allows[1].rules.len(), 2);
+        assert!(!lexed.allows[2].has_reason, "no reason text");
+        assert!(lexed.allows[3].malformed, "allowed( is not allow(");
+    }
+
+    #[test]
+    fn multichar_ops_lex_as_one_token() {
+        let toks = lex("a::b != c..=d => e %= f").tokens;
+        let ops: Vec<String> = toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Op)
+            .map(|t| t.text)
+            .collect();
+        assert_eq!(ops, vec!["::", "!=", "..=", "=>", "%="]);
+    }
+}

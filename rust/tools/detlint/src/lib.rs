@@ -1,0 +1,268 @@
+//! detlint — in-tree determinism & concurrency static analysis.
+//!
+//! The repo's whole comm stack rests on one invariant: every
+//! routing/retune decision consumes only rank-replicated inputs, so
+//! results are bitwise-identical across topology × policy × ring count
+//! (see `docs/INVARIANTS.md`). Example-based tests catch a broken
+//! invariant *after* someone writes the test; this pass rejects the known
+//! bug classes at CI time, in any new code path, before a test exists:
+//!
+//! | rule | bug class |
+//! |------|-----------|
+//! | `nondet-iteration` | hash-order iteration reaching a reduce/route/blob |
+//! | `wallclock-in-decision` | wall clock feeding a rank-replicated decision |
+//! | `unbounded-deser-alloc` | length header sizing an allocation unbounded |
+//! | `lock-across-recv` | mutex guard held across a ring rendezvous |
+//! | `float-accum-cast` | unrounded int cast of a float accumulator |
+//! | `route-outside-scheduler` | ring arithmetic outside `RingScheduler` |
+//! | `bad-allow` | broken `detlint:` directive |
+//!
+//! Intentional exceptions are annotated in place:
+//!
+//! ```text
+//! // detlint: allow(<rule>[, <rule>…]) — <reason>
+//! ```
+//!
+//! on the offending line or the line above it. The reason is mandatory —
+//! an allow is documentation of *why* the invariant holds anyway, not an
+//! opt-out. Known-bad/known-good examples for every rule live under
+//! `fixtures/` and are pinned by this crate's tests; the `sama` crate's
+//! tier-1 `detlint_clean` test pins the real tree at zero findings.
+
+mod lexer;
+mod rules;
+
+use std::path::{Path, PathBuf};
+
+pub use rules::{
+    Finding, BAD_ALLOW, FLOAT_ACCUM_CAST, LOCK_ACROSS_RECV, NONDET_ITERATION,
+    ROUTE_OUTSIDE_SCHEDULER, RULES, UNBOUNDED_DESER_ALLOC,
+    WALLCLOCK_IN_DECISION,
+};
+
+/// Lint one source string. `path_label` determines rule scoping (see
+/// `rules::FileClass`) and is echoed in findings.
+pub fn scan_source(path_label: &str, src: &str) -> Vec<Finding> {
+    rules::scan_source(path_label, src)
+}
+
+/// Lint one file on disk.
+pub fn scan_path(path: &Path) -> std::io::Result<Vec<Finding>> {
+    let src = std::fs::read_to_string(path)?;
+    Ok(scan_source(&path.to_string_lossy(), &src))
+}
+
+/// Lint every `.rs` file under `roots` (recursively, in sorted order so
+/// output is deterministic — this tool lints for determinism; it had
+/// better report deterministically). Returns the findings plus how many
+/// files were scanned, so callers can assert the walk actually saw the
+/// tree.
+pub fn scan_tree(roots: &[PathBuf]) -> std::io::Result<(Vec<Finding>, usize)> {
+    let mut files = Vec::new();
+    for root in roots {
+        collect_rs_files(root, &mut files)?;
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for f in &files {
+        findings.extend(scan_path(f)?);
+    }
+    Ok((findings, files.len()))
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if dir.is_file() {
+        if dir.extension().is_some_and(|e| e == "rs") {
+            out.push(dir.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<Result<_, _>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Render findings in the canonical `file:line · rule · snippet` format.
+pub fn render(findings: &[Finding]) -> String {
+    findings
+        .iter()
+        .map(|f| format!("{}:{} · {} · {}", f.file, f.line, f.rule, f.snippet))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod fixture_tests {
+    use super::*;
+
+    fn fixture_path(name: &str) -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name)
+    }
+
+    /// `//~ <rule>` markers in a fixture are its expected diagnostics.
+    fn expected(src: &str) -> Vec<(usize, String)> {
+        src.lines()
+            .enumerate()
+            .filter_map(|(i, l)| {
+                let marker = l.split("//~").nth(1)?;
+                let rule = marker.split_whitespace().next()?;
+                Some((i + 1, rule.to_string()))
+            })
+            .collect()
+    }
+
+    /// A known-bad fixture must produce *exactly* its marked diagnostics —
+    /// same lines, same rules, nothing extra, nothing missed.
+    fn assert_fixture_exact(name: &str) {
+        let path = fixture_path(name);
+        let src = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("reading {path:?}: {e}"));
+        let want = expected(&src);
+        assert!(!want.is_empty(), "{name}: fixture has no //~ markers");
+        let got: Vec<(usize, String)> = scan_source(&path.to_string_lossy(), &src)
+            .into_iter()
+            .map(|f| (f.line, f.rule.to_string()))
+            .collect();
+        assert_eq!(
+            got, want,
+            "{name}: findings (left) != //~ markers (right)"
+        );
+    }
+
+    /// A fixed fixture must be completely clean.
+    fn assert_fixture_clean(name: &str) {
+        let path = fixture_path(name);
+        let src = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("reading {path:?}: {e}"));
+        let findings = scan_source(&path.to_string_lossy(), &src);
+        assert!(
+            findings.is_empty(),
+            "{name} should be clean:\n{}",
+            render(&findings)
+        );
+    }
+
+    #[test]
+    fn nondet_iteration_bad() {
+        assert_fixture_exact("nondet_iteration_bad.rs");
+    }
+
+    #[test]
+    fn nondet_iteration_fixed() {
+        assert_fixture_clean("nondet_iteration_fixed.rs");
+    }
+
+    #[test]
+    fn wallclock_bad() {
+        assert_fixture_exact("wallclock_bad.rs");
+    }
+
+    #[test]
+    fn wallclock_fixed() {
+        assert_fixture_clean("wallclock_fixed.rs");
+    }
+
+    #[test]
+    fn unbounded_deser_bad() {
+        assert_fixture_exact("unbounded_deser_bad.rs");
+    }
+
+    #[test]
+    fn unbounded_deser_fixed() {
+        assert_fixture_clean("unbounded_deser_fixed.rs");
+    }
+
+    #[test]
+    fn lock_across_recv_bad() {
+        assert_fixture_exact("lock_across_recv_bad.rs");
+    }
+
+    #[test]
+    fn lock_across_recv_fixed() {
+        assert_fixture_clean("lock_across_recv_fixed.rs");
+    }
+
+    #[test]
+    fn float_accum_cast_bad() {
+        assert_fixture_exact("float_accum_cast_bad.rs");
+    }
+
+    #[test]
+    fn float_accum_cast_fixed() {
+        assert_fixture_clean("float_accum_cast_fixed.rs");
+    }
+
+    #[test]
+    fn route_outside_scheduler_bad() {
+        assert_fixture_exact("route_outside_scheduler_bad.rs");
+    }
+
+    #[test]
+    fn route_outside_scheduler_fixed() {
+        assert_fixture_clean("route_outside_scheduler_fixed.rs");
+    }
+
+    #[test]
+    fn allow_bad() {
+        assert_fixture_exact("allow_bad.rs");
+    }
+
+    #[test]
+    fn allow_fixed() {
+        assert_fixture_clean("allow_fixed.rs");
+    }
+
+    /// The whole fixture set through `scan_tree`: one diagnostic per seeded
+    /// violation, nonzero total — the CI-lane acceptance shape.
+    #[test]
+    fn fixture_tree_totals() {
+        let (findings, files) =
+            scan_tree(&[fixture_path("")]).expect("scan fixtures");
+        assert_eq!(files, 14, "fixture files present");
+        let total_markers: usize = std::fs::read_dir(fixture_path(""))
+            .unwrap()
+            .map(|e| {
+                let p = e.unwrap().path();
+                let src = std::fs::read_to_string(&p).unwrap();
+                expected(&src).len()
+            })
+            .sum();
+        assert_eq!(findings.len(), total_markers);
+        assert!(findings.len() >= 12, "≥ 6 rules exercised, twice over");
+    }
+
+    /// Allow directives must not leak across lines: an allow for line N
+    /// does not cover line N+2.
+    #[test]
+    fn allow_is_line_scoped() {
+        let src = "\
+// detlint: allow(nondet-iteration) — covers only the next line
+use std::collections::HashMap;
+use std::collections::HashSet;
+";
+        let findings = scan_source("fixtures/inline.rs", src);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].line, 3);
+        assert_eq!(findings[0].rule, NONDET_ITERATION);
+    }
+
+    /// An allow naming rule A does not suppress rule B on the same line.
+    #[test]
+    fn allow_is_rule_scoped() {
+        let src = "\
+use std::collections::HashMap; // detlint: allow(wallclock-in-decision) — wrong rule named
+";
+        let findings = scan_source("fixtures/inline.rs", src);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule, NONDET_ITERATION);
+    }
+}

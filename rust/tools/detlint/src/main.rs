@@ -1,0 +1,72 @@
+//! detlint driver: lint `rust/src` + `rust/benches` (or explicit paths)
+//! and exit nonzero on findings. Runs as a blocking CI lane next to clippy;
+//! `cargo run -p detlint` from anywhere in the workspace.
+
+use std::path::PathBuf;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: detlint [PATH…]\n\
+         \n\
+         Lints every .rs file under the given paths (default: the\n\
+         workspace's rust/src and rust/benches) against the determinism\n\
+         and concurrency invariants in docs/INVARIANTS.md.\n\
+         \n\
+         rules: {}\n\
+         \n\
+         Suppress an intentional finding in place with\n\
+         `// detlint: allow(<rule>) — <reason>` on the offending line or\n\
+         the line above it; the reason is mandatory.\n\
+         \n\
+         exit status: 0 clean · 1 findings · 2 I/O or usage error",
+        detlint::RULES.join(", ")
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "-h" || a == "--help") {
+        usage();
+    }
+    let roots: Vec<PathBuf> = if args.is_empty() {
+        // compiled-in workspace layout: tools/detlint → tools → rust
+        let rust_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .ancestors()
+            .nth(2)
+            .expect("detlint lives at <workspace>/rust/tools/detlint")
+            .to_path_buf();
+        vec![rust_dir.join("src"), rust_dir.join("benches")]
+    } else {
+        args.iter().map(PathBuf::from).collect()
+    };
+    for r in &roots {
+        if !r.exists() {
+            eprintln!("detlint: no such path: {}", r.display());
+            std::process::exit(2);
+        }
+    }
+    match detlint::scan_tree(&roots) {
+        Ok((findings, files)) => {
+            if findings.is_empty() {
+                eprintln!(
+                    "detlint: clean — {files} file(s), {} rule(s)",
+                    detlint::RULES.len()
+                );
+                std::process::exit(0);
+            }
+            println!("{}", detlint::render(&findings));
+            eprintln!(
+                "detlint: {} finding(s) in {files} file(s) — see \
+                 docs/INVARIANTS.md; intentional exceptions need \
+                 `// detlint: allow(<rule>) — <reason>`",
+                findings.len()
+            );
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("detlint: scan failed: {e}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,602 @@
+//! The detlint rules: token-shape patterns over [`crate::lexer`] output,
+//! each enforcing one invariant from `docs/INVARIANTS.md`.
+//!
+//! Rules are deliberately *heuristic* — this is a lint, not a type system.
+//! Each one is tuned to catch the bug class it is named for (every one has
+//! shipped, or nearly shipped, in this repo — see the PR history in
+//! CHANGES.md) with zero false positives on the current tree; anything
+//! intentional carries a `// detlint: allow(<rule>) — <reason>` comment, so
+//! the exceptions are enumerable and justified at the point of use.
+//!
+//! Scoping: some rules apply everywhere, some only to the *decision
+//! modules* — the rank-replicated code (`collective`, `coordinator`,
+//! `config`, `algos`, `bilevel`) whose outputs must be bitwise-identical
+//! across ranks — and one only to `collective` (the only module that holds
+//! locks near channel rendezvous). Fixture files under `fixtures/` are
+//! classed as strict (decision + collective) so every rule is exercisable.
+
+use std::collections::BTreeSet;
+
+use crate::lexer::{self, Lexed, TokKind, Token};
+
+/// `HashMap`/`HashSet` anywhere iteration order could reach a reduce, a
+/// route, or a checkpoint blob. Hash iteration order is seeded per process:
+/// two ranks walking "the same" map diverge bitwise. Use `BTreeMap`/`Vec`.
+pub const NONDET_ITERATION: &str = "nondet-iteration";
+/// `Instant::now()` / `SystemTime` in a decision module. Wall clock is the
+/// canonical rank-divergent input; it may only feed routing/retuning through
+/// the Ctrl-synced profile path (which averages it across ranks first).
+pub const WALLCLOCK_IN_DECISION: &str = "wallclock-in-decision";
+/// A freshly read length (`read_u64(..)? as usize` and friends) sizing an
+/// allocation with no remaining-payload bound — the `read_vec` bug class:
+/// a tiny crafted file driving an 8 GiB `Vec::with_capacity`.
+pub const UNBOUNDED_DESER_ALLOC: &str = "unbounded-deser-alloc";
+/// A `Mutex` guard held across a channel `recv()`/`send()` rendezvous in
+/// `collective` — the classic ring deadlock (peer blocked on the lock can
+/// never arrive at the rendezvous).
+pub const LOCK_ACROSS_RECV: &str = "lock-across-recv";
+/// Integer `as` cast on a float accumulator without an explicit rounding —
+/// the PR 1 bytes-accounting bug class: per-call truncation drifting with
+/// call count.
+pub const FLOAT_ACCUM_CAST: &str = "float-accum-cast";
+/// Ring-routing arithmetic (`tag.idx() % …`, `% rings`) outside
+/// `RingScheduler` — routing decided in two places is routing that can
+/// disagree across ranks the first time one copy changes.
+pub const ROUTE_OUTSIDE_SCHEDULER: &str = "route-outside-scheduler";
+/// A malformed `detlint:` directive: unknown rule name, missing `— reason`,
+/// or unparseable `allow(…)`. Allows are load-bearing documentation; a
+/// broken one silently enforces nothing.
+pub const BAD_ALLOW: &str = "bad-allow";
+
+/// Every rule name, for directive validation and `--help`.
+pub const RULES: [&str; 7] = [
+    NONDET_ITERATION,
+    WALLCLOCK_IN_DECISION,
+    UNBOUNDED_DESER_ALLOC,
+    LOCK_ACROSS_RECV,
+    FLOAT_ACCUM_CAST,
+    ROUTE_OUTSIDE_SCHEDULER,
+    BAD_ALLOW,
+];
+
+/// One diagnostic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    pub rule: &'static str,
+    /// The offending source line, trimmed.
+    pub snippet: String,
+}
+
+/// Which rule scopes a file falls under (derived from its path).
+#[derive(Clone, Copy, Debug)]
+struct FileClass {
+    /// Rank-replicated decision modules (plus fixtures): wallclock and
+    /// float-cast rules apply.
+    decision: bool,
+    /// The collective itself (plus fixtures): lock-across-recv applies.
+    collective: bool,
+    /// `topology.rs` — the one place routing arithmetic is *supposed* to
+    /// live; route-outside-scheduler is skipped there.
+    scheduler_home: bool,
+}
+
+impl FileClass {
+    fn classify(path: &str) -> FileClass {
+        let p = path.replace('\\', "/");
+        let fixture = p.contains("fixtures/");
+        let decision = fixture
+            || [
+                "src/collective",
+                "src/coordinator",
+                "src/config",
+                "src/algos",
+                "src/bilevel",
+            ]
+            .iter()
+            .any(|m| p.contains(m));
+        FileClass {
+            decision,
+            collective: fixture || p.contains("src/collective"),
+            scheduler_home: p.ends_with("topology.rs"),
+        }
+    }
+}
+
+/// Lint one file's source. `path_label` is used for scoping and reporting.
+pub fn scan_source(path_label: &str, src: &str) -> Vec<Finding> {
+    let lexed = lexer::lex(src);
+    let class = FileClass::classify(path_label);
+    let lines: Vec<&str> = src.lines().collect();
+    let mut raw: Vec<(usize, &'static str)> = Vec::new();
+
+    rule_nondet_iteration(&lexed.tokens, &mut raw);
+    rule_unbounded_deser_alloc(&lexed.tokens, &mut raw);
+    if class.decision {
+        rule_wallclock(&lexed.tokens, &mut raw);
+        rule_float_accum_cast(&lexed.tokens, &mut raw);
+    }
+    if class.collective {
+        rule_lock_across_recv(&lexed.tokens, &mut raw);
+    }
+    if !class.scheduler_home {
+        rule_route_outside_scheduler(&lexed.tokens, &mut raw);
+    }
+
+    // detlint: directives — build the suppression map, flag broken ones
+    let mut allowed: BTreeSet<(usize, &'static str)> = BTreeSet::new();
+    for d in &lexed.allows {
+        if d.malformed {
+            raw.push((d.line, BAD_ALLOW));
+            continue;
+        }
+        let mut ok = d.has_reason;
+        if !d.has_reason {
+            raw.push((d.line, BAD_ALLOW));
+        }
+        let mut canon: Vec<&'static str> = Vec::new();
+        for r in &d.rules {
+            match RULES.iter().find(|known| *known == r) {
+                Some(known) => canon.push(known),
+                None => {
+                    raw.push((d.line, BAD_ALLOW));
+                    ok = false;
+                }
+            }
+        }
+        if !ok {
+            continue; // a broken allow suppresses nothing
+        }
+        let target = if d.inline {
+            d.line
+        } else {
+            // applies to the next code line after the comment
+            match lexed.tokens.iter().find(|t| t.line > d.line) {
+                Some(t) => t.line,
+                None => continue,
+            }
+        };
+        for rule in canon {
+            allowed.insert((target, rule));
+        }
+    }
+
+    raw.sort();
+    raw.dedup();
+    raw.into_iter()
+        .filter(|(line, rule)| {
+            *rule == BAD_ALLOW || !allowed.contains(&(*line, *rule))
+        })
+        .map(|(line, rule)| Finding {
+            file: path_label.to_string(),
+            line,
+            rule,
+            snippet: snippet(&lines, line),
+        })
+        .collect()
+}
+
+fn snippet(lines: &[&str], line: usize) -> String {
+    let s = lines.get(line - 1).map(|l| l.trim()).unwrap_or("");
+    if s.chars().count() > 96 {
+        let cut: String = s.chars().take(93).collect();
+        format!("{cut}…")
+    } else {
+        s.to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// individual rules
+// ---------------------------------------------------------------------------
+
+fn rule_nondet_iteration(toks: &[Token], out: &mut Vec<(usize, &'static str)>) {
+    for t in toks {
+        if t.is_ident("HashMap") || t.is_ident("HashSet") {
+            out.push((t.line, NONDET_ITERATION));
+        }
+    }
+}
+
+fn rule_wallclock(toks: &[Token], out: &mut Vec<(usize, &'static str)>) {
+    for (i, t) in toks.iter().enumerate() {
+        if t.is_ident("SystemTime") {
+            out.push((t.line, WALLCLOCK_IN_DECISION));
+        }
+        if t.is_ident("Instant")
+            && toks.get(i + 1).is_some_and(|t| t.is_op("::"))
+            && toks.get(i + 2).is_some_and(|t| t.is_ident("now"))
+        {
+            out.push((t.line, WALLCLOCK_IN_DECISION));
+        }
+    }
+}
+
+fn rule_route_outside_scheduler(
+    toks: &[Token],
+    out: &mut Vec<(usize, &'static str)>,
+) {
+    for (i, t) in toks.iter().enumerate() {
+        // `<anything>.idx() % …` — the tag-partition arithmetic
+        if t.is_ident("idx")
+            && toks.get(i + 1).is_some_and(|t| t.is_op("("))
+            && toks.get(i + 2).is_some_and(|t| t.is_op(")"))
+            && toks.get(i + 3).is_some_and(|t| t.is_op("%"))
+        {
+            out.push((t.line, ROUTE_OUTSIDE_SCHEDULER));
+        }
+        // `% <ring-named operand>` — modulo by a ring count
+        if t.is_op("%") {
+            let mut j = i + 1;
+            while toks.get(j).is_some_and(|t| {
+                t.is_op("(") || t.is_op("&") || t.is_op("*") || t.is_op(".")
+                    || t.is_ident("self")
+            }) {
+                j += 1;
+            }
+            if let Some(rhs) = toks.get(j) {
+                if rhs.kind == TokKind::Ident
+                    && rhs.text.to_ascii_lowercase().contains("ring")
+                {
+                    out.push((t.line, ROUTE_OUTSIDE_SCHEDULER));
+                }
+            }
+        }
+    }
+}
+
+const INT_TARGETS: [&str; 12] = [
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64",
+    "i128", "isize",
+];
+const ROUNDING: [&str; 6] =
+    ["round", "floor", "ceil", "trunc", "round_ties_even", "to_bits"];
+
+/// Walk backwards from the token before `as`, collecting the cast's operand
+/// (the postfix expression chain `as` binds to).
+fn cast_operand<'a>(toks: &'a [Token], as_idx: usize) -> Vec<&'a Token> {
+    let mut operand = Vec::new();
+    let mut depth = 0usize;
+    let mut j = as_idx;
+    while j > 0 {
+        j -= 1;
+        let t = &toks[j];
+        if t.is_op(")") || t.is_op("]") {
+            depth += 1;
+            operand.push(t);
+            continue;
+        }
+        if t.is_op("(") || t.is_op("[") {
+            if depth == 0 {
+                break;
+            }
+            depth -= 1;
+            operand.push(t);
+            continue;
+        }
+        if depth > 0 {
+            operand.push(t);
+            continue;
+        }
+        match t.kind {
+            TokKind::Ident | TokKind::Int | TokKind::Float | TokKind::Str
+            | TokKind::Char => operand.push(t),
+            TokKind::Op if t.text == "." || t.text == "::" || t.text == "?" => {
+                operand.push(t)
+            }
+            _ => break,
+        }
+    }
+    operand
+}
+
+fn rule_float_accum_cast(toks: &[Token], out: &mut Vec<(usize, &'static str)>) {
+    // First pass: names bound/accumulated from float-shaped expressions.
+    // `let exact = … as f64 …;` or `self.bytes_exact += … * 2.0;` make
+    // `exact` / `bytes_exact` float accumulators for the second pass.
+    let mut float_vars: BTreeSet<&str> = BTreeSet::new();
+    for span in statements(toks) {
+        if !span_has_float_indicator(span, &float_vars) {
+            continue;
+        }
+        // `let [mut] name = …`
+        if let Some(k) = span.iter().position(|t| t.is_ident("let")) {
+            let mut m = k + 1;
+            if span.get(m).is_some_and(|t| t.is_ident("mut")) {
+                m += 1;
+            }
+            if let Some(name) = span.get(m) {
+                if name.kind == TokKind::Ident {
+                    float_vars.insert(&name.text);
+                }
+            }
+        }
+        // `name += …` / `name = …` (possibly `self.name`, possibly
+        // `name[idx] = …` — an indexed store accumulates into `name`,
+        // not `idx`, so skip back over the index expression first)
+        for (k, t) in span.iter().enumerate() {
+            if t.is_op("+=") || t.is_op("=") {
+                let mut m = k;
+                while m > 0 && span[m - 1].is_op("]") {
+                    let mut depth = 1usize;
+                    m -= 1;
+                    while m > 0 && depth > 0 {
+                        m -= 1;
+                        if span[m].is_op("]") {
+                            depth += 1;
+                        } else if span[m].is_op("[") {
+                            depth -= 1;
+                        }
+                    }
+                }
+                if let Some(name) = span[..m]
+                    .iter()
+                    .rev()
+                    .find(|t| t.kind == TokKind::Ident)
+                {
+                    float_vars.insert(&name.text);
+                }
+                break;
+            }
+        }
+    }
+    // Second pass: integer casts whose operand smells like a float.
+    for (i, t) in toks.iter().enumerate() {
+        if !t.is_ident("as") {
+            continue;
+        }
+        let Some(target) = toks.get(i + 1) else { continue };
+        if !INT_TARGETS.iter().any(|ty| target.is_ident(ty)) {
+            continue;
+        }
+        let operand = cast_operand(toks, i);
+        let floaty = operand.iter().any(|t| {
+            t.kind == TokKind::Float
+                || t.is_ident("f32")
+                || t.is_ident("f64")
+                || t.is_ident("as_secs_f64")
+                || t.is_ident("as_secs_f32")
+                || t.is_ident("elapsed")
+                || (t.kind == TokKind::Ident && float_vars.contains(t.text.as_str()))
+        });
+        let rounded = operand
+            .iter()
+            .any(|t| ROUNDING.iter().any(|r| t.is_ident(r)));
+        if floaty && !rounded {
+            out.push((t.line, FLOAT_ACCUM_CAST));
+        }
+    }
+}
+
+fn span_has_float_indicator(span: &[Token], float_vars: &BTreeSet<&str>) -> bool {
+    span.iter().any(|t| {
+        t.kind == TokKind::Float
+            || t.is_ident("f32")
+            || t.is_ident("f64")
+            || t.is_ident("as_secs_f64")
+            || t.is_ident("as_secs_f32")
+            || (t.kind == TokKind::Ident && float_vars.contains(t.text.as_str()))
+    })
+}
+
+/// Split a token stream into rough statements: boundaries at `;` outside
+/// `()`/`[]` groups and at every brace. Good enough to scope taint within a
+/// statement without parsing.
+fn statements(toks: &[Token]) -> Vec<&[Token]> {
+    let mut spans = Vec::new();
+    let (mut paren, mut bracket) = (0usize, 0usize);
+    let mut start = 0usize;
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Op {
+            continue;
+        }
+        match t.text.as_str() {
+            "(" => paren += 1,
+            ")" => paren = paren.saturating_sub(1),
+            "[" => bracket += 1,
+            "]" => bracket = bracket.saturating_sub(1),
+            ";" if paren == 0 && bracket == 0 => {
+                spans.push(&toks[start..=i]);
+                start = i + 1;
+            }
+            "{" | "}" => {
+                if start < i {
+                    spans.push(&toks[start..i]);
+                }
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < toks.len() {
+        spans.push(&toks[start..]);
+    }
+    spans
+}
+
+/// Idents that mark a length as bounded within a statement.
+const BOUND_IDENTS: [&str; 6] = [
+    "read_len_bounded",
+    "checked_mul",
+    "min",
+    "clamp",
+    "try_from",
+    "try_into",
+];
+/// Allocation sites a tainted length must not reach.
+const ALLOC_IDENTS: [&str; 4] = ["with_capacity", "resize", "reserve", "vec"];
+
+fn span_bounded(span: &[Token]) -> bool {
+    span.iter().any(|t| {
+        BOUND_IDENTS.iter().any(|b| t.is_ident(b))
+            || t.is_op("<=")
+            || t.is_op(">=")
+    })
+}
+
+/// The allocation token in a span, if any (`vec` only counts as the `vec!`
+/// macro).
+fn span_alloc<'a>(span: &'a [Token]) -> Option<&'a Token> {
+    span.iter().enumerate().find_map(|(k, t)| {
+        let is_alloc = ALLOC_IDENTS.iter().any(|a| t.is_ident(a));
+        if !is_alloc {
+            return None;
+        }
+        if t.is_ident("vec")
+            && !span.get(k + 1).is_some_and(|t| t.is_op("!"))
+        {
+            return None;
+        }
+        Some(t)
+    })
+}
+
+fn span_reads_len(span: &[Token]) -> bool {
+    let reads = span.iter().any(|t| {
+        t.kind == TokKind::Ident
+            && (t.text.starts_with("read_")
+                || t.text == "from_le_bytes"
+                || t.text == "from_be_bytes"
+                || t.text == "from_ne_bytes")
+    });
+    let casts = span.iter().enumerate().any(|(k, t)| {
+        t.is_ident("as") && span.get(k + 1).is_some_and(|t| t.is_ident("usize"))
+    });
+    reads && casts
+}
+
+fn rule_unbounded_deser_alloc(
+    toks: &[Token],
+    out: &mut Vec<(usize, &'static str)>,
+) {
+    let mut tainted: BTreeSet<String> = BTreeSet::new();
+    for span in statements(toks) {
+        let bounded = span_bounded(span);
+        if span_reads_len(span) {
+            if bounded {
+                continue;
+            }
+            if let Some(alloc) = span_alloc(span) {
+                // direct: `Vec::with_capacity(read_u64(r)? as usize)`
+                out.push((alloc.line, UNBOUNDED_DESER_ALLOC));
+                continue;
+            }
+            // `let [mut] name = read_…? as usize;` → taint
+            if let Some(k) = span.iter().position(|t| t.is_ident("let")) {
+                let mut m = k + 1;
+                if span.get(m).is_some_and(|t| t.is_ident("mut")) {
+                    m += 1;
+                }
+                if let Some(name) = span.get(m) {
+                    if name.kind == TokKind::Ident {
+                        tainted.insert(name.text.clone());
+                    }
+                }
+            }
+            continue;
+        }
+        let uses_tainted = span.iter().any(|t| {
+            t.kind == TokKind::Ident && tainted.contains(&t.text)
+        });
+        if !uses_tainted {
+            continue;
+        }
+        if bounded {
+            // the length got bounded (min/checked_mul/comparison): clear it
+            for t in span {
+                if t.kind == TokKind::Ident {
+                    tainted.remove(&t.text);
+                }
+            }
+            continue;
+        }
+        if let Some(alloc) = span_alloc(span) {
+            out.push((alloc.line, UNBOUNDED_DESER_ALLOC));
+            for t in span {
+                if t.kind == TokKind::Ident {
+                    tainted.remove(&t.text);
+                }
+            }
+        }
+    }
+}
+
+const RENDEZVOUS: [&str; 4] = ["recv", "try_recv", "recv_timeout", "send"];
+
+fn rule_lock_across_recv(toks: &[Token], out: &mut Vec<(usize, &'static str)>) {
+    // (guard name, brace depth it was bound at)
+    let mut guards: Vec<(String, usize)> = Vec::new();
+    let mut depth = 0usize;
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.is_op("{") {
+            depth += 1;
+            i += 1;
+            continue;
+        }
+        if t.is_op("}") {
+            depth = depth.saturating_sub(1);
+            guards.retain(|(_, d)| *d <= depth);
+            i += 1;
+            continue;
+        }
+        // `drop(guard)` releases it
+        if t.is_ident("drop")
+            && toks.get(i + 1).is_some_and(|t| t.is_op("("))
+        {
+            if let Some(name) = toks.get(i + 2) {
+                guards.retain(|(g, _)| g != &name.text);
+            }
+            i += 3;
+            continue;
+        }
+        // `let [mut] name = … .lock() …;` binds a guard at this depth
+        if t.is_ident("let") {
+            let mut m = i + 1;
+            if toks.get(m).is_some_and(|t| t.is_ident("mut")) {
+                m += 1;
+            }
+            let name = toks.get(m).filter(|t| t.kind == TokKind::Ident);
+            // scan this statement for a `.lock()` call
+            let mut j = m;
+            let (mut paren, mut bracket) = (0usize, 0usize);
+            let mut locks = false;
+            while let Some(tj) = toks.get(j) {
+                match (tj.kind, tj.text.as_str()) {
+                    (TokKind::Op, "(") => paren += 1,
+                    (TokKind::Op, ")") => paren = paren.saturating_sub(1),
+                    (TokKind::Op, "[") => bracket += 1,
+                    (TokKind::Op, "]") => bracket = bracket.saturating_sub(1),
+                    (TokKind::Op, ";") if paren == 0 && bracket == 0 => break,
+                    (TokKind::Op, "{") | (TokKind::Op, "}") => break,
+                    (TokKind::Ident, "lock") => {
+                        if toks.get(j + 1).is_some_and(|t| t.is_op("(")) {
+                            locks = true;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            if locks {
+                if let Some(name) = name {
+                    guards.push((name.text.clone(), depth));
+                }
+            }
+            // fall through token by token (rendezvous inside the same
+            // statement, e.g. `let x = rx.recv()`, still gets checked)
+            i += 1;
+            continue;
+        }
+        if !guards.is_empty()
+            && RENDEZVOUS.iter().any(|r| t.is_ident(r))
+            && toks.get(i + 1).is_some_and(|t| t.is_op("("))
+        {
+            out.push((t.line, LOCK_ACROSS_RECV));
+        }
+        i += 1;
+    }
+}
