@@ -12,13 +12,17 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use sama::bilevel::biased_regression::BiasedRegression;
 use sama::bilevel::cls_problem::ClsProblem;
 use sama::bilevel::{BilevelProblem, ParamKind};
 use sama::collective::{
     BucketPlan, CommStats, CommWorld, LinkModel, LinkProfile, ReduceTag,
     RoutePolicy, Topology,
 };
-use sama::config::MetaOps;
+use sama::config::{Algo, MetaOps, TrainConfig};
+use sama::coordinator::{
+    train, BaseOpt, ProblemFactory, RecoveryEvent, RunOptions,
+};
 use sama::data::wrench_sim;
 use sama::metrics::report::{f2, Table};
 use sama::runtime::{params, Runtime};
@@ -56,16 +60,18 @@ fn probe_fixed(overlapped: bool) -> ProbeOut {
             let mut coll = cw.join(rank);
             let mut buckets = 0u32;
             for _ in 0..8 {
-                let p = coll.all_reduce_async(
-                    vec![rank as f32; PROBE_ELEMS],
-                    8192,
-                    ReduceTag::Theta,
-                );
+                let p = coll
+                    .all_reduce_async(
+                        vec![rank as f32; PROBE_ELEMS],
+                        8192,
+                        ReduceTag::Theta,
+                    )
+                    .unwrap();
                 if overlapped {
                     spin(Duration::from_millis(6));
                 }
                 buckets = p.buckets_submitted();
-                let _ = coll.wait(p);
+                let _ = coll.wait(p).unwrap();
             }
             (coll.stats().clone(), buckets)
         }));
@@ -104,15 +110,16 @@ fn probe_autotuned() -> ProbeOut {
                     let end = (off + plan.elems()).min(data.len());
                     // producer: ~90 ns of backward compute per element
                     spin(Duration::from_nanos(90 * (end - off) as u64));
-                    coll.submit_bucket(&mut pending, data[off..end].to_vec());
+                    coll.submit_bucket(&mut pending, data[off..end].to_vec())
+                        .unwrap();
                     off = end;
                 }
                 let producer_secs = t0.elapsed().as_secs_f64();
-                let (_, profile) = coll.wait_profiled(pending);
+                let (_, profile) = coll.wait_profiled(pending).unwrap();
                 last_buckets = profile.buckets;
                 plan.observe(producer_secs, &profile);
                 if plan.retune_due() {
-                    plan.retune(Some(&mut coll));
+                    plan.retune(Some(&mut coll)).unwrap();
                 }
             }
             (coll.stats().clone(), plan.bytes(), last_buckets)
@@ -144,18 +151,22 @@ fn probe_rings(rings: usize) -> CommStats {
         handles.push(std::thread::spawn(move || {
             let mut coll = cw.join(rank);
             for _ in 0..4 {
-                let pt = coll.all_reduce_async(
-                    vec![rank as f32; PROBE_ELEMS],
-                    8192,
-                    ReduceTag::Theta,
-                );
-                let pl = coll.all_reduce_async(
-                    vec![1.0 + rank as f32; 1024],
-                    8192,
-                    ReduceTag::Lambda,
-                );
-                let _ = coll.wait(pl);
-                let _ = coll.wait(pt);
+                let pt = coll
+                    .all_reduce_async(
+                        vec![rank as f32; PROBE_ELEMS],
+                        8192,
+                        ReduceTag::Theta,
+                    )
+                    .unwrap();
+                let pl = coll
+                    .all_reduce_async(
+                        vec![1.0 + rank as f32; 1024],
+                        8192,
+                        ReduceTag::Lambda,
+                    )
+                    .unwrap();
+                let _ = coll.wait(pl).unwrap();
+                let _ = coll.wait(pt).unwrap();
             }
             coll.stats().clone()
         }));
@@ -186,23 +197,25 @@ fn probe_routing(policy: RoutePolicy) -> CommStats {
         handles.push(std::thread::spawn(move || {
             let mut coll = cw.join(rank);
             for _ in 0..4 {
-                let pt = coll.all_reduce_async(
-                    vec![rank as f32; PROBE_ELEMS],
-                    8192,
-                    ReduceTag::Theta,
-                );
-                let pl = coll.all_reduce_async(
-                    vec![1.0 + rank as f32; 1024],
-                    8192,
-                    ReduceTag::Lambda,
-                );
-                let _ = coll.all_reduce_sync(
-                    vec![0.5; 4],
-                    4,
-                    ReduceTag::Ctrl,
-                );
-                let _ = coll.wait(pl);
-                let _ = coll.wait(pt);
+                let pt = coll
+                    .all_reduce_async(
+                        vec![rank as f32; PROBE_ELEMS],
+                        8192,
+                        ReduceTag::Theta,
+                    )
+                    .unwrap();
+                let pl = coll
+                    .all_reduce_async(
+                        vec![1.0 + rank as f32; 1024],
+                        8192,
+                        ReduceTag::Lambda,
+                    )
+                    .unwrap();
+                let _ = coll
+                    .all_reduce_sync(vec![0.5; 4], 4, ReduceTag::Ctrl)
+                    .unwrap();
+                let _ = coll.wait(pl).unwrap();
+                let _ = coll.wait(pt).unwrap();
             }
             coll.stats().clone()
         }));
@@ -212,6 +225,56 @@ fn probe_routing(policy: RoutePolicy) -> CommStats {
         stats.merge(&h.join().unwrap());
     }
     stats
+}
+
+/// Replicated analytic problem for the recovery probe (same shape as the
+/// tier-1 chaos tests: every rank builds the identical instance, so the
+/// survivor world's re-average preserves the trajectory).
+struct RecoveryFactory;
+
+impl ProblemFactory for RecoveryFactory {
+    fn build(
+        &self,
+        _rank: usize,
+        _world: usize,
+    ) -> anyhow::Result<(Box<dyn BilevelProblem>, Vec<f32>, Vec<f32>)> {
+        let mut rng = Rng::new(4242);
+        let p = BiasedRegression::random(&mut rng, 40, 30, 8, 2.0);
+        Ok((Box::new(p), vec![0.0; 8], vec![0.0; 8]))
+    }
+
+    fn base_opt(&self) -> BaseOpt {
+        BaseOpt::Sgd { momentum: 0.0 }
+    }
+}
+
+/// Recovery-path probe: kill rank 1 of 2 at step 30 of a 60-step analytic
+/// run and measure the detection→quiesce→rebuild→resume episode — the
+/// fault-tolerance overhead numbers (detection latency, quiesce seconds,
+/// steps replayed) tracked across PRs next to the overlap metrics.
+fn probe_recovery() -> RecoveryEvent {
+    let cfg = TrainConfig {
+        algo: Algo::Sama,
+        steps: 60,
+        workers: 2,
+        unroll: 3,
+        base_lr: 0.002,
+        meta_lr: 0.3,
+        sama_alpha: 1.0,
+        solver_iters: 8,
+        link_bandwidth: 1e12,
+        link_latency: 0.0,
+        bucket_auto: false,
+        chaos: "kill:1@30".into(),
+        ..TrainConfig::default()
+    };
+    let report = train(&cfg, &RecoveryFactory, &RunOptions::default())
+        .expect("recovery probe train failed");
+    report
+        .recoveries
+        .first()
+        .expect("recovery probe produced no recovery episode")
+        .clone()
 }
 
 /// Collective overlap probe (artifact-free): blocking vs overlapped vs
@@ -226,6 +289,7 @@ fn comm_overlap_probe() {
     let rings2 = probe_rings(2);
     let route_tag = probe_routing(RoutePolicy::Tag);
     let route_sized = probe_routing(RoutePolicy::Sized);
+    let recovery = probe_recovery();
 
     let mut t = Table::new(
         "§Perf: collective overlap probe (256 KiB ×8, 2 ranks, 50 MB/s link)",
@@ -315,6 +379,35 @@ fn comm_overlap_probe() {
          values are bitwise-identical under both policies."
     );
 
+    let mut rv = Table::new(
+        "§Perf: recovery probe (kill rank 1/2 at step 30 of 60, analytic \
+         problem, in-memory snapshot resume)",
+        &[
+            "failed ranks",
+            "survivors",
+            "detect s",
+            "quiesce s",
+            "rebuild s",
+            "resume step",
+            "replayed",
+        ],
+    );
+    rv.row(vec![
+        format!("{:?}", recovery.failed_ranks),
+        format!("{:?}", recovery.survivors),
+        f2(recovery.detection_seconds),
+        f2(recovery.quiesce_seconds),
+        f2(recovery.rebuild_seconds),
+        recovery.resume_step.to_string(),
+        recovery.steps_replayed.to_string(),
+    ]);
+    rv.print();
+    println!(
+        "detection = rendezvous wait before the failure classified (fast \
+         here: a dropped Collective cascades as channel disconnects); \
+         replayed = steps between the resume cut and the fault."
+    );
+
     // machine-readable perf trajectory (consumed across PRs; artifact-free)
     let num = Json::Num;
     let mut obj: BTreeMap<String, Json> = BTreeMap::new();
@@ -385,6 +478,26 @@ fn comm_overlap_probe() {
     obj.insert(
         "wire_seconds_tuned".into(),
         num(tuned.stats.wire_seconds),
+    );
+    obj.insert(
+        "recovery_detection_seconds".into(),
+        num(recovery.detection_seconds),
+    );
+    obj.insert(
+        "recovery_quiesce_seconds".into(),
+        num(recovery.quiesce_seconds),
+    );
+    obj.insert(
+        "recovery_rebuild_seconds".into(),
+        num(recovery.rebuild_seconds),
+    );
+    obj.insert(
+        "recovery_steps_replayed".into(),
+        num(recovery.steps_replayed as f64),
+    );
+    obj.insert(
+        "recovery_resume_step".into(),
+        num(recovery.resume_step as f64),
     );
     obj.insert("world".into(), num(2.0));
     obj.insert("link_bandwidth".into(), num(PROBE_LINK.bandwidth));

@@ -62,7 +62,27 @@
 //!    profile through a tiny `Ctrl`-tagged reduce;
 //!  * **a simulated link** — every hop sleeps latency + bytes/bandwidth, so
 //!    the comm-bound regime (and the overlap win) is reproducible on one
-//!    host.
+//!    host;
+//!  * **failure detection + typed errors** — the ring rendezvous is a
+//!    `recv_timeout` with a configurable peer-liveness budget
+//!    ([`DEFAULT_PEER_TIMEOUT`], the `peer_timeout=` knob): a dead or
+//!    wedged peer surfaces as a typed [`CommError`] through every fallible
+//!    call ([`Collective::submit_bucket`] / [`Collective::try_progress`] /
+//!    [`Collective::wait`]) instead of an `expect` panic. A failed engine
+//!    drops its outgoing ring sender, so the failure cascades around the
+//!    ring as immediate disconnects — every survivor detects promptly
+//!    instead of each waiting out the full timeout — and then answers all
+//!    subsequent jobs with the same error so a worker can never hang on a
+//!    reduce the ring will not finish. [`Collective::quiesce`] drains an
+//!    interrupted reduce to a consistent cut: a reduce whose every bucket
+//!    completed keeps its deterministic ring-reduced value
+//!    ([`Quiesced::Complete`]); anything less is discarded as a unit
+//!    ([`Quiesced::Discarded`]), so partial outputs never leak. Detection
+//!    is wall-clock (and may disagree across ranks); every *recovery
+//!    decision* is made by the coordinator's supervisor from
+//!    rank-replicated state only — the detection→quiesce→rebuild→resume
+//!    lifecycle and the fault model are documented in the `coordinator`
+//!    module docs and `docs/INVARIANTS.md` (invariant 7).
 //!
 //! SAMA's strategy maps to: passes 1–2 → no collective at all; pass 3 →
 //! one bucket-streamed all-reduce overlapped with first-order compute.
@@ -89,10 +109,12 @@ pub use topology::{
     Topology, TopologyKind,
 };
 
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{
+    channel, Receiver, RecvTimeoutError, Sender, TryRecvError,
+};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Simulated interconnect.
 #[derive(Clone, Copy, Debug)]
@@ -131,6 +153,94 @@ impl LinkModel {
         hops as f64 * (self.latency + chunk_bytes as f64 / self.bandwidth)
     }
 }
+
+/// Typed communication failure, surfaced by the fallible collective API
+/// (`submit_bucket` / `try_progress` / `wait` / `all_reduce_*`) instead of
+/// an `expect` panic, so the caller — not the collective — owns the
+/// recovery decision.
+///
+/// The detector is wall-clock (`recv_timeout` at the ring rendezvous), so
+/// *which* variant a survivor sees, and its `waited` latency, may differ
+/// across ranks. Nothing rank-replicated may branch on that: the
+/// coordinator's supervisor turns detection into a rank-agreed recovery
+/// decision before any survivor acts (see `docs/INVARIANTS.md`,
+/// invariant 7).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CommError {
+    /// A ring neighbor's engine is gone: its channel endpoint disconnected
+    /// (the victim's `Collective` drop closes its job channels, its engines
+    /// exit, and their ring senders/receivers drop — so death cascades as
+    /// disconnects well before any timeout expires).
+    PeerDead {
+        /// Ring the failure was detected on.
+        ring: usize,
+        /// Rendezvous wait before the disconnect was observed (the
+        /// detection latency; zero when the send side failed outright).
+        waited: Duration,
+    },
+    /// No traffic from the ring predecessor within the peer-liveness
+    /// budget. The peer may be dead *or* wedged — indistinguishable from
+    /// here, which is exactly why `peer_timeout=` must comfortably exceed
+    /// the longest legitimate compute window between submissions.
+    PeerTimeout {
+        /// Ring the failure was detected on.
+        ring: usize,
+        /// How long the rendezvous waited (≈ the configured timeout).
+        waited: Duration,
+    },
+    /// This rank's *own* engine for `ring` has exited (its job queue or
+    /// done channel disconnected) — typically because it already failed an
+    /// earlier reduce and the error was reported there.
+    EngineDown {
+        /// Ring whose engine is gone.
+        ring: usize,
+    },
+}
+
+impl CommError {
+    /// Ring the failure was detected on.
+    pub fn ring(&self) -> usize {
+        match self {
+            CommError::PeerDead { ring, .. }
+            | CommError::PeerTimeout { ring, .. }
+            | CommError::EngineDown { ring } => *ring,
+        }
+    }
+
+    /// Rendezvous wait before the failure was classified — the detection
+    /// latency a recovery report attributes (zero for [`CommError::EngineDown`]).
+    pub fn waited(&self) -> Duration {
+        match self {
+            CommError::PeerDead { waited, .. }
+            | CommError::PeerTimeout { waited, .. } => *waited,
+            CommError::EngineDown { .. } => Duration::ZERO,
+        }
+    }
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::PeerDead { ring, waited } => write!(
+                f,
+                "ring {ring}: peer died (channel disconnected after \
+                 {:.3}s at the rendezvous)",
+                waited.as_secs_f64()
+            ),
+            CommError::PeerTimeout { ring, waited } => write!(
+                f,
+                "ring {ring}: no peer traffic within the liveness budget \
+                 (waited {:.3}s; dead or wedged peer)",
+                waited.as_secs_f64()
+            ),
+            CommError::EngineDown { ring } => {
+                write!(f, "ring {ring}: own comm engine has exited")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
 
 /// Which logical gradient stream a reduce belongs to. Tags drive the
 /// per-stream comm/blocked attribution in [`CommStats`] — the quantity the
@@ -347,7 +457,8 @@ struct JobMsg {
     bucket: u32,
     offset: usize,
     data: Vec<f32>,
-    done_tx: Sender<BucketDone>,
+    /// Per-bucket completion (or the typed failure that ended the ring).
+    done_tx: Sender<Result<BucketDone, CommError>>,
 }
 
 /// One bucket of one reduce, completed by the comm engine.
@@ -411,9 +522,9 @@ pub struct PendingReduce {
     out: Vec<f32>,
     /// Cloned into each submitted bucket's [`JobMsg`]; dropped when the
     /// final wait starts so a dead comm engine disconnects the channel
-    /// (a panic, not a silent hang).
-    done_tx: Option<Sender<BucketDone>>,
-    done_rx: Receiver<BucketDone>,
+    /// (a typed [`CommError::EngineDown`], not a silent hang).
+    done_tx: Option<Sender<Result<BucketDone, CommError>>>,
+    done_rx: Receiver<Result<BucketDone, CommError>>,
 }
 
 impl PendingReduce {
@@ -459,11 +570,46 @@ pub struct ReduceProfile {
     pub blocked_seconds: f64,
 }
 
+/// Outcome of [`Collective::quiesce`]: one in-flight reduce resolved to
+/// the consistent cut after a detected failure.
+///
+/// The cut contract (see `docs/INVARIANTS.md`, invariant 7): a bucket that
+/// completed did so with its deterministic ring-reduced value on *every*
+/// rank that saw it complete — but bucket completion is **not**
+/// rank-atomic (rank A may have absorbed bucket k while rank B's engine
+/// died one hop earlier), so quiesced values are for observability and
+/// local bookkeeping only. Recovery never resumes from them; it resumes
+/// from rank-replicated state at a cadence boundary (checkpoint or
+/// snapshot).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Quiesced {
+    /// Every submitted bucket completed: the deterministic averaged buffer.
+    Complete(Vec<f32>),
+    /// At least one bucket did not complete — the reduce is discarded as a
+    /// unit. Partial outputs never leak.
+    Discarded {
+        /// Buckets that had completed when the reduce was quiesced.
+        buckets_done: u32,
+        /// Buckets submitted in total.
+        buckets: u32,
+    },
+}
+
+/// Default peer-liveness budget for the ring rendezvous. Generous on
+/// purpose: engines only rendezvous once *both* neighbors have submitted a
+/// job, so a peer legitimately deep in a long compute window must not be
+/// classified as dead. The coordinator threads the `peer_timeout=` knob
+/// through [`CommWorld::with_topology_timeout`]; tests override it down to
+/// milliseconds.
+pub const DEFAULT_PEER_TIMEOUT: Duration = Duration::from_secs(30);
+
 /// Factory for a K-worker collective: builds one comm-thread ring per
 /// [`Topology`] path.
 pub struct CommWorld {
     topology: Arc<Topology>,
     policy: RoutePolicy,
+    /// Peer-liveness budget handed to every engine's ring rendezvous.
+    peer_timeout: Duration,
     // per-rank plumbing handed out on join()
     seats: Mutex<Vec<Option<Seat>>>,
     handles: Mutex<Vec<JoinHandle<()>>>,
@@ -503,6 +649,19 @@ impl CommWorld {
     /// or policy (routing moves *when* a bucket is reduced, never its
     /// summation order).
     pub fn with_topology(topology: Topology, policy: RoutePolicy) -> Arc<CommWorld> {
+        Self::with_topology_timeout(topology, policy, DEFAULT_PEER_TIMEOUT)
+    }
+
+    /// [`with_topology`](CommWorld::with_topology) with an explicit
+    /// peer-liveness budget for the ring rendezvous (the `peer_timeout=`
+    /// knob). A peer silent for longer than this is classified
+    /// [`CommError::PeerTimeout`]; an outright-dead peer cascades as
+    /// [`CommError::PeerDead`] disconnects well before the budget expires.
+    pub fn with_topology_timeout(
+        topology: Topology,
+        policy: RoutePolicy,
+        peer_timeout: Duration,
+    ) -> Arc<CommWorld> {
         let world = topology.world();
         let rings = topology.rings();
         assert!(world >= 1);
@@ -535,7 +694,16 @@ impl CommWorld {
                 let from_prev = ring_rxs[r][rank].take().unwrap();
                 let hop = topology.path(r).hop(rank);
                 handles.push(std::thread::spawn(move || {
-                    comm_engine(rank, world, hop, job_rx, to_next, from_prev);
+                    comm_engine(
+                        rank,
+                        world,
+                        r,
+                        hop,
+                        peer_timeout,
+                        job_rx,
+                        to_next,
+                        from_prev,
+                    );
                 }));
                 job_txs.push(job_tx);
             }
@@ -544,6 +712,7 @@ impl CommWorld {
         Arc::new(CommWorld {
             topology,
             policy,
+            peer_timeout,
             seats: Mutex::new(seats),
             handles: Mutex::new(handles),
         })
@@ -551,7 +720,13 @@ impl CommWorld {
 
     /// Claim rank `rank`'s collective handle (each rank exactly once).
     pub fn join(&self, rank: usize) -> Collective {
-        let seat = self.seats.lock().expect("seats lock poisoned: a rank panicked")[rank]
+        // A poisoned lock only means some rank's worker thread panicked
+        // while touching the seat table; the table itself is a Vec of
+        // Options and is valid in every intermediate state. Survivors must
+        // be able to keep joining/tearing down — inheriting the panic here
+        // is exactly the abort-on-failure behavior the fault-tolerance
+        // layer removes.
+        let seat = self.seats.lock().unwrap_or_else(|e| e.into_inner())[rank]
             .take()
             .expect("rank already joined");
         let rings = self.topology.rings();
@@ -587,13 +762,27 @@ impl CommWorld {
     pub fn policy(&self) -> RoutePolicy {
         self.policy
     }
+
+    /// Peer-liveness budget this world's engines rendezvous under
+    /// (preserved across a survivor-set rebuild).
+    pub fn peer_timeout(&self) -> Duration {
+        self.peer_timeout
+    }
 }
 
 impl Drop for CommWorld {
     fn drop(&mut self) {
-        // dropping the seats closes job channels; engines exit their loops
-        self.seats.lock().expect("seats lock poisoned: a rank panicked").clear();
-        for h in self.handles.lock().expect("handles lock poisoned").drain(..) {
+        // A poisoned lock means a worker panicked; teardown must still run
+        // (see the note in `join`), and `h.join()`'s Err already swallows
+        // engine panics rather than propagating them into this Drop.
+        self.seats.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        let handles: Vec<_> = self
+            .handles
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .drain(..)
+            .collect();
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -606,10 +795,23 @@ impl Drop for CommWorld {
 /// the traversed link. All ranks must submit buckets in the same per-ring
 /// order (DDP contract, relaxed from global order); waits are free to
 /// happen in any order.
+///
+/// **Failure handling.** The engine itself never panics. When the ring
+/// rendezvous fails ([`ring_all_reduce`] returns a [`CommError`]), the
+/// engine (1) drops its outgoing ring sender so the failure cascades to
+/// the ring successor as an immediate disconnect — every survivor detects
+/// in one ring-hop of channel teardown instead of each waiting out the
+/// full `peer_timeout` — and (2) enters a failed state in which the
+/// current job and every subsequent job are answered with `Err(the
+/// error)`, so no worker can hang waiting on a reduce this ring will
+/// never finish. The engine thread stays alive until its job channel
+/// closes (seat teardown), keeping the done-channel protocol uniform.
 fn comm_engine(
     rank: usize,
     world: usize,
+    ring: usize,
     link: LinkProfile,
+    peer_timeout: Duration,
     job_rx: Receiver<JobMsg>,
     to_next: Sender<RingMsg>,
     from_prev: Receiver<RingMsg>,
@@ -618,25 +820,48 @@ fn comm_engine(
     // allocation it last received from its ring predecessor, so after
     // warm-up no hop allocates.
     let mut spare: Vec<f32> = Vec::new();
+    // Some until the first rendezvous failure; dropped to cascade it.
+    let mut to_next = Some(to_next);
+    let mut failed: Option<CommError> = None;
     while let Ok(JobMsg { job, bucket, offset, mut data, done_tx }) = job_rx.recv() {
+        if let Some(err) = &failed {
+            // Failed state: the ring is gone; fail every queued/future job
+            // with the original classification (a dropped PendingReduce on
+            // the worker side just makes this send a no-op).
+            let _ = done_tx.send(Err(err.clone()));
+            continue;
+        }
         // detlint: allow(wallclock-in-decision) — per-bucket comm-time
         // attribution (CommStats); routing never reads it
         let t0 = Instant::now();
         let (mut wire_secs, mut peer_secs) = (0.0f64, 0.0f64);
         if world > 1 {
-            ring_all_reduce(
-                rank,
-                world,
-                link,
-                job,
-                bucket,
-                &mut data,
-                &to_next,
-                &from_prev,
-                &mut spare,
-                &mut wire_secs,
-                &mut peer_secs,
-            );
+            let res = match to_next.as_ref() {
+                Some(tx) => ring_all_reduce(
+                    rank,
+                    world,
+                    ring,
+                    link,
+                    peer_timeout,
+                    job,
+                    bucket,
+                    &mut data,
+                    tx,
+                    &from_prev,
+                    &mut spare,
+                    &mut wire_secs,
+                    &mut peer_secs,
+                ),
+                // unreachable (to_next is only None once failed is Some),
+                // kept total so the engine can never panic
+                None => Err(CommError::EngineDown { ring }),
+            };
+            if let Err(err) = res {
+                to_next = None; // cascade: successor sees a disconnect now
+                let _ = done_tx.send(Err(err.clone()));
+                failed = Some(err);
+                continue;
+            }
             // average (DDP semantics)
             let inv = 1.0 / world as f32;
             for x in data.iter_mut() {
@@ -646,7 +871,7 @@ fn comm_engine(
         let secs = t0.elapsed().as_secs_f64();
         // a dropped PendingReduce (worker abandoned the reduce) is not an
         // engine error — later jobs may still be live
-        let _ = done_tx.send(BucketDone {
+        let _ = done_tx.send(Ok(BucketDone {
             job,
             bucket,
             offset,
@@ -654,21 +879,32 @@ fn comm_engine(
             secs,
             wire_secs,
             peer_secs,
-        });
+        }));
     }
 }
 
 /// Textbook ring all-reduce (reduce-scatter + all-gather) over one bucket.
 /// `spare` is the recycled hop buffer (see [`comm_engine`]). `wire_secs`
 /// accumulates time spent on the simulated link (hop sleeps); `peer_secs`
-/// accumulates time blocked in the `recv()` rendezvous waiting for the
-/// ring predecessor — the straggler component that must NOT be booked as
-/// wire time.
+/// accumulates time blocked in the rendezvous waiting for the ring
+/// predecessor — the straggler component that must NOT be booked as wire
+/// time.
+///
+/// This is the failure detector: every rendezvous is a
+/// `recv_timeout(peer_timeout)`, classifying a disconnected predecessor as
+/// [`CommError::PeerDead`] (its engine exited — channel teardown cascades
+/// death ring-wide in well under the budget) and silence past the budget
+/// as [`CommError::PeerTimeout`] (dead *or* wedged — indistinguishable
+/// here). A failed send to the successor is also `PeerDead` (its receiver
+/// dropped). On error, `buf` holds partial sums — the caller must discard
+/// the bucket, never expose it.
 #[allow(clippy::too_many_arguments)]
 fn ring_all_reduce(
     rank: usize,
     world: usize,
+    ring: usize,
     link: LinkProfile,
+    peer_timeout: Duration,
     job: u64,
     bucket: u32,
     buf: &mut [f32],
@@ -677,7 +913,7 @@ fn ring_all_reduce(
     spare: &mut Vec<f32>,
     wire_secs: &mut f64,
     peer_secs: &mut f64,
-) {
+) -> Result<(), CommError> {
     let n = buf.len();
     let chunk_of = |c: usize| -> std::ops::Range<usize> {
         let base = n / world;
@@ -685,6 +921,24 @@ fn ring_all_reduce(
         let start = c * base + c.min(rem);
         let len = base + usize::from(c < rem);
         start..start + len
+    };
+    // One rendezvous with the ring predecessor: the detector. The waited
+    // duration rides the error as the detection-latency metric.
+    let rendezvous = |peer_secs: &mut f64| -> Result<RingMsg, CommError> {
+        // detlint: allow(wallclock-in-decision) — peer-wait attribution and
+        // the detector's detection-latency metric; the survivor set and
+        // resume step never read it (recovery decisions are rank-replicated
+        // via the Ctrl consensus reduce — docs/INVARIANTS.md invariant 7)
+        let t_peer = Instant::now();
+        let res = from_prev.recv_timeout(peer_timeout);
+        let waited = t_peer.elapsed();
+        *peer_secs += waited.as_secs_f64();
+        res.map_err(|e| match e {
+            RecvTimeoutError::Disconnected => {
+                CommError::PeerDead { ring, waited }
+            }
+            RecvTimeoutError::Timeout => CommError::PeerTimeout { ring, waited },
+        })
     };
     // reduce-scatter: after step r, rank owns partial sums flowing around
     for r in 0..world - 1 {
@@ -698,14 +952,11 @@ fn ring_all_reduce(
         let t_wire = Instant::now();
         std::thread::sleep(link.hop_cost(chunk.len() * 4));
         *wire_secs += t_wire.elapsed().as_secs_f64();
-        to_next
-            .send(RingMsg { job, bucket, chunk })
-            .expect("ring send");
-        // detlint: allow(wallclock-in-decision) — peer-wait attribution; the
-        // retune-side use is Ctrl-synced across ranks before any decision
-        let t_peer = Instant::now();
-        let msg = from_prev.recv().expect("ring recv");
-        *peer_secs += t_peer.elapsed().as_secs_f64();
+        if to_next.send(RingMsg { job, bucket, chunk }).is_err() {
+            // successor's engine is gone: its ring receiver dropped
+            return Err(CommError::PeerDead { ring, waited: Duration::ZERO });
+        }
+        let msg = rendezvous(peer_secs)?;
         debug_assert_eq!((msg.job, msg.bucket), (job, bucket));
         let recv_c = (rank + world - r - 1) % world;
         let range = chunk_of(recv_c);
@@ -726,20 +977,17 @@ fn ring_all_reduce(
         let t_wire = Instant::now();
         std::thread::sleep(link.hop_cost(chunk.len() * 4));
         *wire_secs += t_wire.elapsed().as_secs_f64();
-        to_next
-            .send(RingMsg { job, bucket, chunk })
-            .expect("ring send");
-        // detlint: allow(wallclock-in-decision) — peer-wait attribution; the
-        // retune-side use is Ctrl-synced across ranks before any decision
-        let t_peer = Instant::now();
-        let msg = from_prev.recv().expect("ring recv");
-        *peer_secs += t_peer.elapsed().as_secs_f64();
+        if to_next.send(RingMsg { job, bucket, chunk }).is_err() {
+            return Err(CommError::PeerDead { ring, waited: Duration::ZERO });
+        }
+        let msg = rendezvous(peer_secs)?;
         debug_assert_eq!((msg.job, msg.bucket), (job, bucket));
         let recv_c = (rank + world - r) % world;
         let range = chunk_of(recv_c);
         buf[range].copy_from_slice(&msg.chunk);
         *spare = msg.chunk;
     }
+    Ok(())
 }
 
 impl Collective {
@@ -857,7 +1105,7 @@ impl Collective {
         self.stats.per_tag[tag.idx()].reduces += 1;
         let ring = self.sched.route(tag, hint_elems);
         self.stats.per_ring[ring].reduces += 1;
-        let (done_tx, done_rx) = channel::<BucketDone>();
+        let (done_tx, done_rx) = channel::<Result<BucketDone, CommError>>();
         PendingReduce {
             id,
             tag,
@@ -876,22 +1124,20 @@ impl Collective {
     /// as soon as every rank has submitted it — typically while the worker
     /// is still producing the next bucket — and only queues behind earlier
     /// buckets on the *same* ring, never behind other rings' traffic.
-    pub fn submit_bucket(&mut self, pending: &mut PendingReduce, data: Vec<f32>) {
-        let offset = pending.out.len();
-        pending.out.resize(offset + data.len(), 0.0);
-        // exact ring traffic: 2(K−1)/K of the payload per rank, kept in f64
-        // and rounded once (per-bucket integer division would truncate)
-        self.bytes_exact += (data.len() * 4) as f64 * 2.0
-            * (self.world as f64 - 1.0)
-            / self.world as f64;
-        self.stats.bytes_sent = self.bytes_exact.round() as u64;
-        self.stats.per_tag[pending.tag.idx()].buckets += 1;
+    ///
+    /// Fails with [`CommError::EngineDown`] if the routed ring's engine
+    /// thread is gone (it exited or panicked); a failed submit leaves the
+    /// reduce and all accounting exactly as they were — the caller may
+    /// still [`quiesce`](Collective::quiesce) the reduce to recover
+    /// whatever completed earlier.
+    pub fn submit_bucket(
+        &mut self,
+        pending: &mut PendingReduce,
+        data: Vec<f32>,
+    ) -> Result<(), CommError> {
         let ring = pending.ring;
-        self.sched.charge(ring, data.len());
-        self.stats.per_ring[ring].buckets += 1;
-        self.ring_inflight[ring] += 1;
-        let hwm = &mut self.stats.per_ring[ring].queue_depth_hwm;
-        *hwm = (*hwm).max(self.ring_inflight[ring] as u64);
+        let offset = pending.out.len();
+        let elems = data.len();
         let msg = JobMsg {
             job: pending.id,
             bucket: pending.buckets,
@@ -903,8 +1149,26 @@ impl Collective {
                 .expect("reduce already waited")
                 .clone(),
         };
+        // send FIRST: all accounting below happens only once the engine has
+        // the bucket, so a failed submit mutates nothing
+        if self.job_txs[ring].send(msg).is_err() {
+            return Err(CommError::EngineDown { ring });
+        }
+        pending.out.resize(offset + elems, 0.0);
         pending.buckets += 1;
-        self.job_txs[ring].send(msg).expect("comm engine alive");
+        // exact ring traffic: 2(K−1)/K of the payload per rank, kept in f64
+        // and rounded once (per-bucket integer division would truncate)
+        self.bytes_exact += (elems * 4) as f64 * 2.0
+            * (self.world as f64 - 1.0)
+            / self.world as f64;
+        self.stats.bytes_sent = self.bytes_exact.round() as u64;
+        self.stats.per_tag[pending.tag.idx()].buckets += 1;
+        self.sched.charge(ring, elems);
+        self.stats.per_ring[ring].buckets += 1;
+        self.ring_inflight[ring] += 1;
+        let hwm = &mut self.stats.per_ring[ring].queue_depth_hwm;
+        *hwm = (*hwm).max(self.ring_inflight[ring] as u64);
+        Ok(())
     }
 
     /// Start an asynchronous bucketed all-reduce of a fully materialized
@@ -915,23 +1179,23 @@ impl Collective {
         data: Vec<f32>,
         bucket_elems: usize,
         tag: ReduceTag,
-    ) -> PendingReduce {
+    ) -> Result<PendingReduce, CommError> {
         let bucket_elems = bucket_elems.max(1);
         let mut pending = self.begin_reduce_sized(tag, data.len());
         if data.len() <= bucket_elems {
             // single bucket: move the buffer, no copy
-            self.submit_bucket(&mut pending, data);
+            self.submit_bucket(&mut pending, data)?;
         } else {
             let mut off = 0;
             while off < data.len() {
                 let end = (off + bucket_elems).min(data.len());
                 let mut b = self.take_bucket_buf(end - off);
                 b.extend_from_slice(&data[off..end]);
-                self.submit_bucket(&mut pending, b);
+                self.submit_bucket(&mut pending, b)?;
                 off = end;
             }
         }
-        pending
+        Ok(pending)
     }
 
     /// Absorb one completed bucket into the pending reduce's output; the
@@ -961,24 +1225,28 @@ impl Collective {
     /// Non-blocking: absorb any buckets the engine has finished; returns
     /// how many of this reduce's buckets are complete so far.
     ///
-    /// Engine-death detection happens at [`wait`](Collective::wait), which
-    /// drops the reduce's local sender and then panics on disconnect; while
-    /// the reduce is still open for submission its own `done_tx` keeps the
-    /// channel connected, so polling sees `Empty` (like an NCCL query on a
-    /// dead peer) — callers must eventually `wait` the reduce.
-    pub fn try_progress(&mut self, pending: &mut PendingReduce) -> u32 {
+    /// A finished-with-error bucket (the engine's detector fired) surfaces
+    /// here as `Err`; the pending reduce is then dead weight — hand it to
+    /// [`quiesce`](Collective::quiesce) for the consistent-cut snapshot. An
+    /// engine that is *gone* (channel disconnected while no `done_tx` seals
+    /// it) maps to [`CommError::EngineDown`].
+    pub fn try_progress(
+        &mut self,
+        pending: &mut PendingReduce,
+    ) -> Result<u32, CommError> {
         while pending.buckets_done < pending.buckets {
             match pending.done_rx.try_recv() {
-                Ok(msg) => self.absorb(pending, msg),
+                Ok(Ok(msg)) => self.absorb(pending, msg),
+                Ok(Err(err)) => return Err(err),
                 Err(TryRecvError::Empty) => break,
                 // unreachable while pending.done_tx is Some, kept as a
                 // guard should the sealing rules ever change
                 Err(TryRecvError::Disconnected) => {
-                    panic!("comm engine died mid-reduce")
+                    return Err(CommError::EngineDown { ring: pending.ring })
                 }
             }
         }
-        pending.buckets_done
+        Ok(pending.buckets_done)
     }
 
     /// Wait for all of a pending reduce's buckets; returns the averaged
@@ -986,8 +1254,12 @@ impl Collective {
     /// charged to `blocked_seconds`. Reduces may be waited in any order —
     /// each owns its done channel, so waiting a later-submitted reduce
     /// first simply buffers the earlier one's completions.
-    pub fn wait(&mut self, pending: PendingReduce) -> Vec<f32> {
-        self.wait_profiled(pending).0
+    ///
+    /// On a detected failure the typed [`CommError`] is returned instead of
+    /// a panic; the partially-reduced output is dropped (never exposed —
+    /// the consistent-cut contract discards incomplete reduces as a unit).
+    pub fn wait(&mut self, pending: PendingReduce) -> Result<Vec<f32>, CommError> {
+        self.wait_profiled(pending).map(|(out, _)| out)
     }
 
     /// [`wait`](Collective::wait), also returning the reduce's completion
@@ -995,23 +1267,29 @@ impl Collective {
     pub fn wait_profiled(
         &mut self,
         mut pending: PendingReduce,
-    ) -> (Vec<f32>, ReduceProfile) {
+    ) -> Result<(Vec<f32>, ReduceProfile), CommError> {
         // No more buckets can be submitted (pending is consumed): drop our
         // sender so an engine death disconnects the channel and the recv
-        // below panics instead of hanging forever.
+        // below returns instead of hanging forever.
         pending.done_tx = None;
         let mut blocked = 0.0f64;
         while pending.buckets_done < pending.buckets {
             // detlint: allow(wallclock-in-decision) — blocked-time
             // attribution (CommStats); routing never reads it
             let t0 = Instant::now();
-            let msg = pending.done_rx.recv().expect("comm engine alive");
+            let res = pending.done_rx.recv();
             let dt = t0.elapsed().as_secs_f64();
             blocked += dt;
             self.stats.blocked_seconds += dt;
             self.stats.per_tag[pending.tag.idx()].blocked_seconds += dt;
             self.stats.per_ring[pending.ring].blocked_seconds += dt;
-            self.absorb(&mut pending, msg);
+            match res {
+                Ok(Ok(msg)) => self.absorb(&mut pending, msg),
+                Ok(Err(err)) => return Err(err),
+                Err(_) => {
+                    return Err(CommError::EngineDown { ring: pending.ring })
+                }
+            }
         }
         let profile = ReduceProfile {
             buckets: pending.buckets,
@@ -1019,7 +1297,7 @@ impl Collective {
             comm_seconds: pending.comm_secs,
             blocked_seconds: blocked,
         };
-        (pending.out, profile)
+        Ok((pending.out, profile))
     }
 
     /// Blocking all-reduce (overlap disabled / ablation path).
@@ -1028,9 +1306,41 @@ impl Collective {
         data: Vec<f32>,
         bucket_elems: usize,
         tag: ReduceTag,
-    ) -> Vec<f32> {
-        let p = self.all_reduce_async(data, bucket_elems, tag);
+    ) -> Result<Vec<f32>, CommError> {
+        let p = self.all_reduce_async(data, bucket_elems, tag)?;
         self.wait(p)
+    }
+
+    /// Drain a pending reduce to the consistent cut after a detected
+    /// failure — the quiesce half of detection→quiesce→rebuild→resume.
+    ///
+    /// Poll-only (`try_recv`): never blocks, never panics, safe to call
+    /// with the ring in any broken state. If every submitted bucket already
+    /// completed, the reduce's deterministic averaged output is kept
+    /// ([`Quiesced::Complete`]); otherwise the whole reduce is discarded as
+    /// a unit ([`Quiesced::Discarded`]) — partially-reduced buckets are
+    /// never exposed, because bucket completion is not rank-atomic (one
+    /// survivor may hold a reduced bucket another never received). The
+    /// snapshot is therefore observability-only on the discard path: resume
+    /// state always comes from the rank-replicated checkpoint/snapshot
+    /// cadence, never from quiesced values.
+    pub fn quiesce(&mut self, mut pending: PendingReduce) -> Quiesced {
+        pending.done_tx = None;
+        while pending.buckets_done < pending.buckets {
+            match pending.done_rx.try_recv() {
+                Ok(Ok(msg)) => self.absorb(&mut pending, msg),
+                // error or nothing more coming: the cut is wherever we are
+                Ok(Err(_)) | Err(_) => break,
+            }
+        }
+        if pending.buckets_done == pending.buckets {
+            Quiesced::Complete(pending.out)
+        } else {
+            Quiesced::Discarded {
+                buckets_done: pending.buckets_done,
+                buckets: pending.buckets,
+            }
+        }
     }
 }
 
@@ -1167,14 +1477,23 @@ impl BucketPlan {
     /// ranks must therefore call this at the same schedule point. The same
     /// reduce piggybacks the per-ring measured-occupancy window, which
     /// (once synced) retunes the [`RingScheduler`]'s cost model — one
-    /// control-plane round trip serves both tuners. Returns the new size
-    /// when a retune happened.
-    pub fn retune(&mut self, coll: Option<&mut Collective>) -> Option<usize> {
+    /// control-plane round trip serves both tuners. Returns `Ok(Some(n))`
+    /// with the new size when a retune happened; the profile-sync reduce's
+    /// [`CommError`] propagates (the accumulated window is consumed either
+    /// way, so a recovered run retunes from fresh profiles).
+    pub fn retune(
+        &mut self,
+        coll: Option<&mut Collective>,
+    ) -> Result<Option<usize>, CommError> {
         if !self.retune_due() {
-            return None;
+            return Ok(None);
         }
         let mut prod = (self.acc_producer_secs / self.acc_buckets as f64) as f32;
         let mut comm = (self.acc_comm_secs / self.acc_buckets as f64) as f32;
+        self.acc_producer_secs = 0.0;
+        self.acc_comm_secs = 0.0;
+        self.acc_buckets = 0;
+        self.reduces_seen = 0;
         if let Some(coll) = coll {
             if coll.world() > 1 {
                 // ring all-gather hands every rank the same bytes, so the
@@ -1182,24 +1501,20 @@ impl BucketPlan {
                 let mut payload = vec![prod, comm];
                 payload.extend(coll.ring_profile_window());
                 let n = payload.len();
-                let synced = coll.all_reduce_sync(payload, n, ReduceTag::Ctrl);
+                let synced = coll.all_reduce_sync(payload, n, ReduceTag::Ctrl)?;
                 prod = synced[0];
                 comm = synced[1];
                 coll.apply_ring_profile(&synced[2..]);
             }
         }
-        self.acc_producer_secs = 0.0;
-        self.acc_comm_secs = 0.0;
-        self.acc_buckets = 0;
-        self.reduces_seen = 0;
         if prod <= 0.0 || comm <= 0.0 {
-            return None;
+            return Ok(None);
         }
         let ratio = (comm as f64 / prod as f64).clamp(0.25, 4.0);
         self.elems = ((self.elems as f64 * ratio).round() as usize)
             .clamp(self.min_elems, self.max_elems);
         self.retunes += 1;
-        Some(self.elems)
+        Ok(Some(self.elems))
     }
 }
 
@@ -1265,7 +1580,7 @@ mod tests {
             let out = run_world(world, LinkModel::instant(), move |rank, coll| {
                 let data: Vec<f32> =
                     (0..10).map(|i| (rank * 100 + i) as f32).collect();
-                coll.all_reduce_sync(data, 4, ReduceTag::Theta)
+                coll.all_reduce_sync(data, 4, ReduceTag::Theta).unwrap()
             });
             for rank in 0..world {
                 for i in 0..10 {
@@ -1287,7 +1602,7 @@ mod tests {
     fn uneven_lengths_and_small_buckets() {
         let out = run_world(3, LinkModel::instant(), |rank, coll| {
             let data = vec![rank as f32 + 1.0; 17]; // 17 not divisible by 3
-            coll.all_reduce_sync(data, 5, ReduceTag::Theta)
+            coll.all_reduce_sync(data, 5, ReduceTag::Theta).unwrap()
         });
         for o in &out {
             for &x in o {
@@ -1299,15 +1614,14 @@ mod tests {
     #[test]
     fn multiple_reduces_stay_ordered() {
         let out = run_world(2, LinkModel::instant(), |rank, coll| {
-            let p1 =
-                coll.all_reduce_async(vec![rank as f32; 8], 8, ReduceTag::Theta);
-            let p2 = coll.all_reduce_async(
-                vec![10.0 * rank as f32; 8],
-                8,
-                ReduceTag::Lambda,
-            );
-            let a = coll.wait(p1);
-            let b = coll.wait(p2);
+            let p1 = coll
+                .all_reduce_async(vec![rank as f32; 8], 8, ReduceTag::Theta)
+                .unwrap();
+            let p2 = coll
+                .all_reduce_async(vec![10.0 * rank as f32; 8], 8, ReduceTag::Lambda)
+                .unwrap();
+            let a = coll.wait(p1).unwrap();
+            let b = coll.wait(p2).unwrap();
             vec![a[0], b[0]]
         });
         for o in &out {
@@ -1337,24 +1651,27 @@ mod tests {
                 let lambda: Vec<f32> =
                     (0..41).map(|i| (i as f32) * -0.17 + rank as f32).collect();
                 // both reduces in flight simultaneously, θ submitted first
-                let mut pt = coll.all_reduce_async(theta, 16, ReduceTag::Theta);
-                let mut pl =
-                    coll.all_reduce_async(lambda, 16, ReduceTag::Lambda);
+                let mut pt = coll
+                    .all_reduce_async(theta, 16, ReduceTag::Theta)
+                    .unwrap();
+                let mut pl = coll
+                    .all_reduce_async(lambda, 16, ReduceTag::Lambda)
+                    .unwrap();
                 let (t, l) = match order {
                     WaitOrder::SubmitOrder => {
-                        let t = coll.wait(pt);
-                        (t, coll.wait(pl))
+                        let t = coll.wait(pt).unwrap();
+                        (t, coll.wait(pl).unwrap())
                     }
                     WaitOrder::Reversed => {
                         // λ waited first, while θ is still pending
-                        let l = coll.wait(pl);
-                        (coll.wait(pt), l)
+                        let l = coll.wait(pl).unwrap();
+                        (coll.wait(pt).unwrap(), l)
                     }
                     WaitOrder::Interleaved => {
                         // poll both until done, then drain
                         for _ in 0..100 {
-                            coll.try_progress(&mut pt);
-                            coll.try_progress(&mut pl);
+                            coll.try_progress(&mut pt).unwrap();
+                            coll.try_progress(&mut pl).unwrap();
                             if pt.buckets_done() == pt.buckets_submitted()
                                 && pl.buckets_done() == pl.buckets_submitted()
                             {
@@ -1362,7 +1679,7 @@ mod tests {
                             }
                             std::thread::sleep(Duration::from_micros(20));
                         }
-                        (coll.wait(pt), coll.wait(pl))
+                        (coll.wait(pt).unwrap(), coll.wait(pl).unwrap())
                     }
                 };
                 let st = coll.stats();
@@ -1406,15 +1723,16 @@ mod tests {
         let link = LinkModel { bandwidth: 1e8, latency: 5e-5 };
         let out = run_world(2, link, |rank, coll| {
             let mut p = coll.begin_reduce(ReduceTag::Theta);
-            coll.submit_bucket(&mut p, vec![rank as f32; 100]);
+            coll.submit_bucket(&mut p, vec![rank as f32; 100]).unwrap();
             // poll until bucket 0 is fully reduced; bucket 1 not submitted
-            while coll.try_progress(&mut p) < 1 {
+            while coll.try_progress(&mut p).unwrap() < 1 {
                 std::thread::sleep(Duration::from_micros(50));
             }
             assert_eq!(p.buckets_done(), 1);
             assert_eq!(p.buckets_submitted(), 1);
-            coll.submit_bucket(&mut p, vec![10.0 + rank as f32; 50]);
-            let done = coll.wait(p);
+            coll.submit_bucket(&mut p, vec![10.0 + rank as f32; 50])
+                .unwrap();
+            let done = coll.wait(p).unwrap();
             assert_eq!(done.len(), 150);
             done
         });
@@ -1433,9 +1751,9 @@ mod tests {
         let out = run_world(2, LinkModel::instant(), |rank, coll| {
             let mut p = coll.begin_reduce(ReduceTag::Lambda);
             for _ in 0..4 {
-                coll.submit_bucket(&mut p, vec![rank as f32; 16]);
+                coll.submit_bucket(&mut p, vec![rank as f32; 16]).unwrap();
             }
-            let _ = coll.wait(p);
+            let _ = coll.wait(p).unwrap();
             vec![
                 coll.stats().reduces as f32,
                 coll.stats().tag(ReduceTag::Lambda).reduces as f32,
@@ -1466,13 +1784,17 @@ mod tests {
                         .map(|i| (i as f32) * -0.291 + 2.0 * rank as f32)
                         .collect();
                     let ctrl = vec![0.25 * (rank as f32 + 1.0); 2];
-                    let pt = coll.all_reduce_async(theta, 32, ReduceTag::Theta);
-                    let pl =
-                        coll.all_reduce_async(lambda, 32, ReduceTag::Lambda);
-                    let c = coll.all_reduce_sync(ctrl, 2, ReduceTag::Ctrl);
+                    let pt = coll
+                        .all_reduce_async(theta, 32, ReduceTag::Theta)
+                        .unwrap();
+                    let pl = coll
+                        .all_reduce_async(lambda, 32, ReduceTag::Lambda)
+                        .unwrap();
+                    let c =
+                        coll.all_reduce_sync(ctrl, 2, ReduceTag::Ctrl).unwrap();
                     // λ waited before θ: cross-ring waits are out-of-order
-                    let l = coll.wait(pl);
-                    let t = coll.wait(pt);
+                    let l = coll.wait(pl).unwrap();
+                    let t = coll.wait(pt).unwrap();
                     let st = coll.stats();
                     assert_eq!(st.tag(ReduceTag::Theta).reduces, 1);
                     assert_eq!(st.tag(ReduceTag::Lambda).reduces, 1);
@@ -1511,11 +1833,14 @@ mod tests {
                 let theta = vec![rank as f32 + 0.5; 1 << 19];
                 let lambda: Vec<f32> =
                     (0..1024).map(|i| i as f32 * 0.01 - rank as f32).collect();
-                let pt = coll.all_reduce_async(theta, 1 << 17, ReduceTag::Theta);
-                let pl =
-                    coll.all_reduce_async(lambda, 1 << 17, ReduceTag::Lambda);
-                let l = coll.wait(pl); // λ first: measures the queueing
-                let t = coll.wait(pt);
+                let pt = coll
+                    .all_reduce_async(theta, 1 << 17, ReduceTag::Theta)
+                    .unwrap();
+                let pl = coll
+                    .all_reduce_async(lambda, 1 << 17, ReduceTag::Lambda)
+                    .unwrap();
+                let l = coll.wait(pl).unwrap(); // λ first: measures queueing
+                let t = coll.wait(pt).unwrap();
                 let lam = coll.stats().tag(ReduceTag::Lambda);
                 let mut v = vec![
                     lam.blocked_seconds as f32,
@@ -1568,18 +1893,21 @@ mod tests {
                             .map(|i| (i as f32) * -0.291 + 2.0 * rank as f32)
                             .collect();
                         let ctrl = vec![0.25 * (rank as f32 + 1.0); 2];
-                        let pt =
-                            coll.all_reduce_async(theta, 32, ReduceTag::Theta);
-                        let pl =
-                            coll.all_reduce_async(lambda, 32, ReduceTag::Lambda);
-                        let pc =
-                            coll.all_reduce_async(ctrl, 2, ReduceTag::Ctrl);
+                        let pt = coll
+                            .all_reduce_async(theta, 32, ReduceTag::Theta)
+                            .unwrap();
+                        let pl = coll
+                            .all_reduce_async(lambda, 32, ReduceTag::Lambda)
+                            .unwrap();
+                        let pc = coll
+                            .all_reduce_async(ctrl, 2, ReduceTag::Ctrl)
+                            .unwrap();
                         let routes =
                             [pt.ring() as f32, pl.ring() as f32, pc.ring() as f32];
-                        let c = coll.wait(pc);
+                        let c = coll.wait(pc).unwrap();
                         // λ waited before θ: cross-ring waits out of order
-                        let l = coll.wait(pl);
-                        let t = coll.wait(pt);
+                        let l = coll.wait(pl).unwrap();
+                        let t = coll.wait(pt).unwrap();
                         let mut v = t;
                         v.extend(l);
                         v.extend(c);
@@ -1636,15 +1964,18 @@ mod tests {
                         .map(|i| i as f32 * 0.01 - rank as f32)
                         .collect();
                     let ctrl = vec![0.5 + rank as f32 + it as f32; 4];
-                    let pt =
-                        coll.all_reduce_async(theta, 1 << 16, ReduceTag::Theta);
+                    let pt = coll
+                        .all_reduce_async(theta, 1 << 16, ReduceTag::Theta)
+                        .unwrap();
                     let pl = coll
-                        .all_reduce_async(lambda, 1 << 16, ReduceTag::Lambda);
+                        .all_reduce_async(lambda, 1 << 16, ReduceTag::Lambda)
+                        .unwrap();
                     // blocking Ctrl sync while θ is in flight — the
                     // BucketPlan retune's position in the real schedule
-                    let c = coll.all_reduce_sync(ctrl, 4, ReduceTag::Ctrl);
-                    let l = coll.wait(pl);
-                    let t = coll.wait(pt);
+                    let c =
+                        coll.all_reduce_sync(ctrl, 4, ReduceTag::Ctrl).unwrap();
+                    let l = coll.wait(pl).unwrap();
+                    let t = coll.wait(pt).unwrap();
                     vals.extend_from_slice(&t[..8]);
                     vals.extend_from_slice(&l[..8]);
                     vals.extend_from_slice(&c);
@@ -1683,18 +2014,22 @@ mod tests {
         let out = run_world_rings(2, link, 2, |rank, coll| {
             // 4 θ buckets pile up on ring 0 (all submitted before any
             // absorb); the single λ bucket rides ring 1
-            let pt = coll.all_reduce_async(
-                vec![rank as f32; 1 << 15],
-                1 << 13,
-                ReduceTag::Theta,
-            );
-            let pl = coll.all_reduce_async(
-                vec![1.0 + rank as f32; 512],
-                512,
-                ReduceTag::Lambda,
-            );
-            let _ = coll.wait(pl);
-            let _ = coll.wait(pt);
+            let pt = coll
+                .all_reduce_async(
+                    vec![rank as f32; 1 << 15],
+                    1 << 13,
+                    ReduceTag::Theta,
+                )
+                .unwrap();
+            let pl = coll
+                .all_reduce_async(
+                    vec![1.0 + rank as f32; 512],
+                    512,
+                    ReduceTag::Lambda,
+                )
+                .unwrap();
+            let _ = coll.wait(pl).unwrap();
+            let _ = coll.wait(pt).unwrap();
             let st = coll.stats();
             assert_eq!(st.per_ring.len(), 2);
             let busy: f64 = st.per_ring.iter().map(|r| r.busy_seconds).sum();
@@ -1729,11 +2064,13 @@ mod tests {
             if rank == 1 {
                 std::thread::sleep(Duration::from_millis(20));
             }
-            let _ = coll.all_reduce_sync(
-                vec![rank as f32; 1 << 15],
-                1 << 15,
-                ReduceTag::Theta,
-            );
+            let _ = coll
+                .all_reduce_sync(
+                    vec![rank as f32; 1 << 15],
+                    1 << 15,
+                    ReduceTag::Theta,
+                )
+                .unwrap();
             let st = coll.stats();
             let tag_wire: f64 =
                 ReduceTag::ALL.iter().map(|&t| st.tag(t).wire_seconds).sum();
@@ -1781,9 +2118,11 @@ mod tests {
         };
         let out = run_world(2, link, move |rank, coll| {
             let data = vec![rank as f32; 1024];
-            let p = coll.all_reduce_async(data, 256, ReduceTag::Theta);
+            let p = coll
+                .all_reduce_async(data, 256, ReduceTag::Theta)
+                .unwrap();
             busy(); // overlapped compute
-            let _ = coll.wait(p);
+            let _ = coll.wait(p).unwrap();
             vec![
                 coll.stats().blocked_seconds as f32,
                 coll.stats().comm_seconds as f32,
@@ -1802,7 +2141,9 @@ mod tests {
     #[test]
     fn bytes_accounting_scales_with_world() {
         let out = run_world(4, LinkModel::instant(), |_, coll| {
-            let _ = coll.all_reduce_sync(vec![1.0; 1000], 250, ReduceTag::Theta);
+            let _ = coll
+                .all_reduce_sync(vec![1.0; 1000], 250, ReduceTag::Theta)
+                .unwrap();
             vec![coll.stats().bytes_sent as f32]
         });
         // ring all-reduce moves 2(K-1)/K · bytes per rank; the f64
@@ -1822,8 +2163,9 @@ mod tests {
     fn bytes_accounting_does_not_truncate_per_call() {
         let out = run_world(3, LinkModel::instant(), |_, coll| {
             for _ in 0..30 {
-                let _ =
-                    coll.all_reduce_sync(vec![1.0; 250], 64, ReduceTag::Theta);
+                let _ = coll
+                    .all_reduce_sync(vec![1.0; 250], 64, ReduceTag::Theta)
+                    .unwrap();
             }
             vec![coll.stats().bytes_sent as f32]
         });
@@ -1864,7 +2206,7 @@ mod tests {
                     blocked_seconds: 0.0,
                 };
                 plan.observe(e as f64 / producer_elems_per_sec, &profile);
-                plan.retune(None);
+                plan.retune(None).unwrap();
             }
             let e = plan.elems() as f64;
             assert!(
@@ -1892,7 +2234,7 @@ mod tests {
             };
             // producer is 100× faster than the wire
             plan.observe(e as f64 / 1e9, &profile);
-            plan.retune(None);
+            plan.retune(None).unwrap();
         }
         assert_eq!(plan.elems(), BucketPlan::MAX_ELEMS);
     }
@@ -1909,7 +2251,7 @@ mod tests {
         };
         plan.observe(1e-3, &profile);
         assert!(!plan.retune_due());
-        assert_eq!(plan.retune(None), None);
+        assert_eq!(plan.retune(None).unwrap(), None);
         assert_eq!(plan.elems(), 2048);
     }
 
@@ -1930,10 +2272,165 @@ mod tests {
                 };
                 plan.observe(4e-3, &profile);
             }
-            let new = plan.retune(Some(coll)).expect("retune due");
+            let new = plan.retune(Some(coll)).unwrap().expect("retune due");
             vec![new as f32]
         });
         assert_eq!(out[0], out[1]);
         assert_eq!(out[1], out[2]);
+    }
+
+    // ---- failure detection / quiesce --------------------------------------
+
+    /// The detector's classification contract: a peer whose engines are
+    /// *gone* surfaces as [`CommError::PeerDead`] well inside the budget
+    /// (channel teardown, not timeout expiry); a peer that is merely slow
+    /// but participates within the budget costs peer-wait seconds, never an
+    /// error; a peer that is alive but wedged (never submits) exhausts the
+    /// budget and surfaces as [`CommError::PeerTimeout`].
+    #[test]
+    fn recv_timeout_classifies_slow_vs_dead_peer() {
+        // dead peer → PeerDead, long before the generous 5 s budget
+        {
+            let cw = CommWorld::with_topology_timeout(
+                Topology::flat(2, 1, LinkModel::instant().profile()),
+                RoutePolicy::Tag,
+                Duration::from_secs(5),
+            );
+            drop(cw.join(1)); // rank 1 leaves: its engines exit
+            let mut c0 = cw.join(0);
+            let p = c0
+                .all_reduce_async(vec![1.0; 64], 64, ReduceTag::Theta)
+                .unwrap();
+            match c0.wait(p) {
+                Err(CommError::PeerDead { ring: 0, waited }) => {
+                    assert!(
+                        waited < Duration::from_secs(5),
+                        "death must be detected by teardown, not budget \
+                         expiry (waited {waited:?})"
+                    )
+                }
+                other => panic!("expected PeerDead, got {other:?}"),
+            }
+        }
+        // slow-but-alive peer inside the budget → success, not an error
+        {
+            let cw = CommWorld::with_topology_timeout(
+                Topology::flat(2, 1, LinkModel::instant().profile()),
+                RoutePolicy::Tag,
+                Duration::from_secs(5),
+            );
+            let cw1 = Arc::clone(&cw);
+            let h = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(100));
+                let mut c1 = cw1.join(1);
+                c1.all_reduce_sync(vec![3.0; 16], 16, ReduceTag::Theta)
+                    .unwrap()
+            });
+            let mut c0 = cw.join(0);
+            let out = c0
+                .all_reduce_sync(vec![1.0; 16], 16, ReduceTag::Theta)
+                .unwrap();
+            assert_eq!(out, vec![2.0; 16], "slow peer still averages");
+            assert_eq!(h.join().unwrap(), vec![2.0; 16]);
+        }
+        // wedged peer (alive, never submits) → PeerTimeout at ≈ the budget
+        {
+            let budget = Duration::from_millis(50);
+            let cw = CommWorld::with_topology_timeout(
+                Topology::flat(2, 1, LinkModel::instant().profile()),
+                RoutePolicy::Tag,
+                budget,
+            );
+            let mut c0 = cw.join(0);
+            let _c1 = cw.join(1); // holds rank 1's engines alive, idle
+            let p = c0
+                .all_reduce_async(vec![1.0; 64], 64, ReduceTag::Theta)
+                .unwrap();
+            match c0.wait(p) {
+                Err(CommError::PeerTimeout { ring: 0, waited }) => {
+                    assert!(
+                        waited >= budget,
+                        "timeout fired early: {waited:?} < {budget:?}"
+                    )
+                }
+                other => panic!("expected PeerTimeout, got {other:?}"),
+            }
+        }
+    }
+
+    /// The consistent-cut contract: a reduce whose buckets all completed
+    /// quiesces to its deterministic averaged output; a reduce interrupted
+    /// mid-flight is discarded as a unit — no partially-reduced values
+    /// escape, whatever subset of buckets happened to finish locally.
+    #[test]
+    fn quiesce_keeps_complete_reduces_and_discards_incomplete_atomically() {
+        // complete reduce → Quiesced::Complete with the reduced values
+        let out = run_world(2, LinkModel::instant(), |rank, coll| {
+            let mut p = coll
+                .all_reduce_async(vec![rank as f32; 32], 8, ReduceTag::Theta)
+                .unwrap();
+            while coll.try_progress(&mut p).unwrap() < p.buckets_submitted() {
+                std::thread::sleep(Duration::from_micros(50));
+            }
+            match coll.quiesce(p) {
+                Quiesced::Complete(v) => v,
+                Quiesced::Discarded { .. } => {
+                    panic!("fully-completed reduce must quiesce Complete")
+                }
+            }
+        });
+        for o in &out {
+            assert_eq!(o.len(), 32);
+            for &x in o {
+                assert!((x - 0.5).abs() < 1e-6); // mean of 0,1
+            }
+        }
+        // interrupted reduce → Quiesced::Discarded as a unit
+        let cw = CommWorld::with_topology_timeout(
+            Topology::flat(2, 1, LinkModel::instant().profile()),
+            RoutePolicy::Tag,
+            Duration::from_millis(100),
+        );
+        drop(cw.join(1)); // peer dies before participating
+        let mut c0 = cw.join(0);
+        let mut p = c0.begin_reduce(ReduceTag::Theta);
+        c0.submit_bucket(&mut p, vec![1.0; 16]).unwrap();
+        c0.submit_bucket(&mut p, vec![2.0; 16]).unwrap();
+        match c0.quiesce(p) {
+            Quiesced::Discarded { buckets_done, buckets } => {
+                assert_eq!(buckets, 2);
+                assert!(buckets_done < 2, "dead-peer bucket cannot complete");
+            }
+            Quiesced::Complete(_) => {
+                panic!("interrupted reduce must never expose values")
+            }
+        }
+    }
+
+    /// One rank's crash while holding the seats lock must not take the
+    /// survivors down: `join` recovers the poisoned lock (the seat table is
+    /// plain data, valid regardless of who panicked) and the surviving
+    /// ranks still complete reduces.
+    #[test]
+    fn poisoned_seat_lock_does_not_block_survivors() {
+        let cw = CommWorld::with_rings(2, LinkModel::instant(), 1);
+        let cw2 = Arc::clone(&cw);
+        let h = std::thread::spawn(move || {
+            let _guard = cw2.seats.lock().unwrap();
+            panic!("simulated rank crash while holding the seat lock");
+        });
+        assert!(h.join().is_err(), "helper must have panicked");
+        // both seats still claimable through the poisoned lock
+        let mut c0 = cw.join(0);
+        let mut c1 = cw.join(1);
+        let p0 = c0
+            .all_reduce_async(vec![0.0; 8], 8, ReduceTag::Theta)
+            .unwrap();
+        let p1 = c1
+            .all_reduce_async(vec![2.0; 8], 8, ReduceTag::Theta)
+            .unwrap();
+        assert_eq!(c0.wait(p0).unwrap(), vec![1.0; 8]);
+        assert_eq!(c1.wait(p1).unwrap(), vec![1.0; 8]);
+        // dropping `cw` exercises the poisoned-lock Drop path too
     }
 }

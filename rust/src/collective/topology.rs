@@ -165,6 +165,11 @@ pub struct Topology {
     world: usize,
     node_of: Vec<usize>,
     paths: Vec<RingPath>,
+    /// Link profiles the paths were derived from, kept so a survivor-set
+    /// rebuild ([`Topology::survivors`]) can re-derive hop affinity with
+    /// the same rule. Flat topologies store the one profile in both.
+    intra: LinkProfile,
+    inter: LinkProfile,
 }
 
 impl Topology {
@@ -180,6 +185,8 @@ impl Topology {
             world,
             node_of: vec![0; world],
             paths: vec![RingPath::uniform(world, p); Self::clamp_rings(rings)],
+            intra: p,
+            inter: p,
         }
     }
 
@@ -221,7 +228,7 @@ impl Topology {
         for _ in 1..rings {
             paths.push(RingPath { hops: affinity_hops.clone() });
         }
-        Topology { world, node_of, paths }
+        Topology { world, node_of, paths, intra, inter }
     }
 
     /// Compatibility constructor for flat-link callers
@@ -273,6 +280,69 @@ impl Topology {
 
     pub fn path(&self, ring: usize) -> &RingPath {
         &self.paths[ring]
+    }
+
+    /// Re-derive this topology over the surviving subset of its ranks —
+    /// the rebuild half of detection→quiesce→rebuild→resume. `keep` names
+    /// *original* ranks (out-of-range entries and duplicates are dropped);
+    /// survivor `i` of the new world is the `i`-th kept original rank.
+    ///
+    /// Node membership is preserved (a survivor stays on its physical
+    /// node; node ids are compressed to stay contiguous) and every ring
+    /// path is rebuilt from the stored link profiles with the same rule as
+    /// [`hierarchical`](Topology::hierarchical): ring 0 rides the inter
+    /// fabric end-to-end, affinity rings pay `inter` exactly on the
+    /// node-crossing hops of the *new* ring order. For flat topologies
+    /// (`intra == inter`) this degenerates to [`flat`](Topology::flat)
+    /// over the smaller world. Ring count is preserved.
+    ///
+    /// This is rank-replicated arithmetic over the agreed survivor set —
+    /// every survivor derives the identical topology with no extra
+    /// coordination.
+    pub fn survivors(&self, keep: &[usize]) -> Topology {
+        let mut keep: Vec<usize> =
+            keep.iter().copied().filter(|&r| r < self.world).collect();
+        keep.sort_unstable();
+        keep.dedup();
+        assert!(!keep.is_empty(), "survivor set must be non-empty");
+        let world = keep.len();
+        // preserve node membership, compressed to contiguous ids (node_of
+        // is monotone over ranks, so first-appearance order is rank order)
+        let mut node_of = Vec::with_capacity(world);
+        let mut next = 0usize;
+        let mut last: Option<usize> = None;
+        for &r in &keep {
+            let n = self.node_of[r];
+            if let Some(l) = last {
+                if l != n {
+                    next += 1;
+                }
+            }
+            last = Some(n);
+            node_of.push(next);
+        }
+        let rings = self.paths.len();
+        let mut paths = Vec::with_capacity(rings);
+        paths.push(RingPath::uniform(world, self.inter));
+        let affinity_hops: Vec<LinkProfile> = (0..world)
+            .map(|i| {
+                if node_of[i] != node_of[(i + 1) % world] {
+                    self.inter
+                } else {
+                    self.intra
+                }
+            })
+            .collect();
+        for _ in 1..rings {
+            paths.push(RingPath { hops: affinity_hops.clone() });
+        }
+        Topology {
+            world,
+            node_of,
+            paths,
+            intra: self.intra,
+            inter: self.inter,
+        }
     }
 }
 
@@ -529,6 +599,60 @@ mod tests {
         let one = Topology::hierarchical(4, 1, 2, fast(), slow());
         assert!(one.path(0).hops().iter().all(|h| *h == slow()));
         assert!(one.path(1).hops().iter().all(|h| *h == fast()));
+    }
+
+    /// Survivor-set rebuild: flat stays flat over the smaller world; a
+    /// hierarchy keeps each survivor on its node, compresses node ids,
+    /// re-marks the crossings of the *new* ring order, and keeps ring 0 as
+    /// the all-inter fabric. Duplicate/out-of-range entries are dropped.
+    #[test]
+    fn survivors_rederives_paths_and_preserves_nodes() {
+        // flat 4 → 3: still uniform, same profile, same ring count
+        let p = slow();
+        let flat = Topology::flat(4, 2, p).survivors(&[0, 2, 3]);
+        assert_eq!(flat.world(), 3);
+        assert_eq!(flat.rings(), 2);
+        for ring in 0..2 {
+            assert_eq!(flat.path(ring).hops().len(), 3);
+            assert!(flat.path(ring).hops().iter().all(|h| *h == p));
+        }
+        assert!((0..3).all(|r| flat.node_of(r) == 0));
+
+        // hier 6 ranks / 2 nodes of 3, kill rank 1 (node 0): survivors
+        // 0,2 stay node 0 and 3,4,5 stay node 1
+        let topo = Topology::hierarchical(6, 2, 3, fast(), slow());
+        let surv = topo.survivors(&[0, 2, 3, 4, 5]);
+        assert_eq!(surv.world(), 5);
+        assert_eq!(surv.rings(), 3);
+        let nodes: Vec<usize> = (0..5).map(|r| surv.node_of(r)).collect();
+        assert_eq!(nodes, vec![0, 0, 1, 1, 1]);
+        // ring 0 is still the all-inter fabric
+        assert!(surv.path(0).hops().iter().all(|h| *h == slow()));
+        // affinity rings cross exactly at the new node boundaries:
+        // hop 1 (rank 2 → 3) and hop 4 (rank 5 → 0 wraparound)
+        for r in 1..3 {
+            for (i, hop) in surv.path(r).hops().iter().enumerate() {
+                let crossing = i == 1 || i == 4;
+                assert_eq!(
+                    *hop,
+                    if crossing { slow() } else { fast() },
+                    "ring {r} hop {i}"
+                );
+            }
+        }
+
+        // killing a whole node compresses node ids back to contiguous
+        let one_node = topo.survivors(&[3, 4, 5]);
+        assert!((0..3).all(|r| one_node.node_of(r) == 0));
+        assert!(one_node.path(1).hops().iter().all(|h| *h == fast()));
+
+        // junk in `keep` (dups, out-of-range) is dropped, order ignored
+        let cleaned = topo.survivors(&[5, 0, 0, 99, 3]);
+        assert_eq!(cleaned.world(), 3);
+        assert_eq!(
+            (0..3).map(|r| cleaned.node_of(r)).collect::<Vec<_>>(),
+            vec![0, 1, 1]
+        );
     }
 
     #[test]

@@ -155,8 +155,57 @@ pub struct TrainConfig {
     /// Save a checkpoint every this many base steps; 0 = only at the end
     /// of the run (when `checkpoint_path` is set).
     pub checkpoint_every: usize,
+    /// Rotating checkpoint generations kept on disk (≥ 1). The newest save
+    /// lives at `checkpoint_path`, older generations at `<path>.1`,
+    /// `<path>.2`, …; resume falls back to the previous generation when
+    /// the newest fails its checksum (torn write, disk corruption).
+    pub checkpoint_keep: usize,
+    /// Seconds a comm engine waits at a ring rendezvous before declaring
+    /// the peer failed (`CommError::PeerTimeout`). Must be > 0; generous
+    /// by default so a slow-but-alive rank's longest compute window is
+    /// never misclassified as death. Dead peers are detected much faster
+    /// (channel teardown), independent of this budget.
+    pub peer_timeout: f64,
+    /// Deterministic fault injection for the chaos harness: `kill:RANK@STEP`
+    /// makes worker RANK exit at base step STEP (first run only — respawned
+    /// survivors ignore it). Empty = no injected faults. Parsed/validated
+    /// by [`FaultPlan::parse`].
+    pub chaos: String,
     /// Free-form extras (dataset knobs etc.).
     pub extra: BTreeMap<String, String>,
+}
+
+/// Parsed `chaos=` fault-injection plan. Deterministic by construction:
+/// the kill point is a (rank, base-step) pair, never a wall-clock time, so
+/// a chaos run's failure lands at the identical schedule point on every
+/// repeat — this is what lets the chaos tier-1 test compare trajectories.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Rank whose worker dies.
+    pub kill_rank: usize,
+    /// Base step at which it dies (checked at the top of the step loop).
+    pub kill_step: usize,
+}
+
+impl FaultPlan {
+    /// Parse a `chaos=` knob: empty → `None`, `kill:RANK@STEP` → a plan,
+    /// anything else is an error.
+    pub fn parse(s: &str) -> Result<Option<FaultPlan>> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Ok(None);
+        }
+        let spec = s
+            .strip_prefix("kill:")
+            .with_context(|| format!("chaos '{s}': expected kill:RANK@STEP"))?;
+        let (rank, step) = spec
+            .split_once('@')
+            .with_context(|| format!("chaos '{s}': expected kill:RANK@STEP"))?;
+        Ok(Some(FaultPlan {
+            kill_rank: rank.trim().parse().context("chaos kill rank")?,
+            kill_step: step.trim().parse().context("chaos kill step")?,
+        }))
+    }
 }
 
 impl Default for TrainConfig {
@@ -192,6 +241,9 @@ impl Default for TrainConfig {
             retune_every: crate::collective::BucketPlan::DEFAULT_RETUNE_EVERY,
             checkpoint_path: String::new(),
             checkpoint_every: 0,
+            checkpoint_keep: 2,
+            peer_timeout: 30.0,
+            chaos: String::new(),
             extra: BTreeMap::new(),
         }
     }
@@ -287,6 +339,24 @@ impl TrainConfig {
                 self.checkpoint_every =
                     value.parse().context("checkpoint_every")?
             }
+            "checkpoint_keep" => {
+                let n: usize = value.parse().context("checkpoint_keep")?;
+                if n == 0 {
+                    bail!("checkpoint_keep must be >= 1");
+                }
+                self.checkpoint_keep = n;
+            }
+            "peer_timeout" => {
+                let t: f64 = value.parse().context("peer_timeout")?;
+                if !(t > 0.0 && t.is_finite()) {
+                    bail!("peer_timeout must be a positive number of seconds");
+                }
+                self.peer_timeout = t;
+            }
+            "chaos" => {
+                FaultPlan::parse(value)?; // validate eagerly
+                self.chaos = value.into();
+            }
             other => {
                 self.extra.insert(other.into(), value.into());
             }
@@ -338,6 +408,12 @@ impl TrainConfig {
         Ok(cfg)
     }
 
+    /// The parsed `chaos=` plan (already validated by the setter, so a
+    /// malformed string stored by direct field access still errors here).
+    pub fn fault_plan(&self) -> Result<Option<FaultPlan>> {
+        FaultPlan::parse(&self.chaos)
+    }
+
     /// Extra field with a typed default.
     pub fn extra_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
         self.extra
@@ -378,6 +454,9 @@ mod tests {
             "retune_every=7".into(),
             "checkpoint_path=/tmp/run.ck".into(),
             "checkpoint_every=50".into(),
+            "checkpoint_keep=3".into(),
+            "peer_timeout=2.5".into(),
+            "chaos=kill:1@30".into(),
             "noise=0.3".into(),
         ])
         .unwrap();
@@ -396,6 +475,12 @@ mod tests {
         assert_eq!(c.retune_every, 7);
         assert_eq!(c.checkpoint_path, "/tmp/run.ck");
         assert_eq!(c.checkpoint_every, 50);
+        assert_eq!(c.checkpoint_keep, 3);
+        assert_eq!(c.peer_timeout, 2.5);
+        assert_eq!(
+            c.fault_plan().unwrap(),
+            Some(FaultPlan { kill_rank: 1, kill_step: 30 })
+        );
         assert_eq!(c.bucket_elems, 4096);
         // an explicit bucket size pins the plan (static override) ...
         assert!(!c.bucket_auto);
@@ -433,6 +518,33 @@ mod tests {
         assert!(c.apply_overrides(&["topology=mesh".into()]).is_err());
         assert!(c.apply_overrides(&["nodes=0".into()]).is_err());
         assert!(c.apply_overrides(&["route=random".into()]).is_err());
+        assert!(c.apply_overrides(&["checkpoint_keep=0".into()]).is_err());
+        assert!(c.apply_overrides(&["peer_timeout=0".into()]).is_err());
+        assert!(c.apply_overrides(&["peer_timeout=-3".into()]).is_err());
+        assert!(c.apply_overrides(&["peer_timeout=nan".into()]).is_err());
+        assert!(c.apply_overrides(&["chaos=explode".into()]).is_err());
+        assert!(c.apply_overrides(&["chaos=kill:0".into()]).is_err());
+        assert!(c.apply_overrides(&["chaos=kill:x@5".into()]).is_err());
+    }
+
+    #[test]
+    fn fault_plan_parses_and_defaults() {
+        let c = TrainConfig::default();
+        assert_eq!(c.checkpoint_keep, 2, "two generations by default");
+        assert_eq!(c.peer_timeout, 30.0, "generous liveness budget");
+        assert_eq!(c.fault_plan().unwrap(), None, "no chaos by default");
+        assert_eq!(
+            FaultPlan::parse("kill:0@5").unwrap(),
+            Some(FaultPlan { kill_rank: 0, kill_step: 5 })
+        );
+        assert_eq!(
+            FaultPlan::parse(" kill: 2 @ 17 ").unwrap(),
+            Some(FaultPlan { kill_rank: 2, kill_step: 17 })
+        );
+        assert_eq!(FaultPlan::parse("").unwrap(), None);
+        assert_eq!(FaultPlan::parse("   ").unwrap(), None);
+        assert!(FaultPlan::parse("kill:").is_err());
+        assert!(FaultPlan::parse("pause:1@2").is_err());
     }
 
     #[test]

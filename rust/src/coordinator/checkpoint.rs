@@ -287,6 +287,79 @@ impl Checkpoint {
             .with_context(|| format!("reading checkpoint {path:?}"))?;
         Self::from_bytes(&data)
     }
+
+    /// Path of rotated generation `i` (`<path>.1`, `<path>.2`, …);
+    /// generation 0 is `path` itself. Appends rather than replacing the
+    /// extension so `run.ck` rotates to `run.ck.1`, not `run.1`.
+    pub fn numbered(path: &Path, i: usize) -> std::path::PathBuf {
+        if i == 0 {
+            return path.to_path_buf();
+        }
+        let mut os = path.as_os_str().to_os_string();
+        os.push(format!(".{i}"));
+        std::path::PathBuf::from(os)
+    }
+
+    /// [`save`](Checkpoint::save) with rotation: existing generations
+    /// shift down one slot (`path` → `<path>.1` → … → `<path>.{keep-1}`,
+    /// oldest falls off), then the new checkpoint lands at `path`
+    /// atomically. `keep` is the total generations retained (≥ 1; 1 =
+    /// plain `save`). Rename failures on old generations are ignored —
+    /// a missing older generation must never block the new save.
+    pub fn save_rotating(&self, path: &Path, keep: usize) -> Result<()> {
+        for i in (1..keep.max(1)).rev() {
+            let from = Self::numbered(path, i - 1);
+            let to = Self::numbered(path, i);
+            let _ = std::fs::rename(&from, &to);
+        }
+        self.save(path)
+    }
+
+    /// Load the newest good generation: try `path`, then `<path>.1`, …,
+    /// `<path>.{keep-1}`. A generation that exists but fails to load
+    /// (checksum mismatch, truncation, bad header) is skipped with a
+    /// notice — torn writes must not kill a resumable run. Returns
+    /// `Ok(None)` when no generation exists at all (fresh run), and the
+    /// last load error when every existing generation is corrupt (silently
+    /// restarting from step 0 would discard good training time).
+    pub fn load_with_fallback(
+        path: &Path,
+        keep: usize,
+    ) -> Result<Option<Checkpoint>> {
+        let mut last_err: Option<anyhow::Error> = None;
+        let mut existed = false;
+        for i in 0..keep.max(1) {
+            let p = Self::numbered(path, i);
+            if !p.exists() {
+                continue;
+            }
+            existed = true;
+            match Self::load(&p) {
+                Ok(ck) => {
+                    if i > 0 {
+                        eprintln!(
+                            "[checkpoint] newest generation unreadable; \
+                             resuming from fallback {p:?} (step {})",
+                            ck.step
+                        );
+                    }
+                    return Ok(Some(ck));
+                }
+                Err(e) => {
+                    eprintln!("[checkpoint] skipping bad generation {p:?}: {e:#}");
+                    last_err = Some(e);
+                }
+            }
+        }
+        match (existed, last_err) {
+            (false, _) => Ok(None),
+            (true, Some(e)) => {
+                Err(e.context("every checkpoint generation is corrupt"))
+            }
+            // unreachable: an existing generation either loaded or errored
+            (true, None) => Ok(None),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -506,5 +579,100 @@ mod tests {
         let bytes = ck.to_bytes();
         assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 3]).is_err());
         assert!(Checkpoint::from_bytes(&bytes[..10]).is_err());
+    }
+
+    // ---- rotation + fallback ----------------------------------------------
+
+    fn rotation_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("sama_ck_{name}"));
+        // fresh per test: stale generations from a previous run would
+        // satisfy the fallback and mask a broken rotation
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// `save_rotating(keep=N)` keeps exactly the last N generations,
+    /// newest at the bare path, each loadable with its own contents.
+    #[test]
+    fn rotation_keeps_n_generations_newest_first() {
+        let dir = rotation_dir("rotate");
+        let path = dir.join("run.ck");
+        for step in [10u64, 20, 30, 40] {
+            let mut ck = sample(step);
+            ck.step = step;
+            ck.save_rotating(&path, 3).unwrap();
+        }
+        // generations: run.ck=40, run.ck.1=30, run.ck.2=20; 10 fell off
+        assert_eq!(Checkpoint::load(&path).unwrap().step, 40);
+        assert_eq!(
+            Checkpoint::load(&Checkpoint::numbered(&path, 1)).unwrap().step,
+            30
+        );
+        assert_eq!(
+            Checkpoint::load(&Checkpoint::numbered(&path, 2)).unwrap().step,
+            20
+        );
+        assert!(!Checkpoint::numbered(&path, 3).exists(), "oldest must drop");
+        // numbered() appends, never replaces the extension
+        assert_eq!(
+            Checkpoint::numbered(&path, 1),
+            dir.join("run.ck.1"),
+            "rotation must not collapse run.ck into run.1"
+        );
+        // keep=1 degenerates to a plain save: no .1 appears
+        let solo = dir.join("solo.ck");
+        sample(1).save_rotating(&solo, 1).unwrap();
+        sample(2).save_rotating(&solo, 1).unwrap();
+        assert!(!Checkpoint::numbered(&solo, 1).exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// The satellite's acceptance test: the newest generation is corrupted
+    /// (flipped byte) or truncated (torn write), and resume falls back to
+    /// the previous good generation instead of dying or restarting fresh.
+    #[test]
+    fn corrupted_or_truncated_latest_falls_back_to_previous_generation() {
+        let dir = rotation_dir("fallback");
+        let path = dir.join("run.ck");
+        let mut old = sample(11);
+        old.step = 100;
+        old.save_rotating(&path, 2).unwrap();
+        let mut new = sample(12);
+        new.step = 200;
+        new.save_rotating(&path, 2).unwrap();
+
+        // healthy: newest wins
+        let got = Checkpoint::load_with_fallback(&path, 2).unwrap().unwrap();
+        assert_eq!(got.step, 200);
+
+        // corrupt the newest in place → fallback to step 100
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let got = Checkpoint::load_with_fallback(&path, 2).unwrap().unwrap();
+        assert_eq!(got, old, "fallback must hand back the old generation");
+
+        // truncate the newest (torn write) → same fallback
+        let bytes = new.to_bytes();
+        std::fs::write(&path, &bytes[..bytes.len() / 3]).unwrap();
+        let got = Checkpoint::load_with_fallback(&path, 2).unwrap().unwrap();
+        assert_eq!(got.step, 100);
+
+        // newest missing entirely but an older generation exists
+        std::fs::remove_file(&path).unwrap();
+        let got = Checkpoint::load_with_fallback(&path, 2).unwrap().unwrap();
+        assert_eq!(got.step, 100);
+
+        // every generation corrupt → hard error, not a silent fresh start
+        std::fs::write(&path, b"garbage").unwrap();
+        std::fs::write(Checkpoint::numbered(&path, 1), b"junk").unwrap();
+        assert!(Checkpoint::load_with_fallback(&path, 2).is_err());
+
+        // nothing on disk at all → Ok(None): a fresh run
+        let empty = dir.join("never-saved.ck");
+        assert!(Checkpoint::load_with_fallback(&empty, 2).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -92,18 +92,59 @@
 //! problems whose hook state is rank-replicated, not just for pure
 //! oracles; the ring scheduler's clocks/scales/epoch are saved alongside
 //! so routing picks up where it left off. Loss-curve series and sample
-//! counters restart from the resume point.
+//! counters restart from the resume point. Saves rotate through
+//! `checkpoint_keep=` generations (`path`, `path.1`, …) and resume falls
+//! back past a corrupt newest generation to the previous good one.
+//!
+//! **Elastic fault tolerance: detection → quiesce → rebuild → resume.**
+//! [`train`] is an elastic supervisor, not a one-shot scatter/gather. Each
+//! attempt ("epoch") spans the current world; a worker thread finishes as
+//! one of three [`WorkerOutcome`]s:
+//!
+//! - **detection** — the collective's `recv_timeout` rendezvous classifies
+//!   a missing peer as [`CommError::PeerDead`] (channel disconnect — a
+//!   crashed rank's engines close their ring endpoints, so death cascades
+//!   ring-wide in milliseconds) or [`CommError::PeerTimeout`] (no traffic
+//!   within `peer_timeout=`; dead or wedged). The typed error propagates
+//!   through every `submit/wait` call in the step loop instead of
+//!   panicking, so the worker unwinds cleanly to the supervisor.
+//! - **quiesce** — a surviving rank drains its in-flight λ-reduce to the
+//!   consistent cut ([`Collective::quiesce`]): completed buckets keep
+//!   their deterministic reduced values, an incomplete reduce is discarded
+//!   as a unit. It then reports a `Lost` outcome carrying detection/quiesce
+//!   latencies and its rank-replicated in-memory snapshots.
+//! - **rebuild** — the supervisor forms the survivor set from the ranks
+//!   that reported back, re-derives the interconnect over it
+//!   (`Topology::survivors` — same hop-affinity rule, compressed node
+//!   ids), and constructs a fresh `CommWorld` with fresh ring-scheduler
+//!   clocks and the same routing policy and liveness budget.
+//! - **resume** — the rebuilt world restarts from the newest good durable
+//!   checkpoint generation (`Checkpoint::load_with_fallback`), or — when
+//!   no checkpoint was configured yet — from the newest cadence-boundary
+//!   in-memory snapshot every survivor holds. Before the first training
+//!   step, respawned ranks commit the recovery decision (epoch, world
+//!   size, survivor-set hash, resume step) through a Ctrl-tagged consensus
+//!   reduce ([`commit_recovery`]); the entries are small exact integers,
+//!   so the ring mean is bitwise exact and any divergence aborts before
+//!   state can fork. Detection latency may be wall-clock; every *decision*
+//!   (survivor set, resume step) is a pure function of rank-replicated
+//!   reports — the fault model is invariant 7 in `docs/INVARIANTS.md`.
+//!
+//! Deterministic chaos (`chaos=kill:rank@step`, [`FaultPlan`]) kills a
+//! chosen rank at the top of a chosen step in epoch 0 only, which is how
+//! the tier-1 chaos tests drive the whole lifecycle and assert the
+//! survivors' run lands bitwise on the uninterrupted trajectory.
 //!
 //! The determinism invariants the schedule depends on (replicated routing
 //! inputs, Ctrl-synced retune as the only wall-clock→decision route, exact
-//! accounting) are cataloged in `docs/INVARIANTS.md` and mechanically
-//! checked by `rust/tools/detlint`.
+//! accounting, the recovery fault model) are cataloged in
+//! `docs/INVARIANTS.md` and mechanically checked by `rust/tools/detlint`.
 
 pub mod checkpoint;
 
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -113,10 +154,11 @@ use crate::algos::sama::SamaScratch;
 use crate::algos::{self, MetaStepCtx};
 use crate::bilevel::{BaseGradMeta, BilevelProblem, ParamKind};
 use crate::collective::{
-    BucketPlan, Collective, CommStats, CommWorld, LinkModel, LinkProfile,
-    PendingReduce, ReduceTag, SchedulerState, Topology, TopologyKind,
+    BucketPlan, Collective, CommError, CommStats, CommWorld, LinkModel,
+    LinkProfile, PendingReduce, Quiesced, ReduceTag, SchedulerState, Topology,
+    TopologyKind,
 };
-use crate::config::{Algo, TrainConfig};
+use crate::config::{Algo, FaultPlan, TrainConfig};
 use crate::metrics::Series;
 use crate::optim::{Adam, Optimizer, Sgd};
 use crate::tensor::vecops;
@@ -163,6 +205,30 @@ pub struct WorkerReport {
     pub bucket_elems_final: usize,
 }
 
+/// One recovery episode the elastic supervisor performed after a rank
+/// failure (injected chaos or a genuine comm fault).
+#[derive(Clone, Debug)]
+pub struct RecoveryEvent {
+    /// Attempt index the failure happened in (0 = first launch).
+    pub epoch: usize,
+    /// Ranks (in the failed epoch's numbering) that never reported back.
+    pub failed_ranks: Vec<usize>,
+    /// Ranks that survived and were renumbered into the rebuilt world.
+    pub survivors: Vec<usize>,
+    /// Step the rebuilt world resumed from (checkpoint or snapshot).
+    pub resume_step: usize,
+    /// Work lost to the failure: highest step a survivor reached minus the
+    /// resume step.
+    pub steps_replayed: usize,
+    /// Slowest survivor's rendezvous wait before the failure was
+    /// classified ([`CommError::waited`] — the detection latency).
+    pub detection_seconds: f64,
+    /// Longest per-rank drain of in-flight reduces to the consistent cut.
+    pub quiesce_seconds: f64,
+    /// Supervisor time to re-derive the topology and rebuild the world.
+    pub rebuild_seconds: f64,
+}
+
 /// Merged training outcome.
 #[derive(Debug)]
 pub struct TrainReport {
@@ -179,6 +245,9 @@ pub struct TrainReport {
     /// Final gradient bucket size in elements (see
     /// [`WorkerReport::bucket_elems_final`]).
     pub bucket_elems_final: usize,
+    /// Every failure→rebuild→resume episode, in order (empty for a clean
+    /// run).
+    pub recoveries: Vec<RecoveryEvent>,
 }
 
 impl TrainReport {
@@ -240,19 +309,17 @@ pub struct RunOptions {
 }
 
 /// Load the resume checkpoint named by `cfg.checkpoint_path`, if any.
-/// Missing file = fresh start; an unreadable/corrupt file is an error
-/// (silently restarting a long run from scratch would be worse).
+/// Missing files = fresh start; a corrupt newest generation falls back to
+/// the previous good one (`checkpoint_keep=` rotation), and only when
+/// *every* existing generation is unreadable is that an error (silently
+/// restarting a long run from scratch would be worse).
 fn load_resume(cfg: &TrainConfig) -> Result<Option<Checkpoint>> {
     if cfg.checkpoint_path.is_empty() {
         return Ok(None);
     }
     let path = Path::new(&cfg.checkpoint_path);
-    if !path.exists() {
-        return Ok(None);
-    }
-    Checkpoint::load(path)
+    Checkpoint::load_with_fallback(path, cfg.checkpoint_keep)
         .with_context(|| format!("resuming from {path:?}"))
-        .map(Some)
 }
 
 /// Build the comm world the config describes: the interconnect topology
@@ -296,58 +363,265 @@ fn build_comm_world(cfg: &TrainConfig, world: usize) -> Arc<CommWorld> {
             Topology::hierarchical(world, cfg.nodes.max(1), rings, intra, inter)
         }
     };
-    CommWorld::with_topology(topo, cfg.route)
+    CommWorld::with_topology_timeout(
+        topo,
+        cfg.route,
+        Duration::from_secs_f64(cfg.peer_timeout),
+    )
+}
+
+/// What became of one worker thread in one supervisor epoch.
+enum WorkerOutcome {
+    /// Finished the whole schedule.
+    Done(Box<WorkerReport>),
+    /// Fault injection crashed this rank at the given step (epoch 0 only);
+    /// dropping its `Collective` closes its engines, so peers observe the
+    /// death as ring disconnects.
+    Killed { step: usize },
+    /// A peer failure was detected; this rank quiesced and survived.
+    Lost(Box<LostReport>),
+}
+
+/// A surviving rank's account of a detected peer failure.
+struct LostReport {
+    rank: usize,
+    /// Step the failure surfaced at.
+    step: usize,
+    error: CommError,
+    /// Rank-replicated cadence-boundary snapshots (newest last) — the
+    /// resume states available when no durable checkpoint exists yet.
+    snaps: Vec<Checkpoint>,
+    /// Rendezvous wait before the failure was classified.
+    detection_seconds: f64,
+    /// Time spent draining in-flight reduces to the consistent cut.
+    quiesce_seconds: f64,
+}
+
+/// The survivor-set consensus: every respawned rank contributes its copy
+/// of the recovery decision (epoch, world size, survivor-set hash, resume
+/// step) to a Ctrl-tagged reduce and checks the ring mean equals its own
+/// vector bit-for-bit. The entries are small exact integers, so the mean
+/// of agreeing ranks is exact — any rank that derived a different survivor
+/// set or resume step makes the mean diverge from its local copy and the
+/// rebuilt world aborts *before* a single training step can fork state.
+fn commit_recovery(coll: &mut Collective, decision: &[f32]) -> Result<()> {
+    if coll.world() <= 1 {
+        return Ok(()); // a lone survivor has nobody to disagree with
+    }
+    let synced = coll.all_reduce_sync(
+        decision.to_vec(),
+        decision.len().max(1),
+        ReduceTag::Ctrl,
+    )?;
+    anyhow::ensure!(
+        synced == decision,
+        "survivor recovery decisions diverged: consensus {synced:?} vs \
+         local {decision:?}"
+    );
+    Ok(())
 }
 
 /// Run a full bilevel training job across `cfg.workers` simulated devices.
 /// With `cfg.checkpoint_path` set, resumes from that file when it exists
 /// and saves leader-side checkpoints into it as the run progresses.
+///
+/// Acts as the elastic supervisor (module docs: detection → quiesce →
+/// rebuild → resume): if ranks die mid-epoch, the survivors' reports drive
+/// a world rebuild over `Topology::survivors` and a resume from the last
+/// good checkpoint or in-memory snapshot; every episode is recorded in
+/// [`TrainReport::recoveries`].
 pub fn train(
     cfg: &TrainConfig,
     factory: &dyn ProblemFactory,
     opts: &RunOptions,
 ) -> Result<TrainReport> {
-    let world = cfg.workers.max(1);
-    let comm_world = build_comm_world(cfg, world);
-    // one load, shared by every rank: θ/λ are replicated across ranks by
-    // construction, so all workers restart from the leader's saved state
-    let resume = Arc::new(load_resume(cfg)?);
+    let world0 = cfg.workers.max(1);
+    let chaos0 = cfg.fault_plan()?;
     // detlint: allow(wallclock-in-decision) — whole-run wall clock for the
     // TrainReport; no routing or retune decision consumes it
     let t0 = Instant::now();
 
-    let reports: Vec<WorkerReport> = std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for rank in 0..world {
-            let comm_world = Arc::clone(&comm_world);
-            let resume = Arc::clone(&resume);
-            let cfg = cfg.clone();
-            let opts = opts.clone();
-            handles.push(scope.spawn(move || -> Result<WorkerReport> {
-                let mut coll = comm_world.join(rank);
-                let (mut problem, theta0, lambda0) =
-                    factory.build(rank, world)?;
-                run_worker(
-                    &cfg,
-                    factory.base_opt(),
-                    &opts,
-                    rank,
-                    problem.as_mut(),
-                    &mut coll,
-                    theta0,
-                    lambda0,
-                    resume.as_ref().as_ref(),
-                )
+    let mut comm_world = build_comm_world(cfg, world0);
+    // one load, shared by every rank: θ/λ are replicated across ranks by
+    // construction, so all workers restart from the leader's saved state
+    let mut resume: Arc<Option<Checkpoint>> = Arc::new(load_resume(cfg)?);
+    let mut recoveries: Vec<RecoveryEvent> = Vec::new();
+    // recovery decision respawned survivors must consense on before any
+    // training step runs on a rebuilt world
+    let mut decision: Option<Arc<Vec<f32>>> = None;
+
+    let reports: Vec<WorkerReport> = loop {
+        let epoch = recoveries.len();
+        let world = comm_world.world();
+        // fault injection fires in the first attempt only: a rebuilt
+        // survivor world must not re-kill on the replayed steps
+        let chaos = if epoch == 0 { chaos0 } else { None };
+
+        let outcomes: Vec<Result<WorkerOutcome>> =
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for rank in 0..world {
+                    let comm_world = Arc::clone(&comm_world);
+                    let resume = Arc::clone(&resume);
+                    let decision = decision.clone();
+                    let cfg = cfg.clone();
+                    let opts = opts.clone();
+                    handles.push(scope.spawn(
+                        move || -> Result<WorkerOutcome> {
+                            let mut coll = comm_world.join(rank);
+                            if let Some(d) = decision.as_deref() {
+                                commit_recovery(&mut coll, d)?;
+                            }
+                            let (mut problem, theta0, lambda0) =
+                                factory.build(rank, world)?;
+                            run_worker(
+                                &cfg,
+                                factory.base_opt(),
+                                &opts,
+                                rank,
+                                chaos,
+                                problem.as_mut(),
+                                &mut coll,
+                                theta0,
+                                lambda0,
+                                resume.as_ref().as_ref(),
+                            )
+                        },
+                    ));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| match h.join() {
+                        Ok(out) => out,
+                        // a panicked worker is a dead rank, not a dead
+                        // supervisor: survivors still quiesce and rebuild
+                        Err(_) => {
+                            Err(anyhow::anyhow!("worker thread panicked"))
+                        }
+                    })
+                    .collect()
+            });
+
+        let mut done: Vec<WorkerReport> = Vec::new();
+        let mut lost: Vec<LostReport> = Vec::new();
+        let mut failed_ranks: Vec<usize> = Vec::new();
+        let mut hard_err: Option<anyhow::Error> = None;
+        for (rank, out) in outcomes.into_iter().enumerate() {
+            match out {
+                Ok(WorkerOutcome::Done(rep)) => done.push(*rep),
+                Ok(WorkerOutcome::Lost(lr)) => lost.push(*lr),
+                Ok(WorkerOutcome::Killed { .. }) => failed_ranks.push(rank),
+                Err(e) => {
+                    failed_ranks.push(rank);
+                    hard_err = Some(e);
+                }
+            }
+        }
+
+        if failed_ranks.is_empty() && lost.is_empty() {
+            break done; // clean epoch: every rank finished the schedule
+        }
+        if lost.is_empty() {
+            if !done.is_empty() && hard_err.is_none() {
+                // the kill landed after the survivors' last collective op
+                // — the schedule completed; nothing to rebuild
+                break done;
+            }
+            // no survivor detected the failure (or a non-comm error took
+            // the rank down): nothing to recover onto
+            return Err(hard_err.unwrap_or_else(|| {
+                anyhow::anyhow!("every rank failed with no survivors")
             }));
         }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("worker panicked"))
-            .collect::<Result<Vec<_>>>()
-    })?;
+        if let Some(e) = &hard_err {
+            eprintln!("[coordinator] epoch {epoch}: rank failure: {e:#}");
+        }
+        anyhow::ensure!(
+            recoveries.len() < world0,
+            "recovery did not converge after {} attempts",
+            recoveries.len()
+        );
+
+        // ---- recovery: agree on survivors, rebuild, pick the resume cut
+        // detlint: allow(wallclock-in-decision) — rebuild-latency metric
+        // for the RecoveryEvent; the survivor set and resume step are
+        // derived from rank-replicated reports, never from this clock
+        let t_rebuild = Instant::now();
+        for l in &lost {
+            eprintln!(
+                "[coordinator] epoch {epoch}: rank {} lost peers at step \
+                 {}: {}",
+                l.rank, l.step, l.error
+            );
+        }
+        let mut survivors: Vec<usize> = done
+            .iter()
+            .map(|r| r.rank)
+            .chain(lost.iter().map(|l| l.rank))
+            .collect();
+        survivors.sort_unstable();
+
+        // Resume point: the newest good durable checkpoint generation
+        // wins; without one, the newest snapshot step every lost survivor
+        // holds (snapshots are rank-replicated, so any copy is THE state).
+        let resume_ck: Option<Checkpoint> = if !cfg.checkpoint_path.is_empty()
+        {
+            load_resume(cfg)?
+        } else {
+            let agreed = lost
+                .iter()
+                .map(|l| l.snaps.last().map_or(0, |c| c.step))
+                .min()
+                .unwrap_or(0);
+            lost.iter()
+                .flat_map(|l| &l.snaps)
+                .find(|c| c.step == agreed)
+                .cloned()
+        };
+        let resume_step = resume_ck.as_ref().map_or(0, |c| c.step as usize);
+        let failed_step =
+            lost.iter().map(|l| l.step).max().unwrap_or(resume_step);
+
+        let topo = comm_world.topology().survivors(&survivors);
+        comm_world = CommWorld::with_topology_timeout(
+            topo,
+            cfg.route,
+            comm_world.peer_timeout(),
+        );
+        // small exact integers survive the consensus ring mean bitwise
+        let member_hash = survivors.iter().fold(0u32, |h, &r| {
+            (h.wrapping_mul(31).wrapping_add(r as u32 + 1)) & 0xF_FFFF
+        });
+        decision = Some(Arc::new(vec![
+            (epoch + 1) as f32,
+            survivors.len() as f32,
+            member_hash as f32,
+            resume_step as f32,
+        ]));
+        resume = Arc::new(resume_ck);
+        recoveries.push(RecoveryEvent {
+            epoch,
+            failed_ranks,
+            survivors,
+            resume_step,
+            steps_replayed: failed_step.saturating_sub(resume_step),
+            detection_seconds: lost
+                .iter()
+                .map(|l| l.detection_seconds)
+                .fold(0.0, f64::max),
+            quiesce_seconds: lost
+                .iter()
+                .map(|l| l.quiesce_seconds)
+                .fold(0.0, f64::max),
+            rebuild_seconds: t_rebuild.elapsed().as_secs_f64(),
+        });
+    };
 
     let wall = t0.elapsed().as_secs_f64();
-    merge_reports(reports, world, wall)
+    let world_final = comm_world.world();
+    let mut report = merge_reports(reports, world_final, wall)?;
+    report.recoveries = recoveries;
+    Ok(report)
 }
 
 fn merge_reports(
@@ -379,6 +653,7 @@ fn merge_reports(
         weight_sums,
         weight_counts,
         bucket_elems_final: lead.bucket_elems_final,
+        recoveries: Vec::new(),
     })
 }
 
@@ -516,7 +791,7 @@ fn drain_lambda(
     match std::mem::replace(stream, LambdaStream::Idle) {
         LambdaStream::Idle => Ok(()),
         LambdaStream::InFlight(p) => {
-            let g_lambda = coll.wait(p);
+            let g_lambda = coll.wait(p)?;
             apply_lambda_step(problem, lambda, meta_state, &g_lambda)
         }
         LambdaStream::Ready(g_lambda) => {
@@ -540,17 +815,17 @@ fn submit_lambda_reduce(
     out: algos::MetaGradOut,
     theta: &mut [f32],
     scratch: &mut SamaScratch,
-) -> PendingReduce {
+) -> Result<PendingReduce, CommError> {
     let algos::MetaGradOut { grad, perturb_v, epsilon, .. } = out;
     let nudge = !perturb_v.is_empty() && epsilon > 0.0;
     if !cfg.stream_grads {
         let pending =
-            coll.all_reduce_async(grad, plan.elems(), ReduceTag::Lambda);
+            coll.all_reduce_async(grad, plan.elems(), ReduceTag::Lambda)?;
         if nudge {
             vecops::axpy(-epsilon, &perturb_v, theta);
         }
         scratch.recycle_v(perturb_v);
-        return pending;
+        return Ok(pending);
     }
     let n = grad.len();
     let bucket = plan.elems().max(1);
@@ -568,7 +843,7 @@ fn submit_lambda_reduce(
         let gend = (goff + bucket).min(n);
         let mut b = coll.take_bucket_buf(gend - goff);
         b.extend_from_slice(&grad[goff..gend]);
-        coll.submit_bucket(&mut pending, b);
+        coll.submit_bucket(&mut pending, b)?;
         goff = gend;
         if t_chunk > 0 && toff < theta.len() {
             let tend = (toff + t_chunk).min(theta.len());
@@ -585,7 +860,7 @@ fn submit_lambda_reduce(
     }
     scratch.recycle_grad(grad);
     scratch.recycle_v(perturb_v);
-    pending
+    Ok(pending)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -594,12 +869,13 @@ fn run_worker(
     base_opt_kind: BaseOpt,
     opts: &RunOptions,
     rank: usize,
+    chaos: Option<FaultPlan>,
     problem: &mut dyn BilevelProblem,
     coll: &mut Collective,
     mut theta: Vec<f32>,
     mut lambda: Vec<f32>,
     resume: Option<&Checkpoint>,
-) -> Result<WorkerReport> {
+) -> Result<WorkerOutcome> {
     let n_theta = problem.n_theta();
     let n_lambda = problem.n_lambda();
     anyhow::ensure!(theta.len() == n_theta, "θ₀ size");
@@ -624,8 +900,12 @@ fn run_worker(
     // T1–T2 / DARTS is definitionally one-step unrolling.
     let unroll = if cfg.algo == Algo::T1T2 { 1 } else { cfg.unroll.max(1) };
     // λ-reduce pipelining across the meta→base boundary: only meaningful
-    // (and only exercised) with a real interconnect.
-    let pipeline_lambda = cfg.overlap && coll.world() > 1;
+    // (and only exercised) with a real interconnect. Keyed off the
+    // CONFIGURED world, not the live one, so a survivor world rebuilt
+    // smaller (even down to one rank) replays the identical pipelined
+    // schedule and recovery stays bit-for-bit on the uninterrupted
+    // trajectory.
+    let pipeline_lambda = cfg.overlap && cfg.workers.max(1) > 1;
     // Layer-streamed base backward: θ buckets fire mid-backward.
     let stream_base = cfg.overlap && cfg.stream_grads;
     // Bucket auto-tuning needs streamed producer profiles and a real link;
@@ -701,11 +981,39 @@ fn run_worker(
     // (their peer never submits again) and train() would hang instead of
     // erroring. Finish the schedule, surface the failure at the end.
     let mut ck_err: Option<anyhow::Error> = None;
+    // In-memory recovery snapshots, kept only while fault injection is
+    // live: the last two cadence-boundary states, taken at the same
+    // schedule point on every rank. A snapshot is a pure function of
+    // rank-replicated state, so after a failure any survivor's newest
+    // copy IS the agreed resume state — this is what recovery lands on
+    // before the first durable checkpoint exists.
+    let snap_every =
+        if cfg.checkpoint_every > 0 { cfg.checkpoint_every } else { unroll };
+    let mut snaps: Vec<Checkpoint> = Vec::new();
+    let mut step_reached = start_step;
+    let mut step_killed: Option<usize> = None;
     // detlint: allow(wallclock-in-decision) — per-rank step-time attribution
     // for WorkerReport; no routing or retune decision consumes it
     let t_start = Instant::now();
 
+    // The step loop runs inside an immediately-invoked closure so a typed
+    // comm failure (`CommError` behind anyhow) unwinds HERE — where the
+    // λ stream and snapshots are still alive to quiesce and report — while
+    // all other errors keep propagating to the caller unchanged. The body
+    // keeps the enclosing indentation.
+    let loop_result: Result<()> = (|| -> Result<()> {
     for step in start_step..cfg.steps {
+        step_reached = step;
+        // Fault injection (`chaos=kill:rank@step`): this rank "crashes" at
+        // the top of the step — it just stops participating. The caller
+        // drops its `Collective`, closing its comm engines, so peers see
+        // ring disconnects and classify it as `CommError::PeerDead`.
+        if let Some(fp) = chaos {
+            if fp.kill_rank == rank && fp.kill_step == step {
+                step_killed = Some(step);
+                return Ok(());
+            }
+        }
         // ---- base pass -------------------------------------------------
         let g_synced = if stream_base {
             // Streamed: the backward emits gradient segments; full buckets
@@ -715,6 +1023,10 @@ fn run_worker(
             let bucket = plan.elems().max(1);
             let mut pending = coll.begin_reduce_sized(ReduceTag::Theta, n_theta);
             let mut buf: Vec<f32> = coll.take_bucket_buf(bucket);
+            // The streaming callback returns (), so a comm failure inside
+            // it is stashed here; further submissions/polls are skipped and
+            // the error surfaces right after the backward returns.
+            let mut stream_err: Option<CommError> = None;
             // detlint: allow(wallclock-in-decision) — producer-time profile;
             // BucketPlan::retune Ctrl-syncs it across ranks before deciding
             let t_produce = Instant::now();
@@ -723,6 +1035,7 @@ fn run_worker(
                 let pending = &mut pending;
                 let lam = &mut lambda_stream;
                 let buf = &mut buf;
+                let serr = &mut stream_err;
                 problem.base_grad_streamed(
                     &theta,
                     &lambda,
@@ -733,7 +1046,11 @@ fn run_worker(
                         // independently of θ-bucket gaps, so the poll is
                         // no longer tied to a θ submission
                         if let LambdaStream::InFlight(p) = lam {
-                            coll.try_progress(p);
+                            if serr.is_none() {
+                                if let Err(e) = coll.try_progress(p) {
+                                    *serr = Some(e);
+                                }
+                            }
                         }
                         let mut rest = seg;
                         while !rest.is_empty() {
@@ -743,9 +1060,19 @@ fn run_worker(
                             if buf.len() == bucket {
                                 let next = coll.take_bucket_buf(bucket);
                                 let full = std::mem::replace(buf, next);
-                                coll.submit_bucket(pending, full);
+                                if serr.is_none() {
+                                    if let Err(e) =
+                                        coll.submit_bucket(pending, full)
+                                    {
+                                        *serr = Some(e);
+                                    }
+                                }
                                 if let LambdaStream::InFlight(p) = lam {
-                                    coll.try_progress(p);
+                                    if serr.is_none() {
+                                        if let Err(e) = coll.try_progress(p) {
+                                            *serr = Some(e);
+                                        }
+                                    }
                                 }
                             }
                         }
@@ -753,8 +1080,11 @@ fn run_worker(
                 )?
             };
             let producer_secs = t_produce.elapsed().as_secs_f64();
+            if let Some(e) = stream_err {
+                return Err(e.into());
+            }
             if !buf.is_empty() {
-                coll.submit_bucket(&mut pending, buf);
+                coll.submit_bucket(&mut pending, buf)?;
             } else {
                 coll.recycle_bucket_buf(buf);
             }
@@ -776,11 +1106,11 @@ fn run_worker(
                 &mut weight_sums,
                 &mut weight_counts,
             );
-            let (g, profile) = coll.wait_profiled(pending);
+            let (g, profile) = coll.wait_profiled(pending)?;
             plan.observe(producer_secs, &profile);
             if plan.retune_due() {
                 let sync = if coll.world() > 1 { Some(&mut *coll) } else { None };
-                plan.retune(sync);
+                plan.retune(sync)?;
             }
             g
         } else {
@@ -798,8 +1128,11 @@ fn run_worker(
             let g = if cfg.overlap {
                 // submit first; bookkeeping fills the overlap window while
                 // the buckets circulate the ring
-                let pending =
-                    coll.all_reduce_async(grad, plan.elems(), ReduceTag::Theta);
+                let pending = coll.all_reduce_async(
+                    grad,
+                    plan.elems(),
+                    ReduceTag::Theta,
+                )?;
                 bookkeep(
                     &meta,
                     step,
@@ -808,12 +1141,12 @@ fn run_worker(
                     &mut weight_sums,
                     &mut weight_counts,
                 );
-                coll.wait(pending)
+                coll.wait(pending)?
             } else {
                 // ablation: block through the whole reduce, then do the
                 // same bookkeeping with nothing in flight
                 let g =
-                    coll.all_reduce_sync(grad, plan.elems(), ReduceTag::Theta);
+                    coll.all_reduce_sync(grad, plan.elems(), ReduceTag::Theta)?;
                 bookkeep(
                     &meta,
                     step,
@@ -879,14 +1212,14 @@ fn run_worker(
                     out,
                     &mut theta,
                     &mut scratch,
-                );
+                )?;
                 if pipeline_lambda {
                     // ... then let the reduce ride behind the next base
                     // forward + streamed backward; drained there as
                     // stream B.
                     lambda_stream = LambdaStream::InFlight(pending);
                 } else {
-                    let g_lambda = coll.wait(pending);
+                    let g_lambda = coll.wait(pending)?;
                     apply_lambda_step(
                         problem,
                         &mut lambda,
@@ -898,8 +1231,11 @@ fn run_worker(
                 // ablation: blocking semantics — the full reduce happens
                 // with the worker parked, the nudge strictly after.
                 let algos::MetaGradOut { grad, perturb_v, epsilon, .. } = out;
-                let g_lambda =
-                    coll.all_reduce_sync(grad, plan.elems(), ReduceTag::Lambda);
+                let g_lambda = coll.all_reduce_sync(
+                    grad,
+                    plan.elems(),
+                    ReduceTag::Lambda,
+                )?;
                 if !perturb_v.is_empty() && epsilon > 0.0 {
                     vecops::axpy(-epsilon, &perturb_v, &mut theta);
                 }
@@ -915,23 +1251,29 @@ fn run_worker(
             meta_loss.push(step as f64, problem.meta_loss(&theta, step)? as f64);
         }
 
-        // ---- leader-side checkpoint -------------------------------------
+        // ---- recovery cut: leader checkpoint + in-memory snapshots ------
         let ck_due = rank == 0
             && !cfg.checkpoint_path.is_empty()
             && ((cfg.checkpoint_every > 0
                 && (step + 1) % cfg.checkpoint_every == 0)
                 || step + 1 == cfg.steps);
-        if ck_due {
+        let snap_due = chaos.is_some()
+            && coll.world() > 1
+            && (step + 1) % snap_every == 0
+            && step + 1 < cfg.steps;
+        if ck_due || snap_due {
             // Resolve an in-flight λ-reduce to its reduced value without
             // applying the deferred step: the reduction is deterministic,
             // so waiting early here cannot change what the next step's
             // drain point will apply — the resumed schedule stays
-            // bit-for-bit identical to the uninterrupted one.
+            // bit-for-bit identical to the uninterrupted one. (Snapshots
+            // hit this on every rank at the same schedule point, so the
+            // early wait is itself a collective no-op.)
             if matches!(lambda_stream, LambdaStream::InFlight(_)) {
                 if let LambdaStream::InFlight(p) =
                     std::mem::replace(&mut lambda_stream, LambdaStream::Idle)
                 {
-                    lambda_stream = LambdaStream::Ready(coll.wait(p));
+                    lambda_stream = LambdaStream::Ready(coll.wait(p)?);
                 }
             }
             let pending = match &lambda_stream {
@@ -956,8 +1298,17 @@ fn run_worker(
                 sched_scale: sched.scale,
                 problem_state: problem.save_state(),
             };
-            if ck_err.is_none() {
-                if let Err(e) = ck.save(Path::new(&cfg.checkpoint_path)) {
+            if snap_due {
+                if snaps.len() >= 2 {
+                    snaps.remove(0);
+                }
+                snaps.push(ck.clone());
+            }
+            if ck_due && ck_err.is_none() {
+                if let Err(e) = ck.save_rotating(
+                    Path::new(&cfg.checkpoint_path),
+                    cfg.checkpoint_keep,
+                ) {
                     let e = e.context(format!(
                         "saving checkpoint to {}",
                         cfg.checkpoint_path
@@ -977,6 +1328,51 @@ fn run_worker(
         &mut meta_state,
         &mut lambda_stream,
     )?;
+    Ok(())
+    })();
+
+    if let Err(e) = loop_result {
+        return match e.downcast::<CommError>() {
+            Ok(err) => {
+                // Quiesce to the consistent cut: a completed in-flight
+                // λ-reduce keeps its deterministic value, an incomplete
+                // one is discarded as a unit (observability only — the
+                // resume state is the rank-replicated snapshot/checkpoint,
+                // never a partial reduce).
+                // detlint: allow(wallclock-in-decision) — quiesce-latency
+                // metric for the RecoveryEvent; the survivor set and
+                // resume step never read it (recovery decisions are
+                // rank-replicated via the Ctrl consensus reduce —
+                // docs/INVARIANTS.md invariant 7)
+                let t_quiesce = Instant::now();
+                if let LambdaStream::InFlight(p) =
+                    std::mem::replace(&mut lambda_stream, LambdaStream::Idle)
+                {
+                    if let Quiesced::Discarded { buckets_done, buckets } =
+                        coll.quiesce(p)
+                    {
+                        eprintln!(
+                            "[coordinator] rank {rank}: discarded \
+                             incomplete λ-reduce at the cut \
+                             ({buckets_done}/{buckets} buckets)"
+                        );
+                    }
+                }
+                Ok(WorkerOutcome::Lost(Box::new(LostReport {
+                    rank,
+                    step: step_reached,
+                    detection_seconds: err.waited().as_secs_f64(),
+                    quiesce_seconds: t_quiesce.elapsed().as_secs_f64(),
+                    error: err,
+                    snaps: std::mem::take(&mut snaps),
+                })))
+            }
+            Err(other) => Err(other),
+        };
+    }
+    if let Some(step) = step_killed {
+        return Ok(WorkerOutcome::Killed { step });
+    }
 
     // now that every collective op this rank owes its peers has run, a
     // deferred checkpoint failure can be surfaced: resumability was lost,
@@ -985,7 +1381,7 @@ fn run_worker(
         return Err(e);
     }
 
-    Ok(WorkerReport {
+    Ok(WorkerOutcome::Done(Box::new(WorkerReport {
         rank,
         final_theta: theta,
         final_lambda: lambda,
@@ -997,7 +1393,7 @@ fn run_worker(
         weight_counts,
         exec_seconds: t_start.elapsed().as_secs_f64(),
         bucket_elems_final: plan.elems(),
-    })
+    })))
 }
 
 /// One meta-gradient computation, preferring the fused L1 artifact for
@@ -1076,24 +1472,31 @@ pub fn train_single(
     let comm_world = CommWorld::new(1, LinkModel::instant());
     let mut coll = comm_world.join(0);
     let resume = load_resume(cfg)?;
-    run_worker(
+    match run_worker(
         cfg,
         base_opt,
         opts,
         0,
+        None,
         problem,
         &mut coll,
         theta0,
         lambda0,
         resume.as_ref(),
     )
-    .context("single-worker run")
+    .context("single-worker run")?
+    {
+        WorkerOutcome::Done(rep) => Ok(*rep),
+        // no peers and no fault plan: these variants are unreachable here
+        WorkerOutcome::Killed { .. } | WorkerOutcome::Lost(_) => {
+            anyhow::bail!("single-worker run cannot lose or kill ranks")
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
 
     use crate::bilevel::biased_regression::BiasedRegression;
     use crate::bilevel::BaseGrad;
@@ -1817,6 +2220,127 @@ mod tests {
             rep.bucket_elems_final, cfg.bucket_elems,
             "no retune may fire before the configured cadence"
         );
+    }
+
+    // ---- elastic fault tolerance -----------------------------------------
+
+    /// The tentpole's acceptance criterion: kill a worker at a chosen meta
+    /// step (deterministic chaos), and the survivors' rebuilt run must
+    /// land bit-for-bit on the uninterrupted run's trajectory. The
+    /// survivor resumes from the newest rotating checkpoint generation
+    /// (step 24 for a kill at 30 with `checkpoint_every=12`), replays the
+    /// lost steps, and finishes the schedule on a world rebuilt down to
+    /// one rank — the pipelined λ schedule is keyed off the configured
+    /// world, so the replay is the identical schedule.
+    #[test]
+    fn chaos_kill_recovers_and_matches_uninterrupted_trajectory() {
+        let dir = std::env::temp_dir().join("sama_chaos_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("chaos.ck");
+        for i in 0..4 {
+            std::fs::remove_file(Checkpoint::numbered(&path, i)).ok();
+        }
+        let spath = path.to_str().unwrap().to_string();
+
+        let uninterrupted =
+            train(&resume_cfg(60, ""), &BrFactory, &RunOptions::default())
+                .unwrap();
+        assert!(uninterrupted.recoveries.is_empty());
+
+        let mut cfg = resume_cfg(60, &spath);
+        cfg.checkpoint_every = 12;
+        cfg.chaos = "kill:1@30".into();
+        let rep = train(&cfg, &BrFactory, &RunOptions::default()).unwrap();
+
+        assert_eq!(rep.recoveries.len(), 1, "exactly one recovery episode");
+        let ev = &rep.recoveries[0];
+        assert_eq!(ev.epoch, 0);
+        assert_eq!(ev.failed_ranks, vec![1]);
+        assert_eq!(ev.survivors, vec![0]);
+        assert_eq!(
+            ev.resume_step, 24,
+            "kill at 30 must resume from the step-24 generation"
+        );
+        assert_eq!(ev.steps_replayed, 6);
+        assert!(ev.detection_seconds >= 0.0 && ev.rebuild_seconds >= 0.0);
+
+        assert_eq!(
+            rep.final_theta, uninterrupted.final_theta,
+            "survivor θ diverged from the uninterrupted trajectory"
+        );
+        assert_eq!(
+            rep.final_lambda, uninterrupted.final_lambda,
+            "survivor λ diverged from the uninterrupted trajectory"
+        );
+        for i in 0..4 {
+            std::fs::remove_file(Checkpoint::numbered(&path, i)).ok();
+        }
+    }
+
+    /// Recovery before the first durable checkpoint exists: with no
+    /// `checkpoint_path`, survivors resume from the newest rank-replicated
+    /// in-memory snapshot (taken at the `unroll` cadence while fault
+    /// injection is live) — still bit-for-bit on the uninterrupted run.
+    #[test]
+    fn chaos_recovery_from_in_memory_snapshots_without_checkpoint() {
+        let uninterrupted =
+            train(&resume_cfg(60, ""), &BrFactory, &RunOptions::default())
+                .unwrap();
+        let mut cfg = resume_cfg(60, "");
+        cfg.chaos = "kill:1@30".into();
+        let rep = train(&cfg, &BrFactory, &RunOptions::default()).unwrap();
+
+        assert_eq!(rep.recoveries.len(), 1);
+        let ev = &rep.recoveries[0];
+        assert_eq!(ev.failed_ranks, vec![1]);
+        assert_eq!(ev.survivors, vec![0]);
+        // snapshots ride the unroll(=3) cadence when checkpointing is off:
+        // the newest boundary at a kill at step 30 is step 30 itself
+        assert_eq!(ev.resume_step, 30);
+        assert_eq!(rep.final_theta, uninterrupted.final_theta, "θ diverged");
+        assert_eq!(
+            rep.final_lambda, uninterrupted.final_lambda,
+            "λ diverged"
+        );
+    }
+
+    /// The survivor-set consensus: agreeing ranks pass (small exact
+    /// integers survive the ring mean bitwise), and a rank that derived a
+    /// different resume step is detected on every rank before training.
+    #[test]
+    fn commit_recovery_agrees_and_detects_divergence() {
+        let agree = [2.0f32, 2.0, 7.0, 24.0];
+        let cw = CommWorld::new(2, LinkModel::instant());
+        std::thread::scope(|s| {
+            let h0 = s.spawn(|| {
+                let mut c = cw.join(0);
+                commit_recovery(&mut c, &agree)
+            });
+            let h1 = s.spawn(|| {
+                let mut c = cw.join(1);
+                commit_recovery(&mut c, &agree)
+            });
+            h0.join().unwrap().unwrap();
+            h1.join().unwrap().unwrap();
+        });
+
+        let cw = CommWorld::new(2, LinkModel::instant());
+        std::thread::scope(|s| {
+            let h0 = s.spawn(|| {
+                let mut c = cw.join(0);
+                commit_recovery(&mut c, &[2.0, 2.0, 7.0, 24.0])
+            });
+            let h1 = s.spawn(|| {
+                let mut c = cw.join(1);
+                commit_recovery(&mut c, &[2.0, 2.0, 7.0, 27.0])
+            });
+            let r0 = h0.join().unwrap();
+            let r1 = h1.join().unwrap();
+            assert!(
+                r0.is_err() && r1.is_err(),
+                "diverged recovery decision went undetected"
+            );
+        });
     }
 
     // ---- merge_reports ---------------------------------------------------

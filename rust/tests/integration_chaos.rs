@@ -1,0 +1,132 @@
+//! Chaos-lane integration test: kill a worker mid-run and require the
+//! survivors to detect, quiesce, rebuild, and resume — converging to the
+//! uninterrupted run's trajectory per the consistent-cut contract
+//! (`docs/INVARIANTS.md`, invariant 7).
+//!
+//! The fault point is environment-driven so CI can sweep the matrix:
+//!
+//! ```text
+//! SAMA_CHAOS_KILL=rank@step   (default 1@9; CI runs {0@5, 1@30})
+//! SAMA_TEST_TOPOLOGY=hier     also exercises the hierarchical rings
+//! ```
+//!
+//! Gradients here are rank-replicated (every rank builds the identical
+//! analytic problem), so a K-rank mean equals the single-rank gradient up
+//! to float rounding of the ring sums. The recovered run re-averages over
+//! the survivor world, so the comparison is tolerance-based, not bitwise —
+//! the bitwise contract for a *fixed* world is covered by the tier-1
+//! coordinator tests in `src/coordinator/mod.rs`.
+
+use sama::bilevel::biased_regression::BiasedRegression;
+use sama::bilevel::BilevelProblem;
+use sama::config::{Algo, TrainConfig};
+use sama::coordinator::{train, BaseOpt, ProblemFactory, RunOptions, TrainReport};
+use sama::tensor::vecops;
+use sama::util::rng::Rng;
+
+struct ReplicatedFactory;
+
+impl ProblemFactory for ReplicatedFactory {
+    fn build(
+        &self,
+        _rank: usize,
+        _world: usize,
+    ) -> anyhow::Result<(Box<dyn BilevelProblem>, Vec<f32>, Vec<f32>)> {
+        // Same seed on every rank: θ₀/λ₀ and the data are replicated, so
+        // the DDP mean is the local gradient (up to ring-sum rounding).
+        let mut rng = Rng::new(4242);
+        let p = BiasedRegression::random(&mut rng, 40, 30, 8, 2.0);
+        Ok((Box::new(p), vec![0.0; 8], vec![0.0; 8]))
+    }
+
+    fn base_opt(&self) -> BaseOpt {
+        BaseOpt::Sgd { momentum: 0.0 }
+    }
+}
+
+const STEPS: usize = 60;
+const WORLD: usize = 3;
+
+fn chaos_cfg(chaos: &str) -> TrainConfig {
+    TrainConfig {
+        algo: Algo::Sama,
+        steps: STEPS,
+        workers: WORLD,
+        unroll: 3,
+        base_lr: 0.002,
+        meta_lr: 0.3,
+        sama_alpha: 1.0,
+        solver_iters: 8,
+        // near-instant but real interconnect: the full pipelined schedule
+        // runs, and a dead peer cascades as channel disconnects (fast
+        // detection) rather than burning the liveness budget.
+        link_bandwidth: 1e12,
+        link_latency: 0.0,
+        bucket_auto: false,
+        chaos: chaos.into(),
+        ..TrainConfig::default()
+    }
+}
+
+fn run(chaos: &str) -> TrainReport {
+    train(&chaos_cfg(chaos), &ReplicatedFactory, &RunOptions::default())
+        .unwrap_or_else(|e| panic!("train(chaos={chaos:?}) failed: {e:?}"))
+}
+
+#[test]
+fn killed_worker_recovers_to_uninterrupted_trajectory() {
+    let (kill_rank, kill_step) = match std::env::var("SAMA_CHAOS_KILL") {
+        Ok(s) => {
+            let (r, st) = s.split_once('@').expect("SAMA_CHAOS_KILL=rank@step");
+            (r.parse::<usize>().unwrap(), st.parse::<usize>().unwrap())
+        }
+        Err(_) => (1, 9),
+    };
+    assert!(kill_rank < WORLD, "kill rank {kill_rank} outside world {WORLD}");
+    assert!(kill_step < STEPS, "kill step {kill_step} outside run {STEPS}");
+
+    let baseline = run("");
+    assert!(baseline.recoveries.is_empty(), "uninterrupted run recovered?");
+
+    let chaos = format!("kill:{kill_rank}@{kill_step}");
+    let report = run(&chaos);
+
+    // Exactly one recovery episode, attributing the injected fault.
+    assert_eq!(report.recoveries.len(), 1, "episodes: {:?}", report.recoveries);
+    let ev = &report.recoveries[0];
+    assert_eq!(ev.epoch, 0);
+    assert_eq!(ev.failed_ranks, vec![kill_rank]);
+    let survivors: Vec<usize> =
+        (0..WORLD).filter(|&r| r != kill_rank).collect();
+    assert_eq!(ev.survivors, survivors);
+    // The cut lands on the snapshot cadence at or before the fault, so the
+    // replay window is bounded by one cadence interval (unroll = 3 here,
+    // +1 for the ≤1-step rank skew at the kill point).
+    assert!(
+        ev.resume_step <= kill_step,
+        "resume step {} past the fault at {kill_step}",
+        ev.resume_step
+    );
+    assert!(
+        ev.steps_replayed <= 3 + 1,
+        "replayed {} steps — more than one snapshot interval",
+        ev.steps_replayed
+    );
+    assert!(ev.detection_seconds >= 0.0 && ev.quiesce_seconds >= 0.0);
+
+    // Survivors finish the full budget and land on the uninterrupted
+    // trajectory. The survivor world re-averages over K−1 ranks of
+    // replicated gradients, so agreement is tolerance-level (see module
+    // doc), not bitwise.
+    for (name, ours, base) in [
+        ("θ", &report.final_theta, &baseline.final_theta),
+        ("λ", &report.final_lambda, &baseline.final_lambda),
+    ] {
+        assert!(ours.iter().all(|x| x.is_finite()), "{name} not finite");
+        let d = vecops::rel_dist(ours, base);
+        assert!(
+            d < 1e-3,
+            "{name} diverged from uninterrupted run: rel dist {d}"
+        );
+    }
+}

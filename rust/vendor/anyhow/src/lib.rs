@@ -18,12 +18,16 @@ pub struct Error {
     /// `chain[0]` is the outermost context; the last entry is the root
     /// cause. Mirrors `anyhow`'s Debug rendering ("Caused by:" list).
     chain: Vec<String>,
+    /// The typed root cause, kept for [`Error::downcast`]. `None` for
+    /// message-only errors (`anyhow!` / `Error::msg`), exactly the cases
+    /// where the real crate's downcast also fails.
+    payload: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
     /// Build an error from a printable message.
     pub fn msg<M: Display>(message: M) -> Error {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], payload: None }
     }
 
     /// Wrap with an outer context layer (what `Context::context` does).
@@ -35,6 +39,32 @@ impl Error {
     /// The outermost message (matches `anyhow`'s `Display`).
     pub fn root_cause_message(&self) -> &str {
         self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Attempt to recover the typed root cause, as in the real crate:
+    /// context layers are looked *through* (downcasting targets the value
+    /// the error was originally built from), and a mismatch hands the
+    /// error back unchanged.
+    pub fn downcast<E>(self) -> Result<E, Error>
+    where
+        E: Display + fmt::Debug + Send + Sync + 'static,
+    {
+        let Error { chain, payload } = self;
+        match payload {
+            Some(p) => match p.downcast::<E>() {
+                Ok(e) => Ok(*e),
+                Err(p) => Err(Error { chain, payload: Some(p) }),
+            },
+            None => Err(Error { chain, payload: None }),
+        }
+    }
+
+    /// Borrowing variant of [`Error::downcast`].
+    pub fn downcast_ref<E>(&self) -> Option<&E>
+    where
+        E: Display + fmt::Debug + Send + Sync + 'static,
+    {
+        self.payload.as_ref().and_then(|p| p.downcast_ref::<E>())
     }
 }
 
@@ -71,7 +101,7 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
             chain.push(s.to_string());
             src = s.source();
         }
-        Error { chain }
+        Error { chain, payload: Some(Box::new(err)) }
     }
 }
 
@@ -187,6 +217,24 @@ mod tests {
         let e = r.with_context(|| format!("layer {}", 1)).unwrap_err();
         assert_eq!(format!("{e}"), "layer 1");
         assert!(format!("{e:?}").contains("root"));
+    }
+
+    #[test]
+    fn downcast_recovers_typed_root_through_context() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "disk gone");
+        let e: Error = Error::from(io).context("saving checkpoint");
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+        // wrong type hands the error back with its chain intact
+        let e = match e.downcast::<std::fmt::Error>() {
+            Ok(_) => panic!("must not downcast to the wrong type"),
+            Err(e) => e,
+        };
+        assert!(format!("{e}").contains("saving checkpoint"));
+        // right type recovers the original value
+        let io = e.downcast::<std::io::Error>().unwrap();
+        assert_eq!(io.to_string(), "disk gone");
+        // message-only errors have no typed root
+        assert!(anyhow!("plain").downcast::<std::io::Error>().is_err());
     }
 
     #[test]
