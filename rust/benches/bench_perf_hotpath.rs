@@ -19,9 +19,9 @@ use sama::collective::{
     BucketPlan, CommStats, CommWorld, LinkModel, LinkProfile, ReduceTag,
     RoutePolicy, Topology,
 };
-use sama::config::{Algo, MetaOps, TrainConfig};
+use sama::config::{Algo, MetaOps, TrainConfig, ZeroKnob};
 use sama::coordinator::{
-    train, BaseOpt, ProblemFactory, RecoveryEvent, RunOptions,
+    train, BaseOpt, ProblemFactory, RecoveryEvent, RunOptions, TrainReport,
 };
 use sama::data::wrench_sim;
 use sama::metrics::report::{f2, Table};
@@ -277,6 +277,36 @@ fn probe_recovery() -> RecoveryEvent {
         .clone()
 }
 
+/// ZeRO-1 measured-bytes probe: the same analytic problem trained twice
+/// on 3 ranks — optimizer state replicated (`zero=0`) vs sharded
+/// (`zero=1`) — reporting each rank's *measured* optimizer bytes (buffer
+/// capacities, not the model) and the sharded run's reduce-scatter /
+/// all-gather wire split. Final parameters are bitwise-identical between
+/// the two runs (the tier-1 contract); this probe tracks the memory and
+/// wire sides of that trade across PRs.
+fn probe_zero() -> (TrainReport, TrainReport) {
+    let run = |zero: ZeroKnob| {
+        let cfg = TrainConfig {
+            algo: Algo::Sama,
+            steps: 30,
+            workers: 3,
+            unroll: 3,
+            base_lr: 0.002,
+            meta_lr: 0.3,
+            sama_alpha: 1.0,
+            solver_iters: 8,
+            link_bandwidth: 1e12,
+            link_latency: 0.0,
+            bucket_auto: false,
+            zero,
+            ..TrainConfig::default()
+        };
+        train(&cfg, &RecoveryFactory, &RunOptions::default())
+            .expect("zero probe train failed")
+    };
+    (run(ZeroKnob::Off), run(ZeroKnob::On))
+}
+
 /// Collective overlap probe (artifact-free): blocking vs overlapped vs
 /// auto-tuned-streamed, on a 50 MB/s link, plus the multi-ring contention
 /// split and the topology routing probe. Also emits the machine-readable
@@ -290,6 +320,7 @@ fn comm_overlap_probe() {
     let route_tag = probe_routing(RoutePolicy::Tag);
     let route_sized = probe_routing(RoutePolicy::Sized);
     let recovery = probe_recovery();
+    let (zero_off, zero_on) = probe_zero();
 
     let mut t = Table::new(
         "§Perf: collective overlap probe (256 KiB ×8, 2 ranks, 50 MB/s link)",
@@ -408,6 +439,44 @@ fn comm_overlap_probe() {
          replayed = steps between the resume cut and the fault."
     );
 
+    let sum_bytes = |rep: &TrainReport| -> u64 {
+        rep.opt_state_bytes.iter().sum()
+    };
+    let wire = |rep: &TrainReport, f: fn(&CommStats) -> u64| -> u64 {
+        rep.comm.iter().map(f).sum()
+    };
+    let mut zt = Table::new(
+        "§Perf: ZeRO-1 probe (analytic problem, 3 ranks, measured \
+         optimizer bytes per rank)",
+        &[
+            "mode",
+            "opt bytes/rank",
+            "total opt bytes",
+            "rs wire B",
+            "ag wire B",
+        ],
+    );
+    for (name, rep) in [("replicated", &zero_off), ("zero=1", &zero_on)] {
+        zt.row(vec![
+            name.into(),
+            rep.opt_state_bytes
+                .iter()
+                .map(|b| b.to_string())
+                .collect::<Vec<_>>()
+                .join("/"),
+            sum_bytes(rep).to_string(),
+            wire(rep, |c| c.rs_bytes_sent).to_string(),
+            wire(rep, |c| c.ag_bytes_sent).to_string(),
+        ]);
+    }
+    zt.print();
+    println!(
+        "opt bytes are measured buffer capacities (m+v, base+meta): under \
+         zero=1 each rank keeps only its owned shard (~1/world), paying \
+         for it with the reduce-scatter/all-gather wire split on non-meta \
+         steps — final θ/λ stay bitwise-identical to the replicated run."
+    );
+
     // machine-readable perf trajectory (consumed across PRs; artifact-free)
     let num = Json::Num;
     let mut obj: BTreeMap<String, Json> = BTreeMap::new();
@@ -498,6 +567,38 @@ fn comm_overlap_probe() {
     obj.insert(
         "recovery_resume_step".into(),
         num(recovery.resume_step as f64),
+    );
+    obj.insert(
+        "zero_opt_bytes_per_rank_replicated".into(),
+        Json::Arr(
+            zero_off
+                .opt_state_bytes
+                .iter()
+                .map(|b| Json::Num(*b as f64))
+                .collect(),
+        ),
+    );
+    obj.insert(
+        "zero_opt_bytes_per_rank_sharded".into(),
+        Json::Arr(
+            zero_on
+                .opt_state_bytes
+                .iter()
+                .map(|b| Json::Num(*b as f64))
+                .collect(),
+        ),
+    );
+    obj.insert(
+        "zero_opt_bytes_ratio".into(),
+        num(sum_bytes(&zero_on) as f64 / sum_bytes(&zero_off).max(1) as f64),
+    );
+    obj.insert(
+        "zero_rs_wire_bytes".into(),
+        num(wire(&zero_on, |c| c.rs_bytes_sent) as f64),
+    );
+    obj.insert(
+        "zero_ag_wire_bytes".into(),
+        num(wire(&zero_on, |c| c.ag_bytes_sent) as f64),
     );
     obj.insert("world".into(), num(2.0));
     obj.insert("link_bandwidth".into(), num(PROBE_LINK.bandwidth));

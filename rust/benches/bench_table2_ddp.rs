@@ -19,8 +19,8 @@ mod common;
 
 use sama::apps::wrench;
 use sama::collective::{ReduceTag, RoutePolicy, TopologyKind};
-use sama::config::Algo;
-use sama::metrics::memory::{gib, peak_bytes, ArchSpec};
+use sama::config::{Algo, ZeroKnob};
+use sama::metrics::memory::{gib, peak_bytes_zero, ArchSpec};
 use sama::metrics::report::{f1, f2, slash_join, Table};
 
 struct Row {
@@ -31,6 +31,7 @@ struct Row {
     rings: usize,
     route: RoutePolicy,
     topology: TopologyKind,
+    zero: bool,
 }
 
 impl Row {
@@ -43,6 +44,7 @@ impl Row {
             rings: 2,
             route: RoutePolicy::Sized,
             topology: TopologyKind::Flat,
+            zero: false,
         }
     }
 }
@@ -66,6 +68,8 @@ fn main() {
             "ring busy (s)",
             "ring qdepth",
             "bucket KiB (final)",
+            "opt B/rank (measured)",
+            "rs/ag wire (KiB)",
         ],
     );
     let rows: Vec<Row> = vec![
@@ -90,6 +94,11 @@ fn main() {
             ..Row::new("sama topo=hier", Algo::Sama, 2, "cls_b24")
         },
         Row::new("sama", Algo::Sama, 4, "cls_b12"),
+        // ZeRO-1 optimizer-state sharding: same schedule, each rank keeps
+        // 1/W of the Adam moments — θ goes reduce-scatter → owner step →
+        // all-gather on non-meta steps, bitwise-identical final θ/λ
+        Row { zero: true, ..Row::new("sama zero=1", Algo::Sama, 2, "cls_b24") },
+        Row { zero: true, ..Row::new("sama zero=1", Algo::Sama, 4, "cls_b12") },
     ];
     for row in rows {
         let mut cfg = common::wrench_cfg();
@@ -100,9 +109,17 @@ fn main() {
         cfg.rings = row.rings;
         cfg.route = row.route;
         cfg.topology = row.topology;
+        cfg.zero = if row.zero { ZeroKnob::On } else { ZeroKnob::Off };
         let out = wrench::run(&cfg, "agnews").expect("run");
         let per_worker_batch = 48 / row.workers;
-        let mem = gib(peak_bytes(row.algo, &arch, 48, row.workers as u64, 10));
+        let mem = gib(peak_bytes_zero(
+            row.algo,
+            &arch,
+            48,
+            row.workers as u64,
+            10,
+            row.zero,
+        ));
         let totals = out.report.comm_totals();
         let tag_hidden =
             |tag: ReduceTag| 100.0 * totals.tag(tag).hidden_fraction();
@@ -130,6 +147,26 @@ fn main() {
                 totals.per_ring.iter().map(|r| r.queue_depth_hwm.to_string()),
             ),
             format!("{:.0}", out.report.bucket_elems_final as f64 * 4.0 / 1024.0),
+            slash_join(
+                out.report.opt_state_bytes.iter().map(|b| b.to_string()),
+            ),
+            format!(
+                "{}/{}",
+                f1(out
+                    .report
+                    .comm
+                    .iter()
+                    .map(|c| c.rs_bytes_sent)
+                    .sum::<u64>() as f64
+                    / 1024.0),
+                f1(out
+                    .report
+                    .comm
+                    .iter()
+                    .map(|c| c.ag_bytes_sent)
+                    .sum::<u64>() as f64
+                    / 1024.0)
+            ),
         ]);
     }
     t.print();
@@ -152,7 +189,12 @@ fn main() {
          size/occupancy routing) and `sama topo=hier` (two NUMA-like nodes\n\
          with a derated inter-node fabric — topology=hier, nodes=,\n\
          intra_*/inter_* knobs). bucket KiB is the auto-tuner's final\n\
-         (rank-identical) pick — set bucket_elems= to pin it."
+         (rank-identical) pick — set bucket_elems= to pin it. opt B/rank\n\
+         is each rank's *measured* optimizer-state bytes (m+v buffer\n\
+         capacities, base+meta): the zero=1 rows hold ~1/W of the\n\
+         replicated rows' state while training to bitwise-identical θ/λ,\n\
+         paying the rs/ag wire split (reduce-scatter grads in, all-gather\n\
+         θ out on non-meta steps; 0/0 on replicated rows)."
     );
     println!(
         "paper Table 2 reference (GB, samples/s): Neumann 26.0/82.9, \

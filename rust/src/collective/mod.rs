@@ -18,6 +18,22 @@
 //!    [`ReduceTag`] and owns a private done channel, so multiple reduces
 //!    (θ and λ) can be in flight simultaneously and waited in *any* order.
 //!    [`CommStats`] attributes comm/blocked seconds per tag;
+//!  * **first-class half collectives** — a ring all-reduce is a
+//!    reduce-scatter phase (W−1 summing hops) followed by an all-gather
+//!    phase (W−1 copy hops). [`CollOp`] exposes each phase as its own
+//!    tagged, bucketed, streamed operation on the *same* engines:
+//!    [`Collective::begin_reduce_scatter_sized`] leaves each rank's owned
+//!    bucket-chunk ([`owner_chunk`]/[`chunk_range`]) fully summed and
+//!    averaged, [`Collective::begin_all_gather_sized`] circulates owned
+//!    chunks back to every rank verbatim. Both reuse the hop buffers, tag
+//!    routing, failure cascade and done-channel protocol, move half the
+//!    wire bytes of a full all-reduce ((W−1)/W of the payload per rank,
+//!    split out as [`CommStats::rs_bytes_sent`]/`ag_bytes_sent`), and are
+//!    costed as single-phase ops by the [`RingScheduler`]. This is the
+//!    substrate for the coordinator's ZeRO-1 sharded optimizer schedule
+//!    (`zero=1`): reduce-scatter(ĝ) → owner-shard update → all-gather(θ),
+//!    with shard boundaries derived from [`owned_ranges`] — the one
+//!    chokepoint for shard-partition arithmetic (invariant 8);
 //!  * **multiple independent rings per rank, each with a concrete path** —
 //!    [`CommWorld::with_topology`] spawns `R` comm engines per rank, each
 //!    with its own cycle of neighbor channels (the NCCL-channel analogue).
@@ -288,10 +304,110 @@ impl ReduceTag {
     }
 }
 
+/// Which ring exchange an operation runs. A full all-reduce is the
+/// reduce-scatter phase followed by the all-gather phase; the half ops run
+/// exactly one of the two over the same engines, hop buffers and failure
+/// paths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollOp {
+    /// Both phases: every rank ends with the full averaged buffer.
+    AllReduce,
+    /// Summing phase only: each rank ends with its owned bucket-chunk
+    /// ([`owner_chunk`]) fully summed *and averaged*; all other chunk
+    /// positions hold partial sums and must be treated as garbage.
+    ReduceScatter,
+    /// Copy phase only: each rank contributes its owned bucket-chunk and
+    /// ends with every chunk holding its owner's contribution verbatim
+    /// (bitwise — no arithmetic happens in this phase).
+    AllGather,
+}
+
+impl CollOp {
+    /// Ring phases this op executes (cost model + wire-byte factor): an
+    /// all-reduce moves `2(W−1)/W` of the payload per rank, a half op
+    /// `(W−1)/W`.
+    pub fn phases(self) -> u32 {
+        match self {
+            CollOp::AllReduce => 2,
+            CollOp::ReduceScatter | CollOp::AllGather => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CollOp::AllReduce => "all_reduce",
+            CollOp::ReduceScatter => "reduce_scatter",
+            CollOp::AllGather => "all_gather",
+        }
+    }
+}
+
+/// Within one bucket of `n` elements ring-exchanged across `world` ranks,
+/// the half-open element range of chunk `c` — the chunk partition every
+/// ring phase circulates. Bucket boundaries and this split together define
+/// shard ownership, so this is THE chunk arithmetic: the engines, the
+/// coordinator's shard maps and the checkpoint re-shard all call it
+/// (ad-hoc copies are exactly how boundaries diverge across ranks — see
+/// `docs/INVARIANTS.md` invariant 8).
+pub fn chunk_range(c: usize, n: usize, world: usize) -> std::ops::Range<usize> {
+    let world = world.max(1);
+    let base = n / world;
+    let rem = n % world;
+    let start = c * base + c.min(rem);
+    let len = base + usize::from(c < rem);
+    start..start + len
+}
+
+/// The bucket-chunk `rank` owns after a reduce-scatter: the chunk whose
+/// summing circulation *ends* at `rank` (chunk `c` starts at rank `c` and
+/// accumulates through rank `c − 1 mod W`). Rank-replicated by
+/// construction.
+pub fn owner_chunk(rank: usize, world: usize) -> usize {
+    (rank + 1) % world.max(1)
+}
+
+/// Shard map: the `(start, len)` slices of an `n`-element stream that
+/// `rank` owns when the stream is reduce-scattered in buckets of
+/// `bucket_elems`. Within every bucket the rank owns its
+/// [`owner_chunk`]'s [`chunk_range`]; across ranks the ranges tile the
+/// stream exactly. All inputs are rank-replicated (problem dimension,
+/// synced bucket size, agreed world), so every rank derives the identical
+/// partition — the shard-ownership contract of invariant 8.
+pub fn owned_ranges(
+    n: usize,
+    bucket_elems: usize,
+    world: usize,
+    rank: usize,
+) -> Vec<(usize, usize)> {
+    let bucket_elems = bucket_elems.max(1);
+    let world = world.max(1);
+    let own = owner_chunk(rank, world);
+    let mut ranges = Vec::new();
+    let mut off = 0usize;
+    while off < n {
+        let len = bucket_elems.min(n - off);
+        let r = chunk_range(own, len, world);
+        if !r.is_empty() {
+            ranges.push((off + r.start, r.len()));
+        }
+        off += len;
+    }
+    ranges
+}
+
+/// Total elements of an [`owned_ranges`] shard map.
+pub fn owned_len(ranges: &[(usize, usize)]) -> usize {
+    ranges.iter().map(|&(_, len)| len).sum()
+}
+
 /// Per-tag slice of the aggregate counters.
 #[derive(Clone, Debug, Default)]
 pub struct TagStats {
     pub reduces: u64,
+    /// All-gathers opened under this tag (counted apart from `reduces` so
+    /// the θ-reduce cadence stays comparable between the replicated and
+    /// sharded schedules).
+    pub gathers: u64,
     pub buckets: u64,
     pub comm_seconds: f64,
     pub blocked_seconds: f64,
@@ -346,7 +462,14 @@ pub struct RingStats {
 #[derive(Clone, Debug, Default)]
 pub struct CommStats {
     pub reduces: u64,
+    /// All-gathers opened (see [`TagStats::gathers`]).
+    pub gathers: u64,
     pub bytes_sent: u64,
+    /// Wire bytes of `bytes_sent` moved by standalone reduce-scatters —
+    /// the benches' rs/ag split for the sharded (`zero=1`) schedule.
+    pub rs_bytes_sent: u64,
+    /// Wire bytes of `bytes_sent` moved by standalone all-gathers.
+    pub ag_bytes_sent: u64,
     /// Seconds the comm engines spent ring-reducing (per-bucket, summed) —
     /// total engine occupancy, i.e. `wire + peer-wait + copy overhead`.
     pub comm_seconds: f64,
@@ -414,13 +537,17 @@ impl CommStats {
     /// Fold another worker's counters into this one (fleet aggregation).
     pub fn merge(&mut self, other: &CommStats) {
         self.reduces += other.reduces;
+        self.gathers += other.gathers;
         self.bytes_sent += other.bytes_sent;
+        self.rs_bytes_sent += other.rs_bytes_sent;
+        self.ag_bytes_sent += other.ag_bytes_sent;
         self.comm_seconds += other.comm_seconds;
         self.blocked_seconds += other.blocked_seconds;
         self.wire_seconds += other.wire_seconds;
         self.peer_wait_seconds += other.peer_wait_seconds;
         for (mine, theirs) in self.per_tag.iter_mut().zip(&other.per_tag) {
             mine.reduces += theirs.reduces;
+            mine.gathers += theirs.gathers;
             mine.buckets += theirs.buckets;
             mine.comm_seconds += theirs.comm_seconds;
             mine.blocked_seconds += theirs.blocked_seconds;
@@ -456,6 +583,8 @@ struct JobMsg {
     job: u64,
     bucket: u32,
     offset: usize,
+    /// Which ring exchange to run on this bucket (both phases, or one).
+    op: CollOp,
     data: Vec<f32>,
     /// Per-bucket completion (or the typed failure that ended the ring).
     done_tx: Sender<Result<BucketDone, CommError>>,
@@ -497,6 +626,10 @@ pub struct Collective {
     /// rounded once (a per-call integer division would truncate ~world
     /// bytes per reduce and drift with call count).
     bytes_exact: f64,
+    /// Exact wire bytes of standalone reduce-scatters / all-gathers (the
+    /// benches' rs/ag split; same round-once discipline).
+    rs_bytes_exact: f64,
+    ag_bytes_exact: f64,
     /// Recycled bucket payload buffers: [`Collective::absorb`] banks every
     /// completed bucket's allocation here, and submitters take them back
     /// via [`Collective::take_bucket_buf`] — so after warm-up the worker
@@ -511,6 +644,8 @@ pub struct Collective {
 pub struct PendingReduce {
     id: u64,
     tag: ReduceTag,
+    /// Ring exchange this operation runs (all-reduce, or one half).
+    op: CollOp,
     /// Ring this reduce was routed to (fixed at `begin_reduce`).
     ring: usize,
     /// Buckets submitted so far.
@@ -539,6 +674,11 @@ impl PendingReduce {
 
     pub fn tag(&self) -> ReduceTag {
         self.tag
+    }
+
+    /// Ring exchange this operation runs.
+    pub fn op(&self) -> CollOp {
+        self.op
     }
 
     /// Ring this reduce rides (the scheduler's routing decision) —
@@ -743,6 +883,8 @@ impl CommWorld {
             ring_inflight: vec![0; rings],
             sync_busy_base: vec![0.0; rings],
             bytes_exact: 0.0,
+            rs_bytes_exact: 0.0,
+            ag_bytes_exact: 0.0,
             spare_buckets: Vec::new(),
         }
     }
@@ -797,7 +939,7 @@ impl Drop for CommWorld {
 /// happen in any order.
 ///
 /// **Failure handling.** The engine itself never panics. When the ring
-/// rendezvous fails ([`ring_all_reduce`] returns a [`CommError`]), the
+/// rendezvous fails ([`ring_collective`] returns a [`CommError`]), the
 /// engine (1) drops its outgoing ring sender so the failure cascades to
 /// the ring successor as an immediate disconnect — every survivor detects
 /// in one ring-hop of channel teardown instead of each waiting out the
@@ -823,7 +965,9 @@ fn comm_engine(
     // Some until the first rendezvous failure; dropped to cascade it.
     let mut to_next = Some(to_next);
     let mut failed: Option<CommError> = None;
-    while let Ok(JobMsg { job, bucket, offset, mut data, done_tx }) = job_rx.recv() {
+    while let Ok(JobMsg { job, bucket, offset, op, mut data, done_tx }) =
+        job_rx.recv()
+    {
         if let Some(err) = &failed {
             // Failed state: the ring is gone; fail every queued/future job
             // with the original classification (a dropped PendingReduce on
@@ -837,7 +981,8 @@ fn comm_engine(
         let (mut wire_secs, mut peer_secs) = (0.0f64, 0.0f64);
         if world > 1 {
             let res = match to_next.as_ref() {
-                Some(tx) => ring_all_reduce(
+                Some(tx) => ring_collective(
+                    op,
                     rank,
                     world,
                     ring,
@@ -862,10 +1007,26 @@ fn comm_engine(
                 failed = Some(err);
                 continue;
             }
-            // average (DDP semantics)
+            // Average (DDP semantics). A reduce-scatter averages only the
+            // owned chunk — the same multiply the full all-reduce applies
+            // to that chunk, so the sharded schedule's owned values are
+            // bitwise those of the replicated one. An all-gather moves
+            // already-averaged data and must not touch it.
             let inv = 1.0 / world as f32;
-            for x in data.iter_mut() {
-                *x *= inv;
+            match op {
+                CollOp::AllReduce => {
+                    for x in data.iter_mut() {
+                        *x *= inv;
+                    }
+                }
+                CollOp::ReduceScatter => {
+                    let own =
+                        chunk_range(owner_chunk(rank, world), data.len(), world);
+                    for x in data[own].iter_mut() {
+                        *x *= inv;
+                    }
+                }
+                CollOp::AllGather => {}
             }
         }
         let secs = t0.elapsed().as_secs_f64();
@@ -883,7 +1044,13 @@ fn comm_engine(
     }
 }
 
-/// Textbook ring all-reduce (reduce-scatter + all-gather) over one bucket.
+/// Textbook ring collective over one bucket: the reduce-scatter phase
+/// (W−1 summing hops), the all-gather phase (W−1 copy hops), or both —
+/// a full all-reduce is exactly the two phases back-to-back, so the half
+/// ops are the same loops gated by `op`. A standalone
+/// [`CollOp::AllGather`] requires only each rank's [`owner_chunk`] to be
+/// valid on entry (every other chunk position is overwritten), which is
+/// precisely what a standalone [`CollOp::ReduceScatter`] left there.
 /// `spare` is the recycled hop buffer (see [`comm_engine`]). `wire_secs`
 /// accumulates time spent on the simulated link (hop sleeps); `peer_secs`
 /// accumulates time blocked in the rendezvous waiting for the ring
@@ -899,7 +1066,8 @@ fn comm_engine(
 /// dropped). On error, `buf` holds partial sums — the caller must discard
 /// the bucket, never expose it.
 #[allow(clippy::too_many_arguments)]
-fn ring_all_reduce(
+fn ring_collective(
+    op: CollOp,
     rank: usize,
     world: usize,
     ring: usize,
@@ -915,13 +1083,8 @@ fn ring_all_reduce(
     peer_secs: &mut f64,
 ) -> Result<(), CommError> {
     let n = buf.len();
-    let chunk_of = |c: usize| -> std::ops::Range<usize> {
-        let base = n / world;
-        let rem = n % world;
-        let start = c * base + c.min(rem);
-        let len = base + usize::from(c < rem);
-        start..start + len
-    };
+    // The one chunk partition (shared with the coordinator's shard maps).
+    let chunk_of = |c: usize| chunk_range(c, n, world);
     // One rendezvous with the ring predecessor: the detector. The waited
     // duration rides the error as the detection-latency metric.
     let rendezvous = |peer_secs: &mut f64| -> Result<RingMsg, CommError> {
@@ -940,8 +1103,10 @@ fn ring_all_reduce(
             RecvTimeoutError::Timeout => CommError::PeerTimeout { ring, waited },
         })
     };
-    // reduce-scatter: after step r, rank owns partial sums flowing around
-    for r in 0..world - 1 {
+    // reduce-scatter phase: after step r, rank owns partial sums flowing
+    // around; skipped when the op is a standalone all-gather
+    let run_rs = matches!(op, CollOp::AllReduce | CollOp::ReduceScatter);
+    for r in 0..if run_rs { world - 1 } else { 0 } {
         let send_c = (rank + world - r) % world;
         let range = chunk_of(send_c);
         let mut chunk = std::mem::take(spare);
@@ -965,8 +1130,10 @@ fn ring_all_reduce(
         }
         *spare = msg.chunk; // recycle the received allocation
     }
-    // all-gather: circulate the fully-reduced chunks
-    for r in 0..world - 1 {
+    // all-gather phase: circulate the fully-reduced (owned) chunks;
+    // skipped when the op is a standalone reduce-scatter
+    let run_ag = matches!(op, CollOp::AllReduce | CollOp::AllGather);
+    for r in 0..if run_ag { world - 1 } else { 0 } {
         let send_c = (rank + 1 + world - r) % world;
         let range = chunk_of(send_c);
         let mut chunk = std::mem::take(spare);
@@ -1099,16 +1266,56 @@ impl Collective {
         tag: ReduceTag,
         hint_elems: usize,
     ) -> PendingReduce {
+        self.begin_op_sized(CollOp::AllReduce, tag, hint_elems)
+    }
+
+    /// Open a streaming reduce-scatter: the same bucket protocol as
+    /// [`begin_reduce_sized`](Collective::begin_reduce_sized), but each
+    /// bucket comes back with only this rank's [`owner_chunk`] fully summed
+    /// and averaged — every other chunk position is a partial sum and must
+    /// be treated as garbage ([`owned_ranges`] names the valid slices).
+    pub fn begin_reduce_scatter_sized(
+        &mut self,
+        tag: ReduceTag,
+        hint_elems: usize,
+    ) -> PendingReduce {
+        self.begin_op_sized(CollOp::ReduceScatter, tag, hint_elems)
+    }
+
+    /// Open a streaming all-gather: each submitted bucket needs only this
+    /// rank's [`owner_chunk`] valid; the completed bucket holds every
+    /// owner's chunk verbatim (no arithmetic — the copy phase is bitwise).
+    /// Counted as a gather, not a reduce, in [`CommStats`].
+    pub fn begin_all_gather_sized(
+        &mut self,
+        tag: ReduceTag,
+        hint_elems: usize,
+    ) -> PendingReduce {
+        self.begin_op_sized(CollOp::AllGather, tag, hint_elems)
+    }
+
+    fn begin_op_sized(
+        &mut self,
+        op: CollOp,
+        tag: ReduceTag,
+        hint_elems: usize,
+    ) -> PendingReduce {
         let id = self.next_job;
         self.next_job += 1;
-        self.stats.reduces += 1;
-        self.stats.per_tag[tag.idx()].reduces += 1;
-        let ring = self.sched.route(tag, hint_elems);
+        if op == CollOp::AllGather {
+            self.stats.gathers += 1;
+            self.stats.per_tag[tag.idx()].gathers += 1;
+        } else {
+            self.stats.reduces += 1;
+            self.stats.per_tag[tag.idx()].reduces += 1;
+        }
+        let ring = self.sched.route_phases(tag, hint_elems, op.phases());
         self.stats.per_ring[ring].reduces += 1;
         let (done_tx, done_rx) = channel::<Result<BucketDone, CommError>>();
         PendingReduce {
             id,
             tag,
+            op,
             ring,
             buckets: 0,
             buckets_done: 0,
@@ -1142,6 +1349,7 @@ impl Collective {
             job: pending.id,
             bucket: pending.buckets,
             offset,
+            op: pending.op,
             data,
             done_tx: pending
                 .done_tx
@@ -1156,14 +1364,28 @@ impl Collective {
         }
         pending.out.resize(offset + elems, 0.0);
         pending.buckets += 1;
-        // exact ring traffic: 2(K−1)/K of the payload per rank, kept in f64
-        // and rounded once (per-bucket integer division would truncate)
-        self.bytes_exact += (elems * 4) as f64 * 2.0
+        // exact ring traffic: phases·(K−1)/K of the payload per rank (2 for
+        // a full all-reduce, 1 for a half op), kept in f64 and rounded once
+        // (per-bucket integer division would truncate)
+        let wire = (elems * 4) as f64
+            * pending.op.phases() as f64
             * (self.world as f64 - 1.0)
             / self.world as f64;
+        self.bytes_exact += wire;
         self.stats.bytes_sent = self.bytes_exact.round() as u64;
+        match pending.op {
+            CollOp::AllReduce => {}
+            CollOp::ReduceScatter => {
+                self.rs_bytes_exact += wire;
+                self.stats.rs_bytes_sent = self.rs_bytes_exact.round() as u64;
+            }
+            CollOp::AllGather => {
+                self.ag_bytes_exact += wire;
+                self.stats.ag_bytes_sent = self.ag_bytes_exact.round() as u64;
+            }
+        }
         self.stats.per_tag[pending.tag.idx()].buckets += 1;
-        self.sched.charge(ring, elems);
+        self.sched.charge_phases(ring, elems, pending.op.phases());
         self.stats.per_ring[ring].buckets += 1;
         self.ring_inflight[ring] += 1;
         let hwm = &mut self.stats.per_ring[ring].queue_depth_hwm;
@@ -1180,8 +1402,20 @@ impl Collective {
         bucket_elems: usize,
         tag: ReduceTag,
     ) -> Result<PendingReduce, CommError> {
+        self.op_async(CollOp::AllReduce, data, bucket_elems, tag)
+    }
+
+    /// [`all_reduce_async`](Collective::all_reduce_async) generalized over
+    /// the ring exchange: the same bucketed submission for any [`CollOp`].
+    pub fn op_async(
+        &mut self,
+        op: CollOp,
+        data: Vec<f32>,
+        bucket_elems: usize,
+        tag: ReduceTag,
+    ) -> Result<PendingReduce, CommError> {
         let bucket_elems = bucket_elems.max(1);
-        let mut pending = self.begin_reduce_sized(tag, data.len());
+        let mut pending = self.begin_op_sized(op, tag, data.len());
         if data.len() <= bucket_elems {
             // single bucket: move the buffer, no copy
             self.submit_bucket(&mut pending, data)?;
@@ -1308,6 +1542,35 @@ impl Collective {
         tag: ReduceTag,
     ) -> Result<Vec<f32>, CommError> {
         let p = self.all_reduce_async(data, bucket_elems, tag)?;
+        self.wait(p)
+    }
+
+    /// Blocking reduce-scatter: the returned buffer is full-width, but only
+    /// this rank's [`owned_ranges`] slices (per `bucket_elems`) are fully
+    /// summed and averaged — everything else is partial sums, garbage by
+    /// contract. Composes with
+    /// [`all_gather_sync`](Collective::all_gather_sync) into a bitwise
+    /// all-reduce.
+    pub fn reduce_scatter_sync(
+        &mut self,
+        data: Vec<f32>,
+        bucket_elems: usize,
+        tag: ReduceTag,
+    ) -> Result<Vec<f32>, CommError> {
+        let p = self.op_async(CollOp::ReduceScatter, data, bucket_elems, tag)?;
+        self.wait(p)
+    }
+
+    /// Blocking all-gather: only this rank's [`owned_ranges`] slices of
+    /// `data` need to be valid; the returned buffer holds every owner's
+    /// slices verbatim (the copy phase does no arithmetic).
+    pub fn all_gather_sync(
+        &mut self,
+        data: Vec<f32>,
+        bucket_elems: usize,
+        tag: ReduceTag,
+    ) -> Result<Vec<f32>, CommError> {
+        let p = self.op_async(CollOp::AllGather, data, bucket_elems, tag)?;
         self.wait(p)
     }
 
@@ -2175,6 +2438,156 @@ mod tests {
             "bytes {} vs exact {expect}",
             out[0][0]
         );
+    }
+
+    // ---- half collectives (reduce-scatter / all-gather) -------------------
+
+    /// The shard-partition contract (invariant 8): for any stream length ×
+    /// bucket size × world, the per-rank [`owned_ranges`] are disjoint and
+    /// tile the stream exactly, and [`owned_len`] sums to ~n/world each.
+    #[test]
+    fn owned_ranges_tile_the_stream_exactly() {
+        for (n, bucket, world) in [
+            (131usize, 32usize, 3usize),
+            (1000, 250, 4),
+            (17, 5, 3),
+            (7, 100, 4),
+            (64, 16, 1),
+            (5, 3, 8), // more ranks than elements: some shards empty
+        ] {
+            let mut covered = vec![0u32; n];
+            let mut total = 0usize;
+            for rank in 0..world {
+                let ranges = owned_ranges(n, bucket, world, rank);
+                total += owned_len(&ranges);
+                for (start, len) in ranges {
+                    for c in &mut covered[start..start + len] {
+                        *c += 1;
+                    }
+                }
+            }
+            assert_eq!(total, n, "n={n} bucket={bucket} world={world}");
+            assert!(
+                covered.iter().all(|&c| c == 1),
+                "n={n} bucket={bucket} world={world}: ranges overlap or leave \
+                 gaps"
+            );
+        }
+    }
+
+    /// The tentpole's composition contract: reduce-scatter ∘ all-gather
+    /// must equal a full all-reduce **bitwise** — per rank, per element —
+    /// across rings ∈ {1,2,3} × {flat, heterogeneous} topologies, and the
+    /// reduce-scatter's owned slices must already hold the all-reduce's
+    /// values (the owner-chunk average is the same multiply).
+    #[test]
+    fn reduce_scatter_then_all_gather_matches_all_reduce_bitwise() {
+        let world = 3usize;
+        let fast = LinkProfile { latency: 1e-6, bytes_per_sec: 1e9 };
+        let slow = LinkProfile { latency: 5e-5, bytes_per_sec: 5e7 };
+        let bucket = 32usize;
+        let mut reference: Option<Vec<Vec<f32>>> = None;
+        for rings in [1usize, 2, 3] {
+            for hier in [false, true] {
+                let topo = if hier {
+                    Topology::hierarchical(world, 2, rings, fast, slow)
+                } else {
+                    Topology::flat(world, rings, fast)
+                };
+                let out = run_world_topo(topo, RoutePolicy::Sized, |rank, coll| {
+                    let data: Vec<f32> = (0..131)
+                        .map(|i| (i as f32) * 0.713 - 1.7 * rank as f32)
+                        .collect();
+                    let ar = coll
+                        .all_reduce_sync(data.clone(), bucket, ReduceTag::Theta)
+                        .unwrap();
+                    let rs = coll
+                        .reduce_scatter_sync(data, bucket, ReduceTag::Theta)
+                        .unwrap();
+                    // owned slices already carry the all-reduce's bits
+                    for (start, len) in
+                        owned_ranges(rs.len(), bucket, coll.world(), rank)
+                    {
+                        assert_eq!(
+                            rs[start..start + len],
+                            ar[start..start + len],
+                            "rank {rank}: owned slice differs from all-reduce"
+                        );
+                    }
+                    let ag = coll
+                        .all_gather_sync(rs, bucket, ReduceTag::Theta)
+                        .unwrap();
+                    assert_eq!(ag, ar, "rank {rank}: rs∘ag != all_reduce");
+                    ag
+                });
+                let ctx = format!("rings={rings} hier={hier}");
+                match &reference {
+                    None => reference = Some(out),
+                    Some(r) => {
+                        assert!(r == &out, "{ctx} changed the gathered values")
+                    }
+                }
+            }
+        }
+    }
+
+    /// Half-op accounting: a standalone reduce-scatter or all-gather moves
+    /// (K−1)/K of the payload per rank — half an all-reduce — split out as
+    /// `rs_bytes_sent`/`ag_bytes_sent`; the all-gather is counted as a
+    /// gather (per-tag and aggregate), never a reduce, so the θ-reduce
+    /// cadence stays comparable between the replicated and sharded
+    /// schedules.
+    #[test]
+    fn half_op_bytes_and_gather_attribution() {
+        let out = run_world(4, LinkModel::instant(), |_, coll| {
+            let rs = coll
+                .reduce_scatter_sync(vec![1.0; 1000], 250, ReduceTag::Theta)
+                .unwrap();
+            let _ = coll
+                .all_gather_sync(rs, 250, ReduceTag::Theta)
+                .unwrap();
+            let st = coll.stats();
+            assert_eq!(st.reduces, 1, "rs counts as a reduce");
+            assert_eq!(st.gathers, 1, "ag counts as a gather");
+            assert_eq!(st.tag(ReduceTag::Theta).reduces, 1);
+            assert_eq!(st.tag(ReduceTag::Theta).gathers, 1);
+            vec![
+                st.bytes_sent as f32,
+                st.rs_bytes_sent as f32,
+                st.ag_bytes_sent as f32,
+            ]
+        });
+        // each half op: (K−1)/K · bytes = 3/4 · 4000
+        let half = (1000.0 * 4.0) * 3.0 / 4.0;
+        for o in &out {
+            assert!((o[0] - 2.0 * half).abs() < 0.5, "total {} vs {}", o[0], 2.0 * half);
+            assert!((o[1] - half).abs() < 0.5, "rs {} vs {half}", o[1]);
+            assert!((o[2] - half).abs() < 0.5, "ag {} vs {half}", o[2]);
+        }
+    }
+
+    /// A merged fleet report carries the gather/rs/ag counters.
+    #[test]
+    fn stats_merge_carries_gather_and_split_counters() {
+        let mut a = CommStats {
+            gathers: 2,
+            rs_bytes_sent: 100,
+            ag_bytes_sent: 50,
+            ..CommStats::default()
+        };
+        a.per_tag[ReduceTag::Theta.idx()].gathers = 2;
+        let mut b = CommStats {
+            gathers: 3,
+            rs_bytes_sent: 10,
+            ag_bytes_sent: 5,
+            ..CommStats::default()
+        };
+        b.per_tag[ReduceTag::Theta.idx()].gathers = 3;
+        a.merge(&b);
+        assert_eq!(a.gathers, 5);
+        assert_eq!(a.rs_bytes_sent, 110);
+        assert_eq!(a.ag_bytes_sent, 55);
+        assert_eq!(a.tag(ReduceTag::Theta).gathers, 5);
     }
 
     // ---- BucketPlan -------------------------------------------------------

@@ -27,7 +27,17 @@
 //!    instead of queueing behind a fat θ transfer. Measured per-ring busy
 //!    seconds, rank-averaged through the existing Ctrl-tagged retune
 //!    reduce (like `BucketPlan` profiles), correct the model via a
-//!    per-ring scale factor.
+//!    per-ring scale factor. Two realism refinements keep the model
+//!    honest: occupancy clocks *decay* geometrically per submission
+//!    ([`OCCUPANCY_DECAY`]) so an old fat transfer stops dominating once
+//!    it has long since drained (cumulative clocks made the router
+//!    balance against all of history), and each ring's cost is multiplied
+//!    by its *fabric share* ([`Topology::ring_share`]) — the number of
+//!    rings riding the same physical link at the ring's most-contended
+//!    hop — because two rings on one link split its bytes/sec. Costs are
+//!    phase-aware ([`RingScheduler::est_cost_phases`]): a half collective
+//!    (reduce-scatter or all-gather) runs W−1 of an all-reduce's 2(W−1)
+//!    steps and is charged exactly half.
 //!
 //! **Determinism contract.** Every scheduler input is rank-replicated: the
 //! submission sequence (DDP contract), bucket sizes (`BucketPlan` is
@@ -118,16 +128,23 @@ impl RingPath {
             .fold(0.0, f64::max)
     }
 
-    /// Analytic ring all-reduce seconds for one bucket of `elems` f32s:
-    /// 2(K−1) steps, each moving ≈ elems/K elements, each gated by the
-    /// path's slowest hop. The per-path generalization of
-    /// [`LinkModel::ring_bucket_secs`].
-    pub fn reduce_secs(&self, elems: usize, world: usize) -> f64 {
+    /// Analytic seconds of *one ring phase* (reduce-scatter or all-gather)
+    /// for a bucket of `elems` f32s: K−1 steps, each moving ≈ elems/K
+    /// elements, each gated by the path's slowest hop. A standalone half
+    /// collective costs exactly this; a full all-reduce costs two.
+    pub fn phase_secs(&self, elems: usize, world: usize) -> f64 {
         if world <= 1 {
             return 0.0;
         }
         let chunk_bytes = elems.div_ceil(world) * 4;
-        (2 * (world - 1)) as f64 * self.step_secs(chunk_bytes)
+        (world - 1) as f64 * self.step_secs(chunk_bytes)
+    }
+
+    /// Analytic ring all-reduce seconds for one bucket of `elems` f32s:
+    /// both phases of [`phase_secs`](RingPath::phase_secs). The per-path
+    /// generalization of [`LinkModel::ring_bucket_secs`].
+    pub fn reduce_secs(&self, elems: usize, world: usize) -> f64 {
+        2.0 * self.phase_secs(elems, world)
     }
 }
 
@@ -170,6 +187,33 @@ pub struct Topology {
     /// the same rule. Flat topologies store the one profile in both.
     intra: LinkProfile,
     inter: LinkProfile,
+    /// Per-ring fabric share (see [`Topology::ring_share`]), derived from
+    /// the paths at construction.
+    shares: Vec<f64>,
+}
+
+/// Per-ring fabric share: at every hop position, rings whose paths name an
+/// identical [`LinkProfile`] are modelled as riding the *same physical
+/// link* (that is how the constructors assign them — the fabric ring and
+/// an affinity ring's node-crossing hops both name `inter`); a link
+/// carrying S rings splits its bytes/sec S ways. A ring's share is the
+/// ring count of its most-contended hop — the bottleneck a full-ring
+/// transfer is gated by.
+fn link_shares(paths: &[RingPath]) -> Vec<f64> {
+    paths
+        .iter()
+        .map(|path| {
+            let mut share = 1usize;
+            for (i, hop) in path.hops().iter().enumerate() {
+                let riders = paths
+                    .iter()
+                    .filter(|p| p.hops()[i] == *hop)
+                    .count();
+                share = share.max(riders);
+            }
+            share as f64
+        })
+        .collect()
 }
 
 impl Topology {
@@ -181,12 +225,16 @@ impl Topology {
     /// exactly the pre-topology collective.
     pub fn flat(world: usize, rings: usize, p: LinkProfile) -> Topology {
         let world = world.max(1);
+        let paths =
+            vec![RingPath::uniform(world, p); Self::clamp_rings(rings)];
+        let shares = link_shares(&paths);
         Topology {
             world,
             node_of: vec![0; world],
-            paths: vec![RingPath::uniform(world, p); Self::clamp_rings(rings)],
+            paths,
             intra: p,
             inter: p,
+            shares,
         }
     }
 
@@ -228,7 +276,8 @@ impl Topology {
         for _ in 1..rings {
             paths.push(RingPath { hops: affinity_hops.clone() });
         }
-        Topology { world, node_of, paths, intra, inter }
+        let shares = link_shares(&paths);
+        Topology { world, node_of, paths, intra, inter, shares }
     }
 
     /// Compatibility constructor for flat-link callers
@@ -280,6 +329,14 @@ impl Topology {
 
     pub fn path(&self, ring: usize) -> &RingPath {
         &self.paths[ring]
+    }
+
+    /// How many rings ride `ring`'s most-contended physical link (≥ 1) —
+    /// the bandwidth-sharing factor the scheduler multiplies into the
+    /// ring's modelled cost. Pure topology arithmetic, rank-replicated by
+    /// construction.
+    pub fn ring_share(&self, ring: usize) -> f64 {
+        self.shares[ring]
     }
 
     /// Re-derive this topology over the surviving subset of its ranks —
@@ -336,12 +393,14 @@ impl Topology {
         for _ in 1..rings {
             paths.push(RingPath { hops: affinity_hops.clone() });
         }
+        let shares = link_shares(&paths);
         Topology {
             world,
             node_of,
             paths,
             intra: self.intra,
             inter: self.inter,
+            shares,
         }
     }
 }
@@ -386,6 +445,15 @@ pub struct SchedulerState {
     pub window_est: Vec<f64>,
     pub scale: Vec<f64>,
 }
+
+/// Geometric decay applied to every ring's occupancy clock at each charge:
+/// load submitted long ago has long since drained off the wire, so it must
+/// stop dominating routing (a cumulative clock balances against all of
+/// history — after one fat transfer it keeps penalizing that ring
+/// forever). Decay is per *submission*, not per wall-clock second, so the
+/// clock stays a pure function of the rank-replicated submission sequence
+/// (invariant 1). 0.875 halves a charge's influence in ~5 submissions.
+pub const OCCUPANCY_DECAY: f64 = 0.875;
 
 /// Deterministic per-rank ring router (one instance per [`Collective`],
 /// all instances bitwise in lockstep — see the module doc's determinism
@@ -435,25 +503,48 @@ impl RingScheduler {
         self.epoch
     }
 
-    /// Modelled seconds a reduce of `elems` f32s costs on `ring` (analytic
-    /// ring all-reduce over that ring's path; `elems` is floored to 1 so a
-    /// size-unknown hint still pays the latency term).
+    /// Modelled seconds a full all-reduce of `elems` f32s costs on `ring`.
     pub fn est_cost(&self, ring: usize, elems: usize) -> f64 {
-        self.topo.path(ring).reduce_secs(elems.max(1), self.topo.world())
+        self.est_cost_phases(ring, elems, 2)
     }
 
-    /// Pick the ring for a reduce opened with `hint_elems` expected
+    /// Modelled seconds an op of `phases` ring phases (2 = all-reduce,
+    /// 1 = reduce-scatter or all-gather) over `elems` f32s costs on
+    /// `ring`: per-phase path cost × phases × the ring's fabric share
+    /// ([`Topology::ring_share`] — a link carrying S rings serves each at
+    /// 1/S of its rate). `elems` is floored to 1 so a size-unknown hint
+    /// still pays the latency term.
+    pub fn est_cost_phases(&self, ring: usize, elems: usize, phases: u32) -> f64 {
+        self.topo.ring_share(ring)
+            * phases as f64
+            * self.topo.path(ring).phase_secs(elems.max(1), self.topo.world())
+    }
+
+    /// Pick the ring for an all-reduce opened with `hint_elems` expected
     /// elements (0 = unknown → latency-only cost). Pure: the charge
     /// happens per submitted bucket via
     /// [`charge`](RingScheduler::charge).
     pub fn route(&self, tag: ReduceTag, hint_elems: usize) -> usize {
+        self.route_phases(tag, hint_elems, 2)
+    }
+
+    /// [`route`](RingScheduler::route) for an op of `phases` ring phases —
+    /// a half collective bids half an all-reduce's cost, so it can win a
+    /// ring a full reduce of the same size would lose.
+    pub fn route_phases(
+        &self,
+        tag: ReduceTag,
+        hint_elems: usize,
+        phases: u32,
+    ) -> usize {
         match self.policy {
             RoutePolicy::Tag => tag.ring(self.rings()),
             RoutePolicy::Sized => {
                 let mut best = 0usize;
                 let mut best_t = f64::INFINITY;
                 for (r, busy) in self.est_busy.iter().enumerate() {
-                    let t = self.scale[r] * (busy + self.est_cost(r, hint_elems));
+                    let t = self.scale[r]
+                        * (busy + self.est_cost_phases(r, hint_elems, phases));
                     if t < best_t {
                         best_t = t;
                         best = r;
@@ -464,10 +555,24 @@ impl RingScheduler {
         }
     }
 
-    /// Charge one submitted bucket of `elems` f32s to `ring`'s virtual
-    /// clock (actual sizes, not the route-time hint).
+    /// Charge one submitted all-reduce bucket of `elems` f32s to `ring`'s
+    /// occupancy clock (actual sizes, not the route-time hint).
     pub fn charge(&mut self, ring: usize, elems: usize) {
-        let c = self.est_cost(ring, elems);
+        self.charge_phases(ring, elems, 2);
+    }
+
+    /// [`charge`](RingScheduler::charge) for an op of `phases` ring
+    /// phases. Every ring's occupancy clock first decays by
+    /// [`OCCUPANCY_DECAY`] (old load has drained; see the constant's doc),
+    /// then the routed ring is charged this bucket's modelled cost. The
+    /// profile window `window_est` stays *cumulative and undecayed*: it is
+    /// the denominator matched against measured engine-busy seconds, which
+    /// do not decay either.
+    pub fn charge_phases(&mut self, ring: usize, elems: usize, phases: u32) {
+        for b in self.est_busy.iter_mut() {
+            *b *= OCCUPANCY_DECAY;
+        }
+        let c = self.est_cost_phases(ring, elems, phases);
         self.est_busy[ring] += c;
         self.window_est[ring] += c;
     }
@@ -695,6 +800,114 @@ mod tests {
             decisions.push((r_fat, r_small, sched.state()));
         }
         assert_eq!(decisions[0], decisions[1], "ranks diverged");
+    }
+
+    /// A half collective costs exactly half the all-reduce on every path,
+    /// and the phase split matches the closed form: K−1 steps of the
+    /// slowest hop.
+    #[test]
+    fn phase_cost_is_half_an_all_reduce() {
+        let topo = Topology::hierarchical(6, 2, 2, fast(), slow());
+        for ring in 0..2 {
+            for elems in [1usize, 1000, 1 << 16] {
+                let phase = topo.path(ring).phase_secs(elems, 6);
+                let full = topo.path(ring).reduce_secs(elems, 6);
+                assert!((2.0 * phase - full).abs() < 1e-15);
+                let step = topo.path(ring).step_secs(elems.div_ceil(6) * 4);
+                assert!((phase - 5.0 * step).abs() < 1e-15);
+            }
+        }
+        let sched = RingScheduler::new(
+            Arc::new(Topology::hierarchical(2, 1, 2, fast(), slow())),
+            RoutePolicy::Sized,
+        );
+        for ring in 0..2 {
+            assert!(
+                (sched.est_cost_phases(ring, 4096, 1) * 2.0
+                    - sched.est_cost(ring, 4096))
+                .abs()
+                    < 1e-15
+            );
+        }
+    }
+
+    /// Fabric shares: identical-profile hops are one physical link, so a
+    /// flat R-ring world shares every link R ways; distinct slow/fast
+    /// rings share nothing; a hierarchy's rings all meet on the inter
+    /// fabric at node crossings.
+    #[test]
+    fn fabric_shares_count_rings_per_link() {
+        let flat = Topology::flat(4, 2, fast());
+        assert_eq!(flat.ring_share(0), 2.0);
+        assert_eq!(flat.ring_share(1), 2.0);
+        // distinct profiles end-to-end: no sharing
+        let pair = Topology::hierarchical(2, 1, 2, fast(), slow());
+        assert_eq!(pair.ring_share(0), 1.0);
+        assert_eq!(pair.ring_share(1), 1.0);
+        // fabric ring + affinity ring both ride `inter` on the crossing
+        // hops: both gated by a 2-way shared link
+        let hier = Topology::hierarchical(6, 2, 2, fast(), slow());
+        assert_eq!(hier.ring_share(0), 2.0);
+        assert_eq!(hier.ring_share(1), 2.0);
+        // three rings: two identical affinity rings + fabric all meet at
+        // the crossings
+        let three = Topology::hierarchical(6, 2, 3, fast(), slow());
+        for r in 0..3 {
+            assert_eq!(three.ring_share(r), 3.0, "ring {r}");
+        }
+        // survivors re-derive shares over the rebuilt paths
+        let surv = three.survivors(&[0, 2, 3, 4, 5]);
+        for r in 0..3 {
+            assert_eq!(surv.ring_share(r), 3.0, "survivor ring {r}");
+        }
+        // single ring never shares
+        assert_eq!(Topology::flat(4, 1, fast()).ring_share(0), 1.0);
+    }
+
+    /// Occupancy decays per submission while the profile window stays
+    /// cumulative (it is matched against measured seconds, which do not
+    /// decay), and the decay lets a ring win routing back once an old fat
+    /// transfer has faded — the case cumulative clocks got wrong forever.
+    #[test]
+    fn occupancy_decays_and_frees_a_ring_again() {
+        let topo = Arc::new(Topology::flat(2, 1, slow()));
+        let mut sched = RingScheduler::new(topo, RoutePolicy::Sized);
+        let c = sched.est_cost(0, 4096);
+        sched.charge(0, 4096);
+        sched.charge(0, 4096);
+        let st = sched.state();
+        assert!(
+            (st.est_busy[0] - (c * OCCUPANCY_DECAY + c)).abs() < 1e-15,
+            "clock must decay the first charge before adding the second"
+        );
+        assert!(
+            (st.window_est[0] - 2.0 * c).abs() < 1e-15,
+            "profile window must stay cumulative"
+        );
+
+        // slow fabric ring + fast affinity ring: after one fat transfer on
+        // the fast ring, a small reduce immediately avoids it — but as the
+        // fat charge decays over later submissions, the small traffic
+        // returns to the fast ring instead of paying the slow one forever
+        let topo = Arc::new(Topology::hierarchical(2, 1, 2, fast(), slow()));
+        let mut sched = RingScheduler::new(topo, RoutePolicy::Sized);
+        let fat = 1 << 19;
+        let small = 256;
+        let r_fat = sched.route(ReduceTag::Theta, fat);
+        assert_eq!(r_fat, 1);
+        sched.charge(r_fat, fat);
+        let mut routes = Vec::new();
+        for _ in 0..40 {
+            let r = sched.route(ReduceTag::Ctrl, small);
+            sched.charge(r, small);
+            routes.push(r);
+        }
+        assert_eq!(*routes.first().unwrap(), 0, "fat transfer still fresh");
+        assert_eq!(
+            *routes.last().unwrap(),
+            1,
+            "decayed clock must hand the fast ring back to small traffic"
+        );
     }
 
     #[test]

@@ -68,6 +68,70 @@ pub enum MetaOps {
     ReweightCorrect,
 }
 
+/// ZeRO-1 optimizer-state sharding knob (`zero=`).
+///
+/// `Off` runs the replicated schedule (every rank holds full Adam m/v and
+/// steps full-width); `On` shards optimizer state across ranks: θ-grads
+/// reduce-scatter, each rank Adam-steps only the shard it owns, updated θ
+/// all-gathers back. Results are bitwise-identical either way — this is a
+/// memory knob (per-rank optimizer bytes drop ~1/world), so CI sweeps it
+/// like a topology. `Auto` (the default) reads the `SAMA_ZERO` env var so
+/// the CI matrix can flip sharding without touching configs, mirroring
+/// `TopologyKind::flat_or_env`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ZeroKnob {
+    /// Resolve from `SAMA_ZERO` (unset/other → off, `1` → on).
+    Auto,
+    /// Replicated optimizer state (today's schedule).
+    Off,
+    /// ZeRO-1 sharded optimizer state.
+    On,
+}
+
+impl ZeroKnob {
+    pub fn parse(s: &str) -> Result<ZeroKnob> {
+        Ok(match s {
+            "auto" => ZeroKnob::Auto,
+            "0" | "off" | "false" => ZeroKnob::Off,
+            "1" | "on" | "true" => ZeroKnob::On,
+            _ => bail!("unknown zero '{s}' (want 0|1|auto)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ZeroKnob::Auto => "auto",
+            ZeroKnob::Off => "0",
+            ZeroKnob::On => "1",
+        }
+    }
+
+    /// Resolve to the effective on/off bool. `Auto` consults `SAMA_ZERO`
+    /// once per process (with a stderr notice when it flips sharding on,
+    /// so CI logs show which leg ran).
+    pub fn resolved(&self) -> bool {
+        match self {
+            ZeroKnob::Off => false,
+            ZeroKnob::On => true,
+            ZeroKnob::Auto => {
+                let on = std::env::var("SAMA_ZERO")
+                    .map(|v| v.trim() == "1")
+                    .unwrap_or(false);
+                if on {
+                    static NOTICE: std::sync::Once = std::sync::Once::new();
+                    NOTICE.call_once(|| {
+                        eprintln!(
+                            "[sama] SAMA_ZERO=1: ZeRO-1 optimizer-state \
+                             sharding enabled"
+                        );
+                    });
+                }
+                on
+            }
+        }
+    }
+}
+
 /// Full training configuration shared by launcher, examples and benches.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -145,6 +209,12 @@ pub struct TrainConfig {
     /// ring with the least modelled finish time (size + occupancy aware,
     /// deterministic across ranks). Bitwise results are policy-independent.
     pub route: RoutePolicy,
+    /// ZeRO-1 optimizer-state sharding: `0` replicates full Adam m/v on
+    /// every rank (today's schedule), `1` shards them by bucket-derived
+    /// owner ranges (reduce-scatter → owner step → all-gather), `auto`
+    /// (default) reads `SAMA_ZERO`. Bitwise-identical either way; only
+    /// per-rank memory and the wire split change.
+    pub zero: ZeroKnob,
     /// Streamed reduces between bucket auto-tuner rebalances (the old
     /// hard-coded 4). Larger = steadier profiles, slower adaptation.
     pub retune_every: u32,
@@ -238,6 +308,7 @@ impl Default for TrainConfig {
             inter_bandwidth: 0.0,
             inter_latency: -1.0,
             route: RoutePolicy::Sized,
+            zero: ZeroKnob::Auto,
             retune_every: crate::collective::BucketPlan::DEFAULT_RETUNE_EVERY,
             checkpoint_path: String::new(),
             checkpoint_every: 0,
@@ -327,6 +398,7 @@ impl TrainConfig {
                 self.inter_latency = value.parse().context("inter_latency")?
             }
             "route" => self.route = RoutePolicy::parse(value)?,
+            "zero" => self.zero = ZeroKnob::parse(value)?,
             "retune_every" => {
                 let n: u32 = value.parse().context("retune_every")?;
                 if n == 0 {
@@ -451,6 +523,7 @@ mod tests {
             "inter_bandwidth=2.5e8".into(),
             "inter_latency=8e-5".into(),
             "route=tag".into(),
+            "zero=1".into(),
             "retune_every=7".into(),
             "checkpoint_path=/tmp/run.ck".into(),
             "checkpoint_every=50".into(),
@@ -472,6 +545,8 @@ mod tests {
         assert_eq!(c.inter_bandwidth, 2.5e8);
         assert_eq!(c.inter_latency, 8e-5);
         assert_eq!(c.route, RoutePolicy::Tag);
+        assert_eq!(c.zero, ZeroKnob::On);
+        assert!(c.zero.resolved(), "zero=1 shards regardless of env");
         assert_eq!(c.retune_every, 7);
         assert_eq!(c.checkpoint_path, "/tmp/run.ck");
         assert_eq!(c.checkpoint_every, 50);
@@ -518,6 +593,7 @@ mod tests {
         assert!(c.apply_overrides(&["topology=mesh".into()]).is_err());
         assert!(c.apply_overrides(&["nodes=0".into()]).is_err());
         assert!(c.apply_overrides(&["route=random".into()]).is_err());
+        assert!(c.apply_overrides(&["zero=2".into()]).is_err());
         assert!(c.apply_overrides(&["checkpoint_keep=0".into()]).is_err());
         assert!(c.apply_overrides(&["peer_timeout=0".into()]).is_err());
         assert!(c.apply_overrides(&["peer_timeout=-3".into()]).is_err());
@@ -555,6 +631,20 @@ mod tests {
         for p in [RoutePolicy::Tag, RoutePolicy::Sized] {
             assert_eq!(RoutePolicy::parse(p.name()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn zero_knob_parses_and_resolves() {
+        for z in [ZeroKnob::Auto, ZeroKnob::Off, ZeroKnob::On] {
+            assert_eq!(ZeroKnob::parse(z.name()).unwrap(), z);
+        }
+        assert_eq!(ZeroKnob::parse("on").unwrap(), ZeroKnob::On);
+        assert_eq!(ZeroKnob::parse("off").unwrap(), ZeroKnob::Off);
+        assert!(ZeroKnob::parse("maybe").is_err());
+        assert_eq!(TrainConfig::default().zero, ZeroKnob::Auto);
+        // explicit settings ignore the environment entirely
+        assert!(!ZeroKnob::Off.resolved());
+        assert!(ZeroKnob::On.resolved());
     }
 
     #[test]

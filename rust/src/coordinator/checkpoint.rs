@@ -13,6 +13,9 @@
 //! v3+: route_epoch u64 |
 //!      2 × (len u64, f64 data): sched_est, sched_scale |
 //!      (len u64, f32 data): problem_state
+//! v4+: shard_world u64 | shard_bucket u64 |
+//!      when shard_world > 0: shard_world × 4 blobs
+//!      (len u64, f32 data): base_m_r, base_v_r, meta_m_r, meta_v_r
 //! ```
 //! plus a trailing crc32-like checksum (fletcher64 over the payload).
 //!
@@ -24,8 +27,17 @@
 //! epoch, virtual ring clocks and profile scales, as f64 so routing
 //! continuity survives the round trip exactly) and the
 //! `BilevelProblem::save_state` blob (problem-internal state such as the
-//! cls EMA uncertainty buffer). Version 1/2 files are still readable: the
-//! version-gated fields default to 0 / empty.
+//! cls EMA uncertainty buffer). Version 4 (`zero=1` optimizer-state
+//! sharding) replaces the four inline optimizer vectors with **one
+//! compact blob per owner rank** of the recorded shard partition
+//! (`owned_ranges(n, shard_bucket, shard_world, r)` coordinates — the
+//! invariant-8 chokepoint). The in-memory [`Checkpoint`] always holds
+//! the *full* vectors: `to_bytes` slices them per owner on save,
+//! `from_bytes` reassembles on load, so a restore onto a different world
+//! (elastic survivor rebuild) re-partitions for free. A replicated run
+//! writes `shard_world = 0` and keeps the inline layout. Version 1/2/3
+//! files are still readable: the version-gated fields default to
+//! 0 / empty.
 //!
 //! Checkpoint bytes are untrusted input: every length prefix is bounded
 //! against the remaining payload through `read_len_bounded` before any
@@ -40,8 +52,10 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::collective::{owned_len, owned_ranges};
+
 const MAGIC: &[u8; 4] = b"SAMA";
-const VERSION: u32 = 3;
+const VERSION: u32 = 4;
 
 /// Everything needed to resume a bilevel run.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -82,6 +96,16 @@ pub struct Checkpoint {
     /// the cls EMA uncertainty buffer). Empty when the problem is
     /// stateless (and in v1/v2 files).
     pub problem_state: Vec<f32>,
+    /// World size of the ZeRO-1 shard partition the run held at the cut;
+    /// 0 = replicated optimizer state (and in pre-v4 files). Purely a
+    /// serialization detail: when > 0, `to_bytes` writes the optimizer
+    /// vectors as one compact blob per owner rank of this partition and
+    /// `from_bytes` reassembles them — the in-memory vectors here are
+    /// always full-width.
+    pub shard_world: u64,
+    /// Bucket size (elements) the shard partition was derived from;
+    /// meaningful only when `shard_world > 0`.
+    pub shard_bucket: u64,
 }
 
 fn fletcher64(data: &[u8]) -> u64 {
@@ -172,19 +196,18 @@ fn read_vec_f64(r: &mut &[u8]) -> Result<Vec<f64>> {
 
 impl Checkpoint {
     pub fn to_bytes(&self) -> Vec<u8> {
+        let sharded = self.shard_world > 0;
         let mut payload = Vec::new();
         payload.extend_from_slice(&self.step.to_le_bytes());
         payload.extend_from_slice(&self.base_t.to_le_bytes());
         payload.extend_from_slice(&self.meta_t.to_le_bytes());
-        for v in [
-            &self.theta,
-            &self.lambda,
-            &self.base_m,
-            &self.base_v,
-            &self.meta_m,
-            &self.meta_v,
-        ] {
-            push_vec(&mut payload, v);
+        push_vec(&mut payload, &self.theta);
+        push_vec(&mut payload, &self.lambda);
+        // sharded checkpoints move the optimizer vectors to the v4
+        // per-owner blobs; the inline slots become empty placeholders
+        for v in [&self.base_m, &self.base_v, &self.meta_m, &self.meta_v] {
+            let inline: &[f32] = if sharded { &[] } else { v };
+            push_vec(&mut payload, inline);
         }
         // v2 fields (version-gated on read)
         payload.extend_from_slice(&self.bucket_elems.to_le_bytes());
@@ -194,6 +217,30 @@ impl Checkpoint {
         push_vec_f64(&mut payload, &self.sched_est);
         push_vec_f64(&mut payload, &self.sched_scale);
         push_vec(&mut payload, &self.problem_state);
+        // v4 fields: shard layout, then one compact optimizer blob per
+        // owner rank (rank-major, base_m/base_v/meta_m/meta_v within)
+        payload.extend_from_slice(&self.shard_world.to_le_bytes());
+        payload.extend_from_slice(&self.shard_bucket.to_le_bytes());
+        if sharded {
+            let world = self.shard_world as usize;
+            let bucket = self.shard_bucket as usize;
+            for rank in 0..world {
+                for (full, n) in [
+                    (&self.base_m, self.theta.len()),
+                    (&self.base_v, self.theta.len()),
+                    (&self.meta_m, self.lambda.len()),
+                    (&self.meta_v, self.lambda.len()),
+                ] {
+                    let ranges = owned_ranges(n, bucket, world, rank);
+                    let mut blob =
+                        Vec::with_capacity(owned_len(&ranges));
+                    for &(start, len) in &ranges {
+                        blob.extend_from_slice(&full[start..start + len]);
+                    }
+                    push_vec(&mut payload, &blob);
+                }
+            }
+        }
         let mut out = Vec::with_capacity(payload.len() + 16);
         out.extend_from_slice(MAGIC);
         out.extend_from_slice(&VERSION.to_le_bytes());
@@ -249,6 +296,61 @@ impl Checkpoint {
             } else {
                 (0, Vec::new(), Vec::new(), Vec::new())
             };
+        let (shard_world, shard_bucket) = if version >= 4 {
+            (read_u64(&mut r)?, read_u64(&mut r)?)
+        } else {
+            (0, 0)
+        };
+        // v4 sharded layout: reassemble the full optimizer vectors from
+        // one compact blob per owner rank of the recorded partition
+        let (base_m, base_v, meta_m, meta_v) = if shard_world > 0 {
+            if [&base_m, &base_v, &meta_m, &meta_v]
+                .iter()
+                .any(|v| !v.is_empty())
+            {
+                bail!(
+                    "sharded checkpoint also carries inline optimizer \
+                     vectors"
+                );
+            }
+            let world = usize::try_from(shard_world).context("shard_world")?;
+            let bucket =
+                usize::try_from(shard_bucket).context("shard_bucket")?;
+            let mut full = [
+                vec![0.0f32; theta.len()],
+                vec![0.0f32; theta.len()],
+                vec![0.0f32; lambda.len()],
+                vec![0.0f32; lambda.len()],
+            ];
+            for rank in 0..world {
+                for (slot, stream) in full.iter_mut().enumerate() {
+                    let n =
+                        if slot < 2 { theta.len() } else { lambda.len() };
+                    // blob length is attacker-controlled: it must equal
+                    // what this partition says the rank owns
+                    let ranges = owned_ranges(n, bucket, world, rank);
+                    let blob = read_vec(&mut r)?;
+                    if blob.len() != owned_len(&ranges) {
+                        bail!(
+                            "checkpoint shard blob (rank {rank}, slot \
+                             {slot}) has {} elements, partition owns {}",
+                            blob.len(),
+                            owned_len(&ranges)
+                        );
+                    }
+                    let mut off = 0usize;
+                    for &(start, len) in &ranges {
+                        stream[start..start + len]
+                            .copy_from_slice(&blob[off..off + len]);
+                        off += len;
+                    }
+                }
+            }
+            let [bm, bv, mm, mv] = full;
+            (bm, bv, mm, mv)
+        } else {
+            (base_m, base_v, meta_m, meta_v)
+        };
         if !r.is_empty() {
             bail!("trailing bytes in checkpoint payload");
         }
@@ -268,6 +370,8 @@ impl Checkpoint {
             sched_est,
             sched_scale,
             problem_state,
+            shard_world,
+            shard_bucket,
         })
     }
 
@@ -385,12 +489,18 @@ mod tests {
             sched_est: vec![0.125, 3.5e-3],
             sched_scale: vec![1.0, 2.25],
             problem_state: rng.normal_vec(41, 0.3),
+            shard_world: 0,
+            shard_bucket: 0,
         }
     }
 
     /// Strip the fields version `v` does not carry (legacy fixtures).
     fn truncated_to(ck: &Checkpoint, v: u32) -> Checkpoint {
         let mut out = ck.clone();
+        if v < 4 {
+            out.shard_world = 0;
+            out.shard_bucket = 0;
+        }
         if v < 3 {
             out.route_epoch = 0;
             out.sched_est = Vec::new();
@@ -406,7 +516,7 @@ mod tests {
 
     /// Serialize `ck` in a legacy layout — the back-compat fixtures
     /// (v1: no bucket_elems / pending λ; v2: no scheduler / problem
-    /// state).
+    /// state; v3: no shard layout, optimizer vectors always inline).
     fn to_bytes_legacy(ck: &Checkpoint, version: u32) -> Vec<u8> {
         let mut payload = Vec::new();
         payload.extend_from_slice(&ck.step.to_le_bytes());
@@ -425,6 +535,12 @@ mod tests {
         if version >= 2 {
             payload.extend_from_slice(&ck.bucket_elems.to_le_bytes());
             push_vec(&mut payload, &ck.pending_lambda);
+        }
+        if version >= 3 {
+            payload.extend_from_slice(&ck.route_epoch.to_le_bytes());
+            push_vec_f64(&mut payload, &ck.sched_est);
+            push_vec_f64(&mut payload, &ck.sched_scale);
+            push_vec(&mut payload, &ck.problem_state);
         }
         let mut out = Vec::with_capacity(payload.len() + 16);
         out.extend_from_slice(MAGIC);
@@ -499,6 +615,78 @@ mod tests {
         assert!(back.sched_est.is_empty() && back.sched_scale.is_empty());
         assert!(back.problem_state.is_empty(), "v2 has no problem state");
         assert_eq!(back, truncated_to(&ck, 2));
+    }
+
+    /// v3 files (pre-ZeRO) still load: everything through the scheduler
+    /// and problem state comes through, the shard layout defaults to
+    /// replicated.
+    #[test]
+    fn v3_checkpoint_still_loads() {
+        let ck = sample(9);
+        let back = Checkpoint::from_bytes(&to_bytes_legacy(&ck, 3)).unwrap();
+        assert_eq!(back.route_epoch, ck.route_epoch);
+        assert_eq!(back.sched_est, ck.sched_est);
+        assert_eq!(back.problem_state, ck.problem_state);
+        assert_eq!(back.shard_world, 0, "v3 has no shard layout");
+        assert_eq!(back, truncated_to(&ck, 3));
+    }
+
+    /// v4 sharded layout: the optimizer vectors leave as one compact blob
+    /// per owner rank and come back as the identical full vectors — for
+    /// any world and bucket size, including partitions whose ranks own
+    /// many disjoint ranges. Loading is what re-shards: the same file
+    /// restores onto any live world.
+    #[test]
+    fn v4_sharded_roundtrip_reassembles_full_state() {
+        for world in [1u64, 2, 3, 5] {
+            for bucket in [4u64, 256, 1 << 15] {
+                let mut ck = sample(20 + world);
+                ck.shard_world = world;
+                ck.shard_bucket = bucket;
+                let bytes = ck.to_bytes();
+                let back = Checkpoint::from_bytes(&bytes).unwrap();
+                assert_eq!(back, ck, "world={world} bucket={bucket}");
+                // the sharded file is a genuinely different layout from
+                // the replicated one (inline slots are empty)
+                let mut replicated = ck.clone();
+                replicated.shard_world = 0;
+                replicated.shard_bucket = 0;
+                assert_ne!(bytes, replicated.to_bytes());
+            }
+        }
+    }
+
+    /// A shard blob whose length disagrees with the recorded partition is
+    /// untrusted input and must be rejected, not scattered out of bounds
+    /// or silently zero-filled.
+    #[test]
+    fn v4_shard_blob_length_mismatch_rejected() {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&7u64.to_le_bytes()); // step
+        payload.extend_from_slice(&7u64.to_le_bytes()); // base_t
+        payload.extend_from_slice(&1u64.to_le_bytes()); // meta_t
+        push_vec(&mut payload, &[1.0, 2.0]); // theta (n=2)
+        push_vec(&mut payload, &[3.0]); // lambda (n=1)
+        for _ in 0..4 {
+            push_vec(&mut payload, &[]); // inline optimizer slots empty
+        }
+        payload.extend_from_slice(&0u64.to_le_bytes()); // bucket_elems
+        push_vec(&mut payload, &[]); // pending_lambda
+        payload.extend_from_slice(&0u64.to_le_bytes()); // route_epoch
+        push_vec_f64(&mut payload, &[]); // sched_est
+        push_vec_f64(&mut payload, &[]); // sched_scale
+        push_vec(&mut payload, &[]); // problem_state
+        payload.extend_from_slice(&2u64.to_le_bytes()); // shard_world
+        payload.extend_from_slice(&1024u64.to_le_bytes()); // shard_bucket
+        // rank 0 owns exactly 1 of θ's 2 elements; claim 3 instead
+        push_vec(&mut payload, &[9.0, 9.0, 9.0]);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&fletcher64(&payload).to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("shard blob"), "{err}");
     }
 
     /// The f64 codec must round-trip scheduler clocks exactly (f32

@@ -80,6 +80,42 @@
 //! arithmetic: every topology × policy × ring count produces
 //! bitwise-identical θ/λ.
 //!
+//! **ZeRO-1 sharded optimizer state (`zero=1`).** The replicated schedule
+//! above keeps full Adam `m`/`v` for θ (and λ) on every rank — per-rank
+//! optimizer memory is flat in world size. With `zero=1` (or `SAMA_ZERO=1`
+//! under the default `zero=auto`) the coordinator partitions optimizer
+//! state ZeRO-stage-1 style:
+//!
+//! ```text
+//! non-meta base step:   reduce-scatter(θ-grad)      — half the wire bytes
+//!                       owner-shard AdamStep         over the m/v slices
+//!                                                    this rank owns
+//!                       all-gather(updated θ)       — θ replicated again
+//! meta base step:       all-reduce(θ-grad)           (the meta pass needs
+//!                       the FULL ĝ and full m/v —    all-gathered from the
+//!                       owner shards just for the    meta computation)
+//! λ update:             all-reduce(ĝ_λ) unchanged → owner-shard AdamStep
+//!                       over owned λ slices → all-gather(λ)
+//! ```
+//!
+//! Shard boundaries are the frozen bucket partition at the plan's seed
+//! size (`collective::owned_ranges`): rank-replicated by construction, so
+//! routing and ownership agree on every rank with zero coordination
+//! traffic, and stable across auto-tuner retunes (the λ stream keeps the
+//! adaptive plan; θ reduces pin the shard bucket). A rank's `m`/`v` are
+//! stored *compactly* (only the owned elements are allocated), so
+//! measured per-rank optimizer bytes drop ~1/world. Because the
+//! reduce-scatter's owned chunks are bitwise-identical to the all-reduce's
+//! values on those chunks (same ring, same summation order) and the
+//! all-gather is a pure copy, `zero=1` produces final θ/λ bit-for-bit
+//! equal to `zero=0` for any world × rings × topology under a pinned
+//! bucket plan. Checkpoint cuts gather full state from the owner shards
+//! (a collective — every rank hits the cut, the leader writes; format v4
+//! stores one optimizer blob per owner rank), and restore extracts the
+//! live world's owned slices from the full vectors — which re-partitions
+//! automatically when an elastic rebuild shrinks the world. This is the
+//! shard-ownership contract, invariant 8 in `docs/INVARIANTS.md`.
+//!
 //! **Checkpoint / resume.** `checkpoint_path=` enables durable state: at
 //! startup every worker restores from the file if it exists (ranks share
 //! the leader's state — θ/λ are replicated by construction), and rank 0
@@ -87,7 +123,7 @@
 //! pipelined λ-reduce is resolved to its (deterministic) reduced value and
 //! stored *unapplied*, so the resumed schedule applies it exactly where
 //! the uninterrupted one would have. Problem-internal state is captured
-//! through `BilevelProblem::{save_state, restore_state}` (format v3) —
+//! through `BilevelProblem::{save_state, restore_state}` (since format v3) —
 //! e.g. the cls EMA uncertainty buffer — so resume is bit-exact for
 //! problems whose hook state is rank-replicated, not just for pure
 //! oracles; the ring scheduler's clocks/scales/epoch are saved alongside
@@ -154,13 +190,13 @@ use crate::algos::sama::SamaScratch;
 use crate::algos::{self, MetaStepCtx};
 use crate::bilevel::{BaseGradMeta, BilevelProblem, ParamKind};
 use crate::collective::{
-    BucketPlan, Collective, CommError, CommStats, CommWorld, LinkModel,
-    LinkProfile, PendingReduce, Quiesced, ReduceTag, SchedulerState, Topology,
-    TopologyKind,
+    owned_len, owned_ranges, BucketPlan, CollOp, Collective, CommError,
+    CommStats, CommWorld, LinkModel, LinkProfile, PendingReduce, Quiesced,
+    ReduceTag, SchedulerState, Topology, TopologyKind,
 };
 use crate::config::{Algo, FaultPlan, TrainConfig};
 use crate::metrics::Series;
-use crate::optim::{Adam, Optimizer, Sgd};
+use crate::optim::{adam_step_slice, sgd_step_slice, Adam, Optimizer, Sgd};
 use crate::tensor::vecops;
 
 /// Base optimizer family for θ.
@@ -203,6 +239,11 @@ pub struct WorkerReport {
     /// Gradient bucket size (elements) the run ended on — the static knob,
     /// or the auto-tuner's final pick (rank-identical by construction).
     pub bucket_elems_final: usize,
+    /// Measured per-rank optimizer-state bytes: the actual buffer
+    /// capacities of the base and meta `m`/`v` vectors at run end. Under
+    /// `zero=1` this drops ~1/world vs the replicated schedule — the ZeRO
+    /// memory claim, measured rather than modelled.
+    pub opt_state_bytes: u64,
 }
 
 /// One recovery episode the elastic supervisor performed after a rank
@@ -245,6 +286,9 @@ pub struct TrainReport {
     /// Final gradient bucket size in elements (see
     /// [`WorkerReport::bucket_elems_final`]).
     pub bucket_elems_final: usize,
+    /// Measured per-rank optimizer-state bytes, in rank order (see
+    /// [`WorkerReport::opt_state_bytes`]).
+    pub opt_state_bytes: Vec<u64>,
     /// Every failure→rebuild→resume episode, in order (empty for a clean
     /// run).
     pub recoveries: Vec<RecoveryEvent>,
@@ -632,6 +676,7 @@ fn merge_reports(
     reports.sort_by_key(|r| r.rank);
     let samples: u64 = reports.iter().map(|r| r.samples_processed).sum();
     let comm = reports.iter().map(|r| r.comm.clone()).collect();
+    let opt_state_bytes = reports.iter().map(|r| r.opt_state_bytes).collect();
     let mut weight_sums = vec![0.0f32; reports[0].weight_sums.len()];
     let mut weight_counts = vec![0u32; reports[0].weight_counts.len()];
     for r in &reports {
@@ -653,12 +698,43 @@ fn merge_reports(
         weight_sums,
         weight_counts,
         bucket_elems_final: lead.bucket_elems_final,
+        opt_state_bytes,
         recoveries: Vec::new(),
     })
 }
 
+/// Rank-replicated ZeRO-1 shard-ownership map: which slices of an
+/// n-element parameter stream this rank owns, derived from the frozen
+/// bucket partition ([`owned_ranges`]) so a reduce-scatter's output lands
+/// exactly on the owned slices. Every rank computes the identical map from
+/// identical inputs (n, bucket, world) — the invariant-8 contract.
+#[derive(Clone, Debug)]
+struct ShardMap {
+    /// Owned `(start, len)` ranges in full-vector coordinates, ascending.
+    ranges: Vec<(usize, usize)>,
+    /// Full stream length.
+    n: usize,
+    /// Bucket size the partition was derived from (also the bucket every
+    /// sharded collective op on this stream must use).
+    bucket: usize,
+}
+
+impl ShardMap {
+    fn new(n: usize, bucket: usize, world: usize, rank: usize) -> ShardMap {
+        ShardMap { ranges: owned_ranges(n, bucket, world, rank), n, bucket }
+    }
+
+    /// Σ owned elements — the compact m/v length.
+    fn owned(&self) -> usize {
+        owned_len(&self.ranges)
+    }
+}
+
 /// Adam/SGD state held as flat vectors so both the L1 `adam_step` artifact
-/// and the Rust fallback can drive it.
+/// and the Rust fallback can drive it. With a [`ShardMap`] (`zero=1`) the
+/// `m`/`v` buffers are *compact*: only the owned elements are allocated,
+/// and updates go through [`OptState::step_owned`] — a rank never writes
+/// state it does not own.
 struct OptState {
     kind: BaseOpt,
     m: Vec<f32>,  // momentum buffer for SGD
@@ -666,38 +742,182 @@ struct OptState {
     t: u64,
     lr: f32,
     wd: f32,
+    /// `Some` = ZeRO-1 sharded: m/v hold only the owned elements.
+    shard: Option<ShardMap>,
 }
 
 impl OptState {
     fn new(kind: BaseOpt, n: usize, lr: f32, wd: f32) -> OptState {
-        OptState { kind, m: vec![0.0; n], v: vec![0.0; n], t: 0, lr, wd }
+        OptState {
+            kind,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+            lr,
+            wd,
+            shard: None,
+        }
     }
 
-    /// Rust-side fallback step (also the SGD path).
+    /// Sharded state: allocate only the owned slice of m/v.
+    fn new_sharded(
+        kind: BaseOpt,
+        lr: f32,
+        wd: f32,
+        shard: ShardMap,
+    ) -> OptState {
+        let owned = shard.owned();
+        OptState {
+            kind,
+            m: vec![0.0; owned],
+            v: vec![0.0; owned],
+            t: 0,
+            lr,
+            wd,
+            shard: Some(shard),
+        }
+    }
+
+    /// Rust-side fallback step (also the SGD path), full-width.
     fn step_rust(&mut self, theta: &mut [f32], g: &[f32]) {
+        debug_assert!(
+            self.shard.is_none(),
+            "sharded optimizer state steps via step_owned"
+        );
         self.t += 1;
         match self.kind {
-            BaseOpt::Adam => {
-                let mut adam = Adam::new(0, self.lr).with_weight_decay(self.wd);
-                adam.t = self.t - 1;
-                std::mem::swap(&mut adam.m, &mut self.m);
-                std::mem::swap(&mut adam.v, &mut self.v);
-                adam.step(theta, g);
-                std::mem::swap(&mut adam.m, &mut self.m);
-                std::mem::swap(&mut adam.v, &mut self.v);
+            BaseOpt::Adam => adam_step_slice(
+                theta, g, &mut self.m, &mut self.v, self.t, self.lr, self.wd,
+            ),
+            BaseOpt::Sgd { momentum } => sgd_step_slice(
+                theta, g, &mut self.m, momentum, self.lr, self.wd,
+            ),
+        }
+    }
+
+    /// ZeRO-1 owner step: update only the owned parameter slices (and the
+    /// matching compact m/v slices). `g` must hold the reduced gradient on
+    /// the owned ranges (a reduce-scatter output, or a full all-reduce).
+    /// Slice-for-slice bitwise identical to the full-width step on those
+    /// indices (`optim::adam_step_slice` contract).
+    fn step_owned(&mut self, theta: &mut [f32], g: &[f32]) {
+        let (kind, lr, wd) = (self.kind, self.lr, self.wd);
+        self.t += 1;
+        let t = self.t;
+        let shard =
+            self.shard.as_ref().expect("step_owned requires a shard map");
+        let mut off = 0usize;
+        for &(start, len) in &shard.ranges {
+            match kind {
+                BaseOpt::Adam => adam_step_slice(
+                    &mut theta[start..start + len],
+                    &g[start..start + len],
+                    &mut self.m[off..off + len],
+                    &mut self.v[off..off + len],
+                    t,
+                    lr,
+                    wd,
+                ),
+                BaseOpt::Sgd { momentum } => sgd_step_slice(
+                    &mut theta[start..start + len],
+                    &g[start..start + len],
+                    &mut self.m[off..off + len],
+                    momentum,
+                    lr,
+                    wd,
+                ),
             }
-            BaseOpt::Sgd { momentum } => {
-                for i in 0..theta.len() {
-                    let ge = g[i] + self.wd * theta[i];
-                    self.m[i] = momentum * self.m[i] + ge;
-                    theta[i] -= self.lr * self.m[i];
+            off += len;
+        }
+    }
+
+    /// Expand a compact owned buffer to full width, zeros elsewhere (the
+    /// all-gather overwrites every chunk from its owner).
+    fn expand_owned(&self, compact: &[f32]) -> Vec<f32> {
+        let shard = self.shard.as_ref().expect("expand_owned needs a shard");
+        let mut full = vec![0.0f32; shard.n];
+        let mut off = 0usize;
+        for &(start, len) in &shard.ranges {
+            full[start..start + len].copy_from_slice(&compact[off..off + len]);
+            off += len;
+        }
+        full
+    }
+
+    /// Assemble the full-width replicated state from the owner shards.
+    /// Collective: every rank must call this at the same schedule point.
+    /// Bitwise equal to the never-sharded state (the all-gather is a pure
+    /// copy from each chunk's owner).
+    fn gathered_full(
+        &self,
+        coll: &mut Collective,
+        tag: ReduceTag,
+    ) -> Result<OptState, CommError> {
+        let bucket = self.shard.as_ref().map(|s| s.bucket).unwrap_or(1);
+        let m = coll.all_gather_sync(self.expand_owned(&self.m), bucket, tag)?;
+        let v = coll.all_gather_sync(self.expand_owned(&self.v), bucket, tag)?;
+        Ok(OptState {
+            kind: self.kind,
+            m,
+            v,
+            t: self.t,
+            lr: self.lr,
+            wd: self.wd,
+            shard: None,
+        })
+    }
+
+    /// Full-width `(m, v)` for a checkpoint cut: replicated state clones,
+    /// sharded state all-gathers from the owners (collective — see
+    /// [`OptState::gathered_full`]).
+    fn full_for_checkpoint(
+        &self,
+        coll: &mut Collective,
+        tag: ReduceTag,
+    ) -> Result<(Vec<f32>, Vec<f32>), CommError> {
+        match &self.shard {
+            None => Ok((self.m.clone(), self.v.clone())),
+            Some(_) => {
+                let full = self.gathered_full(coll, tag)?;
+                Ok((full.m, full.v))
+            }
+        }
+    }
+
+    /// Load full-width checkpoint vectors: replicated state copies them,
+    /// sharded state extracts the slices the CURRENT world's map owns —
+    /// which is exactly the elastic re-shard: a survivor rebuild's new
+    /// `ShardMap` re-partitions the same full vectors over the shrunk
+    /// world with no extra machinery.
+    fn load_full(&mut self, m: &[f32], v: &[f32]) {
+        match &self.shard {
+            None => {
+                self.m.copy_from_slice(m);
+                self.v.copy_from_slice(v);
+            }
+            Some(sh) => {
+                let mut off = 0usize;
+                for &(start, len) in &sh.ranges {
+                    self.m[off..off + len]
+                        .copy_from_slice(&m[start..start + len]);
+                    self.v[off..off + len]
+                        .copy_from_slice(&v[start..start + len]);
+                    off += len;
                 }
             }
         }
     }
 
-    /// Mirror optimizer (for adapt_diag) at the current state.
+    /// Measured bytes this state actually holds (buffer capacities).
+    fn state_bytes(&self) -> u64 {
+        ((self.m.capacity() + self.v.capacity()) * std::mem::size_of::<f32>())
+            as u64
+    }
+
+    /// Mirror optimizer (for adapt_diag) at the current state. Full-width
+    /// state only — sharded callers gather first (`gathered_full`).
     fn as_optimizer(&self) -> Box<dyn Optimizer> {
+        debug_assert!(self.shard.is_none(), "as_optimizer needs full state");
         match self.kind {
             BaseOpt::Adam => {
                 let mut a = Adam::new(0, self.lr).with_weight_decay(self.wd);
@@ -715,13 +935,27 @@ impl OptState {
     }
 }
 
-/// λ ← AdamStep(λ, ĝ_λ), via the L1 artifact when available.
+/// λ ← AdamStep(λ, ĝ_λ), via the L1 artifact when available. Under
+/// `zero=1` the λ optimizer state lives only on its owner shards: the
+/// owner step updates the owned λ slices, then an all-gather re-replicates
+/// λ (the artifact has no sharded entry point, so the slice kernels run —
+/// bitwise equal to the full-width Rust step on those indices).
 fn apply_lambda_step(
+    coll: &mut Collective,
     problem: &mut dyn BilevelProblem,
     lambda: &mut Vec<f32>,
     meta_state: &mut OptState,
     g_lambda: &[f32],
 ) -> Result<()> {
+    if let Some(bucket) = meta_state.shard.as_ref().map(|s| s.bucket) {
+        meta_state.step_owned(lambda, g_lambda);
+        *lambda = coll.all_gather_sync(
+            std::mem::take(lambda),
+            bucket,
+            ReduceTag::Lambda,
+        )?;
+        return Ok(());
+    }
     let stepped = problem.adam_step(
         ParamKind::Lambda,
         lambda,
@@ -792,10 +1026,10 @@ fn drain_lambda(
         LambdaStream::Idle => Ok(()),
         LambdaStream::InFlight(p) => {
             let g_lambda = coll.wait(p)?;
-            apply_lambda_step(problem, lambda, meta_state, &g_lambda)
+            apply_lambda_step(coll, problem, lambda, meta_state, &g_lambda)
         }
         LambdaStream::Ready(g_lambda) => {
-            apply_lambda_step(problem, lambda, meta_state, &g_lambda)
+            apply_lambda_step(coll, problem, lambda, meta_state, &g_lambda)
         }
     }
 }
@@ -881,8 +1115,53 @@ fn run_worker(
     anyhow::ensure!(theta.len() == n_theta, "θ₀ size");
     anyhow::ensure!(lambda.len() == n_lambda, "λ₀ size");
 
-    let mut base_state = OptState::new(base_opt_kind, n_theta, cfg.base_lr, cfg.weight_decay);
-    let mut meta_state = OptState::new(BaseOpt::Adam, n_lambda, cfg.meta_lr, 0.0);
+    // Bucket auto-tuning needs streamed producer profiles and a real link;
+    // a static override (`bucket_auto=false`) pins the size.
+    let adaptive = cfg.bucket_auto
+        && cfg.overlap
+        && cfg.stream_grads
+        && coll.world() > 1;
+    // The adaptive plan resumes from the checkpointed converged size
+    // instead of re-warming from the configured seed; a static plan
+    // (`bucket_elems=` pin) always honors the config.
+    let plan_seed = match resume {
+        Some(ck) if adaptive && ck.bucket_elems > 0 => ck.bucket_elems as usize,
+        _ => cfg.bucket_elems,
+    };
+    let mut plan = BucketPlan::new(plan_seed, adaptive)
+        .with_retune_every(cfg.retune_every.max(1));
+
+    // ZeRO-1 (`zero=1`): shard optimizer state over the LIVE world by the
+    // frozen bucket partition at the plan's seed size. Rank-replicated by
+    // construction (same n, bucket, world on every rank); frozen so
+    // ownership survives auto-tuner retunes — every θ-grad collective op
+    // under sharding uses this bucket, while the λ stream keeps the
+    // adaptive plan. An elastic rebuild re-derives the map over the
+    // survivor world, re-partitioning the (full) resume state for free.
+    let zero_on = cfg.zero.resolved();
+    let shard_bucket = plan.elems();
+    let (mut base_state, mut meta_state) = if zero_on {
+        let world = coll.world();
+        (
+            OptState::new_sharded(
+                base_opt_kind,
+                cfg.base_lr,
+                cfg.weight_decay,
+                ShardMap::new(n_theta, shard_bucket, world, rank),
+            ),
+            OptState::new_sharded(
+                BaseOpt::Adam,
+                cfg.meta_lr,
+                0.0,
+                ShardMap::new(n_lambda, shard_bucket, world, rank),
+            ),
+        )
+    } else {
+        (
+            OptState::new(base_opt_kind, n_theta, cfg.base_lr, cfg.weight_decay),
+            OptState::new(BaseOpt::Adam, n_lambda, cfg.meta_lr, 0.0),
+        )
+    };
 
     let mut meta_loss = Series::new("meta_loss");
     let mut base_loss = Series::new("base_loss");
@@ -908,10 +1187,6 @@ fn run_worker(
     let pipeline_lambda = cfg.overlap && cfg.workers.max(1) > 1;
     // Layer-streamed base backward: θ buckets fire mid-backward.
     let stream_base = cfg.overlap && cfg.stream_grads;
-    // Bucket auto-tuning needs streamed producer profiles and a real link;
-    // a static override (`bucket_auto=false`) pins the size.
-    let adaptive =
-        cfg.bucket_auto && stream_base && coll.world() > 1;
     let mut lambda_stream = LambdaStream::Idle;
     let mut start_step = 0usize;
 
@@ -933,11 +1208,12 @@ fn run_worker(
         );
         theta.copy_from_slice(&ck.theta);
         lambda.copy_from_slice(&ck.lambda);
-        base_state.m.copy_from_slice(&ck.base_m);
-        base_state.v.copy_from_slice(&ck.base_v);
+        // Sharded states extract the slices the live world's map owns —
+        // the checkpoint always carries full vectors, so this is also the
+        // elastic re-shard onto a rebuilt (smaller) world.
+        base_state.load_full(&ck.base_m, &ck.base_v);
         base_state.t = ck.base_t;
-        meta_state.m.copy_from_slice(&ck.meta_m);
-        meta_state.v.copy_from_slice(&ck.meta_v);
+        meta_state.load_full(&ck.meta_m, &ck.meta_v);
         meta_state.t = ck.meta_t;
         start_step = (ck.step as usize).min(cfg.steps);
         if !ck.pending_lambda.is_empty() {
@@ -967,15 +1243,6 @@ fn run_worker(
         });
     }
 
-    // The adaptive plan resumes from the checkpointed converged size
-    // instead of re-warming from the configured seed; a static plan
-    // (`bucket_elems=` pin) always honors the config.
-    let plan_seed = match resume {
-        Some(ck) if adaptive && ck.bucket_elems > 0 => ck.bucket_elems as usize,
-        _ => cfg.bucket_elems,
-    };
-    let mut plan = BucketPlan::new(plan_seed, adaptive)
-        .with_retune_every(cfg.retune_every.max(1));
     // A failed checkpoint save must NOT abort this rank mid-loop: the
     // other ranks would block forever at their next ring rendezvous
     // (their peer never submits again) and train() would hang instead of
@@ -1014,14 +1281,34 @@ fn run_worker(
                 return Ok(());
             }
         }
+        // Rank-replicated pure function of the step index — hoisted above
+        // the base pass because the ZeRO schedule keys the θ-grad op on
+        // it: the meta pass consumes the FULL ĝ, so meta steps all-reduce
+        // while ordinary steps reduce-scatter (half the wire bytes; only
+        // the owned chunks come back valid, which is all the owner step
+        // reads).
+        let is_meta_step = cfg.algo != Algo::None
+            && step >= cfg.meta_warmup
+            && (step + 1) % unroll == 0;
+        let rs_step = zero_on && !is_meta_step;
+        // Sharded θ collectives pin the frozen shard bucket (ownership
+        // must match the submitted partition); replicated ones follow the
+        // adaptive plan.
+        let theta_bucket =
+            (if zero_on { shard_bucket } else { plan.elems() }).max(1);
+
         // ---- base pass -------------------------------------------------
         let g_synced = if stream_base {
             // Streamed: the backward emits gradient segments; full buckets
             // go on the wire immediately (stream A), and between buckets
             // the previous meta step's λ-reduce absorbs any finished
             // buckets (stream B) without blocking.
-            let bucket = plan.elems().max(1);
-            let mut pending = coll.begin_reduce_sized(ReduceTag::Theta, n_theta);
+            let bucket = theta_bucket;
+            let mut pending = if rs_step {
+                coll.begin_reduce_scatter_sized(ReduceTag::Theta, n_theta)
+            } else {
+                coll.begin_reduce_sized(ReduceTag::Theta, n_theta)
+            };
             let mut buf: Vec<f32> = coll.take_bucket_buf(bucket);
             // The streaming callback returns (), so a comm failure inside
             // it is stashed here; further submissions/polls are skipped and
@@ -1125,14 +1412,16 @@ fn run_worker(
                 &mut lambda_stream,
             )?;
             let (grad, meta) = bg.into_parts();
+            let op = if rs_step {
+                CollOp::ReduceScatter
+            } else {
+                CollOp::AllReduce
+            };
             let g = if cfg.overlap {
                 // submit first; bookkeeping fills the overlap window while
                 // the buckets circulate the ring
-                let pending = coll.all_reduce_async(
-                    grad,
-                    plan.elems(),
-                    ReduceTag::Theta,
-                )?;
+                let pending =
+                    coll.op_async(op, grad, theta_bucket, ReduceTag::Theta)?;
                 bookkeep(
                     &meta,
                     step,
@@ -1145,8 +1434,8 @@ fn run_worker(
             } else {
                 // ablation: block through the whole reduce, then do the
                 // same bookkeeping with nothing in flight
-                let g =
-                    coll.all_reduce_sync(grad, plan.elems(), ReduceTag::Theta)?;
+                let p = coll.op_async(op, grad, theta_bucket, ReduceTag::Theta)?;
+                let g = coll.wait(p)?;
                 bookkeep(
                     &meta,
                     step,
@@ -1158,44 +1447,72 @@ fn run_worker(
                 g
             }
         };
-        g_base_last.copy_from_slice(&g_synced);
+        // The meta pass consumes the full ĝ; a reduce-scatter output is
+        // only valid on the owned chunks, so under sharding the buffer is
+        // refreshed on (full all-reduce) meta steps only.
+        if !rs_step {
+            g_base_last.copy_from_slice(&g_synced);
+        }
 
-        // θ ← step(θ, ḡ) through the L1 kernel artifact when available.
-        let stepped = if base_opt_kind == BaseOpt::Adam {
-            problem.adam_step(
-                ParamKind::Theta,
-                &theta,
-                &base_state.m,
-                &base_state.v,
-                &g_synced,
-                (base_state.t + 1) as f32,
-                base_state.lr,
-                base_state.wd,
-            )?
+        if zero_on {
+            // ZeRO-1 owner step: update the owned θ slices against the
+            // (compact) owned m/v, then all-gather θ back to replicated —
+            // every chunk comes from its owner, so the assembled θ is
+            // bitwise what the full-width replicated step produces. (The
+            // L1 artifact has no sharded entry point; the slice kernels
+            // run.)
+            base_state.step_owned(&mut theta, &g_synced);
+            theta = coll.all_gather_sync(
+                std::mem::take(&mut theta),
+                shard_bucket,
+                ReduceTag::Theta,
+            )?;
         } else {
-            None
-        };
-        match stepped {
-            Some((t_new, m_new, v_new)) => {
-                theta = t_new;
-                base_state.m = m_new;
-                base_state.v = v_new;
-                base_state.t += 1;
+            // θ ← step(θ, ḡ) through the L1 kernel artifact when available.
+            let stepped = if base_opt_kind == BaseOpt::Adam {
+                problem.adam_step(
+                    ParamKind::Theta,
+                    &theta,
+                    &base_state.m,
+                    &base_state.v,
+                    &g_synced,
+                    (base_state.t + 1) as f32,
+                    base_state.lr,
+                    base_state.wd,
+                )?
+            } else {
+                None
+            };
+            match stepped {
+                Some((t_new, m_new, v_new)) => {
+                    theta = t_new;
+                    base_state.m = m_new;
+                    base_state.v = v_new;
+                    base_state.t += 1;
+                }
+                None => base_state.step_rust(&mut theta, &g_synced),
             }
-            None => base_state.step_rust(&mut theta, &g_synced),
         }
 
         // ---- meta pass (every `unroll` base steps) ----------------------
-        let is_meta_step = cfg.algo != Algo::None
-            && step >= cfg.meta_warmup
-            && (step + 1) % unroll == 0;
         if is_meta_step {
+            // The meta computation (adapt_diag, as_optimizer, the fused
+            // adapt+perturb artifact) consumes the FULL base optimizer
+            // state; under sharding assemble it from the owner shards for
+            // the duration of the meta pass.
+            let gathered;
+            let meta_base: &OptState = if zero_on {
+                gathered = base_state.gathered_full(coll, ReduceTag::Theta)?;
+                &gathered
+            } else {
+                &base_state
+            };
             let out = meta_step(
                 cfg,
                 problem,
                 &theta,
                 &lambda,
-                &base_state,
+                meta_base,
                 &g_base_last,
                 step,
                 &mut scratch,
@@ -1221,6 +1538,7 @@ fn run_worker(
                 } else {
                     let g_lambda = coll.wait(pending)?;
                     apply_lambda_step(
+                        coll,
                         problem,
                         &mut lambda,
                         &mut meta_state,
@@ -1241,6 +1559,7 @@ fn run_worker(
                 }
                 scratch.recycle_v(perturb_v);
                 apply_lambda_step(
+                    coll,
                     problem,
                     &mut lambda,
                     &mut meta_state,
@@ -1252,8 +1571,7 @@ fn run_worker(
         }
 
         // ---- recovery cut: leader checkpoint + in-memory snapshots ------
-        let ck_due = rank == 0
-            && !cfg.checkpoint_path.is_empty()
+        let save_due = !cfg.checkpoint_path.is_empty()
             && ((cfg.checkpoint_every > 0
                 && (step + 1) % cfg.checkpoint_every == 0)
                 || step + 1 == cfg.steps);
@@ -1261,7 +1579,16 @@ fn run_worker(
             && coll.world() > 1
             && (step + 1) % snap_every == 0
             && step + 1 < cfg.steps;
-        if ck_due || snap_due {
+        // Under sharding the cut's full-state gather is itself a
+        // collective op, so EVERY rank must hit it at the same schedule
+        // point (gather/scatter only at the checkpoint chokepoint —
+        // invariant 8); replicated mode keeps the leader-only cut.
+        let cut_due = if zero_on {
+            save_due || snap_due
+        } else {
+            (rank == 0 && save_due) || snap_due
+        };
+        if cut_due {
             // Resolve an in-flight λ-reduce to its reduced value without
             // applying the deferred step: the reduction is deterministic,
             // so waiting early here cannot change what the next step's
@@ -1280,6 +1607,14 @@ fn run_worker(
                 LambdaStream::Ready(g) => g.clone(),
                 _ => Vec::new(),
             };
+            // Full optimizer state for the cut: replicated clones, sharded
+            // all-gathers from the owner ranks (the checkpoint always
+            // carries full vectors, so resume/re-shard/elastic paths stay
+            // uniform across zero modes and world sizes).
+            let (base_m, base_v) =
+                base_state.full_for_checkpoint(coll, ReduceTag::Theta)?;
+            let (meta_m, meta_v) =
+                meta_state.full_for_checkpoint(coll, ReduceTag::Lambda)?;
             let sched = coll.scheduler_state();
             let ck = Checkpoint {
                 step: (step + 1) as u64,
@@ -1287,16 +1622,20 @@ fn run_worker(
                 meta_t: meta_state.t,
                 theta: theta.clone(),
                 lambda: lambda.clone(),
-                base_m: base_state.m.clone(),
-                base_v: base_state.v.clone(),
-                meta_m: meta_state.m.clone(),
-                meta_v: meta_state.v.clone(),
+                base_m,
+                base_v,
+                meta_m,
+                meta_v,
                 bucket_elems: plan.elems() as u64,
                 pending_lambda: pending,
                 route_epoch: sched.epoch,
                 sched_est: sched.est_busy,
                 sched_scale: sched.scale,
                 problem_state: problem.save_state(),
+                // serialization detail: v4 writes one optimizer blob per
+                // owner rank of this partition (in-memory state stays full)
+                shard_world: if zero_on { coll.world() as u64 } else { 0 },
+                shard_bucket: if zero_on { shard_bucket as u64 } else { 0 },
             };
             if snap_due {
                 if snaps.len() >= 2 {
@@ -1304,7 +1643,7 @@ fn run_worker(
                 }
                 snaps.push(ck.clone());
             }
-            if ck_due && ck_err.is_none() {
+            if rank == 0 && save_due && ck_err.is_none() {
                 if let Err(e) = ck.save_rotating(
                     Path::new(&cfg.checkpoint_path),
                     cfg.checkpoint_keep,
@@ -1393,6 +1732,7 @@ fn run_worker(
         weight_counts,
         exec_seconds: t_start.elapsed().as_secs_f64(),
         bucket_elems_final: plan.elems(),
+        opt_state_bytes: base_state.state_bytes() + meta_state.state_bytes(),
     })))
 }
 
@@ -1501,6 +1841,7 @@ mod tests {
     use crate::bilevel::biased_regression::BiasedRegression;
     use crate::bilevel::BaseGrad;
     use crate::collective::RoutePolicy;
+    use crate::config::ZeroKnob;
     use crate::util::rng::Rng;
 
     fn small_cfg(algo: Algo) -> TrainConfig {
@@ -1747,6 +2088,10 @@ mod tests {
             // tuner would legitimately move the size mid-run
             bucket_auto: false,
             overlap,
+            // timing-ratio assertions: pin sharding off so the CI
+            // SAMA_ZERO=1 leg's extra (blocking) all-gathers don't shift
+            // the blocked/comm split this test measures
+            zero: ZeroKnob::Off,
             ..TrainConfig::default()
         }
     }
@@ -1861,6 +2206,8 @@ mod tests {
             bucket_auto: false,
             overlap: true,
             rings,
+            // timing-ratio test: see slow_link_cfg on pinning zero off
+            zero: ZeroKnob::Off,
             ..TrainConfig::default()
         };
         let factory = SlowFactory {
@@ -2047,6 +2394,213 @@ mod tests {
             );
             assert_eq!(rep.final_theta, reference.final_theta, "{ctx}: θ");
             assert_eq!(rep.final_lambda, reference.final_lambda, "{ctx}: λ");
+        }
+    }
+
+    // ---- ZeRO-1 sharded optimizer state ----------------------------------
+
+    /// [`BrFactory`] with an Adam base optimizer: the sharded schedule
+    /// must hold for stateful m/v, not just SGD's momentum buffer.
+    struct BrAdamFactory;
+
+    impl ProblemFactory for BrAdamFactory {
+        fn build(
+            &self,
+            rank: usize,
+            world: usize,
+        ) -> Result<(Box<dyn BilevelProblem>, Vec<f32>, Vec<f32>)> {
+            BrFactory.build(rank, world)
+        }
+
+        fn base_opt(&self) -> BaseOpt {
+            BaseOpt::Adam
+        }
+    }
+
+    /// Owner-shard updates on compact m/v are bitwise what the replicated
+    /// full-width update produces: run both side by side, merging the
+    /// per-rank owned θ slices each step (the all-gather, done by hand).
+    #[test]
+    fn sharded_optstate_steps_match_replicated_bitwise() {
+        let (n, world, bucket) = (11usize, 3usize, 3usize);
+        let mut rng = Rng::new(7);
+        let mut full = OptState::new(BaseOpt::Adam, n, 3e-3, 0.01);
+        let mut shards: Vec<OptState> = (0..world)
+            .map(|r| {
+                OptState::new_sharded(
+                    BaseOpt::Adam,
+                    3e-3,
+                    0.01,
+                    ShardMap::new(n, bucket, world, r),
+                )
+            })
+            .collect();
+        let mut theta = rng.normal_vec(n, 1.0);
+        let mut theta_sh = theta.clone();
+        for _ in 0..10 {
+            let g = rng.normal_vec(n, 0.5);
+            full.step_rust(&mut theta, &g);
+            // every rank updates only its owned ranges of a private copy,
+            // then the owned slices are merged (the all-gather)
+            let mut merged = vec![0.0f32; n];
+            for st in &mut shards {
+                let mut mine = theta_sh.clone();
+                st.step_owned(&mut mine, &g);
+                let sh = st.shard.as_ref().unwrap();
+                for &(start, len) in &sh.ranges {
+                    merged[start..start + len]
+                        .copy_from_slice(&mine[start..start + len]);
+                }
+            }
+            theta_sh = merged;
+            assert_eq!(theta_sh, theta, "merged sharded θ diverged");
+        }
+        // compact m/v hold exactly the owned slices of the full state
+        for st in &shards {
+            let sh = st.shard.as_ref().unwrap();
+            let mut off = 0usize;
+            for &(start, len) in &sh.ranges {
+                assert_eq!(&st.m[off..off + len], &full.m[start..start + len]);
+                assert_eq!(&st.v[off..off + len], &full.v[start..start + len]);
+                off += len;
+            }
+            assert_eq!(st.t, full.t);
+        }
+    }
+
+    /// The tentpole's acceptance criterion: `zero=1` is a memory knob, not
+    /// a numerics knob. Final θ/λ are bit-for-bit the replicated run's for
+    /// SGD and Adam bases across ring counts and topologies, while every
+    /// rank's measured optimizer state drops to ~1/world of replicated.
+    #[test]
+    fn zero1_matches_zero0_bitwise_and_shards_optimizer_state() {
+        let mk = |zero, topology, rings| TrainConfig {
+            zero,
+            topology,
+            rings,
+            ..resume_cfg(36, "")
+        };
+        let factories: [&dyn ProblemFactory; 2] = [&BrFactory, &BrAdamFactory];
+        for factory in factories {
+            let reference = train(
+                &mk(ZeroKnob::Off, TopologyKind::Flat, 1),
+                factory,
+                &RunOptions::default(),
+            )
+            .unwrap();
+            for (topology, rings) in
+                [(TopologyKind::Flat, 2), (TopologyKind::Hier, 3)]
+            {
+                let rep = train(
+                    &mk(ZeroKnob::On, topology, rings),
+                    factory,
+                    &RunOptions::default(),
+                )
+                .unwrap();
+                let ctx =
+                    format!("topology={} rings={rings}", topology.name());
+                assert_eq!(rep.final_theta, reference.final_theta, "{ctx}: θ");
+                assert_eq!(
+                    rep.final_lambda, reference.final_lambda,
+                    "{ctx}: λ"
+                );
+                for (r, (&z1, &z0)) in rep
+                    .opt_state_bytes
+                    .iter()
+                    .zip(&reference.opt_state_bytes)
+                    .enumerate()
+                {
+                    // world=2 → each rank holds ~half (+tail imbalance)
+                    assert!(
+                        z1 < z0 && z1 <= z0 / 2 + 16,
+                        "{ctx} rank {r}: sharded optimizer state {z1} B not \
+                         ~1/world of replicated {z0} B"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Resume across a v4 sharded checkpoint: the cut gathers full m/v
+    /// from the owners, the restore re-slices them onto the live
+    /// partition, and the resumed run stays bit-for-bit on the replicated
+    /// uninterrupted trajectory.
+    #[test]
+    fn zero1_checkpoint_resume_matches_replicated_bitwise() {
+        let dir = std::env::temp_dir().join("sama_resume_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("zero.ck");
+        std::fs::remove_file(&path).ok();
+        let spath = path.to_str().unwrap().to_string();
+        let mk = |steps, zero, path: &str| TrainConfig {
+            zero,
+            ..resume_cfg(steps, path)
+        };
+
+        let reference =
+            train(&mk(60, ZeroKnob::Off, ""), &BrFactory, &RunOptions::default())
+                .unwrap();
+        let _part = train(
+            &mk(36, ZeroKnob::On, &spath),
+            &BrFactory,
+            &RunOptions::default(),
+        )
+        .unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.step, 36);
+        assert_eq!(ck.shard_world, 2, "cut should record the shard layout");
+        // the in-memory image is always full-width, whatever the layout
+        assert_eq!(ck.base_m.len(), reference.final_theta.len());
+
+        let resumed = train(
+            &mk(60, ZeroKnob::On, &spath),
+            &BrFactory,
+            &RunOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(resumed.final_theta, reference.final_theta, "θ diverged");
+        assert_eq!(resumed.final_lambda, reference.final_lambda, "λ diverged");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Elastic re-shard: kill a rank mid-run with `zero=1`. The survivor
+    /// rebuilds a world of one, re-partitions the optimizer state from the
+    /// durable v4 generation (full ownership now), replays, and still
+    /// lands bit-for-bit on the *replicated* uninterrupted trajectory.
+    #[test]
+    fn zero1_chaos_kill_reshards_and_matches_replicated() {
+        let dir = std::env::temp_dir().join("sama_chaos_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("chaos_zero.ck");
+        for i in 0..4 {
+            std::fs::remove_file(Checkpoint::numbered(&path, i)).ok();
+        }
+        let spath = path.to_str().unwrap().to_string();
+
+        let uninterrupted =
+            train(&resume_cfg(60, ""), &BrFactory, &RunOptions::default())
+                .unwrap();
+
+        let mut cfg = resume_cfg(60, &spath);
+        cfg.zero = ZeroKnob::On;
+        cfg.checkpoint_every = 12;
+        cfg.chaos = "kill:1@30".into();
+        let rep = train(&cfg, &BrFactory, &RunOptions::default()).unwrap();
+
+        assert_eq!(rep.recoveries.len(), 1, "exactly one recovery episode");
+        let ev = &rep.recoveries[0];
+        assert_eq!(ev.survivors, vec![0]);
+        assert_eq!(ev.resume_step, 24);
+        assert_eq!(
+            rep.final_theta, uninterrupted.final_theta,
+            "re-sharded survivor θ diverged"
+        );
+        assert_eq!(
+            rep.final_lambda, uninterrupted.final_lambda,
+            "re-sharded survivor λ diverged"
+        );
+        for i in 0..4 {
+            std::fs::remove_file(Checkpoint::numbered(&path, i)).ok();
         }
     }
 
@@ -2360,6 +2914,7 @@ mod tests {
             weight_counts: counts,
             exec_seconds: 0.1,
             bucket_elems_final: 1 << 14,
+            opt_state_bytes: 1000 + rank as u64,
         }
     }
 
@@ -2385,6 +2940,8 @@ mod tests {
         assert_eq!(merged.comm.len(), 3);
         assert_eq!(merged.comm[0].reduces, 0);
         assert_eq!(merged.comm[2].reduces, 2);
+        // measured optimizer bytes preserved per-rank, in rank order
+        assert_eq!(merged.opt_state_bytes, vec![1000, 1001, 1002]);
         // element-wise weight merging
         assert_eq!(merged.weight_sums, vec![1.0, 1.0, 0.0]);
         assert_eq!(merged.weight_counts, vec![3, 2, 0]);

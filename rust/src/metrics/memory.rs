@@ -120,6 +120,28 @@ pub fn peak_bytes(
     }
 }
 
+/// [`peak_bytes`] with optional ZeRO-1 optimizer-state sharding
+/// (`zero=1`): each rank keeps only ~1/W of the Adam moments (2n of the
+/// 4n static bytes), while weights and gradients stay replicated — the
+/// backward pass still needs them full-width, and the shard owners
+/// re-broadcast θ through the all-gather each step. Rounds the shard up
+/// (the tail-imbalanced rank is the peak one).
+pub fn peak_bytes_zero(
+    algo: Algo,
+    arch: &ArchSpec,
+    global_batch: u64,
+    workers: u64,
+    unroll: u64,
+    zero: bool,
+) -> u64 {
+    let full = peak_bytes(algo, arch, global_batch, workers, unroll);
+    if !zero || workers <= 1 {
+        return full;
+    }
+    let opt = 2 * arch.n_params * 4; // Adam m + v
+    full - opt + (opt + workers - 1) / workers
+}
+
 pub fn gib(bytes: u64) -> f64 {
     bytes as f64 / (1u64 << 30) as f64
 }
@@ -162,6 +184,34 @@ mod tests {
         // sub-linear: params replicate, activations split
         let r2 = m1 as f64 / m2 as f64;
         assert!((1.2..2.0).contains(&r2), "1→2 worker ratio {r2}");
+    }
+
+    #[test]
+    fn zero1_shards_only_the_optimizer_state() {
+        let a = ArchSpec::bert_base();
+        let opt = 2 * a.n_params * 4;
+        for w in [2u64, 4, 8] {
+            let full = peak_bytes(Algo::Sama, &a, B, w, 10);
+            let z = peak_bytes_zero(Algo::Sama, &a, B, w, 10, true);
+            assert!(z < full, "W={w}: {z} vs {full}");
+            // exactly the optimizer moments shrink, to ceil(opt/W)
+            assert_eq!(full - z, opt - (opt + w - 1) / w, "W={w}");
+        }
+        // degenerate cases: knob off, or nothing to shard across
+        assert_eq!(
+            peak_bytes_zero(Algo::Sama, &a, B, 4, 10, false),
+            peak_bytes(Algo::Sama, &a, B, 4, 10)
+        );
+        assert_eq!(
+            peak_bytes_zero(Algo::Sama, &a, B, 1, 10, true),
+            peak_bytes(Algo::Sama, &a, B, 1, 10)
+        );
+        // the absolute saving grows with the world
+        let save = |w| {
+            peak_bytes(Algo::Sama, &a, B, w, 10)
+                - peak_bytes_zero(Algo::Sama, &a, B, w, 10, true)
+        };
+        assert!(save(8) > save(2));
     }
 
     #[test]

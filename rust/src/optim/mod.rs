@@ -57,22 +57,76 @@ impl Adam {
     }
 }
 
+/// One bias-corrected Adam step over slices, at post-increment step count
+/// `t` (i.e. `t` counts *this* step as already taken). The free-function
+/// form exists so state holders can step any sub-slice of a parameter
+/// vector against the matching `m`/`v` slices — the shard-update path
+/// steps only the slices a rank owns — without constructing an optimizer
+/// per call. [`Adam::step`] delegates here; the arithmetic is the single
+/// source of truth, so sharded and replicated schedules are bitwise equal
+/// by construction.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_step_slice(
+    theta: &mut [f32],
+    grad: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: u64,
+    lr: f32,
+    weight_decay: f32,
+) {
+    assert_eq!(theta.len(), grad.len());
+    assert_eq!(theta.len(), m.len());
+    assert_eq!(theta.len(), v.len());
+    let c1 = 1.0 - ADAM_BETA1.powi(t as i32);
+    let c2 = 1.0 - ADAM_BETA2.powi(t as i32);
+    for i in 0..theta.len() {
+        let g = grad[i];
+        m[i] = ADAM_BETA1 * m[i] + (1.0 - ADAM_BETA1) * g;
+        v[i] = ADAM_BETA2 * v[i] + (1.0 - ADAM_BETA2) * g * g;
+        let m_hat = m[i] / c1;
+        let v_hat = v[i] / c2;
+        theta[i] -= lr * m_hat / (v_hat.sqrt() + ADAM_EPS)
+            + lr * weight_decay * theta[i];
+    }
+}
+
+/// One SGD-with-momentum step over slices (coupled weight decay, PyTorch
+/// semantics). Slice twin of [`adam_step_slice`]; [`Sgd::step`] delegates
+/// here.
+pub fn sgd_step_slice(
+    theta: &mut [f32],
+    grad: &[f32],
+    buf: &mut [f32],
+    momentum: f32,
+    lr: f32,
+    weight_decay: f32,
+) {
+    for i in 0..theta.len() {
+        let g = grad[i] + weight_decay * theta[i];
+        buf[i] = momentum * buf[i] + g;
+        theta[i] -= lr * buf[i];
+    }
+}
+
 impl Optimizer for Adam {
     fn step(&mut self, theta: &mut [f32], grad: &[f32]) {
-        assert_eq!(theta.len(), grad.len());
-        assert_eq!(theta.len(), self.m.len());
         self.t += 1;
-        let c1 = 1.0 - self.beta1.powi(self.t as i32);
-        let c2 = 1.0 - self.beta2.powi(self.t as i32);
-        for i in 0..theta.len() {
-            let g = grad[i];
-            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
-            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
-            let m_hat = self.m[i] / c1;
-            let v_hat = self.v[i] / c2;
-            theta[i] -= self.lr * m_hat / (v_hat.sqrt() + self.eps)
-                + self.lr * self.weight_decay * theta[i];
-        }
+        // Adam structs always use the shared β/ε constants (`new` sets
+        // them); the fields remain for kernel cross-checks that pin other
+        // values, which step through their own reference paths.
+        debug_assert_eq!(self.beta1, ADAM_BETA1);
+        debug_assert_eq!(self.beta2, ADAM_BETA2);
+        debug_assert_eq!(self.eps, ADAM_EPS);
+        adam_step_slice(
+            theta,
+            grad,
+            &mut self.m,
+            &mut self.v,
+            self.t,
+            self.lr,
+            self.weight_decay,
+        );
     }
 
     /// Closed-form ∂u/∂g for Adam (Appendix C; exact derivative incl. bias
@@ -119,11 +173,14 @@ impl Sgd {
 
 impl Optimizer for Sgd {
     fn step(&mut self, theta: &mut [f32], grad: &[f32]) {
-        for i in 0..theta.len() {
-            let g = grad[i] + self.weight_decay * theta[i];
-            self.buf[i] = self.momentum * self.buf[i] + g;
-            theta[i] -= self.lr * self.buf[i];
-        }
+        sgd_step_slice(
+            theta,
+            grad,
+            &mut self.buf,
+            self.momentum,
+            self.lr,
+            self.weight_decay,
+        );
     }
 
     /// ∂u/∂g = lr·I for SGD: the identity case of algorithmic adaptation —
@@ -241,6 +298,62 @@ mod tests {
                 }
             },
         );
+    }
+
+    /// The shard-update contract: stepping disjoint sub-slices through the
+    /// free slice functions (each against its own m/v slices) is bitwise
+    /// the full-width step — Adam and SGD are elementwise, so a rank
+    /// updating only its owned ranges computes exactly the replicated
+    /// update's bits for those elements.
+    #[test]
+    fn slice_steps_match_full_step_bitwise() {
+        let n = 11usize;
+        let theta0: Vec<f32> = (0..n).map(|i| 0.3 * i as f32 - 1.0).collect();
+        let grad: Vec<f32> = (0..n).map(|i| 0.17 * i as f32 - 0.9).collect();
+
+        // Adam: two sequential steps, full-width vs split at 4
+        let mut full = Adam::new(n, 0.05).with_weight_decay(1e-3);
+        let mut theta_full = theta0.clone();
+        let mut theta_split = theta0.clone();
+        let (mut m, mut v) = (vec![0.0f32; n], vec![0.0f32; n]);
+        for t in 1..=2u64 {
+            full.step(&mut theta_full, &grad);
+            for (s, e) in [(0usize, 4usize), (4, n)] {
+                adam_step_slice(
+                    &mut theta_split[s..e],
+                    &grad[s..e],
+                    &mut m[s..e],
+                    &mut v[s..e],
+                    t,
+                    0.05,
+                    1e-3,
+                );
+            }
+        }
+        assert_eq!(theta_full, theta_split);
+        assert_eq!(full.m, m);
+        assert_eq!(full.v, v);
+
+        // SGD twin
+        let mut sfull = Sgd::new(n, 0.1, 0.9, 1e-4);
+        let mut tf = theta0.clone();
+        let mut ts = theta0;
+        let mut buf = vec![0.0f32; n];
+        for _ in 0..2 {
+            sfull.step(&mut tf, &grad);
+            for (s, e) in [(0usize, 7usize), (7, n)] {
+                sgd_step_slice(
+                    &mut ts[s..e],
+                    &grad[s..e],
+                    &mut buf[s..e],
+                    0.9,
+                    0.1,
+                    1e-4,
+                );
+            }
+        }
+        assert_eq!(tf, ts);
+        assert_eq!(sfull.buf, buf);
     }
 
     #[test]

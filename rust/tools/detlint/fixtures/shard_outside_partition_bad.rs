@@ -1,0 +1,34 @@
+//! detlint fixture — `shard-outside-partition`, known-bad.
+//!
+//! Shard ownership re-derived outside `collective::owned_ranges`: the
+//! copy agrees with the chokepoint today, and the first time either side
+//! changes (tail handling, bucket tiling, owner rotation) two ranks both
+//! claim — or neither claims — the same m/v slice, and the all-gather
+//! re-replicates divergent θ.
+
+/// A hand-rolled copy of the chokepoint's chunk partition.
+pub fn my_chunk(chunk: usize, n: usize, world: usize) -> (usize, usize) {
+    let base = n / world; //~ shard-outside-partition
+    let rem = n % world; //~ shard-outside-partition
+    (chunk * base + chunk.min(rem), base + usize::from(chunk < rem))
+}
+
+/// Owner rotation duplicated from the ring engine.
+pub fn my_owner(rank: usize, shard_world: usize) -> usize {
+    (rank + 1) % shard_world.max(1) //~ shard-outside-partition
+}
+
+/// The method-call shape: partitioning by a live collective's world.
+pub struct Coll {
+    world: usize,
+}
+
+impl Coll {
+    pub fn world(&self) -> usize {
+        self.world
+    }
+}
+
+pub fn my_stride(n: usize, coll: &Coll) -> usize {
+    n / coll.world() //~ shard-outside-partition
+}

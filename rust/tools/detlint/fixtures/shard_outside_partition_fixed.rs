@@ -1,0 +1,32 @@
+//! detlint fixture — `shard-outside-partition`, fixed.
+//!
+//! Shard ownership has one home: `collective::owned_ranges` (and its
+//! `chunk_range`). Everyone else — the owner-shard optimizer, checkpoint
+//! reassembly, elastic rebuild — asks it for `(start, len)` ranges. In
+//! the real tree the chokepoint lives under `src/collective`, where the
+//! rule is off by scoping; the fixture stand-in carries the allow.
+
+/// The chokepoint stand-in (really `collective::chunk_range`).
+pub fn chunk_range(c: usize, n: usize, world: usize) -> (usize, usize) {
+    // detlint: allow(shard-outside-partition) — this *is* the partition
+    // chokepoint; fixtures sit outside src/collective, so say so
+    let (base, rem) = (n / world.max(1), n % world.max(1));
+    (c * base + c.min(rem), base + usize::from(c < rem))
+}
+
+/// Everyone else derives ownership by asking the chokepoint.
+pub fn owned_ranges(n: usize, world: usize) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    for c in 0..world {
+        let (start, len) = chunk_range(c, n, world);
+        if len > 0 {
+            ranges.push((start, len));
+        }
+    }
+    ranges
+}
+
+/// Compact shard length: sum of owned ranges, no re-partitioning.
+pub fn owned_len(ranges: &[(usize, usize)]) -> usize {
+    ranges.iter().map(|r| r.1).sum()
+}

@@ -15,6 +15,7 @@
 //! | `lock-across-recv` | mutex guard held across a ring rendezvous |
 //! | `float-accum-cast` | unrounded int cast of a float accumulator |
 //! | `route-outside-scheduler` | ring arithmetic outside `RingScheduler` |
+//! | `shard-outside-partition` | world-partition arithmetic outside `owned_ranges` |
 //! | `bad-allow` | broken `detlint:` directive |
 //!
 //! Intentional exceptions are annotated in place:
@@ -36,8 +37,8 @@ use std::path::{Path, PathBuf};
 
 pub use rules::{
     Finding, BAD_ALLOW, FLOAT_ACCUM_CAST, LOCK_ACROSS_RECV, NONDET_ITERATION,
-    ROUTE_OUTSIDE_SCHEDULER, RULES, UNBOUNDED_DESER_ALLOC,
-    WALLCLOCK_IN_DECISION,
+    ROUTE_OUTSIDE_SCHEDULER, RULES, SHARD_OUTSIDE_PARTITION,
+    UNBOUNDED_DESER_ALLOC, WALLCLOCK_IN_DECISION,
 };
 
 /// Lint one source string. `path_label` determines rule scoping (see
@@ -212,6 +213,16 @@ mod fixture_tests {
     }
 
     #[test]
+    fn shard_outside_partition_bad() {
+        assert_fixture_exact("shard_outside_partition_bad.rs");
+    }
+
+    #[test]
+    fn shard_outside_partition_fixed() {
+        assert_fixture_clean("shard_outside_partition_fixed.rs");
+    }
+
+    #[test]
     fn allow_bad() {
         assert_fixture_exact("allow_bad.rs");
     }
@@ -227,7 +238,7 @@ mod fixture_tests {
     fn fixture_tree_totals() {
         let (findings, files) =
             scan_tree(&[fixture_path("")]).expect("scan fixtures");
-        assert_eq!(files, 14, "fixture files present");
+        assert_eq!(files, 16, "fixture files present");
         let total_markers: usize = std::fs::read_dir(fixture_path(""))
             .unwrap()
             .map(|e| {
@@ -237,7 +248,7 @@ mod fixture_tests {
             })
             .sum();
         assert_eq!(findings.len(), total_markers);
-        assert!(findings.len() >= 12, "≥ 6 rules exercised, twice over");
+        assert!(findings.len() >= 14, "≥ 7 rules exercised, twice over");
     }
 
     /// Allow directives must not leak across lines: an allow for line N

@@ -43,19 +43,27 @@ pub const FLOAT_ACCUM_CAST: &str = "float-accum-cast";
 /// `RingScheduler` — routing decided in two places is routing that can
 /// disagree across ranks the first time one copy changes.
 pub const ROUTE_OUTSIDE_SCHEDULER: &str = "route-outside-scheduler";
+/// World-partition arithmetic (`% world`, `/ world` and friends) outside
+/// `collective::owned_ranges`/`chunk_range` — the invariant-8 chokepoint.
+/// Shard ownership derived in two places is ownership that can disagree
+/// across ranks (or with the checkpoint reassembly) the first time one
+/// copy changes: a rank would update m/v slices another rank also claims,
+/// and the all-gather would re-replicate divergent θ.
+pub const SHARD_OUTSIDE_PARTITION: &str = "shard-outside-partition";
 /// A malformed `detlint:` directive: unknown rule name, missing `— reason`,
 /// or unparseable `allow(…)`. Allows are load-bearing documentation; a
 /// broken one silently enforces nothing.
 pub const BAD_ALLOW: &str = "bad-allow";
 
 /// Every rule name, for directive validation and `--help`.
-pub const RULES: [&str; 7] = [
+pub const RULES: [&str; 8] = [
     NONDET_ITERATION,
     WALLCLOCK_IN_DECISION,
     UNBOUNDED_DESER_ALLOC,
     LOCK_ACROSS_RECV,
     FLOAT_ACCUM_CAST,
     ROUTE_OUTSIDE_SCHEDULER,
+    SHARD_OUTSIDE_PARTITION,
     BAD_ALLOW,
 ];
 
@@ -81,6 +89,10 @@ struct FileClass {
     /// `topology.rs` — the one place routing arithmetic is *supposed* to
     /// live; route-outside-scheduler is skipped there.
     scheduler_home: bool,
+    /// `src/collective` — where `owned_ranges`/`chunk_range` (and the ring
+    /// hop math) legitimately partition by world; shard-outside-partition
+    /// is skipped there. Fixtures stay in scope so the rule is exercisable.
+    partition_home: bool,
 }
 
 impl FileClass {
@@ -101,6 +113,7 @@ impl FileClass {
             decision,
             collective: fixture || p.contains("src/collective"),
             scheduler_home: p.ends_with("topology.rs"),
+            partition_home: p.contains("src/collective"),
         }
     }
 }
@@ -123,6 +136,9 @@ pub fn scan_source(path_label: &str, src: &str) -> Vec<Finding> {
     }
     if !class.scheduler_home {
         rule_route_outside_scheduler(&lexed.tokens, &mut raw);
+    }
+    if class.decision && !class.partition_home {
+        rule_shard_outside_partition(&lexed.tokens, &mut raw);
     }
 
     // detlint: directives — build the suppression map, flag broken ones
@@ -243,6 +259,42 @@ fn rule_route_outside_scheduler(
                     out.push((t.line, ROUTE_OUTSIDE_SCHEDULER));
                 }
             }
+        }
+    }
+}
+
+fn rule_shard_outside_partition(
+    toks: &[Token],
+    out: &mut Vec<(usize, &'static str)>,
+) {
+    for (i, t) in toks.iter().enumerate() {
+        if !(t.is_op("%") || t.is_op("/")) {
+            continue;
+        }
+        // walk the short postfix chain on the right-hand side
+        // (`world`, `self.world`, `coll.world()`, `(world - 1)`…): a
+        // world-named ident makes this partition arithmetic
+        let mut j = i + 1;
+        let mut hops = 0usize;
+        while let Some(rhs) = toks.get(j) {
+            let continues = match rhs.kind {
+                TokKind::Ident => true,
+                TokKind::Op => {
+                    matches!(rhs.text.as_str(), "(" | "&" | "*" | "." | "::")
+                }
+                _ => false,
+            };
+            if !continues || hops >= 8 {
+                break;
+            }
+            if rhs.kind == TokKind::Ident
+                && rhs.text.to_ascii_lowercase().contains("world")
+            {
+                out.push((t.line, SHARD_OUTSIDE_PARTITION));
+                break;
+            }
+            hops += 1;
+            j += 1;
         }
     }
 }
