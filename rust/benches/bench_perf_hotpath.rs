@@ -16,8 +16,9 @@ use sama::bilevel::biased_regression::BiasedRegression;
 use sama::bilevel::cls_problem::ClsProblem;
 use sama::bilevel::{BilevelProblem, ParamKind};
 use sama::collective::{
-    BucketPlan, CommStats, CommWorld, LinkModel, LinkProfile, ReduceTag,
-    RoutePolicy, Topology,
+    AlgoChoice, BucketPlan, Codec, CollAlgo, CommStats, CommWorld,
+    CompressPolicy, LinkModel, LinkProfile, ReduceTag, RoutePolicy, Topology,
+    DEFAULT_PEER_TIMEOUT,
 };
 use sama::config::{Algo, MetaOps, TrainConfig, ZeroKnob};
 use sama::coordinator::{
@@ -227,6 +228,65 @@ fn probe_routing(policy: RoutePolicy) -> CommStats {
     stats
 }
 
+/// Per-algorithm wire probe (PR 9): the same 256 KiB θ all-reduce forced
+/// through each collective algorithm on a two-node fabric (2×2 ranks,
+/// derated inter-node link), with a per-tag codec on θ — modelled wire
+/// seconds and pre/post-codec bytes per algorithm, i.e. exactly the
+/// costs `RingScheduler::plan` selects from. Selection and codec are
+/// model/wire-only: the reduced values are bitwise-identical across
+/// every row, and λ/Ctrl always ride at f32.
+fn probe_algo(choice: AlgoChoice, codec: Codec) -> CommStats {
+    let fast = LinkProfile { latency: 1e-6, bytes_per_sec: 1e9 };
+    let slow = LinkProfile { latency: 1e-4, bytes_per_sec: 20e6 };
+    let cw = CommWorld::with_topology_opts(
+        Topology::hierarchical(4, 2, 1, fast, slow),
+        RoutePolicy::Sized,
+        DEFAULT_PEER_TIMEOUT,
+        choice,
+        CompressPolicy::theta(codec),
+    );
+    let mut handles = Vec::new();
+    for rank in 0..4 {
+        let cw = Arc::clone(&cw);
+        handles.push(std::thread::spawn(move || {
+            let mut coll = cw.join(rank);
+            for _ in 0..2 {
+                // one full-θ bucket: sync, so the rs+ag lowering is
+                // eligible when the scheduler (or the forced choice)
+                // calls for it
+                let _ = coll
+                    .all_reduce_sync(
+                        vec![rank as f32; PROBE_ELEMS],
+                        PROBE_ELEMS,
+                        ReduceTag::Theta,
+                    )
+                    .unwrap();
+                let _ = coll
+                    .all_reduce_sync(vec![0.5; 4], 4, ReduceTag::Ctrl)
+                    .unwrap();
+            }
+            coll.stats().clone()
+        }));
+    }
+    let mut stats = CommStats::default();
+    for h in handles {
+        stats.merge(&h.join().unwrap());
+    }
+    stats
+}
+
+const ALGO_NAMES: [CollAlgo; 4] =
+    [CollAlgo::Ring, CollAlgo::RsAg, CollAlgo::Hier, CollAlgo::Double];
+
+/// (modelled wire secs, wire bytes, raw bytes) summed over all algorithms
+/// a probe's ops were booked under.
+fn algo_sums(stats: &CommStats) -> (f64, f64, f64) {
+    ALGO_NAMES.iter().fold((0.0, 0.0, 0.0), |(s, w, r), a| {
+        let st = stats.algo(*a);
+        (s + st.est_wire_secs, w + st.wire_bytes, r + st.raw_bytes)
+    })
+}
+
 /// Replicated analytic problem for the recovery probe (same shape as the
 /// tier-1 chaos tests: every rank builds the identical instance, so the
 /// survivor world's re-average preserves the trajectory).
@@ -319,6 +379,18 @@ fn comm_overlap_probe() {
     let rings2 = probe_rings(2);
     let route_tag = probe_routing(RoutePolicy::Tag);
     let route_sized = probe_routing(RoutePolicy::Sized);
+    let algo_probes: Vec<(&str, CommStats)> = [
+        ("ring", AlgoChoice::Fixed(CollAlgo::Ring)),
+        ("rsag", AlgoChoice::Fixed(CollAlgo::RsAg)),
+        ("hier", AlgoChoice::Fixed(CollAlgo::Hier)),
+        ("double", AlgoChoice::Fixed(CollAlgo::Double)),
+        ("auto", AlgoChoice::Auto),
+    ]
+    .into_iter()
+    .map(|(n, c)| (n, probe_algo(c, Codec::F16)))
+    .collect();
+    let algo_ring_off =
+        probe_algo(AlgoChoice::Fixed(CollAlgo::Ring), Codec::None);
     let recovery = probe_recovery();
     let (zero_off, zero_on) = probe_zero();
 
@@ -408,6 +480,42 @@ fn comm_overlap_probe() {
          behind the whole θ transfer; size routing sends θ to the fast \
          ring and hitches the small reduces onto the empty one. Reduced \
          values are bitwise-identical under both policies."
+    );
+
+    let mut at = Table::new(
+        "§Perf: collective algorithm × codec probe (256 KiB θ ×2 + Ctrl, \
+         2-node fabric 2×2 ranks, 20 MB/s inter link, f16 on θ)",
+        &["algo", "modelled wire s", "wire KiB", "raw KiB", "codec ratio"],
+    );
+    {
+        let (est, wire, raw) = algo_sums(&algo_ring_off);
+        at.row(vec![
+            "ring (codec off)".into(),
+            format!("{est:.4}"),
+            format!("{:.1}", wire / 1024.0),
+            format!("{:.1}", raw / 1024.0),
+            f2(algo_ring_off.compression_ratio()),
+        ]);
+    }
+    for (name, st) in &algo_probes {
+        let (est, wire, raw) = algo_sums(st);
+        at.row(vec![
+            (*name).into(),
+            format!("{est:.4}"),
+            format!("{:.1}", wire / 1024.0),
+            format!("{:.1}", raw / 1024.0),
+            f2(st.compression_ratio()),
+        ]);
+    }
+    at.print();
+    println!(
+        "modelled wire s is the scheduler's own cost model (what auto \
+         selects from), summed over ranks; wire vs raw KiB is bytes after \
+         vs before the θ codec — f16 halves the fat reduce while the Ctrl \
+         payload stays f32, so the ratio sits just under 2. hier beats \
+         ring on this fabric (intra-node hops at 1 GB/s), double pays \
+         log₂W full-size exchanges and only wins tiny reduces; every row \
+         reduces to bitwise-identical values."
     );
 
     let mut rv = Table::new(
@@ -519,6 +627,30 @@ fn comm_overlap_probe() {
     obj.insert(
         "route_contention_removed_seconds".into(),
         num(small_blocked(&route_tag) - small_blocked(&route_sized)),
+    );
+    let mut algo_json: BTreeMap<String, Json> = BTreeMap::new();
+    for (name, st) in &algo_probes {
+        let (est, wire, raw) = algo_sums(st);
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("modelled_wire_seconds".into(), num(est));
+        o.insert("wire_bytes".into(), num(wire));
+        o.insert("raw_bytes".into(), num(raw));
+        o.insert("compression_ratio".into(), num(st.compression_ratio()));
+        algo_json.insert((*name).to_string(), Json::Obj(o));
+    }
+    obj.insert("coll_algo_probe_f16".into(), Json::Obj(algo_json));
+    obj.insert(
+        "coll_ring_uncompressed_modelled_wire_seconds".into(),
+        num(algo_sums(&algo_ring_off).0),
+    );
+    // probes run in a fixed order: [0] = ring, [2] = hier (both forced)
+    obj.insert(
+        "coll_hier_wire_drop_vs_ring_seconds".into(),
+        num(algo_sums(&algo_probes[0].1).0 - algo_sums(&algo_probes[2].1).0),
+    );
+    obj.insert(
+        "coll_f16_wire_ratio".into(),
+        num(algo_probes[0].1.compression_ratio()),
     );
     obj.insert(
         "ring_busy_seconds_rings2".into(),

@@ -18,10 +18,16 @@
 mod common;
 
 use sama::apps::wrench;
-use sama::collective::{ReduceTag, RoutePolicy, TopologyKind};
-use sama::config::{Algo, ZeroKnob};
+use sama::collective::{
+    AlgoChoice, Codec, CollAlgo, CompressPolicy, ReduceTag, RoutePolicy,
+    TopologyKind,
+};
+use sama::config::{Algo, CollAlgoKnob, CompressKnob, ZeroKnob};
 use sama::metrics::memory::{gib, peak_bytes_zero, ArchSpec};
 use sama::metrics::report::{f1, f2, slash_join, Table};
+
+const ALGOS: [CollAlgo; 4] =
+    [CollAlgo::Ring, CollAlgo::RsAg, CollAlgo::Hier, CollAlgo::Double];
 
 struct Row {
     label: &'static str,
@@ -32,6 +38,8 @@ struct Row {
     route: RoutePolicy,
     topology: TopologyKind,
     zero: bool,
+    coll_algo: AlgoChoice,
+    compress: CompressPolicy,
 }
 
 impl Row {
@@ -45,6 +53,10 @@ impl Row {
             route: RoutePolicy::Sized,
             topology: TopologyKind::Flat,
             zero: false,
+            // pinned (not Env) so row-to-row comparisons stay stable on
+            // the CI lanes that export SAMA_COLL_ALGO / SAMA_COMPRESS
+            coll_algo: AlgoChoice::Fixed(CollAlgo::Ring),
+            compress: CompressPolicy::off(),
         }
     }
 }
@@ -70,6 +82,10 @@ fn main() {
             "bucket KiB (final)",
             "opt B/rank (measured)",
             "rs/ag wire (KiB)",
+            "coll algo",
+            "modelled wire (s)",
+            "wire/raw (KiB)",
+            "codec ratio",
         ],
     );
     let rows: Vec<Row> = vec![
@@ -93,6 +109,32 @@ fn main() {
             topology: TopologyKind::Hier,
             ..Row::new("sama topo=hier", Algo::Sama, 2, "cls_b24")
         },
+        // same two-node fabric, scheduler picking per-reduce from modelled
+        // finish times — the multi-node modelled wire seconds drop vs the
+        // flat-ring `sama topo=hier` row above (selection is model-only:
+        // reduced values stay bitwise-identical)
+        Row {
+            topology: TopologyKind::Hier,
+            coll_algo: AlgoChoice::Auto,
+            ..Row::new("sama topo=hier algo=auto", Algo::Sama, 2, "cls_b24")
+        },
+        Row {
+            topology: TopologyKind::Hier,
+            coll_algo: AlgoChoice::Fixed(CollAlgo::Hier),
+            ..Row::new("sama topo=hier algo=hier", Algo::Sama, 2, "cls_b24")
+        },
+        // f16 on-the-wire θ compression: ~2× fewer wire bytes (λ/Ctrl ride
+        // at f32; error feedback keeps the quantization noise bounded)
+        Row {
+            compress: CompressPolicy::theta(Codec::F16),
+            ..Row::new("sama compress=f16", Algo::Sama, 2, "cls_b24")
+        },
+        Row {
+            topology: TopologyKind::Hier,
+            coll_algo: AlgoChoice::Fixed(CollAlgo::Hier),
+            compress: CompressPolicy::theta(Codec::F16),
+            ..Row::new("sama hier+f16", Algo::Sama, 2, "cls_b24")
+        },
         Row::new("sama", Algo::Sama, 4, "cls_b12"),
         // ZeRO-1 optimizer-state sharding: same schedule, each rank keeps
         // 1/W of the Adam moments — θ goes reduce-scatter → owner step →
@@ -110,6 +152,8 @@ fn main() {
         cfg.route = row.route;
         cfg.topology = row.topology;
         cfg.zero = if row.zero { ZeroKnob::On } else { ZeroKnob::Off };
+        cfg.coll_algo = CollAlgoKnob::Set(row.coll_algo);
+        cfg.compress = CompressKnob::Set(row.compress);
         let out = wrench::run(&cfg, "agnews").expect("run");
         let per_worker_batch = 48 / row.workers;
         let mem = gib(peak_bytes_zero(
@@ -167,6 +211,17 @@ fn main() {
                     .sum::<u64>() as f64
                     / 1024.0)
             ),
+            row.coll_algo.name().into(),
+            f2(ALGOS
+                .iter()
+                .map(|a| totals.algo(*a).est_wire_secs)
+                .sum::<f64>()),
+            format!(
+                "{}/{}",
+                f1(totals.bytes_sent as f64 / 1024.0),
+                f1(totals.raw_bytes_sent as f64 / 1024.0)
+            ),
+            f2(totals.compression_ratio()),
         ]);
     }
     t.print();
@@ -194,7 +249,15 @@ fn main() {
          capacities, base+meta): the zero=1 rows hold ~1/W of the\n\
          replicated rows' state while training to bitwise-identical θ/λ,\n\
          paying the rs/ag wire split (reduce-scatter grads in, all-gather\n\
-         θ out on non-meta steps; 0/0 on replicated rows)."
+         θ out on non-meta steps; 0/0 on replicated rows). coll algo is\n\
+         the per-reduce algorithm mode: `algo=auto` lets the scheduler\n\
+         pick ring/rsag/hier/double per reduce from modelled finish times\n\
+         — on the two-node fabric the modelled wire seconds drop vs the\n\
+         flat-ring `sama topo=hier` row while values stay bitwise-equal\n\
+         (selection is model-only). compress=f16 quantizes θ gradient\n\
+         payloads on the wire with error feedback: wire/raw shows ~2×\n\
+         fewer bytes, and the codec ratio column is raw/wire (λ and Ctrl\n\
+         always ride at f32)."
     );
     println!(
         "paper Table 2 reference (GB, samples/s): Neumann 26.0/82.9, \

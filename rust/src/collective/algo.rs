@@ -1,0 +1,328 @@
+//! Collective *algorithms*: the per-reduce choice of how a reduce is
+//! lowered onto the topology, and the analytic cost model the
+//! [`RingScheduler`] compares candidates with.
+//!
+//! The flat ring all-reduce is bandwidth-optimal on a homogeneous cycle
+//! and wrong almost everywhere else. Production stacks (NCCL's
+//! tree/ring/CollNet selection, MSCCL) pick per-collective from modelled
+//! finish times; this module brings that selection here:
+//!
+//!  * [`CollAlgo::Ring`] — the baseline: reduce-scatter + all-gather
+//!    phases around one ring, 2(W−1) steps of B/W bytes. Bandwidth-
+//!    optimal, latency-heavy (every step pays the slowest hop).
+//!  * [`CollAlgo::RsAg`] — the same two phases lowered as *independent
+//!    streamed half-ops* (PR 8's `reduce_scatter`/`all_gather`): each
+//!    half routes itself, so a fat θ reduce can put its halves on
+//!    different rings and interleave with the owner-shard update between
+//!    them. Wire cost equals `Ring`; the win is scheduling freedom, so
+//!    auto-selection prefers it only for large materialized reduces
+//!    ([`RSAG_MIN_ELEMS`]).
+//!  * [`CollAlgo::Hier`] — two-level hierarchical all-reduce: intra-node
+//!    reduce-scatter (L−1 steps of B/L on `intra` links), inter-node
+//!    ring all-reduce of each rank's shard across its rail (2(N−1) steps
+//!    of B/(L·N) on the `inter` fabric), intra-node all-gather. Moves
+//!    1/L of the bytes over the slow fabric — the standard multi-node
+//!    win.
+//!  * [`CollAlgo::Double`] — recursive doubling: ⌈log₂W⌉ rounds, each
+//!    exchanging the full payload. Latency-optimal (log W vs 2(W−1)
+//!    latency terms), bandwidth-hungry — right for tiny Ctrl/λ reduces,
+//!    wrong for θ.
+//!
+//! **Determinism contract (invariant 9).** The algorithm choice is a
+//! pure function of rank-replicated inputs — the tag, the op, the
+//! rank-synced size hint, the static topology and the scheduler's
+//! replicated clocks — evaluated identically on every rank
+//! ([`RingScheduler::plan`]), so all ranks agree on every choice with no
+//! extra coordination, exactly like ring routing (invariant 1). And the
+//! choice moves only *modelled time and wire bytes*, never summation
+//! order: `Hier` and `Double` execute on the order-preserving ring
+//! engine with their cost model scaling the simulated hop time
+//! ([`RingScheduler::wire_scale`]), while `RsAg` lowers onto the
+//! grid-tested rs∘ag ≡ all-reduce pair — so every uncompressed algorithm
+//! variant lands bitwise on the flat-ring baseline.
+
+use anyhow::{bail, Result};
+
+use super::topology::Topology;
+use super::CollOp;
+
+/// A materialized all-reduce this large (elements) auto-selects the
+/// [`CollAlgo::RsAg`] half-op lowering: 64 Ki f32s = 256 KiB, the point
+/// where the owner-shard window between the halves is worth more than
+/// one fused submission.
+pub const RSAG_MIN_ELEMS: usize = 1 << 16;
+
+/// One way to lower a reduce onto the wire. Declaration order is the
+/// deterministic tie-break order of auto-selection (`Ring` first: ties
+/// keep the baseline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollAlgo {
+    /// Flat ring reduce-scatter + all-gather (the PR 3 baseline).
+    Ring,
+    /// The same two phases as independently routed streamed half-ops.
+    RsAg,
+    /// Two-level hierarchical: intra-node reduce → inter-node ring over
+    /// one shard-rail per node → intra-node broadcast.
+    Hier,
+    /// Recursive doubling: ⌈log₂W⌉ full-payload exchange rounds.
+    Double,
+}
+
+impl CollAlgo {
+    /// Every algorithm, in tie-break (and stats-index) order.
+    pub const ALL: [CollAlgo; 4] =
+        [CollAlgo::Ring, CollAlgo::RsAg, CollAlgo::Hier, CollAlgo::Double];
+
+    /// Stable index for per-algorithm stats attribution.
+    pub fn idx(&self) -> usize {
+        match self {
+            CollAlgo::Ring => 0,
+            CollAlgo::RsAg => 1,
+            CollAlgo::Hier => 2,
+            CollAlgo::Double => 3,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollAlgo::Ring => "ring",
+            CollAlgo::RsAg => "rsag",
+            CollAlgo::Hier => "hier",
+            CollAlgo::Double => "double",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<CollAlgo> {
+        Ok(match s {
+            "ring" => CollAlgo::Ring,
+            "rsag" | "rs+ag" | "halves" => CollAlgo::RsAg,
+            "hier" | "hierarchical" | "tree" => CollAlgo::Hier,
+            "double" | "doubling" | "recursive-doubling" => CollAlgo::Double,
+            _ => bail!("unknown collective algorithm '{s}' (ring|rsag|hier|double)"),
+        })
+    }
+
+    /// Wire bytes per rank for an op of `payload` wire bytes under this
+    /// algorithm, as a multiple of `payload` — the single byte-attribution
+    /// model every entry point shares (the unified bucket planner counts
+    /// bytes exactly once, here).
+    ///
+    /// `Ring`/`RsAg` all-reduce: 2(W−1)/W (each half op: (W−1)/W). `Hier`:
+    /// 2(L−1)/L intra + 2(N−1)/(N·L) inter. `Double`: ⌈log₂W⌉ full
+    /// payloads.
+    pub fn wire_units(&self, op: CollOp, topo: &Topology) -> f64 {
+        let w = topo.world();
+        if w <= 1 {
+            return 0.0;
+        }
+        let ring_units =
+            op.phases() as f64 * (w - 1) as f64 / w as f64;
+        match self {
+            CollAlgo::Ring | CollAlgo::RsAg => ring_units,
+            CollAlgo::Hier => {
+                if op != CollOp::AllReduce {
+                    return ring_units;
+                }
+                let n = topo.nodes();
+                let l = w.div_ceil(n);
+                let intra = 2.0 * (l - 1) as f64 / l as f64;
+                let inter =
+                    2.0 * (n - 1) as f64 / (n as f64 * l as f64);
+                intra + inter
+            }
+            CollAlgo::Double => {
+                if op != CollOp::AllReduce {
+                    return ring_units;
+                }
+                log2_ceil(w) as f64
+            }
+        }
+    }
+}
+
+/// The resolved `coll_algo=` / `SAMA_COLL_ALGO` knob: either dynamic
+/// per-reduce selection or one pinned algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoChoice {
+    /// [`RingScheduler::plan`] selects per reduce from modelled costs.
+    Auto,
+    /// Every eligible reduce uses this algorithm.
+    Fixed(CollAlgo),
+}
+
+impl AlgoChoice {
+    pub fn parse(s: &str) -> Result<AlgoChoice> {
+        Ok(match s {
+            "auto" | "" => AlgoChoice::Auto,
+            other => AlgoChoice::Fixed(CollAlgo::parse(other)?),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoChoice::Auto => "auto",
+            AlgoChoice::Fixed(a) => a.name(),
+        }
+    }
+}
+
+/// ⌈log₂ w⌉ for w ≥ 1.
+pub fn log2_ceil(w: usize) -> u32 {
+    if w <= 1 {
+        0
+    } else {
+        usize::BITS - (w - 1).leading_zeros()
+    }
+}
+
+/// Raw modelled seconds of one all-reduce of `elems` f32s under `algo`,
+/// lowered over `ring`'s path on `topo` — *without* the scheduler's
+/// fabric-share and measured-scale factors (those are layered on by
+/// [`RingScheduler::algo_cost`]; this raw form is also the engine's
+/// simulated-time scale, see [`RingScheduler::wire_scale`]).
+///
+/// [`RingScheduler::algo_cost`]: super::topology::RingScheduler::algo_cost
+/// [`RingScheduler::wire_scale`]: super::topology::RingScheduler::wire_scale
+pub fn algo_secs(
+    topo: &Topology,
+    algo: CollAlgo,
+    ring: usize,
+    elems: usize,
+) -> f64 {
+    let w = topo.world();
+    if w <= 1 {
+        return 0.0;
+    }
+    let elems = elems.max(1);
+    match algo {
+        // ring and its half-op lowering move the same bytes over the
+        // same path in the same number of steps
+        CollAlgo::Ring | CollAlgo::RsAg => {
+            topo.path(ring).reduce_secs(elems, w)
+        }
+        CollAlgo::Hier => {
+            let n = topo.nodes();
+            let l = w.div_ceil(n);
+            let intra_steps = 2.0 * l.saturating_sub(1) as f64;
+            let inter_steps = 2.0 * n.saturating_sub(1) as f64;
+            intra_steps * topo.intra().secs(elems.div_ceil(l) * 4)
+                + inter_steps
+                    * topo.inter().secs(elems.div_ceil(l * n) * 4)
+        }
+        CollAlgo::Double => {
+            log2_ceil(w) as f64 * topo.path(ring).step_secs(elems * 4)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::topology::LinkProfile;
+    use super::*;
+
+    fn fast() -> LinkProfile {
+        LinkProfile { latency: 1e-6, bytes_per_sec: 1e9 }
+    }
+
+    fn slow() -> LinkProfile {
+        LinkProfile { latency: 1e-4, bytes_per_sec: 2e7 }
+    }
+
+    #[test]
+    fn log2_ceil_matches_hand_values() {
+        for (w, want) in
+            [(1usize, 0u32), (2, 1), (3, 2), (4, 2), (5, 3), (8, 3), (9, 4)]
+        {
+            assert_eq!(log2_ceil(w), want, "w={w}");
+        }
+    }
+
+    /// On a multi-node topology with a slow fabric, the hierarchical
+    /// algorithm's modelled seconds beat the flat ring for fat reduces:
+    /// it moves 1/L of the bytes over the slow inter links.
+    #[test]
+    fn hier_beats_ring_on_multinode_fat_reduces() {
+        // 8 ranks, 2 nodes of 4, fast intra / slow inter
+        let topo = Topology::hierarchical(8, 2, 2, fast(), slow());
+        let fat = 1 << 20;
+        let ring = algo_secs(&topo, CollAlgo::Ring, 0, fat);
+        let hier = algo_secs(&topo, CollAlgo::Hier, 0, fat);
+        assert!(
+            hier < ring / 2.0,
+            "hier {hier} should be well under ring {ring}"
+        );
+        // single node: hier degenerates to the ring's own cost — never a
+        // spurious win (ties keep Ring)
+        let one = Topology::hierarchical(4, 1, 1, slow(), slow());
+        let r = algo_secs(&one, CollAlgo::Ring, 0, 4096);
+        let h = algo_secs(&one, CollAlgo::Hier, 0, 4096);
+        assert!((r - h).abs() < 1e-12);
+    }
+
+    /// Recursive doubling wins the latency race on tiny payloads and
+    /// loses the bandwidth race on fat ones.
+    #[test]
+    fn double_wins_tiny_loses_fat() {
+        let topo = Topology::flat(8, 1, slow());
+        let tiny = 2usize;
+        let fat = 1 << 20;
+        assert!(
+            algo_secs(&topo, CollAlgo::Double, 0, tiny)
+                < algo_secs(&topo, CollAlgo::Ring, 0, tiny)
+        );
+        assert!(
+            algo_secs(&topo, CollAlgo::Double, 0, fat)
+                > algo_secs(&topo, CollAlgo::Ring, 0, fat)
+        );
+        // single-rank worlds cost nothing under any algorithm
+        let solo = Topology::flat(1, 1, slow());
+        for a in CollAlgo::ALL {
+            assert_eq!(algo_secs(&solo, a, 0, 1000), 0.0);
+        }
+    }
+
+    /// Wire-unit factors: ring/rsag match the (W−1)/W phase arithmetic
+    /// the byte accounting has always used; hier moves ~2·B intra plus
+    /// B·2(N−1)/(N·L) inter; doubling pays ⌈log₂W⌉ full payloads.
+    #[test]
+    fn wire_units_match_closed_forms() {
+        let topo = Topology::hierarchical(8, 2, 2, fast(), slow());
+        let ar = CollOp::AllReduce;
+        let ring = CollAlgo::Ring.wire_units(ar, &topo);
+        assert!((ring - 2.0 * 7.0 / 8.0).abs() < 1e-12);
+        assert_eq!(ring, CollAlgo::RsAg.wire_units(ar, &topo));
+        // halves: exactly half the ring all-reduce each
+        assert!(
+            (CollAlgo::Ring.wire_units(CollOp::ReduceScatter, &topo)
+                - 7.0 / 8.0)
+                .abs()
+                < 1e-12
+        );
+        // hier: L=4, N=2 → 2·(3/4) + 2·(1/8) = 1.75 of B
+        let hier = CollAlgo::Hier.wire_units(ar, &topo);
+        assert!((hier - 1.75).abs() < 1e-12, "{hier}");
+        assert!(hier < 2.0 * 7.0 / 8.0 + 1.0, "sanity");
+        // double: 3 full payloads for W=8
+        assert_eq!(CollAlgo::Double.wire_units(ar, &topo), 3.0);
+        // no wire at world 1
+        let solo = Topology::flat(1, 1, fast());
+        for a in CollAlgo::ALL {
+            assert_eq!(a.wire_units(ar, &solo), 0.0);
+        }
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for a in CollAlgo::ALL {
+            assert_eq!(CollAlgo::parse(a.name()).unwrap(), a);
+            assert_eq!(CollAlgo::ALL[a.idx()], a);
+        }
+        assert_eq!(AlgoChoice::parse("auto").unwrap(), AlgoChoice::Auto);
+        assert_eq!(
+            AlgoChoice::parse("hier").unwrap(),
+            AlgoChoice::Fixed(CollAlgo::Hier)
+        );
+        assert!(CollAlgo::parse("carrier-pigeon").is_err());
+        assert!(AlgoChoice::parse("carrier-pigeon").is_err());
+    }
+}

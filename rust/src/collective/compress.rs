@@ -1,0 +1,488 @@
+//! On-the-wire gradient compression for the collective: per-tag codec
+//! policy (f32→f16 or int8 quantization) with rank-replicated
+//! error-feedback residuals.
+//!
+//! Real DDP stacks (NCCL fp16 allreduce, PowerSGD, 1-bit Adam) halve or
+//! quarter wire bytes by quantizing gradients before they hit the fabric
+//! and correcting the quantization error on the *next* step: each rank
+//! keeps a residual `r`, transmits `q = Q(g + r)`, and stores
+//! `r ← (g + r) − q`. Over steps the residual feeds every dropped bit
+//! back into the sum, so compressed training tracks the uncompressed
+//! trajectory closely while moving half (f16) or a quarter (int8) of the
+//! bytes.
+//!
+//! This module is the **one policy chokepoint** of the whole repo: the
+//! only place a codec may touch a reduce payload is
+//! [`Compressor::on_submit`], and [`CompressPolicy::codec_for`] hardwires
+//! [`ReduceTag::Ctrl`] to [`Codec::None`] — control-plane reduces
+//! (bucket retunes, recovery consensus) carry *decisions*, and a rounded
+//! decision is a diverged decision. detlint's `compress-ctrl-tag` rule
+//! keeps codec application from growing outside this file (invariant 9,
+//! `docs/INVARIANTS.md`).
+//!
+//! **Determinism contract.** Quantization is applied *before* the ring
+//! sum, identically on every rank's own contribution:
+//! `quantize → dequantize` is a pure elementwise function, the residual
+//! state is a pure fold over the rank's own submitted payload sequence,
+//! and the ring then sums the dequantized f32s in its usual fixed order.
+//! Runs with the same policy are therefore bitwise-reproducible
+//! (rank-replicated inputs → replicated outputs, invariant 1); a
+//! *compressed* run is NOT bitwise-equal to an *uncompressed* one — that
+//! is the accuracy/bytes trade the policy knob buys, and the tier-1 grid
+//! pins both halves of the contract.
+//!
+//! Residual streams are indexed by (tag, element offset): the coordinator
+//! reduces the same tag at the same offsets every step, so slot `i` of
+//! the θ stream always corrects parameter `i`. A caller that reuses a tag
+//! with a different layout only *misaligns the correction* (EF degrades
+//! toward plain rounding); determinism is unaffected, because the
+//! residual evolution is still a pure function of the submitted sequence.
+
+use anyhow::{bail, Result};
+
+use super::{CollOp, ReduceTag};
+
+/// One wire codec: how a payload f32 is rounded before transmission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// Transmit full f32s (4 bytes/elem) — the identity codec.
+    None,
+    /// Round every element to the nearest IEEE binary16 (2 bytes/elem).
+    F16,
+    /// Linear int8: per-bucket scale `max|x|/127`, 1 byte/elem on the
+    /// wire (the f32 scale is amortized over the bucket and ignored by
+    /// the byte model).
+    Int8,
+}
+
+impl Codec {
+    /// Modelled wire bytes per f32 element under this codec.
+    pub fn bytes_per_elem(&self) -> f64 {
+        match self {
+            Codec::None => 4.0,
+            Codec::F16 => 2.0,
+            Codec::Int8 => 1.0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::None => "off",
+            Codec::F16 => "f16",
+            Codec::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Codec> {
+        Ok(match s {
+            "off" | "none" | "0" | "false" => Codec::None,
+            "f16" | "fp16" | "half" => Codec::F16,
+            "int8" | "i8" => Codec::Int8,
+            _ => bail!("unknown codec '{s}' (off|f16|int8)"),
+        })
+    }
+}
+
+/// Per-tag codec assignment. θ gradients tolerate quantization (the EF
+/// residual feeds the error back), λ meta-gradients are kept full
+/// precision by default (the bilevel signal is orders of magnitude
+/// smaller than θ grads and the paper's λ updates are precision-
+/// sensitive), and Ctrl is **never** compressed — not a default, a
+/// structural guarantee: there is no constructor or setter that can
+/// attach a codec to Ctrl.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompressPolicy {
+    theta: Codec,
+}
+
+impl CompressPolicy {
+    /// Everything uncompressed — the baseline wire.
+    pub fn off() -> CompressPolicy {
+        CompressPolicy { theta: Codec::None }
+    }
+
+    /// Compress θ-tagged reduces with `codec`; λ and Ctrl stay f32.
+    pub fn theta(codec: Codec) -> CompressPolicy {
+        CompressPolicy { theta: codec }
+    }
+
+    /// Parse the `compress=` / `SAMA_COMPRESS` knob value.
+    pub fn parse(s: &str) -> Result<CompressPolicy> {
+        Ok(CompressPolicy::theta(Codec::parse(s)?))
+    }
+
+    /// The codec for one reduce — the policy lookup every wire payload
+    /// goes through. `Ctrl` (and λ) return [`Codec::None`]
+    /// unconditionally; only θ consults the policy.
+    pub fn codec_for(&self, tag: ReduceTag) -> Codec {
+        match tag {
+            ReduceTag::Theta => self.theta,
+            // Control-plane reduces carry rank-synced *decisions*
+            // (bucket sizes, recovery consensus, profile windows):
+            // rounding one is diverging all ranks' subsequent schedule.
+            // λ meta-gradients stay f32 by policy (see struct doc).
+            ReduceTag::Lambda | ReduceTag::Ctrl => Codec::None,
+        }
+    }
+
+    /// True when any tag has a non-identity codec.
+    pub fn enabled(&self) -> bool {
+        self.theta != Codec::None
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.theta.name()
+    }
+}
+
+/// Per-rank compression state: the policy plus one error-feedback
+/// residual stream per tag. Owned by each rank's `Collective`; its whole
+/// evolution is a pure function of that rank's submitted payloads, so it
+/// is deterministic across runs (and identical across ranks whenever the
+/// submitted payloads are — which they are not for gradients, and need
+/// not be: each rank corrects its *own* contribution).
+#[derive(Clone, Debug)]
+pub struct Compressor {
+    policy: CompressPolicy,
+    /// `residual[tag.idx()][offset + i]` is the accumulated quantization
+    /// error of element `offset + i` of that tag's reduce stream. Grown
+    /// lazily; zero-initialized.
+    residual: Vec<Vec<f32>>,
+}
+
+impl Compressor {
+    pub fn new(policy: CompressPolicy) -> Compressor {
+        Compressor {
+            policy,
+            residual: vec![Vec::new(); ReduceTag::ALL.len()],
+        }
+    }
+
+    pub fn policy(&self) -> CompressPolicy {
+        self.policy
+    }
+
+    /// Apply the wire codec to one outgoing bucket *in place* and return
+    /// the codec used (for byte accounting). This is the single place in
+    /// the repo where payload bits meet a codec.
+    ///
+    /// Only reduce-type ops (`AllReduce`, `ReduceScatter`) compress: they
+    /// carry this rank's fresh gradient contribution, which is what the
+    /// error-feedback residual can correct. `AllGather` always rides at
+    /// f32 — gathered payloads are *values* (updated θ shards, optimizer
+    /// state at a checkpoint cut), and rounding a value is not wire
+    /// compression, it is silently quantizing the model/checkpoint. The
+    /// rs∘ag-lowered all-reduce therefore compresses its reduce-scatter
+    /// half only, which keeps every algorithm lowering on one bitwise
+    /// compressed trajectory.
+    pub fn on_submit(
+        &mut self,
+        tag: ReduceTag,
+        op: CollOp,
+        offset: usize,
+        data: &mut [f32],
+    ) -> Codec {
+        let codec = self.policy.codec_for(tag);
+        if codec == Codec::None || data.is_empty() {
+            return Codec::None;
+        }
+        match op {
+            CollOp::AllReduce | CollOp::ReduceScatter => {
+                let stream = &mut self.residual[tag.idx()];
+                if stream.len() < offset + data.len() {
+                    stream.resize(offset + data.len(), 0.0);
+                }
+                let res = &mut stream[offset..offset + data.len()];
+                quantize_ef(codec, data, res);
+                codec
+            }
+            CollOp::AllGather => Codec::None,
+        }
+    }
+
+    /// Drop all error-feedback residuals. Called at every durable
+    /// checkpoint cut (and on restore/rebuild): the residuals are not
+    /// checkpointed, so zeroing them at the *same replicated step* in
+    /// every run keeps an interrupted-and-resumed trajectory bitwise on
+    /// the uninterrupted one (invariant 7 meets invariant 9).
+    pub fn reset_residuals(&mut self) {
+        for s in &mut self.residual {
+            s.clear();
+        }
+    }
+}
+
+/// Error-feedback quantize: transmit `Q(x + r)`, keep `r ← (x + r) − Q`.
+/// `data` and `res` are the same length by construction.
+fn quantize_ef(codec: Codec, data: &mut [f32], res: &mut [f32]) {
+    match codec {
+        Codec::None => {}
+        Codec::F16 => {
+            for (x, r) in data.iter_mut().zip(res.iter_mut()) {
+                let v = *x + *r;
+                let q = f16_round(v);
+                *r = v - q;
+                *x = q;
+            }
+        }
+        Codec::Int8 => {
+            // fold the residual in first: the shared per-bucket scale must
+            // cover the corrected values, not the raw ones
+            for (x, r) in data.iter_mut().zip(res.iter()) {
+                *x += *r;
+            }
+            let max = data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            if max > 0.0 && max.is_finite() {
+                let scale = max / 127.0;
+                for (x, r) in data.iter_mut().zip(res.iter_mut()) {
+                    let v = *x;
+                    let q = (v / scale).round().clamp(-127.0, 127.0) * scale;
+                    *r = v - q;
+                    *x = q;
+                }
+            } else {
+                // all-zero (nothing to round) or non-finite (a NaN/inf
+                // poisons the scale): transmit the corrected values
+                // verbatim and clear the residual slots
+                res.fill(0.0);
+            }
+        }
+    }
+}
+
+/// Round an f32 to the nearest representable IEEE binary16 value
+/// (ties-to-even), returned as f32 — the quantize∘dequantize composite.
+pub fn f16_round(x: f32) -> f32 {
+    f16_to_f32(f32_to_f16(x))
+}
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even (overflow → ±inf,
+/// underflow → signed zero, NaN preserved as a quiet NaN).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / NaN — keep NaN-ness
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e >= -14 {
+        // normal half: keep 10 mantissa bits, round the dropped 13
+        let mut m = man >> 13;
+        let rem = man & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut he = (e + 15) as u32;
+        if m == 0x400 {
+            m = 0;
+            he += 1;
+            if he >= 31 {
+                return sign | 0x7c00;
+            }
+        }
+        return sign | ((he as u16) << 10) | m as u16;
+    }
+    if e < -25 {
+        return sign; // below half the smallest subnormal → signed zero
+    }
+    // subnormal half: shift the (implicit-1) mantissa into place
+    let man = man | 0x0080_0000;
+    let shift = (-14 - e) as u32 + 13;
+    let mut m = man >> shift;
+    let rem = man & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if rem > half || (rem == half && (m & 1) == 1) {
+        m += 1; // may carry into the normal range: 0x400 encodes e=−14, m=0
+    }
+    sign | m as u16
+}
+
+/// IEEE binary16 bits → f32 (exact; every half value is representable).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp != 0 {
+        sign | ((exp + 112) << 23) | (man << 13)
+    } else if man == 0 {
+        sign
+    } else {
+        // subnormal: normalize
+        let mut e: i32 = -14;
+        let mut m = man;
+        while m & 0x400 == 0 {
+            m <<= 1;
+            e -= 1;
+        }
+        sign | (((e + 127) as u32) << 23) | ((m & 0x3ff) << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exactly-representable halves survive the roundtrip bit-for-bit:
+    /// zeroes, small integers, the largest normal (65504), the smallest
+    /// normal (2⁻¹⁴) and the smallest subnormal (2⁻²⁴).
+    #[test]
+    fn f16_roundtrip_is_exact_on_half_values() {
+        for v in [
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.0,
+            0.5,
+            -2.5,
+            65504.0,
+            -65504.0,
+            6.103_515_6e-5,
+            5.960_464_5e-8,
+        ] {
+            assert_eq!(f16_round(v).to_bits(), v.to_bits(), "{v}");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even_and_clamps_range() {
+        // 1 + 2⁻¹¹ is exactly halfway between 1.0 and 1 + 2⁻¹⁰ → ties to
+        // the even mantissa, 1.0
+        let tie = f32::from_bits(0x3f80_1000);
+        assert_eq!(f16_round(tie), 1.0);
+        // 1 + 3·2⁻¹¹ is halfway with an odd low bit → rounds up
+        let tie_up = f32::from_bits(0x3f80_3000);
+        assert_eq!(f16_round(tie_up), 1.0 + 2.0 / 1024.0);
+        // overflow → signed infinity
+        assert!(f16_round(1e6).is_infinite() && f16_round(1e6) > 0.0);
+        assert!(f16_round(-1e6).is_infinite() && f16_round(-1e6) < 0.0);
+        // below half the smallest subnormal → signed zero
+        assert_eq!(f16_round(1e-9).to_bits(), 0.0f32.to_bits());
+        assert_eq!(f16_round(-1e-9).to_bits(), (-0.0f32).to_bits());
+        assert!(f16_round(f32::NAN).is_nan());
+    }
+
+    /// Error feedback telescopes: over a stream of submissions, the sum
+    /// of transmitted values plus the final residual equals the sum of
+    /// the raw inputs (up to f32 addition noise) — no gradient mass is
+    /// ever dropped, only delayed. And two compressors fed the identical
+    /// stream stay bitwise in lockstep.
+    #[test]
+    fn error_feedback_conserves_mass_and_is_deterministic() {
+        let policy = CompressPolicy::theta(Codec::F16);
+        let mut a = Compressor::new(policy);
+        let mut b = Compressor::new(policy);
+        let n = 64usize;
+        let mut sum_raw = vec![0.0f64; n];
+        let mut sum_q = vec![0.0f64; n];
+        for step in 0..7 {
+            let raw: Vec<f32> = (0..n)
+                .map(|i| ((i * 13 + step * 7) % 29) as f32 * 0.013 - 0.17)
+                .collect();
+            let mut qa = raw.clone();
+            let mut qb = raw.clone();
+            a.on_submit(ReduceTag::Theta, CollOp::AllReduce, 0, &mut qa);
+            b.on_submit(ReduceTag::Theta, CollOp::AllReduce, 0, &mut qb);
+            assert_eq!(qa, qb, "identical streams must quantize identically");
+            for i in 0..n {
+                sum_raw[i] += raw[i] as f64;
+                sum_q[i] += qa[i] as f64;
+            }
+        }
+        let res = &a.residual[ReduceTag::Theta.idx()];
+        for i in 0..n {
+            let recovered = sum_q[i] + res[i] as f64;
+            assert!(
+                (recovered - sum_raw[i]).abs() < 1e-4,
+                "elem {i}: {} vs {}",
+                recovered,
+                sum_raw[i]
+            );
+        }
+    }
+
+    /// The structural guarantee of the chokepoint: no policy value can
+    /// compress a Ctrl (or λ) payload — the bits come back untouched and
+    /// the reported codec is the identity.
+    #[test]
+    fn ctrl_and_lambda_are_never_compressed() {
+        for codec in [Codec::F16, Codec::Int8] {
+            let policy = CompressPolicy::theta(codec);
+            assert_eq!(policy.codec_for(ReduceTag::Ctrl), Codec::None);
+            assert_eq!(policy.codec_for(ReduceTag::Lambda), Codec::None);
+            let mut c = Compressor::new(policy);
+            for tag in [ReduceTag::Ctrl, ReduceTag::Lambda] {
+                for op in [CollOp::AllReduce, CollOp::ReduceScatter, CollOp::AllGather] {
+                    let orig = vec![0.1f32, -0.777, 3.25e-3, 1234.5];
+                    let mut data = orig.clone();
+                    let used = c.on_submit(tag, op, 0, &mut data);
+                    assert_eq!(used, Codec::None);
+                    assert_eq!(data, orig, "{tag:?}/{op:?} payload mutated");
+                }
+            }
+        }
+    }
+
+    /// int8 quantization error is bounded by half a quantization step,
+    /// and the all-gather path is untouched entirely: gathered payloads
+    /// are values (θ shards, checkpoint state), not gradient
+    /// contributions — compressing one would quantize the model, so the
+    /// chokepoint declines and reports the identity codec.
+    #[test]
+    fn int8_error_bounded_and_allgather_keeps_no_residual() {
+        let mut c = Compressor::new(CompressPolicy::theta(Codec::Int8));
+        let orig: Vec<f32> =
+            (0..64).map(|i| ((i * 37) % 19) as f32 - 9.0).collect();
+        let mut data = orig.clone();
+        assert_eq!(
+            c.on_submit(ReduceTag::Theta, CollOp::AllReduce, 0, &mut data),
+            Codec::Int8
+        );
+        let max = orig.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let step = max / 127.0;
+        for (q, x) in data.iter().zip(orig.iter()) {
+            assert!((q - x).abs() <= step * 0.5 + 1e-6, "{q} vs {x}");
+        }
+        // all-gather: payload and residual stream both untouched
+        let before = c.residual[ReduceTag::Theta.idx()].clone();
+        let mut gathered = orig.clone();
+        assert_eq!(
+            c.on_submit(ReduceTag::Theta, CollOp::AllGather, 0, &mut gathered),
+            Codec::None
+        );
+        assert_eq!(gathered, orig, "gathered values must not be quantized");
+        assert_eq!(c.residual[ReduceTag::Theta.idx()], before);
+        // zero bucket: transmitted verbatim
+        let mut zeros = vec![0.0f32; 8];
+        c.on_submit(ReduceTag::Theta, CollOp::ReduceScatter, 64, &mut zeros);
+        assert!(zeros.iter().all(|&z| z == 0.0));
+    }
+
+    /// `reset_residuals` returns the compressor to its t=0 state: the
+    /// next submission quantizes exactly like a fresh instance — the
+    /// property the checkpoint-cut reset (invariant 9) rests on.
+    #[test]
+    fn reset_residuals_matches_fresh_state_bitwise() {
+        let policy = CompressPolicy::theta(Codec::F16);
+        let mut used = Compressor::new(policy);
+        let warm: Vec<f32> = (0..32).map(|i| i as f32 * 0.01001).collect();
+        let mut w = warm.clone();
+        used.on_submit(ReduceTag::Theta, CollOp::AllReduce, 0, &mut w);
+        used.reset_residuals();
+
+        let mut fresh = Compressor::new(policy);
+        let mut a = warm.clone();
+        let mut b = warm;
+        used.on_submit(ReduceTag::Theta, CollOp::AllReduce, 0, &mut a);
+        fresh.on_submit(ReduceTag::Theta, CollOp::AllReduce, 0, &mut b);
+        assert_eq!(a, b);
+    }
+}

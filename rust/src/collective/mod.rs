@@ -54,6 +54,28 @@
 //!    assignment only changes *when* a bucket is reduced, never the
 //!    summation order inside it, so results are bitwise-identical for any
 //!    topology, ring count or policy;
+//!  * **per-reduce collective algorithm selection** — [`RingScheduler::plan`]
+//!    picks a [`CollAlgo`] (flat ring, hierarchical two-level,
+//!    recursive-doubling, or the rs∘ag half-op pair) per reduce from the
+//!    same rank-replicated modelled finish times, under an [`AlgoChoice`]
+//!    knob. The choice moves modelled cost, simulated wire time
+//!    ([`RingScheduler::wire_scale`]) and wire-byte attribution
+//!    ([`CollAlgo::wire_units`]), never the summation order: the engines
+//!    always run the order-preserving ring exchange, and the rs∘ag pair
+//!    lowers only at the materialized [`Collective::all_reduce_sync`]
+//!    entry, whose halves are already proven bitwise-equal to the fused
+//!    all-reduce (invariant 9);
+//!  * **on-the-wire gradient compression** — a per-tag [`CompressPolicy`]
+//!    quantizes θ buckets (f32→f16, optionally int8) at the single
+//!    [`Collective::submit_bucket`] chokepoint, with rank-replicated
+//!    error-feedback residuals so compressed runs stay deterministic and
+//!    self-consistent. Only reducing ops compress — all-gathers carry
+//!    values (θ shards, checkpoint state), never gradient contributions —
+//!    and Ctrl (and λ) payloads are structurally never
+//!    compressed ([`CompressPolicy::codec_for`]; the `compress-ctrl-tag`
+//!    detlint rule pins call sites). Wire bytes are attributed at the
+//!    quantized width, next to the pre-compression
+//!    [`CommStats::raw_bytes_sent`];
 //!  * **wire-time vs peer-wait attribution** — an engine's elapsed time on
 //!    a bucket is split into `wire_seconds` (time the payload actually
 //!    spends on the simulated link) and `peer_wait_seconds` (time blocked
@@ -118,8 +140,12 @@
 //! detlint rules + tests that enforce them) are cataloged in
 //! `docs/INVARIANTS.md`.
 
+pub mod algo;
+pub mod compress;
 pub mod topology;
 
+pub use algo::{AlgoChoice, CollAlgo};
+pub use compress::{Codec, CompressPolicy, Compressor};
 pub use topology::{
     LinkProfile, RingPath, RingScheduler, RoutePolicy, SchedulerState,
     Topology, TopologyKind,
@@ -458,6 +484,39 @@ pub struct RingStats {
     pub queue_depth_hwm: u64,
 }
 
+/// Per-algorithm slice of the aggregate counters — the attribution that
+/// makes the collective-algorithm baseline visible to the benches (which
+/// algorithm carried how many ops, how many wire bytes at the quantized
+/// width, and what the scheduler modelled the wire time at). Byte fields
+/// stay f64 with the same round-late discipline as
+/// [`CommStats::bytes_sent`]'s accumulator; an all-reduce lowered onto
+/// the rs∘ag pair books both halves under [`CollAlgo::RsAg`].
+#[derive(Clone, Debug, Default)]
+pub struct AlgoStats {
+    /// Ops (reduces + gathers) opened under this algorithm.
+    pub ops: u64,
+    /// Wire bytes at the on-the-wire (post-compression) width.
+    pub wire_bytes: f64,
+    /// The same traffic at full f32 width (pre-compression).
+    pub raw_bytes: f64,
+    /// Scheduler-modelled wire seconds for this algorithm's buckets,
+    /// scaled by the compression width — the benches' "modelled wire
+    /// secs" column.
+    pub est_wire_secs: f64,
+}
+
+impl AlgoStats {
+    /// raw/wire compression ratio of this algorithm's traffic (1 when it
+    /// moved nothing).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.wire_bytes > 0.0 {
+            self.raw_bytes / self.wire_bytes
+        } else {
+            1.0
+        }
+    }
+}
+
 /// Aggregate communication statistics for one worker's comm engines.
 #[derive(Clone, Debug, Default)]
 pub struct CommStats {
@@ -465,6 +524,12 @@ pub struct CommStats {
     /// All-gathers opened (see [`TagStats::gathers`]).
     pub gathers: u64,
     pub bytes_sent: u64,
+    /// What [`bytes_sent`](CommStats::bytes_sent) would have been at full
+    /// f32 width — the pre-compression byte count, so
+    /// `raw_bytes_sent / bytes_sent` is the realized on-the-wire
+    /// compression ratio. Equal to `bytes_sent` when no payload was
+    /// quantized.
+    pub raw_bytes_sent: u64,
     /// Wire bytes of `bytes_sent` moved by standalone reduce-scatters —
     /// the benches' rs/ag split for the sharded (`zero=1`) schedule.
     pub rs_bytes_sent: u64,
@@ -489,6 +554,9 @@ pub struct CommStats {
     /// The occupancy split by ring (one entry per comm engine; see
     /// [`RingStats`]).
     pub per_ring: Vec<RingStats>,
+    /// Traffic split by selected [`CollAlgo`] (indexed via
+    /// [`CommStats::algo`]).
+    pub per_algo: [AlgoStats; 4],
 }
 
 impl CommStats {
@@ -534,11 +602,27 @@ impl CommStats {
         &self.per_ring[ring]
     }
 
+    /// Counters for one collective algorithm.
+    pub fn algo(&self, algo: CollAlgo) -> &AlgoStats {
+        &self.per_algo[algo.idx()]
+    }
+
+    /// Realized on-the-wire compression ratio, `raw / wire` (1 when
+    /// nothing was sent or nothing was quantized).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.bytes_sent > 0 {
+            self.raw_bytes_sent as f64 / self.bytes_sent as f64
+        } else {
+            1.0
+        }
+    }
+
     /// Fold another worker's counters into this one (fleet aggregation).
     pub fn merge(&mut self, other: &CommStats) {
         self.reduces += other.reduces;
         self.gathers += other.gathers;
         self.bytes_sent += other.bytes_sent;
+        self.raw_bytes_sent += other.raw_bytes_sent;
         self.rs_bytes_sent += other.rs_bytes_sent;
         self.ag_bytes_sent += other.ag_bytes_sent;
         self.comm_seconds += other.comm_seconds;
@@ -567,6 +651,12 @@ impl CommStats {
             mine.blocked_seconds += theirs.blocked_seconds;
             mine.queue_depth_hwm = mine.queue_depth_hwm.max(theirs.queue_depth_hwm);
         }
+        for (mine, theirs) in self.per_algo.iter_mut().zip(&other.per_algo) {
+            mine.ops += theirs.ops;
+            mine.wire_bytes += theirs.wire_bytes;
+            mine.raw_bytes += theirs.raw_bytes;
+            mine.est_wire_secs += theirs.est_wire_secs;
+        }
     }
 }
 
@@ -585,6 +675,15 @@ struct JobMsg {
     offset: usize,
     /// Which ring exchange to run on this bucket (both phases, or one).
     op: CollOp,
+    /// On-the-wire bytes per f32 element (4 uncompressed, 2 under f16,
+    /// 1 under int8) — the engine's simulated hop sleeps charge the
+    /// quantized width, so compression shrinks wall-clock wire time.
+    bytes_per_elem: f64,
+    /// Multiplier on every hop sleep: the selected algorithm's modelled
+    /// seconds over the flat ring's ([`RingScheduler::wire_scale`]), so
+    /// simulated wall-clock tracks the *selected* algorithm while the
+    /// exchange keeps the ring's summation order (invariant 9).
+    wire_scale: f64,
     data: Vec<f32>,
     /// Per-bucket completion (or the typed failure that ended the ring).
     done_tx: Sender<Result<BucketDone, CommError>>,
@@ -614,6 +713,18 @@ pub struct Collective {
     /// Deterministic ring router (rank-replicated state; see the
     /// determinism contract in [`topology`]).
     sched: RingScheduler,
+    /// Per-reduce algorithm selection mode ([`RingScheduler::plan`]);
+    /// rank-replicated by construction (a [`CommWorld`] constructor
+    /// argument).
+    algo_choice: AlgoChoice,
+    /// The one compression chokepoint: quantize-on-submit with
+    /// rank-replicated error-feedback residuals (invariant 9).
+    compressor: Compressor,
+    /// While `Some`, newly opened ops attribute to this algorithm instead
+    /// of the planned one — set around the rs∘ag lowering inside
+    /// [`Collective::all_reduce_sync`] so both halves book under
+    /// [`CollAlgo::RsAg`].
+    lower_algo: Option<CollAlgo>,
     next_job: u64,
     stats: CommStats,
     /// Buckets currently in flight per ring (worker side: submitted, not
@@ -626,6 +737,9 @@ pub struct Collective {
     /// rounded once (a per-call integer division would truncate ~world
     /// bytes per reduce and drift with call count).
     bytes_exact: f64,
+    /// Exact pre-compression (full f32 width) bytes; `raw_bytes_sent` is
+    /// this rounded once.
+    raw_bytes_exact: f64,
     /// Exact wire bytes of standalone reduce-scatters / all-gathers (the
     /// benches' rs/ag split; same round-once discipline).
     rs_bytes_exact: f64,
@@ -646,6 +760,11 @@ pub struct PendingReduce {
     tag: ReduceTag,
     /// Ring exchange this operation runs (all-reduce, or one half).
     op: CollOp,
+    /// Collective algorithm the scheduler planned for this reduce
+    /// (fixed at `begin_reduce`; identical on every rank). Drives the
+    /// modelled wire time and byte attribution of every bucket — the
+    /// engines still run the order-preserving ring exchange.
+    algo: CollAlgo,
     /// Ring this reduce was routed to (fixed at `begin_reduce`).
     ring: usize,
     /// Buckets submitted so far.
@@ -685,6 +804,12 @@ impl PendingReduce {
     /// identical on every rank for the same reduce.
     pub fn ring(&self) -> usize {
         self.ring
+    }
+
+    /// Collective algorithm the scheduler planned for this reduce —
+    /// identical on every rank for the same reduce.
+    pub fn algo(&self) -> CollAlgo {
+        self.algo
     }
 
     /// Buckets completed so far (monotone, updated by
@@ -748,6 +873,13 @@ pub const DEFAULT_PEER_TIMEOUT: Duration = Duration::from_secs(30);
 pub struct CommWorld {
     topology: Arc<Topology>,
     policy: RoutePolicy,
+    /// Per-reduce algorithm selection handed to every rank's scheduler.
+    /// `Fixed(Ring)` on the plain constructors, so direct embedders keep
+    /// the exact pre-selection behavior.
+    algo: AlgoChoice,
+    /// Per-tag wire compression handed to every rank's submit chokepoint
+    /// (`off()` on the plain constructors).
+    compress: CompressPolicy,
     /// Peer-liveness budget handed to every engine's ring rendezvous.
     peer_timeout: Duration,
     // per-rank plumbing handed out on join()
@@ -802,6 +934,28 @@ impl CommWorld {
         policy: RoutePolicy,
         peer_timeout: Duration,
     ) -> Arc<CommWorld> {
+        Self::with_topology_opts(
+            topology,
+            policy,
+            peer_timeout,
+            AlgoChoice::Fixed(CollAlgo::Ring),
+            CompressPolicy::off(),
+        )
+    }
+
+    /// [`with_topology_timeout`](CommWorld::with_topology_timeout) plus
+    /// the PR-9 knobs: per-reduce collective algorithm selection
+    /// (`coll_algo=` / `SAMA_COLL_ALGO`) and per-tag wire compression
+    /// (`compress=` / `SAMA_COMPRESS`). Both are collective contracts —
+    /// every rank of one world must be built with identical values (the
+    /// coordinator threads config-resolved knobs through here).
+    pub fn with_topology_opts(
+        topology: Topology,
+        policy: RoutePolicy,
+        peer_timeout: Duration,
+        algo: AlgoChoice,
+        compress: CompressPolicy,
+    ) -> Arc<CommWorld> {
         let world = topology.world();
         let rings = topology.rings();
         assert!(world >= 1);
@@ -852,6 +1006,8 @@ impl CommWorld {
         Arc::new(CommWorld {
             topology,
             policy,
+            algo,
+            compress,
             peer_timeout,
             seats: Mutex::new(seats),
             handles: Mutex::new(handles),
@@ -875,6 +1031,17 @@ impl CommWorld {
             world: self.topology.world(),
             job_txs: seat.job_txs,
             sched: RingScheduler::new(Arc::clone(&self.topology), self.policy),
+            algo_choice: self.algo,
+            // a 1-rank world has no wire: quantizing a self-reduce would
+            // round gradients while moving zero bytes, so the policy is
+            // inert below 2 ranks (keeps single-worker runs bit-exact
+            // under the CI compression lanes)
+            compressor: Compressor::new(if self.topology.world() > 1 {
+                self.compress
+            } else {
+                CompressPolicy::off()
+            }),
+            lower_algo: None,
             next_job: 0,
             stats: CommStats {
                 per_ring: vec![RingStats::default(); rings],
@@ -883,6 +1050,7 @@ impl CommWorld {
             ring_inflight: vec![0; rings],
             sync_busy_base: vec![0.0; rings],
             bytes_exact: 0.0,
+            raw_bytes_exact: 0.0,
             rs_bytes_exact: 0.0,
             ag_bytes_exact: 0.0,
             spare_buckets: Vec::new(),
@@ -903,6 +1071,18 @@ impl CommWorld {
 
     pub fn policy(&self) -> RoutePolicy {
         self.policy
+    }
+
+    /// Algorithm-selection mode this world's ranks plan under (preserved
+    /// across a survivor-set rebuild).
+    pub fn algo_choice(&self) -> AlgoChoice {
+        self.algo
+    }
+
+    /// Wire-compression policy this world's ranks submit under (preserved
+    /// across a survivor-set rebuild).
+    pub fn compress_policy(&self) -> CompressPolicy {
+        self.compress
     }
 
     /// Peer-liveness budget this world's engines rendezvous under
@@ -965,8 +1145,16 @@ fn comm_engine(
     // Some until the first rendezvous failure; dropped to cascade it.
     let mut to_next = Some(to_next);
     let mut failed: Option<CommError> = None;
-    while let Ok(JobMsg { job, bucket, offset, op, mut data, done_tx }) =
-        job_rx.recv()
+    while let Ok(JobMsg {
+        job,
+        bucket,
+        offset,
+        op,
+        bytes_per_elem,
+        wire_scale,
+        mut data,
+        done_tx,
+    }) = job_rx.recv()
     {
         if let Some(err) = &failed {
             // Failed state: the ring is gone; fail every queued/future job
@@ -990,6 +1178,8 @@ fn comm_engine(
                     peer_timeout,
                     job,
                     bucket,
+                    bytes_per_elem,
+                    wire_scale,
                     &mut data,
                     tx,
                     &from_prev,
@@ -1075,6 +1265,8 @@ fn ring_collective(
     peer_timeout: Duration,
     job: u64,
     bucket: u32,
+    bytes_per_elem: f64,
+    wire_scale: f64,
     buf: &mut [f32],
     to_next: &Sender<RingMsg>,
     from_prev: &Receiver<RingMsg>,
@@ -1085,6 +1277,13 @@ fn ring_collective(
     let n = buf.len();
     // The one chunk partition (shared with the coordinator's shard maps).
     let chunk_of = |c: usize| chunk_range(c, n, world);
+    // Simulated wire occupancy of one hop: the chunk at its on-the-wire
+    // (possibly quantized) width, scaled to the selected algorithm's
+    // modelled time (wire_scale = 1 for the native ring lowering).
+    let hop_sleep = |elems: usize| {
+        let bytes = (elems as f64 * bytes_per_elem).round() as usize;
+        Duration::from_secs_f64(link.secs(bytes) * wire_scale)
+    };
     // One rendezvous with the ring predecessor: the detector. The waited
     // duration rides the error as the detection-latency metric.
     let rendezvous = |peer_secs: &mut f64| -> Result<RingMsg, CommError> {
@@ -1115,7 +1314,7 @@ fn ring_collective(
         // detlint: allow(wallclock-in-decision) — wire-time attribution; the
         // retune-side use is Ctrl-synced across ranks before any decision
         let t_wire = Instant::now();
-        std::thread::sleep(link.hop_cost(chunk.len() * 4));
+        std::thread::sleep(hop_sleep(chunk.len()));
         *wire_secs += t_wire.elapsed().as_secs_f64();
         if to_next.send(RingMsg { job, bucket, chunk }).is_err() {
             // successor's engine is gone: its ring receiver dropped
@@ -1142,7 +1341,7 @@ fn ring_collective(
         // detlint: allow(wallclock-in-decision) — wire-time attribution; the
         // retune-side use is Ctrl-synced across ranks before any decision
         let t_wire = Instant::now();
-        std::thread::sleep(link.hop_cost(chunk.len() * 4));
+        std::thread::sleep(hop_sleep(chunk.len()));
         *wire_secs += t_wire.elapsed().as_secs_f64();
         if to_next.send(RingMsg { job, bucket, chunk }).is_err() {
             return Err(CommError::PeerDead { ring, waited: Duration::ZERO });
@@ -1189,6 +1388,27 @@ impl Collective {
     /// leader-saved state, so routing stays rank-replicated).
     pub fn restore_scheduler(&mut self, st: &SchedulerState) {
         self.sched.restore(st);
+    }
+
+    /// Wire-compression policy this rank submits under (a collective
+    /// contract — identical on every rank of the world).
+    pub fn compress_policy(&self) -> CompressPolicy {
+        self.compressor.policy()
+    }
+
+    /// Algorithm-selection mode this rank plans under.
+    pub fn algo_choice(&self) -> AlgoChoice {
+        self.algo_choice
+    }
+
+    /// Zero the error-feedback residual streams. Residuals are *not*
+    /// checkpointed, so every rank must call this at each durable
+    /// checkpoint cut and on restore/rebuild — then an
+    /// interrupted-and-resumed run quantizes from the same (zero)
+    /// residual state as the uninterrupted trajectory at that cut, and
+    /// stays bitwise on it (invariant 9; no-op when compression is off).
+    pub fn reset_compression_residuals(&mut self) {
+        self.compressor.reset_residuals();
     }
 
     /// Measured per-ring busy seconds since the last profile sync — the
@@ -1309,13 +1529,23 @@ impl Collective {
             self.stats.reduces += 1;
             self.stats.per_tag[tag.idx()].reduces += 1;
         }
-        let ring = self.sched.route_phases(tag, hint_elems, op.phases());
+        // Joint (algorithm, ring) selection — every input rank-replicated.
+        // Streamed opens can never split into sync halves, so the rs∘ag
+        // lowering is off the table here (`allow_rsag = false`; see
+        // `all_reduce_sync` for why the async path must not chain halves).
+        let (algo, ring) =
+            self.sched.plan(tag, op, hint_elems, self.algo_choice, false);
+        // Inside the rs∘ag lowering the halves attribute to RsAg, so the
+        // per-algorithm stats see the lowering the plan actually chose.
+        let algo = self.lower_algo.unwrap_or(algo);
         self.stats.per_ring[ring].reduces += 1;
+        self.stats.per_algo[algo.idx()].ops += 1;
         let (done_tx, done_rx) = channel::<Result<BucketDone, CommError>>();
         PendingReduce {
             id,
             tag,
             op,
+            algo,
             ring,
             buckets: 0,
             buckets_done: 0,
@@ -1340,16 +1570,27 @@ impl Collective {
     pub fn submit_bucket(
         &mut self,
         pending: &mut PendingReduce,
-        data: Vec<f32>,
+        mut data: Vec<f32>,
     ) -> Result<(), CommError> {
         let ring = pending.ring;
         let offset = pending.out.len();
         let elems = data.len();
+        // The one compression chokepoint (invariant 9): quantize with
+        // rank-replicated error feedback before the payload reaches any
+        // engine; the per-tag policy structurally exempts Ctrl/λ. If the
+        // send below fails, the advanced residual is moot — the reduce is
+        // discarded as a unit and recovery resets residuals at the
+        // rank-replicated resume point.
+        let codec = self
+            .compressor
+            .on_submit(pending.tag, pending.op, offset, &mut data);
         let msg = JobMsg {
             job: pending.id,
             bucket: pending.buckets,
             offset,
             op: pending.op,
+            bytes_per_elem: codec.bytes_per_elem(),
+            wire_scale: self.sched.wire_scale(pending.algo, ring, elems),
             data,
             done_tx: pending
                 .done_tx
@@ -1364,15 +1605,20 @@ impl Collective {
         }
         pending.out.resize(offset + elems, 0.0);
         pending.buckets += 1;
-        // exact ring traffic: phases·(K−1)/K of the payload per rank (2 for
-        // a full all-reduce, 1 for a half op), kept in f64 and rounded once
-        // (per-bucket integer division would truncate)
-        let wire = (elems * 4) as f64
-            * pending.op.phases() as f64
-            * (self.world as f64 - 1.0)
-            / self.world as f64;
+        // Exact traffic under the selected algorithm, at the on-the-wire
+        // width: `wire_units` generalizes the ring's phases·(K−1)/K factor
+        // per algorithm, `codec` scales the element width. Kept in f64 and
+        // rounded once (per-bucket integer division would truncate). This
+        // is the ONE byte-attribution site: every entry point (all-reduce,
+        // half ops, the rs∘ag lowering) funnels through this submit, so no
+        // lowering can double-count.
+        let units = pending.algo.wire_units(pending.op, self.sched.topology());
+        let wire = elems as f64 * codec.bytes_per_elem() * units;
+        let raw = (elems * 4) as f64 * units;
         self.bytes_exact += wire;
         self.stats.bytes_sent = self.bytes_exact.round() as u64;
+        self.raw_bytes_exact += raw;
+        self.stats.raw_bytes_sent = self.raw_bytes_exact.round() as u64;
         match pending.op {
             CollOp::AllReduce => {}
             CollOp::ReduceScatter => {
@@ -1384,8 +1630,24 @@ impl Collective {
                 self.stats.ag_bytes_sent = self.ag_bytes_exact.round() as u64;
             }
         }
+        let mut est = self.sched.algo_cost(pending.algo, ring, elems);
+        if pending.op.phases() == 1 {
+            // algo_cost models a full all-reduce; a half op runs one of
+            // the two ring phases
+            est *= 0.5;
+        }
+        let astats = &mut self.stats.per_algo[pending.algo.idx()];
+        astats.wire_bytes += wire;
+        astats.raw_bytes += raw;
+        astats.est_wire_secs += est * codec.bytes_per_elem() / 4.0;
         self.stats.per_tag[pending.tag.idx()].buckets += 1;
-        self.sched.charge_phases(ring, elems, pending.op.phases());
+        // occupancy is charged under the selected algorithm's cost model
+        // (identical to the phase charge for the ring/half lowerings)
+        if pending.op == CollOp::AllReduce {
+            self.sched.charge_algo(pending.algo, ring, elems);
+        } else {
+            self.sched.charge_phases(ring, elems, pending.op.phases());
+        }
         self.stats.per_ring[ring].buckets += 1;
         self.ring_inflight[ring] += 1;
         let hwm = &mut self.stats.per_ring[ring].queue_depth_hwm;
@@ -1535,12 +1797,38 @@ impl Collective {
     }
 
     /// Blocking all-reduce (overlap disabled / ablation path).
+    ///
+    /// This is also the one entry point where the scheduler may lower the
+    /// all-reduce onto the [`CollAlgo::RsAg`] half-op pair (reduce-scatter
+    /// then all-gather — bitwise-equal to the fused all-reduce by the
+    /// rs∘ag composition contract). Only the *materialized sync* path may
+    /// split: chaining the gather half from the async absorb path would
+    /// make per-ring job submission order depend on local completion
+    /// timing, breaking the replicated-submission-order contract
+    /// (invariant 9), so [`RingScheduler::plan`] demotes RsAg back to the
+    /// fused ring exchange everywhere else.
     pub fn all_reduce_sync(
         &mut self,
         data: Vec<f32>,
         bucket_elems: usize,
         tag: ReduceTag,
     ) -> Result<Vec<f32>, CommError> {
+        let (algo, _) = self.sched.plan(
+            tag,
+            CollOp::AllReduce,
+            data.len(),
+            self.algo_choice,
+            true,
+        );
+        if algo == CollAlgo::RsAg && self.world > 1 {
+            self.lower_algo = Some(CollAlgo::RsAg);
+            let out = match self.reduce_scatter_sync(data, bucket_elems, tag) {
+                Ok(rs) => self.all_gather_sync(rs, bucket_elems, tag),
+                Err(e) => Err(e),
+            };
+            self.lower_algo = None;
+            return out;
+        }
         let p = self.all_reduce_async(data, bucket_elems, tag)?;
         self.wait(p)
     }
@@ -1825,6 +2113,36 @@ mod tests {
     {
         let world = topo.world();
         let cw = CommWorld::with_topology(topo, policy);
+        let mut handles = Vec::new();
+        for rank in 0..world {
+            let cw = Arc::clone(&cw);
+            let f = f.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut coll = cw.join(rank);
+                f(rank, &mut coll)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn run_world_opts<F>(
+        topo: Topology,
+        policy: RoutePolicy,
+        algo: AlgoChoice,
+        compress: CompressPolicy,
+        f: F,
+    ) -> Vec<Vec<f32>>
+    where
+        F: Fn(usize, &mut Collective) -> Vec<f32> + Send + Sync + Clone + 'static,
+    {
+        let world = topo.world();
+        let cw = CommWorld::with_topology_opts(
+            topo,
+            policy,
+            DEFAULT_PEER_TIMEOUT,
+            algo,
+            compress,
+        );
         let mut handles = Vec::new();
         for rank in 0..world {
             let cw = Arc::clone(&cw);
@@ -2531,6 +2849,317 @@ mod tests {
         }
     }
 
+    // ---- algorithm selection + wire compression ---------------------------
+
+    /// The tentpole's safety grid (invariant 9): algorithm choice ×
+    /// topology × ring count × compression policy. Every run is
+    /// rank-agreed; uncompressed runs are bitwise-equal to the flat-ring
+    /// uncompressed baseline whatever algorithm was selected (selection
+    /// moves modelled time and bytes, never summation order); compressed
+    /// runs are deterministic and self-consistent — bitwise-equal across
+    /// topologies and ring counts for the same algorithm choice — and
+    /// leave the uncompressed λ/Ctrl streams bitwise-untouched.
+    #[test]
+    fn algo_and_compression_grid_is_bitwise_deterministic() {
+        let world = 3usize;
+        let fast = LinkProfile { latency: 1e-6, bytes_per_sec: 1e9 };
+        let slow = LinkProfile { latency: 5e-5, bytes_per_sec: 5e7 };
+        let choices = [
+            AlgoChoice::Fixed(CollAlgo::Ring),
+            AlgoChoice::Fixed(CollAlgo::RsAg),
+            AlgoChoice::Fixed(CollAlgo::Hier),
+            AlgoChoice::Fixed(CollAlgo::Double),
+            AlgoChoice::Auto,
+        ];
+        const THETA: usize = 131;
+        const LAMBDA: usize = 53;
+        const VALS: usize = THETA + LAMBDA + 2;
+        let mut ref_off: Option<Vec<f32>> = None;
+        let mut ref_f16: Vec<Option<Vec<f32>>> = vec![None; choices.len()];
+        for (ci, &choice) in choices.iter().enumerate() {
+            for hier in [false, true] {
+                for rings in [1usize, 2] {
+                    for codec in [Codec::None, Codec::F16] {
+                        let topo = if hier {
+                            Topology::hierarchical(world, 2, rings, fast, slow)
+                        } else {
+                            Topology::flat(world, rings, fast)
+                        };
+                        let out = run_world_opts(
+                            topo,
+                            RoutePolicy::Sized,
+                            choice,
+                            CompressPolicy::theta(codec),
+                            move |rank, coll| {
+                                let theta: Vec<f32> = (0..THETA)
+                                    .map(|i| (i as f32) * 0.713 - rank as f32)
+                                    .collect();
+                                let lambda: Vec<f32> = (0..LAMBDA)
+                                    .map(|i| {
+                                        (i as f32) * -0.291 + 2.0 * rank as f32
+                                    })
+                                    .collect();
+                                // λ streams while θ lowers at the sync entry
+                                let pl = coll
+                                    .all_reduce_async(
+                                        lambda,
+                                        32,
+                                        ReduceTag::Lambda,
+                                    )
+                                    .unwrap();
+                                let t = coll
+                                    .all_reduce_sync(theta, 32, ReduceTag::Theta)
+                                    .unwrap();
+                                let ctrl = vec![0.25 * (rank as f32 + 1.0); 2];
+                                let c = coll
+                                    .all_reduce_sync(ctrl, 2, ReduceTag::Ctrl)
+                                    .unwrap();
+                                let l = coll.wait(pl).unwrap();
+                                if codec != Codec::None {
+                                    let st = coll.stats();
+                                    assert!(
+                                        st.raw_bytes_sent > st.bytes_sent,
+                                        "f16 on θ must shrink wire bytes"
+                                    );
+                                }
+                                let mut v = t;
+                                v.extend(l);
+                                v.extend(c);
+                                v
+                            },
+                        );
+                        let ctx = format!(
+                            "choice={} hier={hier} rings={rings} codec={}",
+                            choice.name(),
+                            codec.name()
+                        );
+                        for rank in 1..world {
+                            assert_eq!(out[0], out[rank], "{ctx}: rank skew");
+                        }
+                        let run = out[0].clone();
+                        assert_eq!(run.len(), VALS, "{ctx}");
+                        if codec == Codec::None {
+                            match &ref_off {
+                                None => ref_off = Some(run),
+                                Some(r) => assert!(
+                                    r == &run,
+                                    "{ctx} changed uncompressed values"
+                                ),
+                            }
+                        } else {
+                            let base = ref_off.as_ref().expect("off ran first");
+                            // the uncompressed streams are untouched bits
+                            assert_eq!(
+                                base[THETA..],
+                                run[THETA..],
+                                "{ctx}: λ/Ctrl must ride the wire at f32"
+                            );
+                            // and θ really was quantized
+                            assert_ne!(
+                                base[..THETA],
+                                run[..THETA],
+                                "{ctx}: f16 left θ bit-identical — \
+                                 compression never engaged"
+                            );
+                            match &ref_f16[ci] {
+                                None => ref_f16[ci] = Some(run),
+                                Some(r) => assert!(
+                                    r == &run,
+                                    "{ctx}: compressed run not deterministic \
+                                     across topologies/rings"
+                                ),
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // every choice shares ONE compressed trajectory: Hier/Double are
+        // model-only lowerings, and the rs∘ag lowering compresses only its
+        // reduce-scatter half (the gather circulates exact reduced values)
+        for (ci, r) in ref_f16.iter().enumerate().skip(1) {
+            assert_eq!(
+                &ref_f16[0], r,
+                "choice {} diverged the compressed trajectory",
+                choices[ci].name()
+            );
+        }
+    }
+
+    /// Forcing the rs∘ag lowering at the sync entry: values stay bitwise
+    /// those of the fused ring all-reduce, the op books one reduce + one
+    /// gather under [`CollAlgo::RsAg`], and — the unified-planner
+    /// contract — the halves' bytes are counted exactly once, summing to
+    /// the fused all-reduce's wire bytes (the lowering moves identical
+    /// bytes).
+    #[test]
+    fn sync_all_reduce_lowers_to_rsag_and_counts_bytes_once() {
+        const N: usize = 132; // divisible by world·2 → integer wire bytes
+        let run = |choice: AlgoChoice| {
+            run_world_opts(
+                Topology::flat(3, 1, LinkModel::instant().profile()),
+                RoutePolicy::Tag,
+                choice,
+                CompressPolicy::off(),
+                |rank, coll| {
+                    let data: Vec<f32> = (0..N)
+                        .map(|i| (i as f32) * 0.713 - 1.7 * rank as f32)
+                        .collect();
+                    let mut v = coll
+                        .all_reduce_sync(data, 32, ReduceTag::Theta)
+                        .unwrap();
+                    let st = coll.stats();
+                    v.push(st.bytes_sent as f32);
+                    v.push(st.reduces as f32);
+                    v.push(st.gathers as f32);
+                    v.push(st.algo(CollAlgo::RsAg).ops as f32);
+                    v.push((st.rs_bytes_sent + st.ag_bytes_sent) as f32);
+                    v
+                },
+            )
+        };
+        let fused = run(AlgoChoice::Fixed(CollAlgo::Ring));
+        let lowered = run(AlgoChoice::Fixed(CollAlgo::RsAg));
+        for rank in 0..3 {
+            assert_eq!(
+                fused[rank][..N],
+                lowered[rank][..N],
+                "rank {rank}: rs∘ag lowering changed the bits"
+            );
+            // identical wire bytes, attributed exactly once
+            assert_eq!(fused[rank][N], lowered[rank][N], "bytes differ");
+            assert_eq!(lowered[rank][N + 1], 1.0, "rs half is the one reduce");
+            assert_eq!(lowered[rank][N + 2], 1.0, "ag half is the one gather");
+            assert_eq!(lowered[rank][N + 3], 2.0, "both halves book as RsAg");
+            assert_eq!(
+                lowered[rank][N + 4],
+                lowered[rank][N],
+                "half-op split must cover all lowered bytes"
+            );
+            assert_eq!(fused[rank][N + 3], 0.0, "fused run never books RsAg");
+        }
+    }
+
+    /// f16-on-θ (the `compress=f16` knob): wire bytes halve on the θ
+    /// stream while Ctrl rides at full width — the bench's ~2× ratio —
+    /// and the per-algorithm attribution carries the same totals.
+    #[test]
+    fn f16_on_theta_halves_wire_bytes_and_attributes_per_algo() {
+        let out = run_world_opts(
+            Topology::flat(4, 1, LinkModel::instant().profile()),
+            RoutePolicy::Tag,
+            AlgoChoice::Fixed(CollAlgo::Ring),
+            CompressPolicy::theta(Codec::F16),
+            |_, coll| {
+                let _ = coll
+                    .all_reduce_sync(vec![1.0; 1000], 250, ReduceTag::Theta)
+                    .unwrap();
+                let c = coll
+                    .all_reduce_sync(vec![1.0; 4], 4, ReduceTag::Ctrl)
+                    .unwrap();
+                assert_eq!(c, vec![1.0; 4], "Ctrl must stay exact");
+                let st = coll.stats();
+                vec![
+                    st.bytes_sent as f32,
+                    st.raw_bytes_sent as f32,
+                    st.algo(CollAlgo::Ring).wire_bytes as f32,
+                    st.algo(CollAlgo::Ring).raw_bytes as f32,
+                    st.compression_ratio() as f32,
+                ]
+            },
+        );
+        // θ: 1000 elems · 2 B · 2(K−1)/K = 3000; Ctrl: 4 elems · 4 B · 1.5
+        for o in &out {
+            assert_eq!(o[0], 3024.0);
+            assert_eq!(o[1], 6024.0);
+            assert_eq!(o[2], 3024.0);
+            assert_eq!(o[3], 6024.0);
+            assert!(o[4] > 1.9 && o[4] < 2.0, "ratio {}", o[4]);
+        }
+    }
+
+    /// Recursive doubling is latency-optimal but bandwidth-suboptimal:
+    /// ⌈log₂K⌉ full-payload rounds, so its attributed wire bytes exceed
+    /// the ring's 2(K−1)/K of the payload — the trade the scheduler
+    /// weighs per reduce — while the values stay the ring exchange's.
+    #[test]
+    fn double_algo_books_log2_wire_bytes() {
+        let out = run_world_opts(
+            Topology::flat(4, 1, LinkModel::instant().profile()),
+            RoutePolicy::Tag,
+            AlgoChoice::Fixed(CollAlgo::Double),
+            CompressPolicy::off(),
+            |rank, coll| {
+                let t = coll
+                    .all_reduce_sync(
+                        vec![rank as f32; 1000],
+                        1000,
+                        ReduceTag::Theta,
+                    )
+                    .unwrap();
+                assert!((t[0] - 1.5).abs() < 1e-6, "mean of 0..4");
+                let st = coll.stats();
+                vec![
+                    st.bytes_sent as f32,
+                    st.algo(CollAlgo::Double).ops as f32,
+                    st.algo(CollAlgo::Double).wire_bytes as f32,
+                ]
+            },
+        );
+        for o in &out {
+            // ⌈log₂4⌉ = 2 rounds × 4000 B = 8000 (ring would book 6000)
+            assert_eq!(o[0], 8000.0);
+            assert_eq!(o[1], 1.0);
+            assert_eq!(o[2], 8000.0);
+        }
+    }
+
+    /// The engine's wire model tracks the selected algorithm: on a
+    /// two-node topology whose inter fabric dominates, the hierarchical
+    /// lowering's hop sleeps shrink by its modelled ratio
+    /// ([`RingScheduler::wire_scale`]) while the reduced values stay
+    /// bitwise those of the flat ring.
+    #[test]
+    fn hier_lowering_shrinks_simulated_wire_time_on_multinode() {
+        let fast = LinkProfile { latency: 1e-6, bytes_per_sec: 1e9 };
+        let slow = LinkProfile { latency: 1e-4, bytes_per_sec: 20e6 };
+        let run = |choice: AlgoChoice| {
+            run_world_opts(
+                Topology::hierarchical(4, 2, 1, fast, slow),
+                RoutePolicy::Tag,
+                choice,
+                CompressPolicy::off(),
+                |rank, coll| {
+                    let t = coll
+                        .all_reduce_sync(
+                            vec![rank as f32 + 0.5; 1 << 17],
+                            1 << 17,
+                            ReduceTag::Theta,
+                        )
+                        .unwrap();
+                    let mut v = vec![coll.stats().wire_seconds as f32];
+                    v.extend_from_slice(&t[..4]);
+                    v
+                },
+            )
+        };
+        let ring = run(AlgoChoice::Fixed(CollAlgo::Ring));
+        let hier = run(AlgoChoice::Fixed(CollAlgo::Hier));
+        for rank in 0..4 {
+            assert_eq!(
+                ring[rank][1..],
+                hier[rank][1..],
+                "rank {rank}: algorithm selection changed the bits"
+            );
+            assert!(
+                hier[rank][0] < 0.9 * ring[rank][0],
+                "rank {rank}: hier wire {}s not below ring {}s",
+                hier[rank][0],
+                ring[rank][0]
+            );
+        }
+    }
+
     /// Half-op accounting: a standalone reduce-scatter or all-gather moves
     /// (K−1)/K of the payload per rank — half an all-reduce — split out as
     /// `rs_bytes_sent`/`ag_bytes_sent`; the all-gather is counted as a
@@ -2573,21 +3202,42 @@ mod tests {
             gathers: 2,
             rs_bytes_sent: 100,
             ag_bytes_sent: 50,
+            raw_bytes_sent: 400,
             ..CommStats::default()
         };
         a.per_tag[ReduceTag::Theta.idx()].gathers = 2;
+        a.per_algo[CollAlgo::RsAg.idx()] = AlgoStats {
+            ops: 2,
+            wire_bytes: 150.0,
+            raw_bytes: 300.0,
+            est_wire_secs: 0.25,
+        };
         let mut b = CommStats {
             gathers: 3,
             rs_bytes_sent: 10,
             ag_bytes_sent: 5,
+            raw_bytes_sent: 40,
             ..CommStats::default()
         };
         b.per_tag[ReduceTag::Theta.idx()].gathers = 3;
+        b.per_algo[CollAlgo::RsAg.idx()] = AlgoStats {
+            ops: 1,
+            wire_bytes: 15.0,
+            raw_bytes: 30.0,
+            est_wire_secs: 0.05,
+        };
         a.merge(&b);
         assert_eq!(a.gathers, 5);
         assert_eq!(a.rs_bytes_sent, 110);
         assert_eq!(a.ag_bytes_sent, 55);
+        assert_eq!(a.raw_bytes_sent, 440);
         assert_eq!(a.tag(ReduceTag::Theta).gathers, 5);
+        let rsag = a.algo(CollAlgo::RsAg);
+        assert_eq!(rsag.ops, 3);
+        assert!((rsag.wire_bytes - 165.0).abs() < 1e-9);
+        assert!((rsag.raw_bytes - 330.0).abs() < 1e-9);
+        assert!((rsag.est_wire_secs - 0.30).abs() < 1e-9);
+        assert!((rsag.compression_ratio() - 2.0).abs() < 1e-9);
     }
 
     // ---- BucketPlan -------------------------------------------------------

@@ -57,7 +57,8 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use super::{LinkModel, ReduceTag};
+use super::algo::{algo_secs, AlgoChoice, CollAlgo, RSAG_MIN_ELEMS};
+use super::{CollOp, LinkModel, ReduceTag};
 
 /// One directed channel hop: per-message latency plus wire rate. The
 /// per-hop analogue of the global [`LinkModel`].
@@ -327,6 +328,24 @@ impl Topology {
         self.node_of[rank]
     }
 
+    /// Number of NUMA-like nodes (≥ 1; `node_of` is monotone, so the
+    /// last rank's node is the highest id). Flat topologies are one
+    /// node.
+    pub fn nodes(&self) -> usize {
+        self.node_of.last().map_or(1, |n| n + 1)
+    }
+
+    /// The intra-node link profile the paths were derived from (equals
+    /// [`inter`](Topology::inter) for flat topologies).
+    pub fn intra(&self) -> LinkProfile {
+        self.intra
+    }
+
+    /// The inter-node fabric profile.
+    pub fn inter(&self) -> LinkProfile {
+        self.inter
+    }
+
     pub fn path(&self, ring: usize) -> &RingPath {
         &self.paths[ring]
     }
@@ -495,6 +514,13 @@ impl RingScheduler {
         self.est_busy.len()
     }
 
+    /// The static topology this scheduler plans against (shared with the
+    /// byte-attribution chokepoint, which needs [`CollAlgo::wire_units`]
+    /// under the same topology the plan was made against).
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
     pub fn policy(&self) -> RoutePolicy {
         self.policy
     }
@@ -555,10 +581,149 @@ impl RingScheduler {
         }
     }
 
+    /// Modelled seconds one all-reduce of `elems` f32s costs on `ring`
+    /// under `algo`: the raw algorithm model ([`algo_secs`]) times the
+    /// ring's fabric share. For [`CollAlgo::Ring`] this is exactly
+    /// [`est_cost`](RingScheduler::est_cost).
+    pub fn algo_cost(&self, algo: CollAlgo, ring: usize, elems: usize) -> f64 {
+        self.topo.ring_share(ring)
+            * algo_secs(&self.topo, algo, ring, elems.max(1))
+    }
+
+    /// Modelled finish time of `algo` on `ring`: charged occupancy plus
+    /// this reduce's cost, corrected by the measured scale.
+    fn finish_time(&self, algo: CollAlgo, ring: usize, elems: usize) -> f64 {
+        self.scale[ring] * (self.est_busy[ring] + self.algo_cost(algo, ring, elems))
+    }
+
+    /// Best ring for `algo` under the routing policy (the algorithm-aware
+    /// generalization of [`route_phases`](RingScheduler::route_phases)).
+    fn route_algo(&self, algo: CollAlgo, tag: ReduceTag, hint_elems: usize) -> usize {
+        match self.policy {
+            RoutePolicy::Tag => tag.ring(self.rings()),
+            RoutePolicy::Sized => {
+                let mut best = 0usize;
+                let mut best_t = f64::INFINITY;
+                for r in 0..self.rings() {
+                    let t = self.finish_time(algo, r, hint_elems);
+                    if t < best_t {
+                        best_t = t;
+                        best = r;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Jointly pick (algorithm, ring) for one reduce — the selection
+    /// chokepoint of invariant 9. Candidates are compared by modelled
+    /// finish time on their own best ring; ties keep the earliest
+    /// candidate in [`CollAlgo::ALL`] order (`Ring` first), so the
+    /// baseline survives every degenerate topology. Every input is
+    /// rank-replicated (tag, op, synced size hint, static topology,
+    /// replicated clocks), so every rank computes the identical choice
+    /// with no extra coordination.
+    ///
+    /// `allow_rsag` marks reduces that can lower onto the streamed
+    /// half-op pair (materialized sync all-reduces): the half-op lowering
+    /// moves ring-identical bytes, so auto-selection prefers it only for
+    /// large reduces ([`RSAG_MIN_ELEMS`]) where the owner-shard window
+    /// between the halves pays. Standalone half ops (`ReduceScatter` /
+    /// `AllGather`) are already their own lowering and always plan as
+    /// phase-weighted ring ops.
+    pub fn plan(
+        &self,
+        tag: ReduceTag,
+        op: CollOp,
+        hint_elems: usize,
+        choice: AlgoChoice,
+        allow_rsag: bool,
+    ) -> (CollAlgo, usize) {
+        if op != CollOp::AllReduce {
+            return (
+                CollAlgo::Ring,
+                self.route_phases(tag, hint_elems, op.phases()),
+            );
+        }
+        match choice {
+            AlgoChoice::Fixed(algo) => {
+                let algo = if algo == CollAlgo::RsAg && !allow_rsag {
+                    // streamed/async opens cannot split into sync halves;
+                    // the ring engine's fused all-reduce is the identical
+                    // lowering (same bytes, same order, same cost model)
+                    CollAlgo::Ring
+                } else {
+                    algo
+                };
+                (algo, self.route_algo(algo, tag, hint_elems))
+            }
+            AlgoChoice::Auto => {
+                let mut best_algo = CollAlgo::Ring;
+                let mut best_ring =
+                    self.route_algo(CollAlgo::Ring, tag, hint_elems);
+                let mut best_t =
+                    self.finish_time(CollAlgo::Ring, best_ring, hint_elems);
+                for algo in [CollAlgo::Hier, CollAlgo::Double] {
+                    let ring = self.route_algo(algo, tag, hint_elems);
+                    let t = self.finish_time(algo, ring, hint_elems);
+                    if t < best_t {
+                        best_t = t;
+                        best_algo = algo;
+                        best_ring = ring;
+                    }
+                }
+                if best_algo == CollAlgo::Ring
+                    && allow_rsag
+                    && hint_elems >= RSAG_MIN_ELEMS
+                {
+                    best_algo = CollAlgo::RsAg;
+                }
+                (best_algo, best_ring)
+            }
+        }
+    }
+
+    /// Ratio of `algo`'s raw modelled seconds to the ring engine's own
+    /// flat-ring seconds for the same bucket — the factor the engine
+    /// multiplies into every simulated hop sleep so wall-clock wire time
+    /// tracks the *selected* algorithm while the exchange itself keeps
+    /// the ring's summation order (invariant 9: the choice moves time
+    /// and bytes, never bits). `Ring`/`RsAg` are the engine's native
+    /// lowering: exactly 1. Degenerate models (zero/non-finite base)
+    /// fall back to 1 rather than scaling by NaN.
+    pub fn wire_scale(&self, algo: CollAlgo, ring: usize, elems: usize) -> f64 {
+        match algo {
+            CollAlgo::Ring | CollAlgo::RsAg => 1.0,
+            CollAlgo::Hier | CollAlgo::Double => {
+                let base =
+                    algo_secs(&self.topo, CollAlgo::Ring, ring, elems.max(1));
+                let t = algo_secs(&self.topo, algo, ring, elems.max(1));
+                if base > 0.0 && t.is_finite() && t >= 0.0 {
+                    t / base
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
     /// Charge one submitted all-reduce bucket of `elems` f32s to `ring`'s
     /// occupancy clock (actual sizes, not the route-time hint).
     pub fn charge(&mut self, ring: usize, elems: usize) {
         self.charge_phases(ring, elems, 2);
+    }
+
+    /// [`charge`](RingScheduler::charge) under an algorithm's own cost
+    /// model: decays every clock, then charges `ring` what the selected
+    /// algorithm is modelled to occupy it for.
+    pub fn charge_algo(&mut self, algo: CollAlgo, ring: usize, elems: usize) {
+        for b in self.est_busy.iter_mut() {
+            *b *= OCCUPANCY_DECAY;
+        }
+        let c = self.algo_cost(algo, ring, elems);
+        self.est_busy[ring] += c;
+        self.window_est[ring] += c;
     }
 
     /// [`charge`](RingScheduler::charge) for an op of `phases` ring
@@ -957,5 +1122,188 @@ mod tests {
         narrow.restore(&st);
         assert_eq!(narrow.epoch(), st.epoch);
         assert_eq!(narrow.state().est_busy, vec![0.0]);
+    }
+
+    /// The tentpole selection: on a two-node hierarchy with a slow
+    /// fabric, a tiny Ctrl reduce plans recursive doubling (latency-
+    /// optimal), a fat θ reduce plans the hierarchical algorithm
+    /// (fabric-byte-optimal), and on a flat world everything degenerates
+    /// to the ring baseline — with RsAg promoted only for large
+    /// materialized reduces. Two independent schedulers agree on every
+    /// plan (rank-sync by pure function).
+    #[test]
+    fn plan_selects_by_modelled_cost_and_stays_in_lockstep() {
+        let hier =
+            Arc::new(Topology::hierarchical(8, 2, 2, fast(), slow()));
+        let mut a = RingScheduler::new(Arc::clone(&hier), RoutePolicy::Sized);
+        let mut b = RingScheduler::new(hier, RoutePolicy::Sized);
+        let mut plans = Vec::new();
+        for sched in [&mut a, &mut b] {
+            let tiny = sched.plan(
+                ReduceTag::Ctrl,
+                CollOp::AllReduce,
+                2,
+                AlgoChoice::Auto,
+                false,
+            );
+            // with a near-free intra link, even the latency race is won
+            // by the two-level lowering (6 fast hops + 2 slow vs 3 slow
+            // doubling rounds) — either way, never the flat ring
+            assert_ne!(tiny.0, CollAlgo::Ring, "tiny must leave the ring");
+            let fat = sched.plan(
+                ReduceTag::Theta,
+                CollOp::AllReduce,
+                1 << 20,
+                AlgoChoice::Auto,
+                false,
+            );
+            assert_eq!(fat.0, CollAlgo::Hier, "multi-node fat → hierarchical");
+            sched.charge_algo(fat.0, fat.1, 1 << 20);
+            let after = sched.plan(
+                ReduceTag::Lambda,
+                CollOp::AllReduce,
+                1 << 20,
+                AlgoChoice::Auto,
+                false,
+            );
+            plans.push((tiny, fat, after, sched.state()));
+        }
+        assert_eq!(plans[0], plans[1], "schedulers diverged");
+
+        // flat world: hier ties ring (and loses the tie), double loses
+        // the bandwidth race → ring for fat reduces; the large
+        // materialized case upgrades to the half-op lowering
+        let flat = Arc::new(Topology::flat(4, 2, slow()));
+        let sched = RingScheduler::new(flat, RoutePolicy::Sized);
+        let fat = 1 << 20;
+        // on a latency-dominated flat world, tiny reduces DO plan the
+        // recursive-doubling lowering: ⌈log₂4⌉ = 2 rounds vs 2(W−1) = 6
+        // ring steps
+        assert_eq!(
+            sched
+                .plan(ReduceTag::Ctrl, CollOp::AllReduce, 2, AlgoChoice::Auto, false)
+                .0,
+            CollAlgo::Double,
+            "tiny flat → recursive doubling"
+        );
+        assert_eq!(
+            sched
+                .plan(ReduceTag::Theta, CollOp::AllReduce, fat, AlgoChoice::Auto, false)
+                .0,
+            CollAlgo::Ring
+        );
+        assert_eq!(
+            sched
+                .plan(ReduceTag::Theta, CollOp::AllReduce, fat, AlgoChoice::Auto, true)
+                .0,
+            CollAlgo::RsAg
+        );
+        // small materialized reduces stay fused
+        assert_eq!(
+            sched
+                .plan(ReduceTag::Theta, CollOp::AllReduce, 512, AlgoChoice::Auto, true)
+                .0,
+            CollAlgo::Ring
+        );
+        // a pinned algorithm is honored; pinned RsAg demotes to Ring
+        // where the half-op lowering is unavailable
+        assert_eq!(
+            sched
+                .plan(
+                    ReduceTag::Theta,
+                    CollOp::AllReduce,
+                    fat,
+                    AlgoChoice::Fixed(CollAlgo::Double),
+                    false
+                )
+                .0,
+            CollAlgo::Double
+        );
+        assert_eq!(
+            sched
+                .plan(
+                    ReduceTag::Theta,
+                    CollOp::AllReduce,
+                    fat,
+                    AlgoChoice::Fixed(CollAlgo::RsAg),
+                    false
+                )
+                .0,
+            CollAlgo::Ring
+        );
+        // standalone halves are already their own lowering
+        assert_eq!(
+            sched
+                .plan(
+                    ReduceTag::Theta,
+                    CollOp::ReduceScatter,
+                    fat,
+                    AlgoChoice::Fixed(CollAlgo::Hier),
+                    false
+                )
+                .0,
+            CollAlgo::Ring
+        );
+    }
+
+    /// `wire_scale` is the engine's simulated-time correction: exactly 1
+    /// for the native ring lowering, < 1 where the selected algorithm is
+    /// modelled faster, and a safe 1 on degenerate (instant-link) models.
+    #[test]
+    fn wire_scale_tracks_algo_model() {
+        let topo =
+            Arc::new(Topology::hierarchical(8, 2, 2, fast(), slow()));
+        let sched = RingScheduler::new(topo, RoutePolicy::Sized);
+        let fat = 1 << 20;
+        assert_eq!(sched.wire_scale(CollAlgo::Ring, 0, fat), 1.0);
+        assert_eq!(sched.wire_scale(CollAlgo::RsAg, 0, fat), 1.0);
+        let hs = sched.wire_scale(CollAlgo::Hier, 0, fat);
+        assert!(hs > 0.0 && hs < 0.5, "hier scale {hs}");
+        let ds = sched.wire_scale(CollAlgo::Double, 0, 2);
+        assert!(ds > 0.0 && ds < 1.0, "double scale {ds}");
+        // consistency: scale × ring model == algo model (raw, shareless)
+        let ring_raw = super::super::algo::algo_secs(
+            &Topology::hierarchical(8, 2, 2, fast(), slow()),
+            CollAlgo::Ring,
+            0,
+            fat,
+        );
+        let algo_raw = super::super::algo::algo_secs(
+            &Topology::hierarchical(8, 2, 2, fast(), slow()),
+            CollAlgo::Hier,
+            0,
+            fat,
+        );
+        assert!((hs * ring_raw - algo_raw).abs() < 1e-12);
+        // instant links: base model is 0 seconds → scale stays 1
+        let inst = Arc::new(Topology::flat(4, 1, LinkProfile::instant()));
+        let s = RingScheduler::new(inst, RoutePolicy::Sized);
+        assert_eq!(s.wire_scale(CollAlgo::Double, 0, 1000), 1.0);
+        assert_eq!(s.wire_scale(CollAlgo::Hier, 0, 1000), 1.0);
+    }
+
+    /// `charge_algo` charges the algorithm's own cost (ring-equivalent
+    /// for the baseline) through the same decay discipline as
+    /// `charge_phases`.
+    #[test]
+    fn charge_algo_matches_ring_baseline_and_decays() {
+        let topo = Arc::new(Topology::flat(2, 2, slow()));
+        let mut by_phases =
+            RingScheduler::new(Arc::clone(&topo), RoutePolicy::Sized);
+        let mut by_algo = RingScheduler::new(topo, RoutePolicy::Sized);
+        by_phases.charge_phases(0, 4096, 2);
+        by_phases.charge_phases(1, 128, 2);
+        by_algo.charge_algo(CollAlgo::Ring, 0, 4096);
+        by_algo.charge_algo(CollAlgo::Ring, 1, 128);
+        assert_eq!(by_phases.state(), by_algo.state());
+        // a cheaper algorithm charges less occupancy than the ring would
+        let hier =
+            Arc::new(Topology::hierarchical(8, 2, 1, fast(), slow()));
+        let mut h = RingScheduler::new(hier, RoutePolicy::Sized);
+        let ring_cost = h.algo_cost(CollAlgo::Ring, 0, 1 << 20);
+        let hier_cost = h.algo_cost(CollAlgo::Hier, 0, 1 << 20);
+        assert!(hier_cost < ring_cost);
+        h.charge_algo(CollAlgo::Hier, 0, 1 << 20);
+        assert!((h.state().est_busy[0] - hier_cost).abs() < 1e-15);
     }
 }

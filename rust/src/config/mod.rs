@@ -12,7 +12,9 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::collective::{RoutePolicy, TopologyKind};
+use crate::collective::{
+    AlgoChoice, CollAlgo, CompressPolicy, RoutePolicy, TopologyKind,
+};
 use crate::util::json::Json;
 
 /// Which meta-gradient algorithm drives the run (Fig. 1 table rows).
@@ -132,6 +134,156 @@ impl ZeroKnob {
     }
 }
 
+/// Collective-algorithm knob (`coll_algo=`).
+///
+/// `Set` pins the per-reduce choice in the config: `auto` lets the
+/// [`RingScheduler`](crate::collective::RingScheduler) pick per reduce
+/// from modelled finish times (rank-synced, deterministic), while an
+/// algorithm name (`ring|rsag|hier|double`) forces that lowering for
+/// every reduce. `Env` (the default) reads `SAMA_COLL_ALGO` so the CI
+/// matrix can sweep algorithms without touching configs, mirroring
+/// `SAMA_ZERO`/`SAMA_TOPOLOGY`; unset resolves to the flat ring, today's
+/// baseline. Whatever is selected, reduced values are bitwise-identical
+/// — selection moves modelled wire time and byte attribution only
+/// (invariant 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollAlgoKnob {
+    /// Resolve from `SAMA_COLL_ALGO` (unset/empty → `ring`).
+    Env,
+    /// Pinned in config: scheduler-auto or one fixed algorithm.
+    Set(AlgoChoice),
+}
+
+impl CollAlgoKnob {
+    pub fn parse(s: &str) -> Result<CollAlgoKnob> {
+        Ok(match s {
+            "env" => CollAlgoKnob::Env,
+            other => CollAlgoKnob::Set(AlgoChoice::parse(other)?),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollAlgoKnob::Env => "env",
+            CollAlgoKnob::Set(c) => c.name(),
+        }
+    }
+
+    /// Resolve to the effective per-reduce choice. `Env` consults
+    /// `SAMA_COLL_ALGO` once per process, with a stderr notice when it
+    /// moves off the flat ring so CI logs show which leg ran; a value it
+    /// cannot parse falls back to `ring` with a warning rather than
+    /// aborting a run over a matrix typo.
+    pub fn resolved(&self) -> AlgoChoice {
+        match self {
+            CollAlgoKnob::Set(c) => *c,
+            CollAlgoKnob::Env => {
+                let var = std::env::var("SAMA_COLL_ALGO").unwrap_or_default();
+                let v = var.trim();
+                if v.is_empty() {
+                    return AlgoChoice::Fixed(CollAlgo::Ring);
+                }
+                match AlgoChoice::parse(v) {
+                    Ok(c) => {
+                        static NOTICE: std::sync::Once = std::sync::Once::new();
+                        NOTICE.call_once(|| {
+                            eprintln!(
+                                "[sama] SAMA_COLL_ALGO={v}: per-reduce \
+                                 collective algorithm selection active"
+                            );
+                        });
+                        c
+                    }
+                    Err(_) => {
+                        static WARN: std::sync::Once = std::sync::Once::new();
+                        WARN.call_once(|| {
+                            eprintln!(
+                                "[sama] SAMA_COLL_ALGO='{v}' not understood \
+                                 (auto|ring|rsag|hier|double); staying on ring"
+                            );
+                        });
+                        AlgoChoice::Fixed(CollAlgo::Ring)
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Wire-compression knob (`compress=`).
+///
+/// `Set` pins the per-tag policy in the config (`off|f16|int8` — the
+/// codec applies to θ-gradient reduces only; λ and Ctrl always ride at
+/// f32, structurally, see `CompressPolicy::codec_for`). `Env` (the
+/// default) reads `SAMA_COMPRESS` so the CI matrix can sweep codecs;
+/// unset resolves to `off`. Compressed runs stay run-to-run
+/// deterministic (rank-replicated error-feedback residuals) but are
+/// *not* bitwise-equal to uncompressed runs — see invariant 9.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompressKnob {
+    /// Resolve from `SAMA_COMPRESS` (unset/empty → `off`).
+    Env,
+    /// Pinned in config.
+    Set(CompressPolicy),
+}
+
+impl CompressKnob {
+    pub fn parse(s: &str) -> Result<CompressKnob> {
+        Ok(match s {
+            "env" => CompressKnob::Env,
+            other => CompressKnob::Set(CompressPolicy::parse(other)?),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressKnob::Env => "env",
+            CompressKnob::Set(p) => p.name(),
+        }
+    }
+
+    /// Resolve to the effective policy. `Env` consults `SAMA_COMPRESS`
+    /// once per process, with a stderr notice when compression engages;
+    /// an unparseable value falls back to `off` with a warning.
+    pub fn resolved(&self) -> CompressPolicy {
+        match self {
+            CompressKnob::Set(p) => *p,
+            CompressKnob::Env => {
+                let var = std::env::var("SAMA_COMPRESS").unwrap_or_default();
+                let v = var.trim();
+                if v.is_empty() {
+                    return CompressPolicy::off();
+                }
+                match CompressPolicy::parse(v) {
+                    Ok(p) => {
+                        if p.enabled() {
+                            static NOTICE: std::sync::Once =
+                                std::sync::Once::new();
+                            NOTICE.call_once(|| {
+                                eprintln!(
+                                    "[sama] SAMA_COMPRESS={v}: on-the-wire \
+                                     θ-gradient compression enabled"
+                                );
+                            });
+                        }
+                        p
+                    }
+                    Err(_) => {
+                        static WARN: std::sync::Once = std::sync::Once::new();
+                        WARN.call_once(|| {
+                            eprintln!(
+                                "[sama] SAMA_COMPRESS='{v}' not understood \
+                                 (off|f16|int8); staying uncompressed"
+                            );
+                        });
+                        CompressPolicy::off()
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Full training configuration shared by launcher, examples and benches.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -215,6 +367,16 @@ pub struct TrainConfig {
     /// (default) reads `SAMA_ZERO`. Bitwise-identical either way; only
     /// per-rank memory and the wire split change.
     pub zero: ZeroKnob,
+    /// Per-reduce collective algorithm: `auto` (scheduler picks from
+    /// modelled finish times), `ring|rsag|hier|double` (forced), or `env`
+    /// (default; reads `SAMA_COLL_ALGO`, unset → `ring`). Reduced values
+    /// are bitwise-identical under every setting.
+    pub coll_algo: CollAlgoKnob,
+    /// On-the-wire θ-gradient compression: `off|f16|int8`, or `env`
+    /// (default; reads `SAMA_COMPRESS`, unset → `off`). λ and Ctrl are
+    /// never compressed. Compressed runs are deterministic but not
+    /// bitwise-equal to uncompressed runs.
+    pub compress: CompressKnob,
     /// Streamed reduces between bucket auto-tuner rebalances (the old
     /// hard-coded 4). Larger = steadier profiles, slower adaptation.
     pub retune_every: u32,
@@ -309,6 +471,8 @@ impl Default for TrainConfig {
             inter_latency: -1.0,
             route: RoutePolicy::Sized,
             zero: ZeroKnob::Auto,
+            coll_algo: CollAlgoKnob::Env,
+            compress: CompressKnob::Env,
             retune_every: crate::collective::BucketPlan::DEFAULT_RETUNE_EVERY,
             checkpoint_path: String::new(),
             checkpoint_every: 0,
@@ -399,6 +563,8 @@ impl TrainConfig {
             }
             "route" => self.route = RoutePolicy::parse(value)?,
             "zero" => self.zero = ZeroKnob::parse(value)?,
+            "coll_algo" => self.coll_algo = CollAlgoKnob::parse(value)?,
+            "compress" => self.compress = CompressKnob::parse(value)?,
             "retune_every" => {
                 let n: u32 = value.parse().context("retune_every")?;
                 if n == 0 {
@@ -509,6 +675,8 @@ mod tests {
         assert!(c.intra_bandwidth == 0.0 && c.inter_bandwidth == 0.0);
         assert!(c.intra_latency < 0.0 && c.inter_latency < 0.0);
         assert!(c.checkpoint_path.is_empty(), "checkpointing is opt-in");
+        assert_eq!(c.coll_algo, CollAlgoKnob::Env, "algo knob rides the env");
+        assert_eq!(c.compress, CompressKnob::Env, "codec knob rides the env");
         c.apply_overrides(&[
             "algo=neumann".into(),
             "workers=4".into(),
@@ -524,6 +692,8 @@ mod tests {
             "inter_latency=8e-5".into(),
             "route=tag".into(),
             "zero=1".into(),
+            "coll_algo=hier".into(),
+            "compress=f16".into(),
             "retune_every=7".into(),
             "checkpoint_path=/tmp/run.ck".into(),
             "checkpoint_every=50".into(),
@@ -547,6 +717,20 @@ mod tests {
         assert_eq!(c.route, RoutePolicy::Tag);
         assert_eq!(c.zero, ZeroKnob::On);
         assert!(c.zero.resolved(), "zero=1 shards regardless of env");
+        assert_eq!(
+            c.coll_algo,
+            CollAlgoKnob::Set(AlgoChoice::Fixed(CollAlgo::Hier))
+        );
+        assert_eq!(
+            c.coll_algo.resolved(),
+            AlgoChoice::Fixed(CollAlgo::Hier),
+            "pinned algo ignores the environment"
+        );
+        assert_eq!(c.compress.name(), "f16");
+        assert!(
+            c.compress.resolved().enabled(),
+            "pinned codec ignores the environment"
+        );
         assert_eq!(c.retune_every, 7);
         assert_eq!(c.checkpoint_path, "/tmp/run.ck");
         assert_eq!(c.checkpoint_every, 50);
@@ -594,6 +778,8 @@ mod tests {
         assert!(c.apply_overrides(&["nodes=0".into()]).is_err());
         assert!(c.apply_overrides(&["route=random".into()]).is_err());
         assert!(c.apply_overrides(&["zero=2".into()]).is_err());
+        assert!(c.apply_overrides(&["coll_algo=mesh".into()]).is_err());
+        assert!(c.apply_overrides(&["compress=f64".into()]).is_err());
         assert!(c.apply_overrides(&["checkpoint_keep=0".into()]).is_err());
         assert!(c.apply_overrides(&["peer_timeout=0".into()]).is_err());
         assert!(c.apply_overrides(&["peer_timeout=-3".into()]).is_err());
@@ -645,6 +831,37 @@ mod tests {
         // explicit settings ignore the environment entirely
         assert!(!ZeroKnob::Off.resolved());
         assert!(ZeroKnob::On.resolved());
+    }
+
+    /// The Env legs deliberately go untested here: CI exports
+    /// `SAMA_COLL_ALGO`/`SAMA_COMPRESS` process-wide on its matrix lanes,
+    /// so an assertion about the unset-env default would fail exactly on
+    /// the legs those knobs exist for. Pinned (`Set`) values must ignore
+    /// the environment entirely — that part is assertable anywhere.
+    #[test]
+    fn coll_algo_and_compress_knobs_parse_and_resolve() {
+        for s in ["env", "auto", "ring", "rsag", "hier", "double"] {
+            let k = CollAlgoKnob::parse(s).unwrap();
+            assert_eq!(CollAlgoKnob::parse(k.name()).unwrap(), k);
+        }
+        for s in ["env", "off", "f16", "int8"] {
+            let k = CompressKnob::parse(s).unwrap();
+            assert_eq!(CompressKnob::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(
+            CollAlgoKnob::parse("auto").unwrap().resolved(),
+            AlgoChoice::Auto
+        );
+        assert_eq!(
+            CollAlgoKnob::parse("double").unwrap().resolved(),
+            AlgoChoice::Fixed(CollAlgo::Double)
+        );
+        assert!(!CompressKnob::parse("off").unwrap().resolved().enabled());
+        assert!(CompressKnob::parse("int8").unwrap().resolved().enabled());
+        assert_eq!(
+            CompressKnob::parse("f16").unwrap().resolved(),
+            CompressPolicy::parse("f16").unwrap()
+        );
     }
 
     #[test]

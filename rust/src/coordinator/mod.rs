@@ -371,6 +371,9 @@ fn load_resume(cfg: &TrainConfig) -> Result<Option<Checkpoint>> {
 /// separate intra/inter link profiles) plus the ring routing policy.
 /// Unset intra knobs inherit the flat `link_*` values; unset inter knobs
 /// derate them (¼ bandwidth, 4× latency — an IB-vs-NVLink-ish default).
+/// The per-reduce algorithm choice (`coll_algo=` / `SAMA_COLL_ALGO`) and
+/// wire-compression policy (`compress=` / `SAMA_COMPRESS`) resolve here,
+/// once, and ride the world through every elastic rebuild.
 fn build_comm_world(cfg: &TrainConfig, world: usize) -> Arc<CommWorld> {
     let link = if world == 1 {
         LinkModel::instant()
@@ -407,10 +410,12 @@ fn build_comm_world(cfg: &TrainConfig, world: usize) -> Arc<CommWorld> {
             Topology::hierarchical(world, cfg.nodes.max(1), rings, intra, inter)
         }
     };
-    CommWorld::with_topology_timeout(
+    CommWorld::with_topology_opts(
         topo,
         cfg.route,
         Duration::from_secs_f64(cfg.peer_timeout),
+        cfg.coll_algo.resolved(),
+        cfg.compress.resolved(),
     )
 }
 
@@ -627,10 +632,15 @@ pub fn train(
             lost.iter().map(|l| l.step).max().unwrap_or(resume_step);
 
         let topo = comm_world.topology().survivors(&survivors);
-        comm_world = CommWorld::with_topology_timeout(
+        // algorithm choice + compression policy survive the rebuild; the
+        // survivors' fresh `join()` starts EF residuals from zero, which
+        // matches the replicated resume cut (invariant 9)
+        comm_world = CommWorld::with_topology_opts(
             topo,
             cfg.route,
             comm_world.peer_timeout(),
+            comm_world.algo_choice(),
+            comm_world.compress_policy(),
         );
         // small exact integers survive the consensus ring mean bitwise
         let member_hash = survivors.iter().fold(0u32, |h, &r| {
@@ -1241,6 +1251,11 @@ fn run_worker(
             window_est: Vec::new(),
             scale: ck.sched_scale.clone(),
         });
+        // EF residuals are not checkpointed; the saving run zeroed its
+        // own at this same cut, so starting from zero here keeps the
+        // resumed compressed trajectory bitwise on the uninterrupted one
+        // (invariant 9).
+        coll.reset_compression_residuals();
     }
 
     // A failed checkpoint save must NOT abort this rank mid-loop: the
@@ -1657,6 +1672,14 @@ fn run_worker(
                 }
             }
         }
+        if save_due || snap_due {
+            // EF residuals are not part of the checkpoint: zero them at
+            // this same replicated schedule point on EVERY rank (not just
+            // the cut's leader), so a run resumed from the cut — which
+            // starts with fresh residuals — replays the uninterrupted
+            // run's compressed trajectory bit-for-bit (invariant 9).
+            coll.reset_compression_residuals();
+        }
     }
 
     // drain a λ-reduce left in flight by a meta step on the final iteration
@@ -1840,8 +1863,8 @@ mod tests {
 
     use crate::bilevel::biased_regression::BiasedRegression;
     use crate::bilevel::BaseGrad;
-    use crate::collective::RoutePolicy;
-    use crate::config::ZeroKnob;
+    use crate::collective::{AlgoChoice, CollAlgo, CompressPolicy, RoutePolicy};
+    use crate::config::{CollAlgoKnob, CompressKnob, ZeroKnob};
     use crate::util::rng::Rng;
 
     fn small_cfg(algo: Algo) -> TrainConfig {
@@ -2090,8 +2113,11 @@ mod tests {
             overlap,
             // timing-ratio assertions: pin sharding off so the CI
             // SAMA_ZERO=1 leg's extra (blocking) all-gathers don't shift
-            // the blocked/comm split this test measures
+            // the blocked/comm split this test measures; pin the wire
+            // algorithm for the same reason (a forced/auto lowering
+            // rescales the simulated hop sleeps via `wire_scale`)
             zero: ZeroKnob::Off,
+            coll_algo: CollAlgoKnob::Set(AlgoChoice::Fixed(CollAlgo::Ring)),
             ..TrainConfig::default()
         }
     }
@@ -2207,7 +2233,9 @@ mod tests {
             overlap: true,
             rings,
             // timing-ratio test: see slow_link_cfg on pinning zero off
+            // and the wire algorithm to the flat ring
             zero: ZeroKnob::Off,
+            coll_algo: CollAlgoKnob::Set(AlgoChoice::Fixed(CollAlgo::Ring)),
             ..TrainConfig::default()
         };
         let factory = SlowFactory {
@@ -2274,6 +2302,14 @@ mod tests {
             link_latency: 0.0,
             bucket_auto: false,
             checkpoint_path: path.into(),
+            // These tests compare runs with DIFFERENT cut schedules (a
+            // clean reference without a checkpoint path vs a saving or
+            // recovering run). EF-compressed trajectories are only
+            // bitwise-reproducible under an identical schedule including
+            // the residual-reset cuts (invariant 9), so the knob is
+            // pinned off rather than env-resolved — a CI compression
+            // lane must not turn a true statement into a false one.
+            compress: CompressKnob::Set(CompressPolicy::off()),
             ..small_cfg(Algo::Sama)
         }
     }

@@ -19,7 +19,8 @@
 
 use sama::bilevel::biased_regression::BiasedRegression;
 use sama::bilevel::BilevelProblem;
-use sama::config::{Algo, TrainConfig};
+use sama::collective::CompressPolicy;
+use sama::config::{Algo, CompressKnob, TrainConfig};
 use sama::coordinator::{train, BaseOpt, ProblemFactory, RunOptions, TrainReport};
 use sama::tensor::vecops;
 use sama::util::rng::Rng;
@@ -64,6 +65,11 @@ fn chaos_cfg(chaos: &str) -> TrainConfig {
         link_latency: 0.0,
         bucket_auto: false,
         chaos: chaos.into(),
+        // the recovered run's trajectory is compared against a clean
+        // reference with a different snapshot/cut schedule; compressed
+        // trajectories only reproduce under an identical schedule
+        // (invariant 9), so the codec knob must not ride the CI env here
+        compress: CompressKnob::Set(CompressPolicy::off()),
         ..TrainConfig::default()
     }
 }

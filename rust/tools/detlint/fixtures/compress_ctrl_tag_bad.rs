@@ -1,0 +1,37 @@
+//! detlint fixture — `compress-ctrl-tag`, known-bad.
+//!
+//! A lossy codec applied to the Ctrl stream: Ctrl reduces carry the
+//! rank-averaged profile sums every rank must agree on bitwise before it
+//! retunes routing. Quantizing them hands each rank slightly different
+//! numbers to retune from — the decisions desynchronize.
+
+pub enum ReduceTag {
+    Theta,
+    Lambda,
+    Ctrl,
+}
+
+pub enum Codec {
+    None,
+    F16,
+}
+
+pub fn codec_for(_tag: &ReduceTag) -> Codec {
+    Codec::F16
+}
+
+pub fn quantize_ef(_codec: Codec, _data: &mut [f32], _res: &mut [f32]) {}
+
+/// Compressing the control sums directly.
+pub fn submit_ctrl(sums: &mut [f32], res: &mut [f32]) {
+    quantize_ef(codec_for(&ReduceTag::Ctrl), sums, res); //~ compress-ctrl-tag
+}
+
+/// Re-deciding the codec per tag at a call site instead of behind the
+/// policy chokepoint.
+pub fn pick(tag: &ReduceTag) -> Codec {
+    match tag {
+        ReduceTag::Ctrl => codec_for(tag), //~ compress-ctrl-tag
+        _ => Codec::None,
+    }
+}

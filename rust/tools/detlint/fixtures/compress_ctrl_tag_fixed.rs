@@ -1,0 +1,47 @@
+//! detlint fixture — `compress-ctrl-tag`, fixed.
+//!
+//! Codec choice is structural: the policy's `codec_for` chokepoint (in
+//! the real tree it lives in `collective/compress.rs`, where the rule is
+//! off by scoping) hardwires Ctrl and λ to `None`, and call sites apply
+//! whatever it returns without naming the tag next to the codec. The
+//! chokepoint shape itself stays clean even here because the tag match
+//! and the compression call sit in different statements.
+
+pub enum ReduceTag {
+    Theta,
+    Lambda,
+    Ctrl,
+}
+
+#[derive(Clone, Copy)]
+pub enum Codec {
+    None,
+    F16,
+}
+
+pub struct CompressPolicy {
+    theta: Codec,
+}
+
+impl CompressPolicy {
+    /// The one place a codec meets a tag.
+    pub fn codec_for(&self, tag: &ReduceTag) -> Codec {
+        match tag {
+            ReduceTag::Theta => self.theta,
+            ReduceTag::Lambda | ReduceTag::Ctrl => Codec::None,
+        }
+    }
+}
+
+pub fn quantize_ef(_codec: Codec, _data: &mut [f32], _res: &mut [f32]) {}
+
+/// Callers apply the policy's verdict without re-deciding per tag.
+pub fn submit(
+    policy: &CompressPolicy,
+    tag: &ReduceTag,
+    data: &mut [f32],
+    res: &mut [f32],
+) {
+    let codec = policy.codec_for(tag);
+    quantize_ef(codec, data, res);
+}

@@ -16,6 +16,7 @@
 //! | `float-accum-cast` | unrounded int cast of a float accumulator |
 //! | `route-outside-scheduler` | ring arithmetic outside `RingScheduler` |
 //! | `shard-outside-partition` | world-partition arithmetic outside `owned_ranges` |
+//! | `compress-ctrl-tag` | lossy codec reaching a Ctrl-tagged reduce |
 //! | `bad-allow` | broken `detlint:` directive |
 //!
 //! Intentional exceptions are annotated in place:
@@ -36,8 +37,8 @@ mod rules;
 use std::path::{Path, PathBuf};
 
 pub use rules::{
-    Finding, BAD_ALLOW, FLOAT_ACCUM_CAST, LOCK_ACROSS_RECV, NONDET_ITERATION,
-    ROUTE_OUTSIDE_SCHEDULER, RULES, SHARD_OUTSIDE_PARTITION,
+    Finding, BAD_ALLOW, COMPRESS_CTRL_TAG, FLOAT_ACCUM_CAST, LOCK_ACROSS_RECV,
+    NONDET_ITERATION, ROUTE_OUTSIDE_SCHEDULER, RULES, SHARD_OUTSIDE_PARTITION,
     UNBOUNDED_DESER_ALLOC, WALLCLOCK_IN_DECISION,
 };
 
@@ -223,6 +224,16 @@ mod fixture_tests {
     }
 
     #[test]
+    fn compress_ctrl_tag_bad() {
+        assert_fixture_exact("compress_ctrl_tag_bad.rs");
+    }
+
+    #[test]
+    fn compress_ctrl_tag_fixed() {
+        assert_fixture_clean("compress_ctrl_tag_fixed.rs");
+    }
+
+    #[test]
     fn allow_bad() {
         assert_fixture_exact("allow_bad.rs");
     }
@@ -238,7 +249,7 @@ mod fixture_tests {
     fn fixture_tree_totals() {
         let (findings, files) =
             scan_tree(&[fixture_path("")]).expect("scan fixtures");
-        assert_eq!(files, 16, "fixture files present");
+        assert_eq!(files, 18, "fixture files present");
         let total_markers: usize = std::fs::read_dir(fixture_path(""))
             .unwrap()
             .map(|e| {
@@ -248,7 +259,7 @@ mod fixture_tests {
             })
             .sum();
         assert_eq!(findings.len(), total_markers);
-        assert!(findings.len() >= 14, "≥ 7 rules exercised, twice over");
+        assert!(findings.len() >= 16, "≥ 8 rules exercised, twice over");
     }
 
     /// Allow directives must not leak across lines: an allow for line N

@@ -50,13 +50,21 @@ pub const ROUTE_OUTSIDE_SCHEDULER: &str = "route-outside-scheduler";
 /// copy changes: a rank would update m/v slices another rank also claims,
 /// and the all-gather would re-replicate divergent θ.
 pub const SHARD_OUTSIDE_PARTITION: &str = "shard-outside-partition";
+/// A lossy codec reaching a `Ctrl`-tagged reduce. Ctrl payloads carry the
+/// rank-averaged profile sums every rank must agree on bitwise before it
+/// retunes routing — quantizing them desynchronizes those decisions. The
+/// codec choice lives behind the one `codec_for` chokepoint in
+/// `collective/compress.rs` (which hardwires Ctrl and λ to `None`); a
+/// statement naming `Ctrl` next to a compression call anywhere else is
+/// re-deciding it.
+pub const COMPRESS_CTRL_TAG: &str = "compress-ctrl-tag";
 /// A malformed `detlint:` directive: unknown rule name, missing `— reason`,
 /// or unparseable `allow(…)`. Allows are load-bearing documentation; a
 /// broken one silently enforces nothing.
 pub const BAD_ALLOW: &str = "bad-allow";
 
 /// Every rule name, for directive validation and `--help`.
-pub const RULES: [&str; 8] = [
+pub const RULES: [&str; 9] = [
     NONDET_ITERATION,
     WALLCLOCK_IN_DECISION,
     UNBOUNDED_DESER_ALLOC,
@@ -64,6 +72,7 @@ pub const RULES: [&str; 8] = [
     FLOAT_ACCUM_CAST,
     ROUTE_OUTSIDE_SCHEDULER,
     SHARD_OUTSIDE_PARTITION,
+    COMPRESS_CTRL_TAG,
     BAD_ALLOW,
 ];
 
@@ -93,6 +102,11 @@ struct FileClass {
     /// hop math) legitimately partition by world; shard-outside-partition
     /// is skipped there. Fixtures stay in scope so the rule is exercisable.
     partition_home: bool,
+    /// `compress.rs` — the codec chokepoint, the one place allowed to name
+    /// `Ctrl` while deciding a codec (its tests pin the Ctrl→`None`
+    /// mapping); compress-ctrl-tag is skipped there. Fixture file names
+    /// carry a `compress_ctrl_tag_` prefix, so fixtures stay in scope.
+    compress_home: bool,
 }
 
 impl FileClass {
@@ -114,6 +128,7 @@ impl FileClass {
             collective: fixture || p.contains("src/collective"),
             scheduler_home: p.ends_with("topology.rs"),
             partition_home: p.contains("src/collective"),
+            compress_home: p.ends_with("compress.rs"),
         }
     }
 }
@@ -139,6 +154,9 @@ pub fn scan_source(path_label: &str, src: &str) -> Vec<Finding> {
     }
     if class.decision && !class.partition_home {
         rule_shard_outside_partition(&lexed.tokens, &mut raw);
+    }
+    if !class.compress_home {
+        rule_compress_ctrl_tag(&lexed.tokens, &mut raw);
     }
 
     // detlint: directives — build the suppression map, flag broken ones
@@ -295,6 +313,32 @@ fn rule_shard_outside_partition(
             }
             hops += 1;
             j += 1;
+        }
+    }
+}
+
+/// Compression-application calls: a statement naming one of these *and*
+/// the `Ctrl` tag is choosing a codec for the control stream. Type names
+/// (`CompressPolicy`, `Codec`) and plain `codec` bindings are deliberately
+/// not in this set — constructing a θ policy in the same statement that
+/// mentions `Ctrl` (a test sweeping tags, say) is not an application.
+const COMPRESS_APPLY: [&str; 5] =
+    ["on_submit", "quantize", "quantize_ef", "dequantize", "codec_for"];
+
+fn rule_compress_ctrl_tag(
+    toks: &[Token],
+    out: &mut Vec<(usize, &'static str)>,
+) {
+    for span in statements(toks) {
+        if !span.iter().any(|t| t.is_ident("Ctrl")) {
+            continue;
+        }
+        // one finding per statement, anchored at the application call
+        if let Some(apply) = span
+            .iter()
+            .find(|t| COMPRESS_APPLY.iter().any(|a| t.is_ident(a)))
+        {
+            out.push((apply.line, COMPRESS_CTRL_TAG));
         }
     }
 }
