@@ -1,0 +1,119 @@
+//! Serving probe — QPS, tail latency, batching, and staleness of the
+//! online data-optimization service (`sama serve`, invariant 10).
+//!
+//! Artifact-free: the trainer is the analytic biased-regression problem,
+//! so this bench runs anywhere `cargo bench` does. Two measurements of
+//! the *same* training configuration:
+//!
+//!   1. batch baseline — the trainer alone, no serving stack;
+//!   2. serving run — the trainer inside `serve_with_trainer` with a
+//!      closed-loop query driver scoring rows round-robin over 4 corpus
+//!      shards from the first publication cut to the last.
+//!
+//! The headline acceptance quantity is the trainer wall-clock delta
+//! between the two: publication is an atomic pointer swap and queries run
+//! on their own threads, so the trainer should not slow down materially
+//! under load. Serving rows (QPS, p50/p99, batch occupancy, snapshot
+//! count, end-of-run staleness) merge into `BENCH_hotpath.json` next to
+//! the hot-path probes so CI trends them together.
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use sama::metrics::report::{f1, f2, Table};
+use sama::util::json::Json;
+
+fn main() {
+    let steps = common::serve_steps();
+    const EVERY: usize = 6;
+    let probe = common::serve_probe(steps, EVERY);
+    let serve = &probe.report.serve;
+    let expected_snaps = (steps / EVERY) as u64;
+
+    let mut t = Table::new(
+        "Serving probe: live λ queries over the analytic SAMA trainer",
+        &[
+            "steps",
+            "cuts (every)",
+            "snapshots",
+            "queries",
+            "answered",
+            "errors",
+            "QPS",
+            "p50 (ms)",
+            "p99 (ms)",
+            "mean/max batch",
+            "rescore passes",
+            "max staleness (gens)",
+            "train wall alone (s)",
+            "train wall serving (s)",
+            "trainer Δ (%)",
+        ],
+    );
+    t.row(vec![
+        steps.to_string(),
+        EVERY.to_string(),
+        probe.report.train.snapshots_published.to_string(),
+        serve.queries.to_string(),
+        serve.answered.to_string(),
+        serve.errors.to_string(),
+        f1(serve.qps),
+        f2(serve.p50_ms),
+        f2(serve.p99_ms),
+        format!("{}/{}", f1(serve.mean_batch), serve.max_batch),
+        serve.rescore_passes.to_string(),
+        probe.max_staleness_gens().to_string(),
+        f2(probe.baseline_wall),
+        f2(probe.serve_wall),
+        f1(100.0 * probe.train_wall_delta_frac()),
+    ]);
+    t.print();
+    println!(
+        "the serving stack (snapshot hub + admission batcher + rescorer)\n\
+         rides the same process as the trainer: publication is an atomic\n\
+         Arc swap at rank-replicated cuts, queries batch on their own\n\
+         thread, so trainer Δ stays small under a closed-loop load.\n\
+         snapshots = {} cuts expected at cadence {}; max staleness is the\n\
+         worst shard's generations-behind after the final rescore pass\n\
+         (0 = every cached score is against the final λ).",
+        expected_snaps, EVERY
+    );
+
+    // Merge serving rows into the hot-path JSON (same file the perf probe
+    // writes) so CI trends serving next to comm/overlap numbers. Read →
+    // insert serve_* keys → write back; start fresh if missing/unparsable.
+    let path = std::env::var("SAMA_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    let mut obj = match std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+    {
+        Some(Json::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    let num = Json::Num;
+    obj.insert("serve_steps".into(), num(steps as f64));
+    obj.insert(
+        "serve_snapshots".into(),
+        num(probe.report.train.snapshots_published as f64),
+    );
+    obj.insert("serve_queries".into(), num(serve.queries as f64));
+    obj.insert("serve_errors".into(), num(serve.errors as f64));
+    obj.insert("serve_qps".into(), num(serve.qps));
+    obj.insert("serve_p50_ms".into(), num(serve.p50_ms));
+    obj.insert("serve_p99_ms".into(), num(serve.p99_ms));
+    obj.insert("serve_mean_batch".into(), num(serve.mean_batch));
+    obj.insert("serve_max_batch".into(), num(serve.max_batch as f64));
+    obj.insert(
+        "serve_staleness_max_gens_behind".into(),
+        num(probe.max_staleness_gens() as f64),
+    );
+    obj.insert(
+        "serve_train_wall_delta_frac".into(),
+        num(probe.train_wall_delta_frac()),
+    );
+    std::fs::write(&path, format!("{}\n", Json::Obj(obj)))
+        .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("serving rows merged into {path}");
+}

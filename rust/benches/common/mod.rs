@@ -57,3 +57,147 @@ pub fn require_artifacts() {
         );
     }
 }
+
+// ---------------------------------------------------------------------------
+// Serving probe (artifact-free): live λ queries over the analytic trainer.
+// Shared by bench_serve_qps and the bench_table2_ddp serving addendum.
+// ---------------------------------------------------------------------------
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sama::apps::pruning::MwnScorer;
+use sama::bilevel::biased_regression::BiasedRegression;
+use sama::bilevel::BilevelProblem;
+use sama::collective::CompressPolicy;
+use sama::config::{Algo, CompressKnob};
+use sama::coordinator::{train, BaseOpt, ProblemFactory, RunOptions};
+use sama::data::corpus::feature_shards;
+use sama::serve::{serve_with_trainer, ServeReport};
+use sama::util::rng::Rng;
+
+/// Replicated analytic factory: same seed on every rank, so the serving
+/// probe needs no artifacts and runs in milliseconds.
+pub struct AnalyticFactory;
+
+impl ProblemFactory for AnalyticFactory {
+    fn build(
+        &self,
+        _rank: usize,
+        _world_size: usize,
+    ) -> anyhow::Result<(Box<dyn BilevelProblem>, Vec<f32>, Vec<f32>)> {
+        let mut rng = Rng::new(4242);
+        let p = BiasedRegression::random(&mut rng, 40, 30, 8, 2.0);
+        Ok((Box::new(p), vec![0.0; 8], vec![0.0; 8]))
+    }
+
+    fn base_opt(&self) -> BaseOpt {
+        BaseOpt::Sgd { momentum: 0.0 }
+    }
+}
+
+/// Steps for the serving window: long enough that the closed-loop query
+/// load sees many publication cuts.
+pub fn serve_steps() -> usize {
+    if full() {
+        1200
+    } else {
+        240
+    }
+}
+
+fn serve_cfg(steps: usize, every: usize) -> TrainConfig {
+    TrainConfig {
+        algo: Algo::Sama,
+        steps,
+        workers: 2,
+        unroll: 3,
+        base_lr: 0.002,
+        meta_lr: 0.3,
+        sama_alpha: 1.0,
+        solver_iters: 8,
+        link_bandwidth: 1e12,
+        link_latency: 0.0,
+        bucket_auto: false,
+        compress: CompressKnob::Set(CompressPolicy::off()),
+        serve_publish_every: every,
+        serve_keep: 8,
+        ..TrainConfig::default()
+    }
+}
+
+/// One serving-probe result: the same training run measured alone and
+/// under a closed-loop query load, plus the full serving report.
+pub struct ServeProbe {
+    /// Wall seconds for the batch run (no serving stack at all).
+    pub baseline_wall: f64,
+    /// Wall seconds for the identical run inside `serve_with_trainer`.
+    pub serve_wall: f64,
+    pub report: ServeReport,
+}
+
+impl ServeProbe {
+    /// Fractional trainer slowdown under query load — the
+    /// readers-never-block-the-trainer acceptance quantity.
+    pub fn train_wall_delta_frac(&self) -> f64 {
+        (self.serve_wall - self.baseline_wall) / self.baseline_wall.max(1e-9)
+    }
+
+    pub fn max_staleness_gens(&self) -> u64 {
+        self.report
+            .staleness
+            .iter()
+            .map(|s| s.generations_behind)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Run the serving probe: a batch baseline, then the same trainer with the
+/// full serving stack (hub + batcher + rescorer) under a closed-loop
+/// query driver that scores 8 rows per query, round-robin over 4 corpus
+/// shards, from first publication to the final cut.
+pub fn serve_probe(steps: usize, every: usize) -> ServeProbe {
+    let cfg = serve_cfg(steps, every);
+
+    let t0 = Instant::now();
+    train(&cfg, &AnalyticFactory, &RunOptions::default())
+        .expect("serve probe baseline run");
+    let baseline_wall = t0.elapsed().as_secs_f64();
+
+    // feature width 5 makes the 8-param λ decode as a real MWN head
+    let shards = feature_shards(4, 64, 5, 13);
+    let ids: Vec<u64> = shards.iter().map(|s| s.id).collect();
+    let t0 = Instant::now();
+    let report = serve_with_trainer(
+        &cfg,
+        &AnalyticFactory,
+        Arc::new(MwnScorer),
+        shards,
+        move |client, hub| {
+            // closed-loop load: wait for the first cut, then hammer
+            if hub.wait_past(0, Duration::from_secs(120)).is_none() {
+                return;
+            }
+            let mut i = 0usize;
+            loop {
+                let shard = ids[i % ids.len()];
+                if client.query(shard, (0..8).collect()).is_err() {
+                    break;
+                }
+                i += 1;
+                if hub.load().step as usize >= steps {
+                    break;
+                }
+            }
+        },
+    )
+    .expect("serve probe serving run");
+    let serve_wall = t0.elapsed().as_secs_f64();
+
+    ServeProbe {
+        baseline_wall,
+        serve_wall,
+        report,
+    }
+}

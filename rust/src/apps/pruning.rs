@@ -249,16 +249,90 @@ fn coordinator_report_from(w: coordinator::WorkerReport) -> coordinator::TrainRe
         weight_sums: w.weight_sums,
         weight_counts: w.weight_counts,
         bucket_elems_final: w.bucket_elems_final,
+        opt_state_bytes: vec![w.opt_state_bytes],
+        recoveries: Vec::new(),
+        snapshots_published: 0,
     }
 }
 
 /// Prune `ratio` of the data by `scores` (lowest first); returns kept idxs.
+/// Total over NaN scores: `total_cmp` sorts NaN above every number, so a
+/// sample whose score went NaN is *kept*, never silently pruned — and the
+/// sort cannot panic mid-run the way `partial_cmp().unwrap()` did.
 pub fn prune(scores: &[f32], ratio: f32) -> Vec<usize> {
     let n = scores.len();
     let k = ((n as f32) * ratio).round() as usize;
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
     order[k..].to_vec()
+}
+
+/// Pure-Rust MWN scoring head for the serving path: score every feature
+/// row of `features` (row-major, `width` columns) against a λ snapshot,
+/// with no runtime or artifact dependency. λ is decoded as a
+/// one-hidden-layer MWN `[W1 (H×width), b1 (H), w2 (H), b2 (1)]` with H
+/// inferred from `λ.len() = H·(width+2)+1`; a λ that doesn't factor that
+/// way (toy λ in tests, mismatched widths) falls back to a cyclic λ·x dot
+/// product. Both paths end in a sigmoid, matching the MWN weight range.
+///
+/// Pure and deterministic: the same (λ, row) pair always scores
+/// bit-for-bit the same — the contract generation-pinned serving queries
+/// rely on (docs/INVARIANTS.md invariant 10).
+pub fn snapshot_scores(lambda: &[f32], features: &[f32], width: usize) -> Vec<f32> {
+    let width = width.max(1);
+    let rows = features.len() / width;
+    let n = lambda.len();
+    let hidden =
+        if n > 1 && (n - 1) % (width + 2) == 0 { (n - 1) / (width + 2) } else { 0 };
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let x = &features[r * width..(r + 1) * width];
+        let z = if hidden > 0 {
+            let (w1, rest) = lambda.split_at(hidden * width);
+            let (b1, rest) = rest.split_at(hidden);
+            let (w2, b2) = rest.split_at(hidden);
+            let mut acc = b2[0];
+            for h in 0..hidden {
+                let mut pre = b1[h];
+                for (j, &xj) in x.iter().enumerate() {
+                    pre += w1[h * width + j] * xj;
+                }
+                // ReLU hidden activation, as in the MWN reference net
+                acc += w2[h] * pre.max(0.0);
+            }
+            acc
+        } else if n == 0 {
+            0.0
+        } else {
+            let mut acc = 0.0f32;
+            for (j, &xj) in x.iter().enumerate() {
+                acc += lambda[j % n] * xj;
+            }
+            acc
+        };
+        out.push(1.0 / (1.0 + (-z).exp()));
+    }
+    out
+}
+
+/// [`crate::serve::SnapshotScorer`] over [`snapshot_scores`]: the serving
+/// path's prune-score kernel. Stateless — every score is a pure function
+/// of (snapshot λ, feature row), so re-scoring a shard against the same
+/// generation reproduces the cached scores bitwise.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MwnScorer;
+
+impl crate::serve::SnapshotScorer for MwnScorer {
+    fn score_rows(
+        &self,
+        snap: &crate::serve::LambdaSnapshot,
+        shard: &crate::data::corpus::CorpusShard,
+        rows: &[usize],
+    ) -> Vec<f32> {
+        rows.iter()
+            .flat_map(|&r| snapshot_scores(&snap.lambda, shard.row(r), shard.width))
+            .collect()
+    }
 }
 
 /// Retrain from scratch on the kept subset; returns test accuracy.
@@ -298,4 +372,54 @@ pub fn retrain_and_eval(
         1,
     );
     eval.accuracy(&report.final_theta, &set.test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus;
+
+    #[test]
+    fn prune_keeps_highest_scores() {
+        let scores = [0.9, 0.1, 0.5, 0.7];
+        let kept = prune(&scores, 0.5);
+        assert_eq!(kept, vec![3, 0]);
+    }
+
+    #[test]
+    fn prune_is_total_under_nan_scores() {
+        // Regression: the old `partial_cmp().unwrap()` sort panicked the
+        // moment any score went NaN. `total_cmp` orders NaN above every
+        // number, so NaN-scored samples sort last and are KEPT — a sample
+        // with a broken score must never be silently discarded.
+        let scores = [0.5, f32::NAN, -1.0, 0.25, f32::NAN, 2.0];
+        let kept = prune(&scores, 0.5);
+        assert_eq!(kept.len(), 3);
+        assert!(kept.contains(&5), "highest finite score survives");
+        assert!(kept.contains(&1) && kept.contains(&4), "NaN rows kept");
+    }
+
+    #[test]
+    fn snapshot_scores_deterministic_bounded_and_total() {
+        let shards = corpus::feature_shards(1, 8, 3, 7);
+        let s = &shards[0];
+        // width 3 → MWN needs H·(3+2)+1 params; λ of 11 decodes as H=2
+        let lambda: Vec<f32> =
+            (0..11).map(|i| (i as f32 - 5.0) * 0.1).collect();
+        let a = snapshot_scores(&lambda, &s.features, s.width);
+        let b = snapshot_scores(&lambda, &s.features, s.width);
+        assert_eq!(a.len(), 8);
+        assert!(
+            a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "pure kernel must reproduce scores bitwise"
+        );
+        assert!(a.iter().all(|w| w.is_finite() && (0.0..=1.0).contains(w)));
+        // λ that doesn't factor as an MWN falls back to the cyclic dot
+        let c = snapshot_scores(&[0.3, -0.2], &s.features, s.width);
+        assert_eq!(c.len(), 8);
+        assert!(c.iter().all(|w| w.is_finite()));
+        // different λ must actually move the scores
+        let d = snapshot_scores(&[-0.3, 0.2], &s.features, s.width);
+        assert_ne!(c, d);
+    }
 }

@@ -403,8 +403,78 @@ pub struct TrainConfig {
     /// survivors ignore it). Empty = no injected faults. Parsed/validated
     /// by [`FaultPlan::parse`].
     pub chaos: String,
+    /// Serving mode (`serve` entrypoint): publish a λ snapshot every this
+    /// many base steps (and always at the final step). The cadence is a
+    /// pure function of the step index, so every rank agrees on where the
+    /// publication cuts fall (docs/INVARIANTS.md invariant 10).
+    pub serve_publish_every: usize,
+    /// Serving mode: max queries admitted into one scoring batch.
+    pub serve_max_batch: usize,
+    /// Serving mode: max microseconds the batcher lingers for more
+    /// queries after the first one arrives (0 = serve immediately).
+    pub serve_linger_us: u64,
+    /// Serving mode: synthetic corpus shards streamed in by the `serve`
+    /// entrypoint / benches (tests ingest their own).
+    pub serve_shards: usize,
+    /// Serving mode: rows per synthetic corpus shard.
+    pub serve_shard_rows: usize,
+    /// Serving mode: snapshot generations kept addressable for
+    /// generation-pinned queries (older pins get `UnknownGeneration`).
+    pub serve_keep: usize,
     /// Free-form extras (dataset knobs etc.).
     pub extra: BTreeMap<String, String>,
+}
+
+/// Resolved serving knobs ([`TrainConfig::serve_knobs`]): the `serve_*`
+/// config fields with `SAMA_SERVE_*` env overrides applied — the same
+/// env-over-config convention as `SAMA_ZERO` / `SAMA_COLL_ALGO`, so the
+/// CI serve lane and launchers can reshape serving without editing
+/// configs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeKnobs {
+    pub publish_every: usize,
+    pub max_batch: usize,
+    pub linger_us: u64,
+    pub shards: usize,
+    pub shard_rows: usize,
+    pub keep: usize,
+}
+
+impl ServeKnobs {
+    const ENV_KEYS: [&'static str; 6] = [
+        "SAMA_SERVE_PUBLISH_EVERY",
+        "SAMA_SERVE_MAX_BATCH",
+        "SAMA_SERVE_LINGER_US",
+        "SAMA_SERVE_SHARDS",
+        "SAMA_SERVE_SHARD_ROWS",
+        "SAMA_SERVE_KEEP",
+    ];
+
+    /// Apply one env-style override. Pure in (name, raw) so the override
+    /// grammar is testable without mutating process env (tests racing on
+    /// `set_var` is exactly what the knob-enum tests avoid too). Returns
+    /// `false` for an unknown name or an invalid value — the caller keeps
+    /// the config value and warns.
+    pub fn apply_env(&mut self, name: &str, raw: &str) -> bool {
+        fn pos(raw: &str) -> Option<usize> {
+            raw.trim().parse::<usize>().ok().filter(|&v| v >= 1)
+        }
+        let applied = match name {
+            "SAMA_SERVE_PUBLISH_EVERY" => {
+                pos(raw).map(|v| self.publish_every = v)
+            }
+            "SAMA_SERVE_MAX_BATCH" => pos(raw).map(|v| self.max_batch = v),
+            // 0 is meaningful here: no linger, serve each query solo
+            "SAMA_SERVE_LINGER_US" => {
+                raw.trim().parse::<u64>().ok().map(|v| self.linger_us = v)
+            }
+            "SAMA_SERVE_SHARDS" => pos(raw).map(|v| self.shards = v),
+            "SAMA_SERVE_SHARD_ROWS" => pos(raw).map(|v| self.shard_rows = v),
+            "SAMA_SERVE_KEEP" => pos(raw).map(|v| self.keep = v),
+            _ => None,
+        };
+        applied.is_some()
+    }
 }
 
 /// Parsed `chaos=` fault-injection plan. Deterministic by construction:
@@ -479,6 +549,12 @@ impl Default for TrainConfig {
             checkpoint_keep: 2,
             peer_timeout: 30.0,
             chaos: String::new(),
+            serve_publish_every: 8,
+            serve_max_batch: 64,
+            serve_linger_us: 200,
+            serve_shards: 4,
+            serve_shard_rows: 64,
+            serve_keep: 4,
             extra: BTreeMap::new(),
         }
     }
@@ -595,6 +671,45 @@ impl TrainConfig {
                 FaultPlan::parse(value)?; // validate eagerly
                 self.chaos = value.into();
             }
+            "serve_publish_every" => {
+                let n: usize = value.parse().context("serve_publish_every")?;
+                if n == 0 {
+                    bail!("serve_publish_every must be >= 1");
+                }
+                self.serve_publish_every = n;
+            }
+            "serve_max_batch" => {
+                let n: usize = value.parse().context("serve_max_batch")?;
+                if n == 0 {
+                    bail!("serve_max_batch must be >= 1");
+                }
+                self.serve_max_batch = n;
+            }
+            "serve_linger_us" => {
+                self.serve_linger_us =
+                    value.parse().context("serve_linger_us")?
+            }
+            "serve_shards" => {
+                let n: usize = value.parse().context("serve_shards")?;
+                if n == 0 {
+                    bail!("serve_shards must be >= 1");
+                }
+                self.serve_shards = n;
+            }
+            "serve_shard_rows" => {
+                let n: usize = value.parse().context("serve_shard_rows")?;
+                if n == 0 {
+                    bail!("serve_shard_rows must be >= 1");
+                }
+                self.serve_shard_rows = n;
+            }
+            "serve_keep" => {
+                let n: usize = value.parse().context("serve_keep")?;
+                if n == 0 {
+                    bail!("serve_keep must be >= 1");
+                }
+                self.serve_keep = n;
+            }
             other => {
                 self.extra.insert(other.into(), value.into());
             }
@@ -650,6 +765,38 @@ impl TrainConfig {
     /// malformed string stored by direct field access still errors here).
     pub fn fault_plan(&self) -> Result<Option<FaultPlan>> {
         FaultPlan::parse(&self.chaos)
+    }
+
+    /// Resolve the serving knobs: `serve_*` config fields first, then
+    /// `SAMA_SERVE_*` env overrides on top (the CI serve lane and
+    /// launchers sweep serving shapes without touching configs). An
+    /// unparseable or out-of-range env value keeps the config value with
+    /// a stderr warning rather than aborting a run over a typo —
+    /// mirroring `SAMA_COLL_ALGO`'s fallback discipline.
+    pub fn serve_knobs(&self) -> ServeKnobs {
+        let mut k = ServeKnobs {
+            publish_every: self.serve_publish_every.max(1),
+            max_batch: self.serve_max_batch.max(1),
+            linger_us: self.serve_linger_us,
+            shards: self.serve_shards.max(1),
+            shard_rows: self.serve_shard_rows.max(1),
+            keep: self.serve_keep.max(1),
+        };
+        for name in ServeKnobs::ENV_KEYS {
+            if let Ok(raw) = std::env::var(name) {
+                if !raw.trim().is_empty() && !k.apply_env(name, &raw) {
+                    static WARN: std::sync::Once = std::sync::Once::new();
+                    WARN.call_once(|| {
+                        eprintln!(
+                            "[sama] ignoring invalid {name}={raw:?} \
+                             (want a positive integer); keeping the \
+                             config value"
+                        );
+                    });
+                }
+            }
+        }
+        k
     }
 
     /// Extra field with a typed default.
@@ -807,6 +954,71 @@ mod tests {
         assert_eq!(FaultPlan::parse("   ").unwrap(), None);
         assert!(FaultPlan::parse("kill:").is_err());
         assert!(FaultPlan::parse("pause:1@2").is_err());
+    }
+
+    #[test]
+    fn serve_knob_overrides_and_validation() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.serve_publish_every, 8);
+        assert_eq!(c.serve_max_batch, 64);
+        assert_eq!(c.serve_linger_us, 200);
+        assert_eq!(c.serve_shards, 4);
+        assert_eq!(c.serve_shard_rows, 64);
+        assert_eq!(c.serve_keep, 4);
+        c.apply_overrides(&[
+            "serve_publish_every=3".into(),
+            "serve_max_batch=16".into(),
+            "serve_linger_us=0".into(),
+            "serve_shards=2".into(),
+            "serve_shard_rows=32".into(),
+            "serve_keep=6".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.serve_publish_every, 3);
+        assert_eq!(c.serve_max_batch, 16);
+        assert_eq!(c.serve_linger_us, 0, "0 = no linger is legal");
+        assert_eq!(c.serve_shards, 2);
+        assert_eq!(c.serve_shard_rows, 32);
+        assert_eq!(c.serve_keep, 6);
+        assert!(c.apply_overrides(&["serve_publish_every=0".into()]).is_err());
+        assert!(c.apply_overrides(&["serve_max_batch=0".into()]).is_err());
+        assert!(c.apply_overrides(&["serve_linger_us=-1".into()]).is_err());
+        assert!(c.apply_overrides(&["serve_shards=0".into()]).is_err());
+        assert!(c.apply_overrides(&["serve_shard_rows=0".into()]).is_err());
+        assert!(c.apply_overrides(&["serve_keep=0".into()]).is_err());
+    }
+
+    /// The `SAMA_SERVE_*` env resolution is tested through the pure
+    /// [`ServeKnobs::apply_env`] grammar rather than `std::env::set_var`,
+    /// for the same reason the knob-enum Env legs go untested above: the
+    /// CI serve lane may export these vars process-wide, and test-side
+    /// env mutation races across threads.
+    #[test]
+    fn serve_env_override_grammar() {
+        let base = ServeKnobs {
+            publish_every: 8,
+            max_batch: 64,
+            linger_us: 200,
+            shards: 4,
+            shard_rows: 64,
+            keep: 4,
+        };
+        let mut k = base;
+        assert!(k.apply_env("SAMA_SERVE_PUBLISH_EVERY", "3"));
+        assert_eq!(k.publish_every, 3);
+        assert!(k.apply_env("SAMA_SERVE_MAX_BATCH", " 128 "));
+        assert_eq!(k.max_batch, 128);
+        assert!(k.apply_env("SAMA_SERVE_LINGER_US", "0"), "0 = no linger");
+        assert_eq!(k.linger_us, 0);
+        assert!(k.apply_env("SAMA_SERVE_SHARDS", "7"));
+        assert!(k.apply_env("SAMA_SERVE_SHARD_ROWS", "12"));
+        assert!(k.apply_env("SAMA_SERVE_KEEP", "9"));
+        assert_eq!((k.shards, k.shard_rows, k.keep), (7, 12, 9));
+        // invalid values are rejected and leave the knob untouched
+        assert!(!k.apply_env("SAMA_SERVE_MAX_BATCH", "0"));
+        assert!(!k.apply_env("SAMA_SERVE_MAX_BATCH", "lots"));
+        assert!(!k.apply_env("SAMA_SERVE_UNKNOWN", "1"));
+        assert_eq!(k.max_batch, 128);
     }
 
     #[test]

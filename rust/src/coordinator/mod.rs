@@ -197,6 +197,7 @@ use crate::collective::{
 use crate::config::{Algo, FaultPlan, TrainConfig};
 use crate::metrics::Series;
 use crate::optim::{adam_step_slice, sgd_step_slice, Adam, Optimizer, Sgd};
+use crate::serve::ServePublisher;
 use crate::tensor::vecops;
 
 /// Base optimizer family for θ.
@@ -292,6 +293,9 @@ pub struct TrainReport {
     /// Every failure→rebuild→resume episode, in order (empty for a clean
     /// run).
     pub recoveries: Vec<RecoveryEvent>,
+    /// λ snapshot generations published to the serving hub over the run
+    /// (0 unless [`RunOptions::publish`] was wired; invariant 10).
+    pub snapshots_published: u64,
 }
 
 impl TrainReport {
@@ -350,6 +354,10 @@ pub struct RunOptions {
     /// Evaluate meta loss every k base steps into the loss curve (0 = only
     /// at meta updates).
     pub eval_every: usize,
+    /// Serving mode: publish λ snapshots into this hub at the
+    /// rank-replicated publication cuts ([`publish_lambda_cut`];
+    /// invariant 10). `None` = batch run, no publication.
+    pub publish: Option<ServePublisher>,
 }
 
 /// Load the resume checkpoint named by `cfg.checkpoint_path`, if any.
@@ -675,6 +683,9 @@ pub fn train(
     let world_final = comm_world.world();
     let mut report = merge_reports(reports, world_final, wall)?;
     report.recoveries = recoveries;
+    if let Some(p) = &opts.publish {
+        report.snapshots_published = p.hub.generation();
+    }
     Ok(report)
 }
 
@@ -710,6 +721,7 @@ fn merge_reports(
         bucket_elems_final: lead.bucket_elems_final,
         opt_state_bytes,
         recoveries: Vec::new(),
+        snapshots_published: 0,
     })
 }
 
@@ -744,7 +756,9 @@ impl ShardMap {
 /// and the Rust fallback can drive it. With a [`ShardMap`] (`zero=1`) the
 /// `m`/`v` buffers are *compact*: only the owned elements are allocated,
 /// and updates go through [`OptState::step_owned`] — a rank never writes
-/// state it does not own.
+/// state it does not own. `Clone` exists for the serving publication cut,
+/// which previews the deferred λ-step on clones ([`publish_lambda_cut`]).
+#[derive(Clone)]
 struct OptState {
     kind: BaseOpt,
     m: Vec<f32>,  // momentum buffer for SGD
@@ -1042,6 +1056,61 @@ fn drain_lambda(
             apply_lambda_step(coll, problem, lambda, meta_state, &g_lambda)
         }
     }
+}
+
+/// The ONE place a live-serving λ snapshot is published (invariant 10;
+/// the detlint `snapshot-publish-outside-cut` rule flags every other call
+/// site in the tree).
+///
+/// Runs at a rank-replicated publication cut: `step` base steps are done,
+/// and the λ the serving path should see is the λ a batch run *stopped
+/// here* would end with. The end-of-run drain applies any pending
+/// λ-gradient, so the cut previews that deferred step on CLONES of λ and
+/// the meta optimizer state — the live trajectory is untouched, and a
+/// query pinned to this generation scores bitwise like that stopped batch
+/// run. An in-flight λ-reduce is resolved to `Ready` first, exactly like
+/// the checkpoint cut (the reduced value is deterministic, so the early
+/// wait cannot change what the next drain point applies).
+///
+/// Under ZeRO sharding the preview's λ-step all-gathers (the sharded meta
+/// step re-replicates λ), so EVERY rank must call this at the same
+/// schedule point; in replicated mode the leader alone runs it, mirroring
+/// the leader-only checkpoint save. Either way λ reaches the hub
+/// full-width — snapshots are never shards.
+#[allow(clippy::too_many_arguments)]
+fn publish_lambda_cut(
+    pubs: &ServePublisher,
+    coll: &mut Collective,
+    problem: &mut dyn BilevelProblem,
+    lambda: &[f32],
+    meta_state: &OptState,
+    lambda_stream: &mut LambdaStream,
+    step: u64,
+    rank: usize,
+) -> Result<()> {
+    if matches!(lambda_stream, LambdaStream::InFlight(_)) {
+        if let LambdaStream::InFlight(p) =
+            std::mem::replace(lambda_stream, LambdaStream::Idle)
+        {
+            *lambda_stream = LambdaStream::Ready(coll.wait(p)?);
+        }
+    }
+    let lam = match &*lambda_stream {
+        LambdaStream::Ready(g) => {
+            let mut lam = lambda.to_vec();
+            let mut preview_state = meta_state.clone();
+            apply_lambda_step(coll, problem, &mut lam, &mut preview_state, g)?;
+            lam
+        }
+        _ => lambda.to_vec(),
+    };
+    if rank == 0 {
+        // detlint: allow(snapshot-publish-outside-cut) — this IS the
+        // rank-replicated cut chokepoint the rule protects; every other
+        // publication site in the tree is a violation (invariant 10)
+        pubs.hub.publish_cut(lam, step);
+    }
+    Ok(())
 }
 
 /// Submit ĝ_λ for reduction while applying the F2SA θ-nudge.
@@ -1679,6 +1748,31 @@ fn run_worker(
             // starts with fresh residuals — replays the uninterrupted
             // run's compressed trajectory bit-for-bit (invariant 9).
             coll.reset_compression_residuals();
+        }
+
+        // ---- serving publication cut: λ snapshot into the hub -----------
+        if let Some(pubs) = opts.publish.as_ref() {
+            let every = pubs.every.max(1);
+            let publish_due =
+                (step + 1) % every == 0 || step + 1 == cfg.steps;
+            // Under sharding the preview λ-step all-gathers (a collective),
+            // so every rank enters the cut at the same schedule point;
+            // replicated mode publishes from the leader alone, mirroring
+            // the leader-only checkpoint save (invariant 10).
+            let publish_cut_due =
+                if zero_on { publish_due } else { rank == 0 && publish_due };
+            if publish_cut_due {
+                publish_lambda_cut(
+                    pubs,
+                    coll,
+                    problem,
+                    &lambda,
+                    &meta_state,
+                    &mut lambda_stream,
+                    (step + 1) as u64,
+                    rank,
+                )?;
+            }
         }
     }
 

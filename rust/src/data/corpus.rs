@@ -96,6 +96,77 @@ pub fn domain_cls(n: usize, seq_len: usize, n_classes: usize, seed: u64) -> ClsD
     ClsDataset { seq_len, tokens, labels: labels.clone(), true_labels: labels }
 }
 
+/// One streaming corpus shard for the serving path (`serve::ShardStore`):
+/// `rows` examples of `width` per-example features each, stored row-major.
+/// Features stand in for the (loss, uncertainty)-style MWN inputs the
+/// artifact computes on device — here derived deterministically from the
+/// same two-domain grammar statistics, so scores carry real signal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CorpusShard {
+    pub id: u64,
+    pub width: usize,
+    pub features: Vec<f32>,
+}
+
+impl CorpusShard {
+    pub fn rows(&self) -> usize {
+        if self.width == 0 {
+            0
+        } else {
+            self.features.len() / self.width
+        }
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.width..(i + 1) * self.width]
+    }
+}
+
+/// Generate `n_shards` deterministic feature shards over the two-domain
+/// corpus. Column 0 is a loss proxy (normalized mean byte statistic of the
+/// example's text — separates the domains, see
+/// `domains_are_separable_by_token_stats`), column 1 a relevance
+/// indicator, and any further columns are seeded pseudo-random features.
+/// Shard ids are stable across calls with the same seed, so serving tests
+/// and batch runs address the same shards.
+pub fn feature_shards(
+    n_shards: usize,
+    rows: usize,
+    width: usize,
+    seed: u64,
+) -> Vec<CorpusShard> {
+    let width = width.max(1);
+    (0..n_shards)
+        .map(|s| {
+            let pool =
+                lm_pool(rows, 64, 0.5, seed ^ 0x5EED ^ ((s as u64) << 17));
+            let mut features = Vec::with_capacity(rows * width);
+            for i in 0..rows {
+                let seq = &pool.tokens[i * 64..(i + 1) * 64];
+                let mean: f32 =
+                    seq.iter().map(|&t| t as f32).sum::<f32>() / 64.0;
+                // center the byte statistic near 0 at unit-ish scale
+                features.push((mean - 96.0) / 32.0);
+                if width > 1 {
+                    features.push(if pool.relevant[i] { 1.0 } else { 0.0 });
+                }
+                if width > 2 {
+                    let mut rng =
+                        Rng::new(seed ^ ((s as u64) << 32) ^ i as u64);
+                    for _ in 2..width {
+                        features.push(rng.f32() - 0.5);
+                    }
+                }
+            }
+            CorpusShard {
+                id: s as u64,
+                width,
+                features,
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,6 +208,29 @@ mod tests {
         irr_mean /= ni as f64;
         assert!((rel_mean - irr_mean).abs() > 0.5,
             "domains look identical: {rel_mean} vs {irr_mean}");
+    }
+
+    #[test]
+    fn feature_shards_are_deterministic_and_well_shaped() {
+        let a = feature_shards(3, 16, 4, 99);
+        let b = feature_shards(3, 16, 4, 99);
+        assert_eq!(a, b, "same seed → bitwise-identical shards");
+        assert_eq!(a.len(), 3);
+        for (i, s) in a.iter().enumerate() {
+            assert_eq!(s.id, i as u64, "stable ids");
+            assert_eq!(s.rows(), 16);
+            assert_eq!(s.features.len(), 16 * 4);
+            assert_eq!(s.row(15).len(), 4);
+            assert!(s.features.iter().all(|x| x.is_finite()));
+            // column 1 is the relevance indicator
+            assert!((0..16).all(|r| {
+                let v = s.row(r)[1];
+                v == 0.0 || v == 1.0
+            }));
+        }
+        // a different seed actually changes the content
+        let c = feature_shards(3, 16, 4, 100);
+        assert_ne!(a, c);
     }
 
     #[test]

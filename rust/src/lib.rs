@@ -25,5 +25,6 @@ pub mod data;
 pub mod metrics;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

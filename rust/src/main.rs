@@ -7,19 +7,30 @@
 //! sama pretrain method=sama [key=value ...]  # §4.2 continued pretraining
 //! sama prune metric=sama ratio=0.3 [...]     # §4.3 data pruning
 //! sama fewshot model=fs_w64 [...]            # Appendix D episode run
+//! sama serve [key=value ...]                 # live λ query service demo
+//!     e.g. sama serve steps=400 workers=2 serve_publish_every=8
 //! ```
 //!
 //! Overrides are `key=value` pairs applied onto [`TrainConfig`]; unknown
 //! keys land in `extra` (dataset knobs). `--config path.json` loads a JSON
 //! config first.
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use anyhow::{bail, Context, Result};
 
 use sama::apps::{fewshot, pretraining, pruning, wrench};
+use sama::bilevel::biased_regression::BiasedRegression;
+use sama::bilevel::BilevelProblem;
 use sama::config::TrainConfig;
+use sama::coordinator::{BaseOpt, ProblemFactory};
+use sama::data::corpus;
 use sama::data::pruning_data::{self, PruningSpec};
 use sama::info;
 use sama::runtime::{Manifest, Runtime};
+use sama::serve;
+use sama::util::rng::Rng;
 
 fn parse_cfg(args: &[String]) -> Result<TrainConfig> {
     let mut cfg = TrainConfig::default();
@@ -167,6 +178,111 @@ fn cmd_fewshot(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Analytic bilevel problem for the serving demo: runs with no compiled
+/// artifacts, so `sama serve` works on a bare checkout.
+struct ServeDemoFactory {
+    seed: u64,
+}
+
+impl ProblemFactory for ServeDemoFactory {
+    fn build(
+        &self,
+        _rank: usize,
+        _world: usize,
+    ) -> Result<(Box<dyn BilevelProblem>, Vec<f32>, Vec<f32>)> {
+        let mut rng = Rng::new(self.seed);
+        let p = BiasedRegression::random(&mut rng, 40, 30, 8, 2.0);
+        Ok((Box::new(p), vec![0.0; 8], vec![0.0; 8]))
+    }
+
+    fn base_opt(&self) -> BaseOpt {
+        BaseOpt::Sgd { momentum: 0.0 }
+    }
+}
+
+/// Live λ serving demo: the bilevel trainer runs while a query load
+/// generator scores corpus shards against every published snapshot.
+/// Artifact-free (analytic problem, pure-Rust MWN scoring head).
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let knobs = cfg.serve_knobs();
+    // feature width 5 makes the demo λ (8 params) decode as a real MWN
+    // head: 8 = 1·(5+2)+1 (see pruning::snapshot_scores)
+    let shards = corpus::feature_shards(knobs.shards, knobs.shard_rows, 5, cfg.seed);
+    let shard_ids: Vec<u64> = shards.iter().map(|s| s.id).collect();
+    let rows_per_shard = knobs.shard_rows;
+    let final_step = cfg.steps as u64;
+    info!(
+        "serve: steps={} workers={} publish_every={} shards={}x{} \
+         max_batch={} linger={}us",
+        cfg.steps,
+        cfg.workers,
+        knobs.publish_every,
+        knobs.shards,
+        knobs.shard_rows,
+        knobs.max_batch,
+        knobs.linger_us
+    );
+    let report = serve::serve_with_trainer(
+        &cfg,
+        &ServeDemoFactory { seed: cfg.seed },
+        Arc::new(pruning::MwnScorer),
+        shards,
+        move |client, hub| {
+            // query load: sweep every shard against each fresh generation
+            // until the trainer's final publication lands
+            let mut gen = 0u64;
+            loop {
+                match hub.wait_past(gen, Duration::from_secs(120)) {
+                    Some(snap) => gen = snap.generation,
+                    None => break, // trainer stalled or done; stop driving
+                }
+                for (i, &id) in shard_ids.iter().enumerate() {
+                    let row = (gen as usize + i) % rows_per_shard.max(1);
+                    let _ = client.query(id, vec![row]);
+                }
+                if hub.load().step >= final_step {
+                    break;
+                }
+            }
+        },
+    )?;
+    let s = &report.serve;
+    println!(
+        "train: {} steps | {:.1} samples/s | meta-loss tail {:.4} | \
+         {} snapshots published",
+        cfg.steps,
+        report.train.throughput(),
+        report.train.meta_loss.tail_mean(5),
+        report.train.snapshots_published
+    );
+    println!(
+        "serve: {} queries ({} ok / {} err) | {:.1} q/s | p50 {:.3} ms | \
+         p99 {:.3} ms | mean batch {:.2} (max {}) | {} rescore passes",
+        s.queries,
+        s.answered,
+        s.errors,
+        s.qps,
+        s.p50_ms,
+        s.p99_ms,
+        s.mean_batch,
+        s.max_batch,
+        s.rescore_passes
+    );
+    for st in &report.staleness {
+        println!(
+            "shard {:>3}: {} rows | scored gen {} | {} gens behind | \
+             {:.3}s behind",
+            st.shard,
+            st.rows,
+            st.scored_generation,
+            st.generations_behind,
+            st.seconds_behind
+        );
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(|s| s.as_str()) {
@@ -175,9 +291,11 @@ fn main() -> Result<()> {
         Some("pretrain") => cmd_pretrain(&args[1..]),
         Some("prune") => cmd_prune(&args[1..]),
         Some("fewshot") => cmd_fewshot(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("help") | None => {
             println!(
-                "usage: sama <info|train|pretrain|prune|fewshot> [key=value ...]\n\
+                "usage: sama <info|train|pretrain|prune|fewshot|serve> \
+                 [key=value ...]\n\
                  see module docs in rust/src/main.rs"
             );
             Ok(())

@@ -42,6 +42,19 @@ impl ThroughputMeter {
     }
 }
 
+/// Nearest-rank quantile of an ascending-sorted sample (`q` in [0, 1]).
+/// 0.0 for an empty sample — serving latency percentiles (p50/p99) call
+/// this on windows that may not have seen traffic yet.
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let rank = ((q * sorted.len() as f64).ceil() as usize)
+        .clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
 /// Simple scalar time-series (loss curves etc.) with CSV export.
 #[derive(Clone, Debug, Default)]
 pub struct Series {
@@ -91,6 +104,21 @@ mod tests {
         m.add_samples(5);
         assert_eq!(m.samples(), 15);
         assert!(m.samples_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn quantile_nearest_rank() {
+        assert_eq!(quantile(&[], 0.5), 0.0);
+        let one = [7.0];
+        assert_eq!(quantile(&one, 0.0), 7.0);
+        assert_eq!(quantile(&one, 1.0), 7.0);
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(quantile(&xs, 0.50), 50.0);
+        assert_eq!(quantile(&xs, 0.99), 99.0);
+        assert_eq!(quantile(&xs, 1.00), 100.0);
+        // out-of-range q clamps instead of indexing out of bounds
+        assert_eq!(quantile(&xs, 1.5), 100.0);
+        assert_eq!(quantile(&xs, -0.5), 1.0);
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Admission batching: an MPSC query queue drained into deadline-aware
+//! batches, each answered by vectorized scoring passes over a published
+//! snapshot.
+//!
+//! The engine blocks for the first query, then lingers up to
+//! `linger` (or until `max_batch` queries are admitted) so concurrent
+//! lookups amortize into one snapshot load and one scoring call per
+//! (generation, shard) group. Queries never touch the trainer: they read
+//! published [`LambdaSnapshot`]s only (invariant 10).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::scorer::{ShardStore, SnapshotScorer};
+use super::snapshot::{LambdaSnapshot, SnapshotHub};
+use super::ServeStats;
+use crate::data::corpus::CorpusShard;
+
+/// One score lookup: `rows` of `shard`, against the newest snapshot or a
+/// pinned generation.
+pub struct Query {
+    pub shard: u64,
+    pub rows: Vec<usize>,
+    /// `Some(g)` pins the lookup to published generation g — the
+    /// reproducibility contract (a pinned query scores bitwise like a
+    /// batch run stopped at g's cut). `None` takes the newest snapshot at
+    /// batch-formation time.
+    pub pin: Option<u64>,
+    pub enqueued_at: Instant,
+    pub resp: Sender<Result<Scored, ServeError>>,
+}
+
+/// A served lookup: the scores plus exactly which λ cut produced them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scored {
+    pub generation: u64,
+    pub step: u64,
+    pub scores: Vec<f32>,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Nothing published yet (the trainer has not reached its first cut).
+    NoSnapshot,
+    UnknownShard(u64),
+    /// Pinned generation not published or aged out of the keep window.
+    UnknownGeneration(u64),
+    RowOutOfRange { shard: u64, row: usize, rows: usize },
+    /// The serving session shut down before answering.
+    Shutdown,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::NoSnapshot => write!(f, "no λ snapshot published yet"),
+            ServeError::UnknownShard(id) => write!(f, "unknown shard {id}"),
+            ServeError::UnknownGeneration(g) => {
+                write!(f, "generation {g} not published or no longer retained")
+            }
+            ServeError::RowOutOfRange { shard, row, rows } => write!(
+                f,
+                "row {row} out of range for shard {shard} ({rows} rows)"
+            ),
+            ServeError::Shutdown => write!(f, "serving session shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Drain the query queue until every sender is gone. Runs on the
+/// session's batcher thread.
+pub(crate) fn run_batcher(
+    rx: Receiver<Query>,
+    hub: Arc<SnapshotHub>,
+    store: Arc<ShardStore>,
+    scorer: Arc<dyn SnapshotScorer>,
+    stats: Arc<ServeStats>,
+    max_batch: usize,
+    linger: Duration,
+) {
+    let max_batch = max_batch.max(1);
+    loop {
+        let first = match rx.recv() {
+            Ok(q) => q,
+            Err(_) => return, // every client + the session handle dropped
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + linger;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(q) => batch.push(q),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        serve_batch(batch, &hub, &store, &*scorer, &stats);
+    }
+}
+
+/// Answer one formed batch: resolve each query to a snapshot + shard,
+/// group by (generation, shard id), score each group with ONE vectorized
+/// scorer call, then scatter scores back per query.
+fn serve_batch(
+    batch: Vec<Query>,
+    hub: &SnapshotHub,
+    store: &ShardStore,
+    scorer: &dyn SnapshotScorer,
+    stats: &ServeStats,
+) {
+    let occupancy = batch.len();
+    let newest = hub.load();
+
+    struct Admitted {
+        query: Query,
+        snap: Arc<LambdaSnapshot>,
+        shard: Arc<CorpusShard>,
+    }
+    let mut admitted: Vec<Admitted> = Vec::with_capacity(batch.len());
+    // (generation, shard id) → indices into `admitted`
+    let mut groups: BTreeMap<(u64, u64), Vec<usize>> = BTreeMap::new();
+
+    for query in batch {
+        let snap = match query.pin {
+            None => {
+                if newest.generation == 0 {
+                    finish(query, Err(ServeError::NoSnapshot), stats);
+                    continue;
+                }
+                Arc::clone(&newest)
+            }
+            Some(g) => match hub.at(g) {
+                Some(s) => s,
+                None => {
+                    finish(query, Err(ServeError::UnknownGeneration(g)), stats);
+                    continue;
+                }
+            },
+        };
+        let shard = match store.shard(query.shard) {
+            Some(s) => s,
+            None => {
+                let id = query.shard;
+                finish(query, Err(ServeError::UnknownShard(id)), stats);
+                continue;
+            }
+        };
+        if let Some(&row) =
+            query.rows.iter().find(|&&r| r >= shard.rows())
+        {
+            let err = ServeError::RowOutOfRange {
+                shard: shard.id,
+                row,
+                rows: shard.rows(),
+            };
+            finish(query, Err(err), stats);
+            continue;
+        }
+        let key = (snap.generation, shard.id);
+        groups.entry(key).or_default().push(admitted.len());
+        admitted.push(Admitted { query, snap, shard });
+    }
+
+    for (_key, members) in groups {
+        let snap = Arc::clone(&admitted[members[0]].snap);
+        let shard = Arc::clone(&admitted[members[0]].shard);
+        let rows: Vec<usize> = members
+            .iter()
+            .flat_map(|&i| admitted[i].query.rows.iter().copied())
+            .collect();
+        let scores = scorer.score_rows(&snap, &shard, &rows);
+        let mut off = 0usize;
+        for &i in &members {
+            let n = admitted[i].query.rows.len();
+            let slice = scores[off..off + n].to_vec();
+            off += n;
+            let resp = Ok(Scored {
+                generation: snap.generation,
+                step: snap.step,
+                scores: slice,
+            });
+            let q = &admitted[i].query;
+            let latency = q.enqueued_at.elapsed();
+            let ok = q.resp.send(resp).is_ok();
+            stats.record_query(latency, n as u64, ok);
+        }
+    }
+    stats.record_batch(occupancy);
+}
+
+fn finish(query: Query, resp: Result<Scored, ServeError>, stats: &ServeStats) {
+    let latency = query.enqueued_at.elapsed();
+    let _ = query.resp.send(resp);
+    stats.record_query(latency, 0, false);
+}

@@ -1,0 +1,687 @@
+//! Online data-optimization serving: a live λ query service over the
+//! bilevel trainer.
+//!
+//! The paper's flagship application is SAMA-based data reweighting and
+//! pruning; this module makes it continuous. A serving run keeps the
+//! bilevel trainer iterating in place while a query front-end answers
+//! per-example weight / prune-score lookups against **live λ**:
+//!
+//! - **Double-buffered λ snapshots** ([`snapshot`]). The coordinator
+//!   publishes an immutable [`LambdaSnapshot`] (λ, step, generation) into
+//!   the [`SnapshotHub`] at its rank-replicated cut points — the same
+//!   schedule discipline that places checkpoints and EF-residual resets.
+//!   Publication is an atomic pointer swap; readers clone an `Arc` and
+//!   never block the trainer or observe a torn λ.
+//! - **Admission batching** ([`batcher`]). Queries enter an MPSC queue;
+//!   the engine forms deadline-aware batches (`serve_max_batch` /
+//!   `serve_linger_us` knobs) and answers each batch with one vectorized
+//!   scoring pass per (generation, shard) group.
+//! - **Per-shard incremental re-scoring** ([`scorer`]). Corpus shards
+//!   stream in through `data::corpus`; a background rescorer keeps cached
+//!   prune scores fresh against the newest generation and reports
+//!   per-shard staleness (generations behind, seconds behind).
+//!
+//! **Invariant 10** (docs/INVARIANTS.md): λ becomes visible to the
+//! serving path only at rank-replicated cuts, and queries are
+//! generation-pinned — a query pinned to generation g scores bitwise
+//! identically to a batch run stopped at g's cut. Mechanically enforced
+//! by the detlint `snapshot-publish-outside-cut` rule: the coordinator's
+//! cut chokepoint is the one allowed publication site.
+//!
+//! Wall-clock here is attribution-only (latency, QPS, staleness); no
+//! training or routing decision reads it, and nothing in this module is
+//! part of the rank-replicated decision surface.
+
+pub mod batcher;
+pub mod scorer;
+pub mod snapshot;
+
+pub use batcher::{Query, Scored, ServeError};
+pub use scorer::{ShardStaleness, ShardStore, SnapshotScorer};
+pub use snapshot::{LambdaSnapshot, SnapshotHub};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::{ServeKnobs, TrainConfig};
+use crate::coordinator::{self, ProblemFactory, RunOptions, TrainReport};
+use crate::data::corpus::CorpusShard;
+use crate::metrics::quantile;
+
+/// Publication wiring handed to the coordinator via
+/// [`RunOptions::publish`]: where snapshots go and how often cuts are due.
+#[derive(Clone, Debug)]
+pub struct ServePublisher {
+    pub hub: Arc<SnapshotHub>,
+    /// Publish every `every` base steps (and always at the final step).
+    /// The cadence is a pure function of the step index, so every rank
+    /// agrees on where publication cuts fall (invariant 10).
+    pub every: usize,
+}
+
+/// Serving traffic counters, shared by the batcher thread and clients.
+/// Wall-clock attribution only.
+#[derive(Debug)]
+pub struct ServeStats {
+    inner: Mutex<StatsInner>,
+}
+
+#[derive(Debug)]
+struct StatsInner {
+    started: Instant,
+    latencies_us: Vec<u64>,
+    batch_sizes: Vec<usize>,
+    queries: u64,
+    answered: u64,
+    errors: u64,
+    rows_scored: u64,
+    rescore_passes: u64,
+    shards_rescored: u64,
+}
+
+/// Cap on retained per-query latency samples (counters keep counting).
+const LATENCY_SAMPLE_CAP: usize = 1 << 18;
+
+impl ServeStats {
+    fn new() -> ServeStats {
+        ServeStats {
+            inner: Mutex::new(StatsInner {
+                started: Instant::now(),
+                latencies_us: Vec::new(),
+                batch_sizes: Vec::new(),
+                queries: 0,
+                answered: 0,
+                errors: 0,
+                rows_scored: 0,
+                rescore_passes: 0,
+                shards_rescored: 0,
+            }),
+        }
+    }
+
+    /// One query answered (`ok` = with scores rather than a ServeError).
+    pub(crate) fn record_query(&self, latency: Duration, rows: u64, ok: bool) {
+        let mut s = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        s.queries += 1;
+        if ok {
+            s.answered += 1;
+            s.rows_scored += rows;
+        } else {
+            s.errors += 1;
+        }
+        if s.latencies_us.len() < LATENCY_SAMPLE_CAP {
+            s.latencies_us.push(latency.as_micros() as u64);
+        }
+    }
+
+    pub(crate) fn record_batch(&self, occupancy: usize) {
+        let mut s = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if s.batch_sizes.len() < LATENCY_SAMPLE_CAP {
+            s.batch_sizes.push(occupancy);
+        }
+    }
+
+    pub(crate) fn record_rescore(&self, shards: usize) {
+        let mut s = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        s.rescore_passes += 1;
+        s.shards_rescored += shards as u64;
+    }
+
+    pub fn summary(&self) -> ServeSummary {
+        let s = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let wall = s.started.elapsed().as_secs_f64().max(1e-9);
+        let mut lat: Vec<f64> =
+            s.latencies_us.iter().map(|&u| u as f64 / 1000.0).collect();
+        lat.sort_by(f64::total_cmp);
+        let mean_batch = if s.batch_sizes.is_empty() {
+            0.0
+        } else {
+            s.batch_sizes.iter().sum::<usize>() as f64
+                / s.batch_sizes.len() as f64
+        };
+        ServeSummary {
+            queries: s.queries,
+            answered: s.answered,
+            errors: s.errors,
+            rows_scored: s.rows_scored,
+            qps: s.queries as f64 / wall,
+            p50_ms: quantile(&lat, 0.50),
+            p99_ms: quantile(&lat, 0.99),
+            mean_batch,
+            max_batch: s.batch_sizes.iter().copied().max().unwrap_or(0),
+            rescore_passes: s.rescore_passes,
+            shards_rescored: s.shards_rescored,
+            wall_seconds: wall,
+        }
+    }
+}
+
+/// One serving window's traffic, latency, and batching summary.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeSummary {
+    pub queries: u64,
+    pub answered: u64,
+    pub errors: u64,
+    pub rows_scored: u64,
+    /// Queries per second over the session's wall-clock window.
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Mean / max formed-batch occupancy (amortization quality).
+    pub mean_batch: f64,
+    pub max_batch: usize,
+    pub rescore_passes: u64,
+    pub shards_rescored: u64,
+    pub wall_seconds: f64,
+}
+
+/// Everything a serving run produces: the training outcome, the traffic
+/// summary, and the end-of-run freshness of every shard.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub train: TrainReport,
+    pub serve: ServeSummary,
+    pub staleness: Vec<ShardStaleness>,
+}
+
+/// Issues queries into a running [`ServeSession`]. Cheap to clone; drop
+/// every client before [`ServeSession::finish`] so the batcher can drain.
+#[derive(Clone)]
+pub struct ServeClient {
+    tx: mpsc::Sender<Query>,
+}
+
+impl ServeClient {
+    /// Score `rows` of `shard` against the newest published snapshot.
+    pub fn query(
+        &self,
+        shard: u64,
+        rows: Vec<usize>,
+    ) -> Result<Scored, ServeError> {
+        self.roundtrip(shard, rows, None)
+    }
+
+    /// Score against published generation `generation` exactly (fails
+    /// with [`ServeError::UnknownGeneration`] once it ages out of the
+    /// `serve_keep` window).
+    pub fn query_pinned(
+        &self,
+        shard: u64,
+        rows: Vec<usize>,
+        generation: u64,
+    ) -> Result<Scored, ServeError> {
+        self.roundtrip(shard, rows, Some(generation))
+    }
+
+    fn roundtrip(
+        &self,
+        shard: u64,
+        rows: Vec<usize>,
+        pin: Option<u64>,
+    ) -> Result<Scored, ServeError> {
+        let (resp, rx) = mpsc::channel();
+        let q = Query {
+            shard,
+            rows,
+            pin,
+            enqueued_at: Instant::now(),
+            resp,
+        };
+        self.tx.send(q).map_err(|_| ServeError::Shutdown)?;
+        rx.recv().map_err(|_| ServeError::Shutdown)?
+    }
+}
+
+/// A running serving stack: snapshot hub + admission batcher + background
+/// rescorer. Start it, hand [`ServeSession::run_options`] to
+/// [`coordinator::train`], serve queries while training runs, then
+/// [`ServeSession::finish`].
+pub struct ServeSession {
+    hub: Arc<SnapshotHub>,
+    store: Arc<ShardStore>,
+    stats: Arc<ServeStats>,
+    scorer: Arc<dyn SnapshotScorer>,
+    tx: mpsc::Sender<Query>,
+    batcher: thread::JoinHandle<()>,
+    rescorer: thread::JoinHandle<()>,
+    shutdown: Arc<AtomicBool>,
+    publish_every: usize,
+}
+
+impl ServeSession {
+    pub fn start(
+        knobs: &ServeKnobs,
+        scorer: Arc<dyn SnapshotScorer>,
+    ) -> ServeSession {
+        let hub = Arc::new(SnapshotHub::new(knobs.keep));
+        let store = Arc::new(ShardStore::new());
+        let stats = Arc::new(ServeStats::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<Query>();
+
+        let batcher = {
+            let (hub, store, scorer, stats) = (
+                Arc::clone(&hub),
+                Arc::clone(&store),
+                Arc::clone(&scorer),
+                Arc::clone(&stats),
+            );
+            let (max_batch, linger) = (
+                knobs.max_batch,
+                Duration::from_micros(knobs.linger_us),
+            );
+            thread::Builder::new()
+                .name("serve-batcher".into())
+                .spawn(move || {
+                    batcher::run_batcher(
+                        rx, hub, store, scorer, stats, max_batch, linger,
+                    )
+                })
+                .expect("spawn serve-batcher")
+        };
+
+        let rescorer = {
+            let (hub, store, scorer, stats, shutdown) = (
+                Arc::clone(&hub),
+                Arc::clone(&store),
+                Arc::clone(&scorer),
+                Arc::clone(&stats),
+                Arc::clone(&shutdown),
+            );
+            thread::Builder::new()
+                .name("serve-rescorer".into())
+                .spawn(move || loop {
+                    let n = store.rescore_pass(&hub, &*scorer);
+                    if n > 0 {
+                        stats.record_rescore(n);
+                    }
+                    if shutdown.load(Ordering::Acquire) {
+                        return;
+                    }
+                    // park until the next publication (or a shutdown-poll
+                    // tick); staleness is bounded by publication cadence
+                    // plus one pass, not by a polling interval
+                    let seen = hub.generation();
+                    hub.wait_past(seen, Duration::from_millis(25));
+                })
+                .expect("spawn serve-rescorer")
+        };
+
+        ServeSession {
+            hub,
+            store,
+            stats,
+            scorer,
+            tx,
+            batcher,
+            rescorer,
+            shutdown,
+            publish_every: knobs.publish_every,
+        }
+    }
+
+    pub fn hub(&self) -> Arc<SnapshotHub> {
+        Arc::clone(&self.hub)
+    }
+
+    pub fn store(&self) -> Arc<ShardStore> {
+        Arc::clone(&self.store)
+    }
+
+    pub fn stats(&self) -> Arc<ServeStats> {
+        Arc::clone(&self.stats)
+    }
+
+    pub fn client(&self) -> ServeClient {
+        ServeClient {
+            tx: self.tx.clone(),
+        }
+    }
+
+    pub fn publisher(&self) -> ServePublisher {
+        ServePublisher {
+            hub: Arc::clone(&self.hub),
+            every: self.publish_every,
+        }
+    }
+
+    /// Coordinator options with snapshot publication wired in.
+    pub fn run_options(&self) -> RunOptions {
+        RunOptions {
+            publish: Some(self.publisher()),
+            ..RunOptions::default()
+        }
+    }
+
+    pub fn staleness(&self) -> Vec<ShardStaleness> {
+        self.store.staleness(&self.hub)
+    }
+
+    /// Shut the serving stack down: stop the rescorer, drain the query
+    /// queue (every [`ServeClient`] must already be dropped), run one
+    /// final synchronous rescore pass so the score cache converges to the
+    /// final published generation, and return the traffic summary.
+    pub fn finish(self) -> ServeSummary {
+        self.shutdown.store(true, Ordering::Release);
+        let _ = self.rescorer.join();
+        // a publication may have landed mid-pass while shutdown flipped;
+        // converge deterministically before reporting
+        let n = self.store.rescore_pass(&self.hub, &*self.scorer);
+        if n > 0 {
+            self.stats.record_rescore(n);
+        }
+        drop(self.tx);
+        let _ = self.batcher.join();
+        self.stats.summary()
+    }
+}
+
+/// Convenience driver for the `serve` entrypoint, benches, and tests:
+/// start a session, stream `shards` in, run the trainer with publication
+/// wired, and run `driver` (the query load) on its own thread while
+/// training proceeds. Returns the merged [`ServeReport`].
+pub fn serve_with_trainer<F>(
+    cfg: &TrainConfig,
+    factory: &dyn ProblemFactory,
+    scorer: Arc<dyn SnapshotScorer>,
+    shards: Vec<CorpusShard>,
+    driver: F,
+) -> Result<ServeReport>
+where
+    F: FnOnce(ServeClient, Arc<SnapshotHub>) + Send + 'static,
+{
+    let knobs = cfg.serve_knobs();
+    let session = ServeSession::start(&knobs, scorer);
+    for s in shards {
+        session.store().ingest(s);
+    }
+    let (client, hub) = (session.client(), session.hub());
+    let load = thread::Builder::new()
+        .name("serve-load".into())
+        .spawn(move || driver(client, hub))
+        .expect("spawn serve-load");
+    let train = coordinator::train(cfg, factory, &session.run_options());
+    let load_res = load.join();
+    let train = train?;
+    anyhow::ensure!(load_res.is_ok(), "serve load driver panicked");
+    let (hub, store) = (session.hub(), session.store());
+    let serve = session.finish();
+    let staleness = store.staleness(&hub);
+    Ok(ServeReport {
+        train,
+        serve,
+        staleness,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bilevel::biased_regression::BiasedRegression;
+    use crate::bilevel::BilevelProblem;
+    use crate::collective::CompressPolicy;
+    use crate::config::{Algo, CompressKnob};
+    use crate::coordinator::BaseOpt;
+    use crate::data::corpus::feature_shards;
+    use crate::util::rng::Rng;
+
+    /// Test-only stand-in for the coordinator's cut chokepoint so unit
+    /// tests can mint generations without running a trainer.
+    fn test_publish(hub: &SnapshotHub, lambda: Vec<f32>, step: u64) -> u64 {
+        // detlint: allow(snapshot-publish-outside-cut) — test-only λ
+        // publication standing in for the coordinator cut chokepoint;
+        // no trainer exists in these unit tests (invariant 10)
+        hub.publish_cut(lambda, step)
+    }
+
+    /// Deterministic reference scorer: cyclic λ·feature dot. Pure in
+    /// (λ, features) as the trait demands.
+    struct DotScorer;
+
+    impl SnapshotScorer for DotScorer {
+        fn score_rows(
+            &self,
+            snap: &LambdaSnapshot,
+            shard: &CorpusShard,
+            rows: &[usize],
+        ) -> Vec<f32> {
+            rows.iter()
+                .map(|&r| {
+                    shard
+                        .row(r)
+                        .iter()
+                        .enumerate()
+                        .map(|(j, &x)| {
+                            x * snap.lambda[j % snap.lambda.len().max(1)]
+                        })
+                        .sum()
+                })
+                .collect()
+        }
+    }
+
+    fn knobs() -> ServeKnobs {
+        ServeKnobs {
+            publish_every: 4,
+            max_batch: 8,
+            linger_us: 500,
+            shards: 2,
+            shard_rows: 8,
+            keep: 4,
+        }
+    }
+
+    #[test]
+    fn batcher_answers_newest_pinned_and_error_paths() {
+        let session = ServeSession::start(&knobs(), Arc::new(DotScorer));
+        let shards = feature_shards(1, 8, 2, 7);
+        let shard0 = shards[0].id;
+        session.store().ingest(shards.into_iter().next().unwrap());
+        let client = session.client();
+
+        // before any publication: NoSnapshot
+        assert_eq!(
+            client.query(shard0, vec![0]).unwrap_err(),
+            ServeError::NoSnapshot
+        );
+
+        let hub = session.hub();
+        let l1 = vec![0.25f32, -1.5];
+        test_publish(&hub, l1.clone(), 4);
+        let s1 = client.query(shard0, vec![0, 3, 5]).unwrap();
+        assert_eq!((s1.generation, s1.step), (1, 4));
+        // scores match an out-of-band evaluation of the same pure kernel
+        let shard = session.store().shard(shard0).unwrap();
+        let want = DotScorer.score_rows(&hub.at(1).unwrap(), &shard, &[0, 3, 5]);
+        assert_eq!(
+            s1.scores.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+
+        // a newer generation: unpinned follows, pinned stays put bitwise
+        test_publish(&hub, vec![2.0, 0.5], 8);
+        let s2 = client.query(shard0, vec![0, 3, 5]).unwrap();
+        assert_eq!(s2.generation, 2);
+        assert_ne!(
+            s2.scores.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            s1.scores.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        let pinned = client.query_pinned(shard0, vec![0, 3, 5], 1).unwrap();
+        assert_eq!(pinned.generation, 1);
+        assert_eq!(
+            pinned.scores.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            s1.scores.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+
+        // error paths
+        assert_eq!(
+            client.query(shard0 + 999, vec![0]).unwrap_err(),
+            ServeError::UnknownShard(shard0 + 999)
+        );
+        assert_eq!(
+            client.query_pinned(shard0, vec![0], 42).unwrap_err(),
+            ServeError::UnknownGeneration(42)
+        );
+        assert!(matches!(
+            client.query(shard0, vec![8]).unwrap_err(),
+            ServeError::RowOutOfRange { row: 8, rows: 8, .. }
+        ));
+
+        drop(client);
+        let summary = session.finish();
+        assert_eq!(summary.queries, 7);
+        assert_eq!(summary.answered, 3);
+        assert_eq!(summary.errors, 4);
+        assert!(summary.max_batch >= 1);
+    }
+
+    #[test]
+    fn rescorer_converges_to_newest_generation() {
+        let session = ServeSession::start(&knobs(), Arc::new(DotScorer));
+        for s in feature_shards(3, 6, 2, 11) {
+            session.store().ingest(s);
+        }
+        let hub = session.hub();
+        for g in 1..=5u64 {
+            test_publish(&hub, vec![g as f32, -(g as f32)], g * 4);
+        }
+        // the background pass converges; don't race it — poll with a cap
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while session.store().max_generations_behind(&hub) > 0 {
+            assert!(Instant::now() < deadline, "rescorer never converged");
+            thread::yield_now();
+        }
+        for st in session.staleness() {
+            assert_eq!(st.generations_behind, 0);
+            assert_eq!(st.scored_generation, 5);
+            assert_eq!(st.seconds_behind, 0.0);
+        }
+        // cached scores are bitwise what the pure kernel computes against
+        // the newest snapshot
+        let snap = hub.load();
+        for id in session.store().ids() {
+            let shard = session.store().shard(id).unwrap();
+            let rows: Vec<usize> = (0..shard.rows()).collect();
+            let want = DotScorer.score_rows(&snap, &shard, &rows);
+            let (got, gen) = session.store().cached_scores(id).unwrap();
+            assert_eq!(gen, 5);
+            assert_eq!(
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        session.finish();
+    }
+
+    struct ReplicatedFactory;
+
+    impl ProblemFactory for ReplicatedFactory {
+        fn build(
+            &self,
+            _rank: usize,
+            _world: usize,
+        ) -> Result<(Box<dyn BilevelProblem>, Vec<f32>, Vec<f32>)> {
+            let mut rng = Rng::new(4242);
+            let p = BiasedRegression::random(&mut rng, 40, 30, 8, 2.0);
+            Ok((Box::new(p), vec![0.0; 8], vec![0.0; 8]))
+        }
+
+        fn base_opt(&self) -> BaseOpt {
+            BaseOpt::Sgd { momentum: 0.0 }
+        }
+    }
+
+    fn serve_cfg() -> TrainConfig {
+        TrainConfig {
+            algo: Algo::Sama,
+            steps: 24,
+            workers: 2,
+            unroll: 3,
+            base_lr: 0.002,
+            meta_lr: 0.3,
+            sama_alpha: 1.0,
+            solver_iters: 8,
+            link_bandwidth: 1e12,
+            link_latency: 0.0,
+            bucket_auto: false,
+            serve_publish_every: 6,
+            // publication previews the pending λ-step on clones; keep the
+            // wire codec out so this test's trajectory is schedule-free
+            compress: CompressKnob::Set(CompressPolicy::off()),
+            ..TrainConfig::default()
+        }
+    }
+
+    /// End-to-end smoke over the real trainer: snapshots appear on the
+    /// publish cadence, queries answer during training, the final
+    /// generation carries the run's final λ bitwise, and every shard ends
+    /// fresh.
+    #[test]
+    fn serve_with_trainer_publishes_and_answers() {
+        let cfg = serve_cfg();
+        let shards = feature_shards(2, 6, 2, 13);
+        let shard0 = shards[0].id;
+        let final_snap: Arc<Mutex<Vec<f32>>> = Arc::new(Mutex::new(Vec::new()));
+        let slot = Arc::clone(&final_snap);
+        let report = serve_with_trainer(
+            &cfg,
+            &ReplicatedFactory,
+            Arc::new(DotScorer),
+            shards,
+            move |client, hub| {
+                // wait out the first publication, then issue queries until
+                // the final generation (steps/publish_every = 4) appears
+                let mut snap = hub
+                    .wait_past(0, Duration::from_secs(60))
+                    .expect("first publication");
+                loop {
+                    let r = client.query(shard0, vec![0, 1, 2]);
+                    if let Ok(s) = &r {
+                        assert!(s.generation >= snap.generation);
+                        assert_eq!(s.scores.len(), 3);
+                    }
+                    if snap.generation >= 4 {
+                        break;
+                    }
+                    match hub.wait_past(
+                        snap.generation,
+                        Duration::from_secs(60),
+                    ) {
+                        Some(s) => snap = s,
+                        None => break,
+                    }
+                }
+                let last = hub.load();
+                assert_eq!((last.generation, last.step), (4, 24));
+                *slot.lock().unwrap_or_else(|e| e.into_inner()) =
+                    last.lambda.clone();
+            },
+        )
+        .expect("serve_with_trainer");
+
+        assert_eq!(report.train.snapshots_published, 4, "24 steps / every 6");
+        assert!(report.serve.queries > 0);
+        assert_eq!(report.serve.errors, 0);
+        for st in &report.staleness {
+            assert_eq!(st.generations_behind, 0, "shard {} stale", st.shard);
+        }
+        // the final published generation IS the run's final λ, bitwise —
+        // full-width under every zero mode (the publish preview applies
+        // the same deferred λ-step the final drain applies)
+        let snap_lambda = final_snap.lock().unwrap_or_else(|e| e.into_inner());
+        assert_eq!(snap_lambda.len(), 8, "full-width snapshot");
+        assert_eq!(
+            snap_lambda.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            report
+                .train
+                .final_lambda
+                .iter()
+                .map(|x| x.to_bits())
+                .collect::<Vec<_>>()
+        );
+    }
+}

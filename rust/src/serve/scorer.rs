@@ -1,0 +1,201 @@
+//! Per-shard incremental re-scoring against the newest λ generation.
+//!
+//! Corpus shards stream into a [`ShardStore`]; a background rescorer
+//! (spawned by [`super::ServeSession`]) keeps every shard's cached prune
+//! scores fresh against the hub's newest snapshot and reports staleness —
+//! generations behind and seconds behind — per shard. Scoring itself goes
+//! through the [`SnapshotScorer`] trait so the batch pruning path and the
+//! online serving path share one kernel
+//! (see `apps::pruning::snapshot_scores`).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::snapshot::{LambdaSnapshot, SnapshotHub};
+use crate::data::corpus::CorpusShard;
+
+/// Scores corpus rows against one published λ snapshot.
+///
+/// Implementations must be pure functions of `(snap.lambda, features)`:
+/// the serving contract (invariant 10) is that a query pinned to
+/// generation g returns bitwise the same scores as a batch run stopped at
+/// g's cut, which only holds if the scorer has no hidden state.
+pub trait SnapshotScorer: Send + Sync {
+    fn score_rows(
+        &self,
+        snap: &LambdaSnapshot,
+        shard: &CorpusShard,
+        rows: &[usize],
+    ) -> Vec<f32>;
+}
+
+/// End-of-pass freshness of one shard's cached scores.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardStaleness {
+    pub shard: u64,
+    pub rows: usize,
+    /// Generation the cached scores were computed against (0 = never).
+    pub scored_generation: u64,
+    /// Newest published generation minus `scored_generation`.
+    pub generations_behind: u64,
+    /// Seconds since the cached scores were (re)computed — since ingest
+    /// if the shard has never been scored; 0.0 when fully fresh.
+    pub seconds_behind: f64,
+}
+
+struct ShardEntry {
+    shard: Arc<CorpusShard>,
+    scores: Vec<f32>,
+    scored_gen: u64,
+    scored_step: u64,
+    ingested_at: Instant,
+    scored_at: Option<Instant>,
+}
+
+/// Streamed corpus shards plus their incrementally-refreshed score cache.
+/// `BTreeMap` keyed by shard id: deterministic iteration order for
+/// rescore passes and staleness reports.
+#[derive(Default)]
+pub struct ShardStore {
+    inner: Mutex<BTreeMap<u64, ShardEntry>>,
+}
+
+impl ShardStore {
+    pub fn new() -> ShardStore {
+        ShardStore::default()
+    }
+
+    /// Stream one shard in. Re-ingesting an id replaces the shard and
+    /// invalidates its cached scores (content may have changed).
+    pub fn ingest(&self, shard: CorpusShard) {
+        let entry = ShardEntry {
+            scores: Vec::new(),
+            scored_gen: 0,
+            scored_step: 0,
+            ingested_at: Instant::now(),
+            scored_at: None,
+            shard: Arc::new(shard),
+        };
+        self.inner
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(entry.shard.id, entry);
+    }
+
+    pub fn shard(&self, id: u64) -> Option<Arc<CorpusShard>> {
+        self.inner
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&id)
+            .map(|e| Arc::clone(&e.shard))
+    }
+
+    pub fn ids(&self) -> Vec<u64> {
+        self.inner
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .keys()
+            .copied()
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The cached scores and the generation they were computed against
+    /// (None until the rescorer's first pass over this shard).
+    pub fn cached_scores(&self, id: u64) -> Option<(Vec<f32>, u64)> {
+        self.inner
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&id)
+            .filter(|e| e.scored_gen > 0)
+            .map(|e| (e.scores.clone(), e.scored_gen))
+    }
+
+    /// One incremental pass: re-score every shard that is behind the
+    /// hub's newest snapshot. Scoring runs outside the store lock (a
+    /// pass over a large shard must not block `ingest`/lookups); the
+    /// write-back re-checks the generation so a concurrent newer pass is
+    /// never clobbered by an older one. Returns shards refreshed.
+    pub fn rescore_pass(
+        &self,
+        hub: &SnapshotHub,
+        scorer: &dyn SnapshotScorer,
+    ) -> usize {
+        let snap = hub.load();
+        if snap.generation == 0 {
+            return 0;
+        }
+        let stale: Vec<Arc<CorpusShard>> = self
+            .inner
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .values()
+            .filter(|e| e.scored_gen < snap.generation)
+            .map(|e| Arc::clone(&e.shard))
+            .collect();
+        let mut refreshed = 0usize;
+        for shard in stale {
+            let rows: Vec<usize> = (0..shard.rows()).collect();
+            let scores = scorer.score_rows(&snap, &shard, &rows);
+            let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(e) = inner.get_mut(&shard.id) {
+                if e.scored_gen < snap.generation
+                    && Arc::ptr_eq(&e.shard, &shard)
+                {
+                    e.scores = scores;
+                    e.scored_gen = snap.generation;
+                    e.scored_step = snap.step;
+                    e.scored_at = Some(Instant::now());
+                    refreshed += 1;
+                }
+            }
+        }
+        refreshed
+    }
+
+    /// Per-shard staleness versus the hub's newest generation.
+    pub fn staleness(&self, hub: &SnapshotHub) -> Vec<ShardStaleness> {
+        let newest = hub.generation();
+        self.inner
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .values()
+            .map(|e| {
+                let behind = newest.saturating_sub(e.scored_gen);
+                let seconds = if behind == 0 && e.scored_gen > 0 {
+                    0.0
+                } else {
+                    e.scored_at
+                        .unwrap_or(e.ingested_at)
+                        .elapsed()
+                        .as_secs_f64()
+                };
+                ShardStaleness {
+                    shard: e.shard.id,
+                    rows: e.shard.rows(),
+                    scored_generation: e.scored_gen,
+                    generations_behind: behind,
+                    seconds_behind: seconds,
+                }
+            })
+            .collect()
+    }
+
+    /// Worst-case generations-behind across all shards (0 when every
+    /// shard is fresh — the rescorer's convergence predicate).
+    pub fn max_generations_behind(&self, hub: &SnapshotHub) -> u64 {
+        self.staleness(hub)
+            .iter()
+            .map(|s| s.generations_behind)
+            .max()
+            .unwrap_or(0)
+    }
+}

@@ -1,0 +1,313 @@
+//! Double-buffered λ snapshots: the serving read path.
+//!
+//! The trainer publishes an immutable [`LambdaSnapshot`] (λ, step,
+//! generation) into the [`SnapshotHub`] at its rank-replicated cut points
+//! — the same schedule points where checkpoints are taken and EF
+//! residuals reset (docs/INVARIANTS.md invariants 9–10). Readers clone an
+//! `Arc` out of the hub; the only shared critical section is a pointer
+//! swap, so queries never block the trainer and never observe a torn λ:
+//! a snapshot is frozen before it becomes visible and is never mutated
+//! after.
+//!
+//! This file is the one legitimate home of [`SnapshotHub::publish_cut`].
+//! Every call site outside it is flagged by the detlint
+//! `snapshot-publish-outside-cut` rule; the coordinator's cut chokepoint
+//! carries the single justified allow. That is what makes invariant 10
+//! mechanical: λ can only become visible to the serving path at a
+//! rank-replicated cut, never mid-step.
+//!
+//! Wall-clock use here is attribution-only (snapshot age / staleness
+//! metrics); no training or routing decision reads it.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One immutable published λ cut. Frozen before publication; readers hold
+/// it by `Arc` and may score against it long after newer generations
+/// supersede it (generation-pinned queries).
+#[derive(Clone, Debug)]
+pub struct LambdaSnapshot {
+    /// Full-width λ — under ZeRO sharding the publisher re-replicates
+    /// before the cut, so the snapshot is never a shard.
+    pub lambda: Vec<f32>,
+    /// Base steps completed when this cut was taken.
+    pub step: u64,
+    /// 1-based publish counter; generation 0 is the pre-publication
+    /// sentinel (empty λ, never handed to a scorer).
+    pub generation: u64,
+    published_at: Instant,
+}
+
+impl LambdaSnapshot {
+    fn sentinel() -> LambdaSnapshot {
+        LambdaSnapshot {
+            lambda: Vec::new(),
+            step: 0,
+            generation: 0,
+            published_at: Instant::now(),
+        }
+    }
+
+    /// Seconds since this snapshot was published (staleness attribution).
+    pub fn age(&self) -> Duration {
+        self.published_at.elapsed()
+    }
+}
+
+/// The double buffer between the trainer (one writer, cut-schedule
+/// cadence) and any number of query/rescore readers.
+///
+/// `cur` always points at the newest complete snapshot; `history` keeps
+/// the last `keep` generations alive for generation-pinned queries.
+#[derive(Debug)]
+pub struct SnapshotHub {
+    cur: Mutex<Arc<LambdaSnapshot>>,
+    /// Signalled on every publication (rescorer/waiters park here instead
+    /// of spinning).
+    published: Condvar,
+    history: Mutex<VecDeque<Arc<LambdaSnapshot>>>,
+    /// Wait-free mirror of `cur.generation` for cheap staleness probes.
+    generation: AtomicU64,
+    keep: usize,
+}
+
+impl SnapshotHub {
+    /// `keep` = how many generations stay addressable via [`Self::at`]
+    /// (≥ 1; pinned queries older than that get `UnknownGeneration`).
+    pub fn new(keep: usize) -> SnapshotHub {
+        SnapshotHub {
+            cur: Mutex::new(Arc::new(LambdaSnapshot::sentinel())),
+            published: Condvar::new(),
+            history: Mutex::new(VecDeque::new()),
+            generation: AtomicU64::new(0),
+            keep: keep.max(1),
+        }
+    }
+
+    /// Newest published generation (0 = nothing published yet). Wait-free.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Clone out the newest snapshot. The critical section is one `Arc`
+    /// clone under `cur`'s mutex — bounded, tiny, and independent of λ's
+    /// width, so readers cannot hold the trainer up.
+    pub fn load(&self) -> Arc<LambdaSnapshot> {
+        Arc::clone(&self.cur.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    /// A specific retained generation, for pinned queries. `None` once it
+    /// has aged out of the `keep` window (or was never published).
+    pub fn at(&self, generation: u64) -> Option<Arc<LambdaSnapshot>> {
+        self.history
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .find(|s| s.generation == generation)
+            .map(Arc::clone)
+    }
+
+    /// Block until a generation *newer than* `generation` is published,
+    /// or `timeout` elapses. Returns the newest snapshot on success.
+    /// Parking primitive for the background rescorer and load drivers —
+    /// the trainer never calls this.
+    pub fn wait_past(
+        &self,
+        generation: u64,
+        timeout: Duration,
+    ) -> Option<Arc<LambdaSnapshot>> {
+        let deadline = Instant::now() + timeout;
+        let mut cur = self.cur.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if cur.generation > generation {
+                return Some(Arc::clone(&cur));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _res) = self
+                .published
+                .wait_timeout(cur, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            cur = guard;
+        }
+    }
+
+    /// Publish one cut. ONLY the coordinator's rank-replicated cut
+    /// chokepoint may call this (enforced by detlint
+    /// `snapshot-publish-outside-cut`; invariant 10).
+    ///
+    /// Idempotent under replay: an elastic rebuild re-runs steps at or
+    /// before the resume cut, so a publication whose `step` does not
+    /// advance past the newest one is dropped and the existing generation
+    /// returned — generations stay strictly monotone in `step`.
+    pub fn publish_cut(&self, lambda: Vec<f32>, step: u64) -> u64 {
+        let mut cur = self.cur.lock().unwrap_or_else(|e| e.into_inner());
+        if cur.generation > 0 && step <= cur.step {
+            return cur.generation;
+        }
+        let generation = cur.generation + 1;
+        let snap = Arc::new(LambdaSnapshot {
+            lambda,
+            step,
+            generation,
+            published_at: Instant::now(),
+        });
+        // the swap readers can race with: one pointer assignment
+        *cur = Arc::clone(&snap);
+        self.generation.store(generation, Ordering::Release);
+        drop(cur);
+        {
+            let mut h = self.history.lock().unwrap_or_else(|e| e.into_inner());
+            h.push_back(snap);
+            while h.len() > self.keep {
+                h.pop_front();
+            }
+        }
+        self.published.notify_all();
+        generation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::thread;
+
+    #[test]
+    fn publish_load_roundtrip_and_history_window() {
+        let hub = SnapshotHub::new(2);
+        assert_eq!(hub.generation(), 0);
+        assert_eq!(hub.load().generation, 0, "sentinel before first publish");
+        assert!(hub.at(1).is_none());
+
+        assert_eq!(hub.publish_cut(vec![1.0; 4], 10), 1);
+        assert_eq!(hub.publish_cut(vec![2.0; 4], 20), 2);
+        assert_eq!(hub.publish_cut(vec![3.0; 4], 30), 3);
+
+        assert_eq!(hub.generation(), 3);
+        let newest = hub.load();
+        assert_eq!(newest.generation, 3);
+        assert_eq!(newest.step, 30);
+        assert_eq!(newest.lambda, vec![3.0; 4]);
+
+        // keep=2: generation 1 aged out, 2 and 3 remain pinned-addressable
+        assert!(hub.at(1).is_none());
+        assert_eq!(hub.at(2).unwrap().lambda, vec![2.0; 4]);
+        assert_eq!(hub.at(3).unwrap().step, 30);
+    }
+
+    /// Elastic-replay safety: a rebuild re-runs steps ≤ the resume cut and
+    /// hits the same publish points again; those must not mint phantom
+    /// generations or overwrite the already-visible snapshot.
+    #[test]
+    fn replayed_publication_is_idempotent() {
+        let hub = SnapshotHub::new(4);
+        assert_eq!(hub.publish_cut(vec![1.0], 8), 1);
+        assert_eq!(hub.publish_cut(vec![2.0], 16), 2);
+        // replay of the step-16 cut and of an older cut
+        assert_eq!(hub.publish_cut(vec![9.0], 16), 2);
+        assert_eq!(hub.publish_cut(vec![9.0], 8), 2);
+        assert_eq!(hub.generation(), 2);
+        assert_eq!(hub.load().lambda, vec![2.0], "replay did not overwrite");
+        // progress past the cut resumes minting
+        assert_eq!(hub.publish_cut(vec![3.0], 24), 3);
+    }
+
+    #[test]
+    fn wait_past_wakes_on_publication() {
+        let hub = Arc::new(SnapshotHub::new(2));
+        let h2 = Arc::clone(&hub);
+        let waiter = thread::spawn(move || {
+            h2.wait_past(0, Duration::from_secs(10))
+                .map(|s| s.generation)
+        });
+        // give the waiter a moment to park, then publish
+        thread::sleep(Duration::from_millis(10));
+        hub.publish_cut(vec![1.0; 8], 4);
+        assert_eq!(waiter.join().unwrap(), Some(1));
+        // and an already-satisfied wait returns immediately
+        assert_eq!(
+            hub.wait_past(0, Duration::from_millis(1)).unwrap().generation,
+            1
+        );
+        assert!(hub.wait_past(1, Duration::from_millis(5)).is_none());
+    }
+
+    /// The satellite concurrency contract: reader threads hammer the hub
+    /// while a publisher mints generations. Every λ a reader observes must
+    /// be internally consistent (all elements carry the generation's
+    /// fingerprint — a torn read would mix fingerprints), generations must
+    /// be monotone per reader, and pinned re-loads must return bitwise the
+    /// same λ.
+    #[test]
+    fn hammering_readers_see_no_torn_lambda_and_monotone_generations() {
+        const READERS: usize = 6;
+        const GENERATIONS: u64 = 200;
+        const WIDTH: usize = 512;
+
+        let hub = Arc::new(SnapshotHub::new(4));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let readers: Vec<_> = (0..READERS)
+            .map(|_| {
+                let hub = Arc::clone(&hub);
+                let stop = Arc::clone(&stop);
+                thread::spawn(move || {
+                    let mut last_gen = 0u64;
+                    let mut loads = 0u64;
+                    while !stop.load(Ordering::Acquire) {
+                        let snap = hub.load();
+                        assert!(
+                            snap.generation >= last_gen,
+                            "generation went backwards: {} after {}",
+                            snap.generation,
+                            last_gen
+                        );
+                        last_gen = snap.generation;
+                        if snap.generation == 0 {
+                            continue;
+                        }
+                        let want = snap.generation as f32;
+                        assert_eq!(snap.lambda.len(), WIDTH);
+                        for &x in &snap.lambda {
+                            assert!(
+                                x.to_bits() == want.to_bits(),
+                                "torn λ: element {x} in generation {}",
+                                snap.generation
+                            );
+                        }
+                        // pinned re-load of the same generation, when
+                        // still retained, is bitwise identical
+                        if let Some(pinned) = hub.at(snap.generation) {
+                            assert_eq!(pinned.step, snap.step);
+                            for (a, b) in
+                                pinned.lambda.iter().zip(&snap.lambda)
+                            {
+                                assert_eq!(a.to_bits(), b.to_bits());
+                            }
+                        }
+                        loads += 1;
+                    }
+                    loads
+                })
+            })
+            .collect();
+
+        for g in 1..=GENERATIONS {
+            let got = hub.publish_cut(vec![g as f32; WIDTH], g * 8);
+            assert_eq!(got, g);
+            if g % 16 == 0 {
+                thread::yield_now();
+            }
+        }
+        stop.store(true, Ordering::Release);
+        let total: u64 = readers.into_iter().map(|r| r.join().unwrap()).sum();
+        assert!(total > 0, "readers never got a load in");
+        assert_eq!(hub.generation(), GENERATIONS);
+    }
+}

@@ -1,0 +1,245 @@
+//! Serve-lane integration tests: the live λ query service over a real
+//! bilevel training run (`docs/INVARIANTS.md`, invariant 10).
+//!
+//! Two contracts:
+//!
+//! 1. **Generation-pinned bitwise replay** — a query pinned to generation
+//!    g returns scores bitwise identical to scoring against the final λ
+//!    of a *batch* run stopped at g's cut. Both runs are given the same
+//!    publisher cadence so their collective schedules agree step for step
+//!    (under `SAMA_ZERO=1` the publication preview all-gathers, which is
+//!    itself a collective); `bucket_auto=false` and compression pinned
+//!    off keep the trajectories schedule-identical (invariant 9).
+//! 2. **Non-blocking reads under load** — reader threads hammering the
+//!    hub during training observe monotone generations and only
+//!    full-width, finite λ (never a shard, never a torn buffer), and
+//!    live queries answer without errors while the trainer runs.
+//!
+//! The CI serve lane sweeps `SAMA_TEST_TOPOLOGY={flat,hier}` ×
+//! `SAMA_ZERO={0,1}`; both knobs ride the environment into every run in
+//! this file, so all runs in one process share one schedule regime.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use sama::apps::pruning::{self, MwnScorer};
+use sama::bilevel::biased_regression::BiasedRegression;
+use sama::bilevel::BilevelProblem;
+use sama::collective::CompressPolicy;
+use sama::config::{Algo, CompressKnob, TrainConfig};
+use sama::coordinator::{train, BaseOpt, ProblemFactory, RunOptions};
+use sama::data::corpus::feature_shards;
+use sama::serve::{serve_with_trainer, ServePublisher, SnapshotHub};
+use sama::util::rng::Rng;
+
+struct ReplicatedFactory;
+
+impl ProblemFactory for ReplicatedFactory {
+    fn build(
+        &self,
+        _rank: usize,
+        _world: usize,
+    ) -> anyhow::Result<(Box<dyn BilevelProblem>, Vec<f32>, Vec<f32>)> {
+        // Same seed on every rank: θ₀/λ₀ and the data are replicated.
+        let mut rng = Rng::new(4242);
+        let p = BiasedRegression::random(&mut rng, 40, 30, 8, 2.0);
+        Ok((Box::new(p), vec![0.0; 8], vec![0.0; 8]))
+    }
+
+    fn base_opt(&self) -> BaseOpt {
+        BaseOpt::Sgd { momentum: 0.0 }
+    }
+}
+
+const STEPS: usize = 24;
+const EVERY: usize = 6;
+const LAMBDA_DIM: usize = 8;
+/// Feature width 5 makes the 8-param λ decode as a real MWN head:
+/// 8 = 1·(5+2)+1 (see `pruning::snapshot_scores`).
+const FEAT_WIDTH: usize = 5;
+
+fn serve_cfg(steps: usize) -> TrainConfig {
+    TrainConfig {
+        algo: Algo::Sama,
+        steps,
+        workers: 2,
+        unroll: 3,
+        base_lr: 0.002,
+        meta_lr: 0.3,
+        sama_alpha: 1.0,
+        solver_iters: 8,
+        link_bandwidth: 1e12,
+        link_latency: 0.0,
+        // identical collective schedules are the precondition for bitwise
+        // replay: no auto-retune, no codec riding the CI env
+        bucket_auto: false,
+        compress: CompressKnob::Set(CompressPolicy::off()),
+        serve_publish_every: EVERY,
+        serve_keep: 8,
+        ..TrainConfig::default()
+    }
+}
+
+/// Contract 1: pinned query ≡ batch run stopped at the pinned cut.
+#[test]
+fn pinned_query_matches_batch_run_bitwise() {
+    let shards = feature_shards(2, 12, FEAT_WIDTH, 13);
+    let shard0 = shards[0].id;
+    let rows: Vec<usize> = (0..shards[0].rows()).collect();
+    let features0 = shards[0].features.clone();
+
+    // serving run: 24 steps, cuts at 6/12/18/24 → generations 1–4
+    let pinned_out: Arc<Mutex<Option<(Vec<f32>, Vec<f32>)>>> =
+        Arc::new(Mutex::new(None));
+    let slot = Arc::clone(&pinned_out);
+    let q_rows = rows.clone();
+    let report = serve_with_trainer(
+        &serve_cfg(STEPS),
+        &ReplicatedFactory,
+        Arc::new(MwnScorer),
+        shards,
+        move |client, hub| {
+            hub.wait_past(1, Duration::from_secs(120))
+                .expect("generation 2 never published");
+            let scored = client
+                .query_pinned(shard0, q_rows, 2)
+                .expect("pinned query failed");
+            assert_eq!(scored.generation, 2);
+            assert_eq!(scored.step as usize, 2 * EVERY);
+            let snap = hub.at(2).expect("generation 2 aged out of keep=8");
+            *slot.lock().unwrap_or_else(|e| e.into_inner()) =
+                Some((scored.scores, snap.lambda.clone()));
+        },
+    )
+    .expect("serving run failed");
+    assert_eq!(
+        report.train.snapshots_published, 4,
+        "24 steps at cadence 6 → 4 generations"
+    );
+    let (pinned_scores, snap_lambda) = pinned_out
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .take()
+        .expect("driver never captured the pinned result");
+
+    // batch run stopped at generation 2's cut (step 12), with the SAME
+    // publisher cadence so the collective schedules agree on [0, 12]
+    let batch_hub = Arc::new(SnapshotHub::new(8));
+    let opts = RunOptions {
+        publish: Some(ServePublisher {
+            hub: Arc::clone(&batch_hub),
+            every: EVERY,
+        }),
+        ..RunOptions::default()
+    };
+    let batch = train(&serve_cfg(2 * EVERY), &ReplicatedFactory, &opts)
+        .expect("batch run failed");
+    assert_eq!(batch_hub.generation(), 2);
+
+    // the pinned snapshot IS the batch run's final λ, bitwise and
+    // full-width (under SAMA_ZERO=1 the publisher re-replicated first)
+    assert_eq!(snap_lambda.len(), LAMBDA_DIM);
+    assert_eq!(batch.final_lambda.len(), LAMBDA_DIM);
+    assert_eq!(
+        snap_lambda.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        batch.final_lambda.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "generation-2 snapshot diverged from the batch run's final λ"
+    );
+
+    // and the pinned query's scores are bitwise what the pure kernel
+    // computes from that batch λ
+    let want = pruning::snapshot_scores(&batch.final_lambda, &features0, FEAT_WIDTH);
+    assert_eq!(pinned_scores.len(), rows.len());
+    assert_eq!(
+        pinned_scores.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "pinned scores diverged from batch scoring at the same cut"
+    );
+}
+
+/// Contract 2: hammering readers + live queries during real training.
+#[test]
+fn readers_and_queries_never_see_torn_or_sharded_lambda() {
+    const READERS: usize = 4;
+    let shards = feature_shards(3, 10, FEAT_WIDTH, 29);
+    let ids: Vec<u64> = shards.iter().map(|s| s.id).collect();
+
+    let report = serve_with_trainer(
+        &serve_cfg(STEPS),
+        &ReplicatedFactory,
+        Arc::new(MwnScorer),
+        shards,
+        move |client, hub| {
+            let stop = Arc::new(AtomicBool::new(false));
+            let readers: Vec<_> = (0..READERS)
+                .map(|_| {
+                    let hub = Arc::clone(&hub);
+                    let stop = Arc::clone(&stop);
+                    thread::spawn(move || {
+                        let mut last = 0u64;
+                        let mut loads = 0u64;
+                        while !stop.load(Ordering::Acquire) {
+                            let snap = hub.load();
+                            assert!(
+                                snap.generation >= last,
+                                "generation went backwards: {} after {last}",
+                                snap.generation
+                            );
+                            last = snap.generation;
+                            if snap.generation > 0 {
+                                // full-width and finite: never a ZeRO
+                                // shard, never a torn buffer
+                                assert_eq!(snap.lambda.len(), LAMBDA_DIM);
+                                assert!(
+                                    snap.lambda.iter().all(|x| x.is_finite())
+                                );
+                                loads += 1;
+                            }
+                        }
+                        loads
+                    })
+                })
+                .collect();
+
+            // query every shard once per fresh generation until the final
+            // publication (step 24) lands
+            let mut gen = 0u64;
+            loop {
+                let snap = match hub.wait_past(gen, Duration::from_secs(120))
+                {
+                    Some(s) => s,
+                    None => break,
+                };
+                gen = snap.generation;
+                for &id in &ids {
+                    let scored = client
+                        .query(id, vec![0, 1, 2])
+                        .expect("live query errored");
+                    assert!(scored.generation >= snap.generation);
+                    assert_eq!(scored.scores.len(), 3);
+                }
+                if snap.step as usize >= STEPS {
+                    break;
+                }
+            }
+            stop.store(true, Ordering::Release);
+            let total: u64 =
+                readers.into_iter().map(|r| r.join().unwrap()).sum();
+            assert!(total > 0, "readers never observed a publication");
+        },
+    )
+    .expect("serving run failed");
+
+    assert_eq!(report.train.snapshots_published, 4);
+    assert!(report.serve.queries > 0);
+    assert_eq!(report.serve.errors, 0, "live queries must not error");
+    for st in &report.staleness {
+        assert_eq!(
+            st.generations_behind, 0,
+            "shard {} ended stale after final rescore",
+            st.shard
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! detlint fixture — `snapshot-publish-outside-cut`, known-bad.
+//!
+//! λ snapshots published straight from the training loop, outside the
+//! coordinator's rank-replicated cut chokepoint. Mid-step the deferred
+//! λ-reduce is unresolved and ranks sit at different schedule points, so
+//! the minted generation carries a λ no batch run ever ends with — a
+//! generation-pinned query can no longer replay bitwise (invariant 10).
+
+pub struct SnapshotHub;
+
+impl SnapshotHub {
+    pub fn generation(&self) -> u64 {
+        0
+    }
+}
+
+pub struct LoopState {
+    pub lambda: Vec<f32>,
+    pub step: u64,
+}
+
+/// Publishing from inside the step body, before the λ-stream drained.
+pub fn step_body(hub: &SnapshotHub, state: &LoopState) {
+    hub.publish_cut(state.lambda.clone(), state.step); //~ snapshot-publish-outside-cut
+}
+
+/// A wrapper does not launder the publication: the call is still a
+/// second publication site competing with the coordinator's chokepoint.
+pub fn flush_lambda(hub: &SnapshotHub, lambda: Vec<f32>, step: u64) -> u64 {
+    let before = hub.generation();
+    hub.publish_cut(lambda, step); //~ snapshot-publish-outside-cut
+    before + 1
+}

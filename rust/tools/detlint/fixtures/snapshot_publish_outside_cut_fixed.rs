@@ -1,0 +1,41 @@
+//! detlint fixture — `snapshot-publish-outside-cut`, fixed.
+//!
+//! Publication is structural: the step body marks a publication as *due*
+//! (a pure function of the step index, so every rank agrees on where the
+//! cut falls) and the one chokepoint — which resolves the deferred
+//! λ-reduce first — performs it. The chokepoint's own `publish_cut` call
+//! carries the allow, exactly like `publish_lambda_cut` in the real
+//! coordinator; everything else routes through it.
+
+pub struct SnapshotHub;
+
+pub struct LoopState {
+    pub lambda: Vec<f32>,
+    pub step: u64,
+}
+
+/// Cut cadence as a pure function of the step index: rank-replicated.
+pub fn publish_due(step: u64, every: u64, steps: u64) -> bool {
+    step % every.max(1) == 0 || step == steps
+}
+
+/// The one publication site, entered only at rank-replicated cuts with
+/// the λ-stream already drained.
+pub fn publish_lambda_cut(hub: &SnapshotHub, state: &LoopState) {
+    // detlint: allow(snapshot-publish-outside-cut) — this IS the
+    // rank-replicated cut chokepoint (invariant 10); the fixture mirrors
+    // the real coordinator's one allowed publication site
+    hub.publish_cut(state.lambda.clone(), state.step);
+}
+
+/// The step body only decides *whether* a cut is due, never publishes.
+pub fn step_body(
+    hub: &SnapshotHub,
+    state: &LoopState,
+    every: u64,
+    steps: u64,
+) {
+    if publish_due(state.step, every, steps) {
+        publish_lambda_cut(hub, state);
+    }
+}

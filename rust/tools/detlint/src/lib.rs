@@ -17,6 +17,7 @@
 //! | `route-outside-scheduler` | ring arithmetic outside `RingScheduler` |
 //! | `shard-outside-partition` | world-partition arithmetic outside `owned_ranges` |
 //! | `compress-ctrl-tag` | lossy codec reaching a Ctrl-tagged reduce |
+//! | `snapshot-publish-outside-cut` | λ snapshot minted off the coordinator cut |
 //! | `bad-allow` | broken `detlint:` directive |
 //!
 //! Intentional exceptions are annotated in place:
@@ -39,7 +40,7 @@ use std::path::{Path, PathBuf};
 pub use rules::{
     Finding, BAD_ALLOW, COMPRESS_CTRL_TAG, FLOAT_ACCUM_CAST, LOCK_ACROSS_RECV,
     NONDET_ITERATION, ROUTE_OUTSIDE_SCHEDULER, RULES, SHARD_OUTSIDE_PARTITION,
-    UNBOUNDED_DESER_ALLOC, WALLCLOCK_IN_DECISION,
+    SNAPSHOT_PUBLISH_OUTSIDE_CUT, UNBOUNDED_DESER_ALLOC, WALLCLOCK_IN_DECISION,
 };
 
 /// Lint one source string. `path_label` determines rule scoping (see
@@ -234,6 +235,16 @@ mod fixture_tests {
     }
 
     #[test]
+    fn snapshot_publish_outside_cut_bad() {
+        assert_fixture_exact("snapshot_publish_outside_cut_bad.rs");
+    }
+
+    #[test]
+    fn snapshot_publish_outside_cut_fixed() {
+        assert_fixture_clean("snapshot_publish_outside_cut_fixed.rs");
+    }
+
+    #[test]
     fn allow_bad() {
         assert_fixture_exact("allow_bad.rs");
     }
@@ -249,7 +260,7 @@ mod fixture_tests {
     fn fixture_tree_totals() {
         let (findings, files) =
             scan_tree(&[fixture_path("")]).expect("scan fixtures");
-        assert_eq!(files, 18, "fixture files present");
+        assert_eq!(files, 20, "fixture files present");
         let total_markers: usize = std::fs::read_dir(fixture_path(""))
             .unwrap()
             .map(|e| {
@@ -259,7 +270,7 @@ mod fixture_tests {
             })
             .sum();
         assert_eq!(findings.len(), total_markers);
-        assert!(findings.len() >= 16, "≥ 8 rules exercised, twice over");
+        assert!(findings.len() >= 18, "≥ 9 rules exercised, twice over");
     }
 
     /// Allow directives must not leak across lines: an allow for line N

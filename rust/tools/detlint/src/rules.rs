@@ -58,13 +58,22 @@ pub const SHARD_OUTSIDE_PARTITION: &str = "shard-outside-partition";
 /// statement naming `Ctrl` next to a compression call anywhere else is
 /// re-deciding it.
 pub const COMPRESS_CTRL_TAG: &str = "compress-ctrl-tag";
+/// A λ snapshot publication (`publish_cut(…)`) anywhere but the
+/// coordinator's rank-replicated cut chokepoint. The serving hub's
+/// generation counter is the query-pinning contract: a snapshot minted
+/// mid-step (deferred λ-reduce unresolved, ranks at different schedule
+/// points) hands readers a λ no batch run ever ends with, silently
+/// breaking the bitwise replay guarantee of invariant 10. The hub method
+/// itself lives in `serve/snapshot.rs` (exempt); the coordinator's
+/// chokepoint carries the one allow.
+pub const SNAPSHOT_PUBLISH_OUTSIDE_CUT: &str = "snapshot-publish-outside-cut";
 /// A malformed `detlint:` directive: unknown rule name, missing `— reason`,
 /// or unparseable `allow(…)`. Allows are load-bearing documentation; a
 /// broken one silently enforces nothing.
 pub const BAD_ALLOW: &str = "bad-allow";
 
 /// Every rule name, for directive validation and `--help`.
-pub const RULES: [&str; 9] = [
+pub const RULES: [&str; 10] = [
     NONDET_ITERATION,
     WALLCLOCK_IN_DECISION,
     UNBOUNDED_DESER_ALLOC,
@@ -73,6 +82,7 @@ pub const RULES: [&str; 9] = [
     ROUTE_OUTSIDE_SCHEDULER,
     SHARD_OUTSIDE_PARTITION,
     COMPRESS_CTRL_TAG,
+    SNAPSHOT_PUBLISH_OUTSIDE_CUT,
     BAD_ALLOW,
 ];
 
@@ -107,6 +117,11 @@ struct FileClass {
     /// mapping); compress-ctrl-tag is skipped there. Fixture file names
     /// carry a `compress_ctrl_tag_` prefix, so fixtures stay in scope.
     compress_home: bool,
+    /// `serve/snapshot.rs` — where `SnapshotHub::publish_cut` is defined
+    /// (and unit-tested); snapshot-publish-outside-cut is skipped there.
+    /// Fixture file names carry a `snapshot_publish_outside_cut_` prefix,
+    /// so fixtures stay in scope.
+    snapshot_home: bool,
 }
 
 impl FileClass {
@@ -129,6 +144,7 @@ impl FileClass {
             scheduler_home: p.ends_with("topology.rs"),
             partition_home: p.contains("src/collective"),
             compress_home: p.ends_with("compress.rs"),
+            snapshot_home: p.ends_with("serve/snapshot.rs"),
         }
     }
 }
@@ -157,6 +173,9 @@ pub fn scan_source(path_label: &str, src: &str) -> Vec<Finding> {
     }
     if !class.compress_home {
         rule_compress_ctrl_tag(&lexed.tokens, &mut raw);
+    }
+    if !class.snapshot_home {
+        rule_snapshot_publish(&lexed.tokens, &mut raw);
     }
 
     // detlint: directives — build the suppression map, flag broken ones
@@ -339,6 +358,18 @@ fn rule_compress_ctrl_tag(
             .find(|t| COMPRESS_APPLY.iter().any(|a| t.is_ident(a)))
         {
             out.push((apply.line, COMPRESS_CTRL_TAG));
+        }
+    }
+}
+
+fn rule_snapshot_publish(toks: &[Token], out: &mut Vec<(usize, &'static str)>) {
+    for (i, t) in toks.iter().enumerate() {
+        // any `publish_cut(…)` call (or `fn publish_cut(` re-definition) —
+        // λ publication concentrated at one chokepoint is the invariant
+        if t.is_ident("publish_cut")
+            && toks.get(i + 1).is_some_and(|t| t.is_op("("))
+        {
+            out.push((t.line, SNAPSHOT_PUBLISH_OUTSIDE_CUT));
         }
     }
 }
